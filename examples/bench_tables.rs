@@ -1,0 +1,9 @@
+//! Regenerate every Chapter-8 table/figure (experiment index DESIGN.md
+//! §5) in quick mode. `cargo bench` runs the full-size versions.
+//!
+//! Run: `cargo run --release --example bench_tables [exp]`
+
+fn main() -> anyhow::Result<()> {
+    let exp = std::env::args().nth(1).unwrap_or_else(|| "all".into());
+    vipios::bench::tables::run(&exp, true)
+}

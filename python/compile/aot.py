@@ -1,0 +1,55 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for Rust (L3).
+
+HLO text — not ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (tuple-returning entry)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str) -> str:
+    fn, example = ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*example())
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args(argv)
+
+    names = args.only or list(ARTIFACTS)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in names:
+        text = lower_one(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

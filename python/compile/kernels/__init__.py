@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the ViPIOS out-of-core compute path.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is the correctness (and AOT) path;
+real-TPU performance is estimated structurally in DESIGN.md §Perf.
+"""
+
+from .stencil import stencil5
+from .matmul import matmul_tile
+from .reduce import block_reduce
+
+__all__ = ["stencil5", "matmul_tile", "block_reduce"]

@@ -1,0 +1,71 @@
+"""Tiled block-matmul accumulate kernel: ``C = A @ B (+ C0)``.
+
+Per-block compute of the OOC matrix-multiply workload: the L3 driver streams
+``(bm, bk)`` / ``(bk, bn)`` file blocks through this kernel and accumulates
+into the output block it later writes back.
+
+TPU adaptation: tiles default to 128x128 — the MXU systolic-array shape —
+so each grid step issues one MXU-native matmul; three f32 tiles are
+3 * 64 KB of VMEM, leaving ample room for double-buffering the HBM->VMEM
+block stream that the (i, k) / (k, j) BlockSpec index maps describe.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick(dim: int, cap: int) -> int:
+    t = 1
+    while t * 2 <= cap and dim % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def matmul_tile(a, b, *, bm: int | None = None, bk: int | None = None,
+                bn: int | None = None):
+    """Blocked matmul with accumulation over the K grid dimension.
+
+    Args:
+      a: ``(M, K)`` block.
+      b: ``(K, N)`` block.
+      bm/bk/bn: tile sizes (must divide M/K/N); default MXU-shaped (<=128).
+
+    Returns:
+      ``(M, N)`` product, same dtype as ``a``.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    bm = bm or _pick(m, 128)
+    bk = bk or _pick(k, 128)
+    bn = bn or _pick(n, 128)
+    if m % bm or k % bk or n % bn:
+        raise ValueError(f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{n})")
+
+    def kernel(a_ref, b_ref, o_ref):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # f32 accumulate on the MXU; bf16 inputs would upcast here.
+        o_ref[...] += jnp.dot(
+            a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+pytest asserts ``kernels.* ~= ref.*`` across shape/dtype sweeps; the AOT
+path lowers the kernels, so agreement here certifies the artifacts too.
+"""
+
+import jax.numpy as jnp
+
+
+def stencil5_ref(x):
+    """5-point Jacobi sweep over a halo-padded block."""
+    return 0.25 * (
+        x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:]
+    )
+
+
+def matmul_tile_ref(a, b):
+    """Plain matmul in the output dtype."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def block_reduce_ref(x):
+    """``[sum, sum of squares]`` in f32."""
+    xf = x.astype(jnp.float32)
+    return jnp.stack([jnp.sum(xf), jnp.sum(xf * xf)])
+
+
+def jacobi_step_ref(x):
+    """One OOC Jacobi step on a halo block: swept interior + [sum, sumsq]."""
+    y = stencil5_ref(x)
+    return y, block_reduce_ref(y - x[1:-1, 1:-1])

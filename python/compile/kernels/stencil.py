@@ -1,0 +1,65 @@
+"""5-point Jacobi stencil sweep over one out-of-core block (with halo).
+
+This is the per-block compute hot-spot of the OOC Jacobi workload that
+motivates ViPIOS (HPF out-of-core array codes): each SPMD process reads a
+``(H+2, W+2)`` halo-padded block through the I/O system, sweeps it, and
+writes the ``(H, W)`` interior back.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the kernel is tiled over
+row bands so each program's working set (``(tile+2, W+2)`` input window +
+``(tile, W)`` output band) fits VMEM comfortably — for the shipped 256x256
+f32 block that is ~260 KB, far below the ~16 MB VMEM budget, leaving room
+for double buffering of the HBM->VMEM stream expressed by the BlockSpecs.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_tile(h: int, cap: int = 128) -> int:
+    """Largest power-of-two row-band height <= cap that divides h."""
+    t = 1
+    while t * 2 <= cap and h % (t * 2) == 0:
+        t *= 2
+    return t if h % t == 0 else 1
+
+
+def stencil5(x, *, tile: int | None = None):
+    """One Jacobi sweep: ``out[i,j] = mean of 4 neighbours of x[i+1,j+1]``.
+
+    Args:
+      x: ``(H+2, W+2)`` halo-padded block, float dtype.
+      tile: row-band height (must divide H); auto-chosen when None.
+
+    Returns:
+      ``(H, W)`` swept interior.
+    """
+    hh, ww = x.shape
+    if hh < 3 or ww < 3:
+        raise ValueError(f"halo block must be at least 3x3, got {x.shape}")
+    h, w = hh - 2, ww - 2
+    if tile is None:
+        tile = _row_tile(h)
+    if h % tile != 0:
+        raise ValueError(f"tile {tile} does not divide interior height {h}")
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        # Overlapping row window: tile interior rows need tile+2 input rows.
+        xb = x_ref[pl.dslice(i * tile, tile + 2), :]
+        o_ref[...] = 0.25 * (
+            xb[:-2, 1:-1] + xb[2:, 1:-1] + xb[1:-1, :-2] + xb[1:-1, 2:]
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(h // tile,),
+        # Whole halo block visible to each program; the row window above is
+        # the explicit VMEM working set (overlapping windows cannot be
+        # expressed as disjoint BlockSpec tiles).
+        in_specs=[pl.BlockSpec((hh, ww), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=True,
+    )(x)

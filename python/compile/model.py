@@ -1,0 +1,70 @@
+"""Layer-2 JAX compute graphs for the ViPIOS OOC workloads.
+
+Each function is a jitted graph over one out-of-core block, calling the
+Layer-1 Pallas kernels, and is AOT-lowered by ``aot.py`` into one HLO-text
+artifact that the Rust coordinator (Layer 3) loads once and executes on the
+request path. Python never runs at request time.
+
+Shipped artifact shapes (f32):
+  stencil5:     (BLOCK+2, BLOCK+2) -> (BLOCK, BLOCK)
+  jacobi_step:  (BLOCK+2, BLOCK+2) -> ((BLOCK, BLOCK), (2,))
+  matmul_tile:  (BLOCK, BLOCK) x (BLOCK, BLOCK) -> (BLOCK, BLOCK)
+  block_reduce: (BLOCK, BLOCK) -> (2,)
+with BLOCK = 256 (v. DESIGN.md §Hardware-Adaptation for the VMEM budget).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_reduce, matmul_tile, stencil5
+
+# Out-of-core block edge used by the shipped artifacts and the Rust driver.
+BLOCK = 256
+
+
+def stencil_block(x):
+    """One Jacobi sweep over a halo-padded block."""
+    return (stencil5(x),)
+
+
+def jacobi_step(x):
+    """One OOC Jacobi step: swept interior + [sum, sumsq] of the update.
+
+    The residual reduction is fused into the same HLO module so the Rust
+    driver gets convergence tracking for free with the block update (no
+    second pass over the data, no extra artifact dispatch).
+    """
+    y = stencil5(x)
+    r = block_reduce(y - x[1:-1, 1:-1])
+    return (y, r)
+
+
+def matmul_block(a, b, c):
+    """OOC matmul inner update: ``c + a @ b`` for one (i, j, k) block triple.
+
+    ``c`` is donated by the caller (see aot.py) — the accumulator block is
+    updated in place across the k loop of the Rust driver.
+    """
+    return (c + matmul_tile(a, b),)
+
+
+def reduce_block(x):
+    """Checksum of one block: [sum, sumsq] (f32)."""
+    return (block_reduce(x),)
+
+
+#: name -> (fn, example-arg factory). Single source of truth for aot.py and
+#: the artifact goldens in python/tests.
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ARTIFACTS = {
+    "stencil5": (stencil_block, lambda: (_f32(BLOCK + 2, BLOCK + 2),)),
+    "jacobi_step": (jacobi_step, lambda: (_f32(BLOCK + 2, BLOCK + 2),)),
+    "matmul_tile": (
+        matmul_block,
+        lambda: (_f32(BLOCK, BLOCK), _f32(BLOCK, BLOCK), _f32(BLOCK, BLOCK)),
+    ),
+    "block_reduce": (reduce_block, lambda: (_f32(BLOCK, BLOCK),)),
+}

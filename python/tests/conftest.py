@@ -1,0 +1,11 @@
+import os
+import sys
+
+# allow running pytest from the repo root (`pytest python/tests/`) as
+# well as from python/ (`python -m pytest tests/`)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# f64 sweeps in test_kernel.py need x64; enable before any tracing happens.
+jax.config.update("jax_enable_x64", True)

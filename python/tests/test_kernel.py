@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes with a fixed deadline-free profile (the
+interpret path is slow); parametrised smoke cases pin the shipped shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_reduce, matmul_tile, stencil5
+from compile.kernels.ref import (
+    block_reduce_ref,
+    jacobi_step_ref,
+    matmul_tile_ref,
+    stencil5_ref,
+)
+
+SETTINGS = settings(max_examples=12, deadline=None)
+
+
+def rng_array(shape, dtype, seed):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal(shape, dtype=np.float64)).astype(dtype)
+
+
+# ---------------------------------------------------------------- stencil5
+
+@pytest.mark.parametrize("hw", [(4, 4), (8, 16), (64, 64), (258, 258)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_stencil_matches_ref(hw, dtype):
+    x = rng_array(hw, dtype, seed=hash(hw) & 0xFFFF)
+    got = stencil5(x)
+    want = stencil5_ref(x)
+    assert got.shape == (hw[0] - 2, hw[1] - 2)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@SETTINGS
+@given(
+    h=st.integers(1, 40),
+    w=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_matches_ref_random_shapes(h, w, seed):
+    x = rng_array((h + 2, w + 2), jnp.float32, seed)
+    np.testing.assert_allclose(
+        stencil5(x), stencil5_ref(x), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 8])
+def test_stencil_tile_invariance(tile):
+    """The row-band tiling must not change results."""
+    x = rng_array((18, 10), jnp.float32, seed=7)
+    np.testing.assert_allclose(
+        stencil5(x, tile=tile), stencil5_ref(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_stencil_rejects_tiny_and_nondividing():
+    with pytest.raises(ValueError):
+        stencil5(jnp.zeros((2, 5), jnp.float32))
+    with pytest.raises(ValueError):
+        stencil5(jnp.zeros((7, 7), jnp.float32), tile=3)
+
+
+def test_stencil_constant_field_is_fixpoint():
+    x = jnp.full((10, 12), 3.25, jnp.float32)
+    np.testing.assert_allclose(stencil5(x), x[1:-1, 1:-1])
+
+
+# ------------------------------------------------------------- matmul_tile
+
+@pytest.mark.parametrize(
+    "mkn", [(2, 2, 2), (8, 4, 16), (128, 128, 128), (256, 64, 128)]
+)
+def test_matmul_matches_ref(mkn):
+    m, k, n = mkn
+    a = rng_array((m, k), jnp.float32, seed=m * 31 + k)
+    b = rng_array((k, n), jnp.float32, seed=n * 17 + k)
+    np.testing.assert_allclose(
+        matmul_tile(a, b), matmul_tile_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@SETTINGS
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    a = rng_array((m, k), jnp.float32, seed)
+    b = rng_array((k, n), jnp.float32, seed ^ 0x5EED)
+    np.testing.assert_allclose(
+        matmul_tile(a, b), matmul_tile_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("tiles", [(1, 1, 1), (2, 4, 2), (4, 2, 8)])
+def test_matmul_tile_invariance(tiles):
+    bm, bk, bn = tiles
+    a = rng_array((8, 8), jnp.float32, seed=1)
+    b = rng_array((8, 8), jnp.float32, seed=2)
+    np.testing.assert_allclose(
+        matmul_tile(a, b, bm=bm, bk=bk, bn=bn),
+        matmul_tile_ref(a, b),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 5), jnp.float32)
+    b = jnp.zeros((4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul_tile(a, b)
+    with pytest.raises(ValueError):
+        matmul_tile(jnp.zeros((6, 6), jnp.float32),
+                    jnp.zeros((6, 6), jnp.float32), bm=4)
+
+
+def test_matmul_identity():
+    a = rng_array((16, 16), jnp.float32, seed=3)
+    eye = jnp.eye(16, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul_tile(a, eye), a, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ block_reduce
+
+@pytest.mark.parametrize("hw", [(1, 1), (4, 4), (256, 256), (100, 12)])
+def test_reduce_matches_ref(hw):
+    x = rng_array(hw, jnp.float32, seed=hw[0] * 100 + hw[1])
+    np.testing.assert_allclose(
+        block_reduce(x), block_reduce_ref(x), rtol=1e-4, atol=1e-3
+    )
+
+
+@SETTINGS
+@given(
+    h=st.integers(1, 48),
+    w=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_reduce_matches_ref_random_shapes(h, w, seed):
+    x = rng_array((h, w), jnp.float32, seed)
+    np.testing.assert_allclose(
+        block_reduce(x), block_reduce_ref(x), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_reduce_zeros_and_ones():
+    assert block_reduce(jnp.zeros((8, 8), jnp.float32)).tolist() == [0.0, 0.0]
+    np.testing.assert_allclose(
+        block_reduce(jnp.ones((8, 8), jnp.float32)), [64.0, 64.0]
+    )
+
+
+def test_reduce_output_is_f32_even_for_f64_input():
+    x = rng_array((8, 8), jnp.float64, seed=9)
+    assert block_reduce(x).dtype == jnp.float32
+
+
+# --------------------------------------------------------- composed oracle
+
+def test_jacobi_step_ref_consistency():
+    """jacobi_step_ref decomposes into the two kernel oracles."""
+    x = rng_array((12, 12), jnp.float32, seed=11)
+    y, r = jacobi_step_ref(x)
+    np.testing.assert_allclose(y, stencil5_ref(x))
+    np.testing.assert_allclose(
+        r, block_reduce_ref(y - x[1:-1, 1:-1]), rtol=1e-5
+    )

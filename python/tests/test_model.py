@@ -1,0 +1,81 @@
+"""L2 correctness: model graphs (kernel compositions) vs oracles + shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import (
+    block_reduce_ref,
+    jacobi_step_ref,
+    matmul_tile_ref,
+    stencil5_ref,
+)
+
+
+def rng_array(shape, seed):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal(shape).astype(np.float32))
+
+
+def test_block_constant():
+    assert model.BLOCK == 256  # Rust ooc driver hard-codes this edge.
+
+
+def test_artifact_registry_complete():
+    assert set(model.ARTIFACTS) == {
+        "stencil5", "jacobi_step", "matmul_tile", "block_reduce"
+    }
+    for name, (fn, example) in model.ARTIFACTS.items():
+        args = example()
+        assert all(isinstance(a, jax.ShapeDtypeStruct) for a in args), name
+
+
+def test_stencil_block_shape_and_value():
+    x = rng_array((34, 34), seed=0)
+    (y,) = model.stencil_block(x)
+    assert y.shape == (32, 32)
+    np.testing.assert_allclose(y, stencil5_ref(x), rtol=1e-6, atol=1e-6)
+
+
+def test_jacobi_step_matches_ref():
+    x = rng_array((34, 34), seed=1)
+    y, r = model.jacobi_step(x)
+    y_ref, r_ref = jacobi_step_ref(x)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(r, r_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_jacobi_step_residual_decreases_on_smooth_problem():
+    """Two Jacobi sweeps on a random field must shrink the update norm."""
+    x = rng_array((66, 66), seed=2)
+    y1, r1 = model.jacobi_step(x)
+    x2 = jnp.pad(y1, 1)  # zero halo
+    y2, r2 = model.jacobi_step(x2)
+    assert float(r2[1]) < float(r1[1])
+
+
+def test_matmul_block_accumulates():
+    a = rng_array((32, 32), seed=3)
+    b = rng_array((32, 32), seed=4)
+    c = rng_array((32, 32), seed=5)
+    (got,) = model.matmul_block(a, b, c)
+    np.testing.assert_allclose(
+        got, c + matmul_tile_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_reduce_block_matches_ref():
+    x = rng_array((40, 24), seed=6)
+    (got,) = model.reduce_block(x)
+    np.testing.assert_allclose(got, block_reduce_ref(x), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("name", sorted(model.ARTIFACTS))
+def test_artifact_fns_jit_on_example_shapes(name):
+    """Every registered artifact traces + runs under jit at shipped shapes."""
+    fn, example = model.ARTIFACTS[name]
+    args = [jnp.zeros(s.shape, s.dtype) for s in example()]
+    out = jax.jit(fn)(*args)
+    assert isinstance(out, tuple) and len(out) >= 1

@@ -1,0 +1,21 @@
+//! `cargo bench` — regenerates every table and figure of the paper's
+//! Chapter 8 at full size (criterion is not in the vendored crate set;
+//! this is a custom harness, `harness = false`).
+//!
+//! Experiment index: DESIGN.md §5 (E1..E7). The end-to-end OOC run (E8)
+//! lives in `examples/ooc_stencil.rs`.
+
+fn main() -> anyhow::Result<()> {
+    // `cargo bench -- <exp> [--quick]`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let exp = args
+        .iter()
+        .find(|a| !a.starts_with("--") && !a.contains("bench"))
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+    let t0 = std::time::Instant::now();
+    vipios::bench::tables::run(&exp, quick)?;
+    println!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,407 @@
+//! `Access_Desc` / `basic_block` — the paper's mapping-function
+//! implementation (§4.5.1, Fig. 4.6).
+//!
+//! A descriptor encodes a (possibly nested) regular access pattern:
+//!
+//! ```c
+//! struct Access_Desc { int no_blocks; int skip; struct basic_block *basics; };
+//! struct basic_block { int offset; int repeat; int count; int stride;
+//!                      struct Access_Desc *subtype; };
+//! ```
+//!
+//! One *pass* of a descriptor processes its basic blocks in order, then
+//! advances the file pointer by `skip`. One basic block advances the file
+//! pointer by `offset`, then `repeat` times transfers `count` units
+//! (bytes when `subtype` is `None`, otherwise one full subtype pass per
+//! unit) and advances the pointer by `stride` after each repetition.
+//!
+//! A *view* is a displacement plus a descriptor tiled end-to-end over the
+//! file (MPI-IO filetype semantics, which ViMPIOS maps onto this struct —
+//! see [`crate::vimpios`]). [`AccessDesc::resolve`] maps a logical byte
+//! range of the view to coalesced physical extents; it is the single
+//! routine every strided read/write in the system funnels through, and is
+//! property-tested against the naive ψ_t oracle in [`crate::fmodel`].
+
+/// One regular sub-pattern of an [`AccessDesc`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BasicBlock {
+    /// Bytes to skip before the repetitions start.
+    pub offset: i64,
+    /// Number of repetitions.
+    pub repeat: u32,
+    /// Units transferred per repetition (bytes, or subtype passes).
+    pub count: u32,
+    /// Bytes skipped after each repetition.
+    pub stride: i64,
+    /// Nested pattern; `None` means the unit is a single byte.
+    pub subtype: Option<Box<AccessDesc>>,
+}
+
+/// The paper's `Access_Desc` (no_blocks is implicit in `blocks.len()`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct AccessDesc {
+    /// Bytes the file pointer advances after all blocks are processed.
+    pub skip: i64,
+    pub blocks: Vec<BasicBlock>,
+}
+
+impl AccessDesc {
+    /// `n` contiguous bytes (MPI_Type_contiguous over bytes).
+    pub fn contiguous(n: u32) -> Self {
+        Self {
+            skip: 0,
+            blocks: vec![BasicBlock {
+                offset: 0,
+                repeat: 1,
+                count: n,
+                stride: 0,
+                subtype: None,
+            }],
+        }
+    }
+
+    /// `repeat` blocks of `count` bytes separated by `gap` bytes
+    /// (MPI_Type_vector with stride expressed as the inter-block gap,
+    /// exactly the paper's ViMPIOS mapping `stride = mpi_stride_bytes -
+    /// blocklen`). The trailing repetition also skips `gap`, so the
+    /// extent of one pass is `repeat * (count + gap)`.
+    pub fn vector(repeat: u32, count: u32, gap: i64) -> Self {
+        Self {
+            skip: 0,
+            blocks: vec![BasicBlock {
+                offset: 0,
+                repeat,
+                count,
+                stride: gap,
+                subtype: None,
+            }],
+        }
+    }
+
+    /// Irregular pattern: `(offset_gap, len)` pairs, offsets relative to
+    /// the end of the previous block (MPI_Type_(h)indexed mapping).
+    pub fn indexed(parts: &[(i64, u32)]) -> Self {
+        Self {
+            skip: 0,
+            blocks: parts
+                .iter()
+                .map(|&(off, len)| BasicBlock {
+                    offset: off,
+                    repeat: 1,
+                    count: len,
+                    stride: 0,
+                    subtype: None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Bytes of data selected by one pass.
+    pub fn data_len(&self) -> u64 {
+        self.blocks
+            .iter()
+            .map(|b| {
+                let unit = b
+                    .subtype
+                    .as_ref()
+                    .map_or(1, |s| s.data_len());
+                b.repeat as u64 * b.count as u64 * unit
+            })
+            .sum()
+    }
+
+    /// File-pointer movement of one pass (including `skip`).
+    pub fn extent(&self) -> i64 {
+        let blocks: i64 = self
+            .blocks
+            .iter()
+            .map(|b| {
+                let unit = b
+                    .subtype
+                    .as_ref()
+                    .map_or(1, |s| s.extent());
+                b.offset
+                    + b.repeat as i64 * (b.count as i64 * unit + b.stride)
+            })
+            .sum();
+        blocks + self.skip
+    }
+
+    /// True when one pass is a single gap-free byte run (fast path:
+    /// strided machinery can be bypassed).
+    pub fn is_contiguous(&self) -> bool {
+        self.data_len() == self.extent() as u64
+    }
+
+    /// Walk the data extents of one pass starting at physical offset
+    /// `phys`. `f(phys_off, len)` returns `false` to stop early; returns
+    /// `true` if the walk completed.
+    fn walk(&self, phys: i64, f: &mut impl FnMut(i64, u64) -> bool) -> bool {
+        let mut p = phys;
+        for b in &self.blocks {
+            p += b.offset;
+            for _ in 0..b.repeat {
+                match &b.subtype {
+                    None => {
+                        if b.count > 0 && !f(p, b.count as u64) {
+                            return false;
+                        }
+                        p += b.count as i64;
+                    }
+                    Some(sub) => {
+                        for _ in 0..b.count {
+                            if !sub.walk(p, f) {
+                                return false;
+                            }
+                            p += sub.extent();
+                        }
+                    }
+                }
+                p += b.stride;
+            }
+        }
+        true
+    }
+
+    /// Map the logical view range `[logical, logical + len)` to physical
+    /// `(offset, len)` extents, with the view = this descriptor tiled from
+    /// displacement `disp`. Extents are coalesced when adjacent.
+    ///
+    /// Panics if `len > 0` on a descriptor selecting zero bytes per pass
+    /// (the tiling would never produce data), or if an extent would start
+    /// at a negative physical offset.
+    pub fn resolve(&self, disp: u64, logical: u64, len: u64) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        if len == 0 {
+            return out;
+        }
+        let per = self.data_len();
+        assert!(per > 0, "resolve on zero-data descriptor");
+        let ext = self.extent();
+        let skip_passes = logical / per;
+        let mut lskip = logical % per; // logical bytes to drop inside pass
+        let mut phys = disp as i64 + skip_passes as i64 * ext;
+        let mut remaining = len;
+
+        while remaining > 0 {
+            self.walk(phys, &mut |p, l| {
+                let (mut p, mut l) = (p, l);
+                if lskip > 0 {
+                    let s = lskip.min(l);
+                    lskip -= s;
+                    p += s as i64;
+                    l -= s;
+                }
+                if l == 0 {
+                    return true;
+                }
+                let take = remaining.min(l);
+                assert!(p >= 0, "negative physical offset in view");
+                let (p, take) = (p as u64, take);
+                match out.last_mut() {
+                    Some((lo, ll)) if *lo + *ll == p => *ll += take,
+                    _ => out.push((p, take)),
+                }
+                remaining -= take;
+                remaining > 0
+            });
+            phys += ext;
+        }
+        out
+    }
+
+    /// Physical offset of a single logical view byte.
+    pub fn logical_to_physical(&self, disp: u64, logical: u64) -> u64 {
+        self.resolve(disp, logical, 1)[0].0
+    }
+
+    /// Total physical span touched by reading `len` logical bytes from
+    /// logical offset 0 (used for preallocation decisions).
+    pub fn physical_span(&self, disp: u64, len: u64) -> u64 {
+        match self.resolve(disp, 0, len).last() {
+            Some(&(off, l)) => off + l,
+            None => disp,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_roundtrip() {
+        let d = AccessDesc::contiguous(10);
+        assert_eq!(d.data_len(), 10);
+        assert_eq!(d.extent(), 10);
+        assert!(d.is_contiguous());
+        // tiling: logical 25..40 == physical 25..40
+        assert_eq!(d.resolve(0, 25, 15), vec![(25, 15)]);
+        // with displacement
+        assert_eq!(d.resolve(100, 25, 15), vec![(125, 15)]);
+    }
+
+    #[test]
+    fn vector_pattern() {
+        // 2 blocks of 5 bytes, gap 15 => pass: [5 data][15 gap] x2
+        let d = AccessDesc::vector(2, 5, 15);
+        assert_eq!(d.data_len(), 10);
+        assert_eq!(d.extent(), 40);
+        assert!(!d.is_contiguous());
+        assert_eq!(d.resolve(0, 0, 10), vec![(0, 5), (20, 5)]);
+        // second pass starts at 40
+        assert_eq!(d.resolve(0, 10, 5), vec![(40, 5)]);
+        // crossing passes
+        assert_eq!(d.resolve(0, 5, 10), vec![(20, 5), (40, 5)]);
+    }
+
+    #[test]
+    fn vector_mid_block() {
+        let d = AccessDesc::vector(2, 8, 8);
+        // logical 3..9: bytes 3..8 of block0, byte 0..1 of block1(at 16)
+        assert_eq!(d.resolve(0, 3, 6), vec![(3, 5), (16, 1)]);
+    }
+
+    #[test]
+    fn indexed_pattern() {
+        // [2 gap][3 data][4 gap][1 data], then tiles
+        let d = AccessDesc::indexed(&[(2, 3), (4, 1)]);
+        assert_eq!(d.data_len(), 4);
+        assert_eq!(d.extent(), 10);
+        assert_eq!(d.resolve(0, 0, 4), vec![(2, 3), (9, 1)]);
+        assert_eq!(d.resolve(0, 4, 4), vec![(12, 3), (19, 1)]);
+    }
+
+    #[test]
+    fn skip_moves_next_pass() {
+        let mut d = AccessDesc::contiguous(4);
+        d.skip = 6; // 4 data + 6 dead per pass
+        assert_eq!(d.extent(), 10);
+        assert_eq!(d.resolve(0, 4, 4), vec![(10, 4)]);
+        assert_eq!(d.resolve(0, 2, 4), vec![(2, 2), (10, 2)]);
+    }
+
+    #[test]
+    fn nested_subtype() {
+        // outer: 3 units of the inner pattern, inner = 2 bytes + 2 gap
+        let inner = AccessDesc {
+            skip: 2,
+            blocks: vec![BasicBlock {
+                offset: 0,
+                repeat: 1,
+                count: 2,
+                stride: 0,
+                subtype: None,
+            }],
+        };
+        assert_eq!(inner.extent(), 4);
+        let outer = AccessDesc {
+            skip: 0,
+            blocks: vec![BasicBlock {
+                offset: 1,
+                repeat: 1,
+                count: 3,
+                stride: 0,
+                subtype: Some(Box::new(inner)),
+            }],
+        };
+        assert_eq!(outer.data_len(), 6);
+        assert_eq!(outer.extent(), 13);
+        assert_eq!(
+            outer.resolve(0, 0, 6),
+            vec![(1, 2), (5, 2), (9, 2)]
+        );
+        // next pass begins at 13
+        assert_eq!(outer.resolve(0, 6, 2), vec![(14, 2)]);
+    }
+
+    #[test]
+    fn repeat_with_stride_after_each_repetition() {
+        // repeat=3, count=2, stride=1: [2][1][2][1][2][1]
+        let d = AccessDesc {
+            skip: 0,
+            blocks: vec![BasicBlock {
+                offset: 0,
+                repeat: 3,
+                count: 2,
+                stride: 1,
+                subtype: None,
+            }],
+        };
+        assert_eq!(d.data_len(), 6);
+        assert_eq!(d.extent(), 9);
+        assert_eq!(d.resolve(0, 0, 6), vec![(0, 2), (3, 2), (6, 2)]);
+    }
+
+    #[test]
+    fn coalescing_merges_touching_extents() {
+        // gap 0 vector should coalesce into one run
+        let d = AccessDesc::vector(4, 4, 0);
+        assert_eq!(d.resolve(0, 0, 16), vec![(0, 16)]);
+        assert!(d.is_contiguous());
+    }
+
+    #[test]
+    fn multi_block_pass() {
+        // two basic blocks: 3 bytes at 0; then offset 5, 2 bytes
+        let d = AccessDesc {
+            skip: 0,
+            blocks: vec![
+                BasicBlock { offset: 0, repeat: 1, count: 3, stride: 0, subtype: None },
+                BasicBlock { offset: 5, repeat: 1, count: 2, stride: 0, subtype: None },
+            ],
+        };
+        assert_eq!(d.data_len(), 5);
+        assert_eq!(d.extent(), 10);
+        assert_eq!(d.resolve(0, 0, 5), vec![(0, 3), (8, 2)]);
+        // block2 of pass 0 (8..10) touches block1 of pass 1 (10..13):
+        // the resolver coalesces them into one physical run
+        assert_eq!(d.resolve(0, 3, 4), vec![(8, 4)]);
+    }
+
+    #[test]
+    fn logical_to_physical_points() {
+        let d = AccessDesc::vector(2, 5, 15);
+        assert_eq!(d.logical_to_physical(0, 0), 0);
+        assert_eq!(d.logical_to_physical(0, 4), 4);
+        assert_eq!(d.logical_to_physical(0, 5), 20);
+        assert_eq!(d.logical_to_physical(0, 10), 40);
+        assert_eq!(d.logical_to_physical(7, 10), 47);
+    }
+
+    #[test]
+    fn physical_span() {
+        let d = AccessDesc::vector(2, 5, 15);
+        assert_eq!(d.physical_span(0, 10), 25); // last extent (20,5)
+        assert_eq!(d.physical_span(0, 0), 0);
+    }
+
+    #[test]
+    fn resolve_empty_is_empty() {
+        let d = AccessDesc::contiguous(4);
+        assert!(d.resolve(0, 9, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-data")]
+    fn resolve_zero_data_panics() {
+        let d = AccessDesc { skip: 4, blocks: vec![] };
+        d.resolve(0, 0, 1);
+    }
+
+    #[test]
+    fn resolve_respects_offset_before_repeats() {
+        let d = AccessDesc {
+            skip: 0,
+            blocks: vec![BasicBlock {
+                offset: 7,
+                repeat: 2,
+                count: 3,
+                stride: 2,
+                subtype: None,
+            }],
+        };
+        assert_eq!(d.extent(), 7 + 2 * 5);
+        assert_eq!(d.resolve(0, 0, 6), vec![(7, 3), (12, 3)]);
+    }
+}

@@ -1,0 +1,510 @@
+//! Baseline I/O systems the paper compares against (§8.3):
+//!
+//! * [`UnixSeq`] — plain sequential UNIX file I/O: one stream through one
+//!   disk, the "UNIX file I/O" column of §8.3.1;
+//! * [`HostCentralized`] — the HPF host-node model of §2.2: *all* I/O
+//!   funnelled through a single host process that owns the disks; node
+//!   processes receive their data over messages. This is what HPF
+//!   compilers generated before parallel I/O systems, and the bottleneck
+//!   ViPIOS exists to remove;
+//! * [`RomioLike`] — a library-mode MPI-IO in the style of ROMIO
+//!   (§8.3.2/§8.4.2): no servers; every client accesses the shared disks
+//!   directly, with ROMIO's two classic optimisations, **data sieving**
+//!   (read one covering extent, pick the strided pieces from memory) and
+//!   **two-phase collective I/O** (partition the range into per-process
+//!   file domains, do contiguous I/O, exchange in memory).
+//!
+//! All baselines run on the same [`Disk`] substrate as ViPIOS so the
+//! Chapter-8 comparisons measure strategy, not substrate.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Barrier, Mutex};
+
+use anyhow::Result;
+
+use crate::access::AccessDesc;
+use crate::disk::Disk;
+
+// ---------------------------------------------------------------- UnixSeq
+
+/// Sequential UNIX-style I/O: a single stream over one disk.
+pub struct UnixSeq {
+    disk: Arc<dyn Disk>,
+    pos: u64,
+}
+
+impl UnixSeq {
+    pub fn new(disk: Arc<dyn Disk>) -> Self {
+        Self { disk, pos: 0 }
+    }
+
+    pub fn seek(&mut self, pos: u64) {
+        self.pos = pos;
+    }
+
+    pub fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let n = self.disk.read_at(self.pos, buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+
+    pub fn write(&mut self, data: &[u8]) -> Result<()> {
+        self.disk.write_at(self.pos, data)?;
+        self.pos += data.len() as u64;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------- HostCentralized
+
+/// Work item sent to the host process.
+enum HostReq {
+    Read { off: u64, len: u64, reply: std::sync::mpsc::Sender<Vec<u8>> },
+    Write { off: u64, data: Vec<u8>, reply: std::sync::mpsc::Sender<()> },
+    Stop,
+}
+
+/// The HPF host-node I/O model: one host thread owns the disk; node
+/// processes send READ/WRITE messages and receive data back — the exact
+/// compilation scheme §2.2 describes (READ becomes host READ + SEND /
+/// node RECEIVE).
+pub struct HostCentralized {
+    tx: std::sync::mpsc::Sender<HostReq>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HostCentralized {
+    pub fn start(disk: Arc<dyn Disk>) -> Self {
+        let (tx, rx) = channel::<HostReq>();
+        let handle = std::thread::Builder::new()
+            .name("hpf-host".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        HostReq::Read { off, len, reply } => {
+                            let mut buf = vec![0u8; len as usize];
+                            let n = disk.read_at(off, &mut buf).unwrap_or(0);
+                            buf.truncate(n);
+                            let _ = reply.send(buf);
+                        }
+                        HostReq::Write { off, data, reply } => {
+                            let _ = disk.write_at(off, &data);
+                            let _ = reply.send(());
+                        }
+                        HostReq::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn host");
+        Self { tx, handle: Some(handle) }
+    }
+
+    /// A node process's handle to the host.
+    pub fn node(&self) -> HostNode {
+        HostNode { tx: self.tx.clone() }
+    }
+
+    pub fn stop(mut self) {
+        let _ = self.tx.send(HostReq::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Node-side interface to the centralized host.
+#[derive(Clone)]
+pub struct HostNode {
+    tx: std::sync::mpsc::Sender<HostReq>,
+}
+
+impl HostNode {
+    pub fn read(&self, off: u64, len: u64) -> Vec<u8> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(HostReq::Read { off, len, reply: rtx });
+        rrx.recv().unwrap_or_default()
+    }
+
+    pub fn write(&self, off: u64, data: Vec<u8>) {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(HostReq::Write { off, data, reply: rtx });
+        let _ = rrx.recv();
+    }
+}
+
+// ------------------------------------------------------------- RomioLike
+
+/// Library-mode MPI-IO à la ROMIO over a striped "cluster filesystem":
+/// the file's bytes are striped round-robin across the disks, every
+/// client does its own disk accesses (no server, no cross-request
+/// cache), with data sieving for strided reads/writes.
+pub struct RomioLike {
+    disks: Vec<Arc<dyn Disk>>,
+    stripe: u64,
+    /// Serialises read-modify-write sieving (ROMIO uses file locking).
+    lock: Arc<Mutex<()>>,
+    /// Data-sieve buffer size (ROMIO default 4 MB; scaled here).
+    pub sieve_buf: u64,
+}
+
+impl RomioLike {
+    pub fn new(disks: Vec<Arc<dyn Disk>>, stripe: u64) -> Self {
+        Self {
+            disks,
+            stripe: stripe.max(1),
+            lock: Arc::new(Mutex::new(())),
+            sieve_buf: 4 * 1024 * 1024,
+        }
+    }
+
+    pub fn clone_handle(&self) -> Self {
+        Self {
+            disks: self.disks.clone(),
+            stripe: self.stripe,
+            lock: self.lock.clone(),
+            sieve_buf: self.sieve_buf,
+        }
+    }
+
+    fn locate(&self, off: u64) -> (usize, u64) {
+        let n = self.disks.len() as u64;
+        let s = self.stripe;
+        let idx = off / s;
+        (((idx % n) as usize), (idx / n) * s + off % s)
+    }
+
+    /// Contiguous read straight from the striped disks.
+    pub fn read_contig(&self, off: u64, buf: &mut [u8]) -> Result<usize> {
+        let mut done = 0usize;
+        while done < buf.len() {
+            let o = off + done as u64;
+            let run = (self.stripe - o % self.stripe).min((buf.len() - done) as u64);
+            let (d, local) = self.locate(o);
+            let n = self.disks[d].read_at(local, &mut buf[done..done + run as usize])?;
+            done += run as usize;
+            if n == 0 {
+                // hole or EOF on this stripe; keep going (zeros)
+            }
+        }
+        Ok(done)
+    }
+
+    pub fn write_contig(&self, off: u64, data: &[u8]) -> Result<()> {
+        let mut done = 0usize;
+        while done < data.len() {
+            let o = off + done as u64;
+            let run = (self.stripe - o % self.stripe).min((data.len() - done) as u64);
+            let (d, local) = self.locate(o);
+            self.disks[d].write_at(local, &data[done..done + run as usize])?;
+            done += run as usize;
+        }
+        Ok(())
+    }
+
+    /// Strided read with **data sieving**: read the covering extent in
+    /// `sieve_buf`-sized chunks and copy out the requested pieces.
+    pub fn read_sieved(&self, view: &AccessDesc, disp: u64, logical: u64, buf: &mut [u8]) -> Result<usize> {
+        let extents = view.resolve(disp, logical, buf.len() as u64);
+        if extents.is_empty() {
+            return Ok(0);
+        }
+        // buffer offset of each extent (extents are in buffer order)
+        let mut buf_offs = Vec::with_capacity(extents.len());
+        let mut acc = 0u64;
+        for &(_, l) in &extents {
+            buf_offs.push(acc);
+            acc += l;
+        }
+        let lo = extents[0].0;
+        let hi = extents.last().map(|&(o, l)| o + l).unwrap();
+        let mut done = 0usize;
+        let mut chunk_lo = lo;
+        let mut big = vec![0u8; self.sieve_buf.min(hi - lo) as usize];
+        while chunk_lo < hi {
+            let chunk_hi = (chunk_lo + self.sieve_buf).min(hi);
+            let blen = (chunk_hi - chunk_lo) as usize;
+            self.read_contig(chunk_lo, &mut big[..blen])?;
+            for (&(o, l), &boff) in extents.iter().zip(&buf_offs) {
+                let s = o.max(chunk_lo);
+                let e = (o + l).min(chunk_hi);
+                if s < e {
+                    let piece_off = boff + (s - o);
+                    buf[piece_off as usize..(piece_off + (e - s)) as usize]
+                        .copy_from_slice(&big[(s - chunk_lo) as usize..(e - chunk_lo) as usize]);
+                    done += (e - s) as usize;
+                }
+            }
+            chunk_lo = chunk_hi;
+        }
+        Ok(done)
+    }
+
+    /// Strided write with data sieving: read-modify-write of the
+    /// covering extent under the file lock.
+    pub fn write_sieved(&self, view: &AccessDesc, disp: u64, logical: u64, data: &[u8]) -> Result<()> {
+        let extents = view.resolve(disp, logical, data.len() as u64);
+        if extents.is_empty() {
+            return Ok(());
+        }
+        let _guard = self.lock.lock().unwrap();
+        let lo = extents[0].0;
+        let hi = extents.last().map(|&(o, l)| o + l).unwrap();
+        let mut big = vec![0u8; (hi - lo) as usize];
+        self.read_contig(lo, &mut big)?;
+        let mut src = 0usize;
+        for &(o, l) in &extents {
+            big[(o - lo) as usize..(o - lo + l) as usize]
+                .copy_from_slice(&data[src..src + l as usize]);
+            src += l as usize;
+        }
+        self.write_contig(lo, &big)?;
+        Ok(())
+    }
+}
+
+/// Two-phase collective read (ROMIO's collective optimisation): the
+/// aggregate range of all processes is partitioned into contiguous *file
+/// domains*, each process reads its domain contiguously (phase 1), then
+/// pieces are exchanged in memory (phase 2). Returns each process's
+/// requested bytes.
+///
+/// `reqs[p] = (offset, len)` — per-process contiguous requests in file
+/// space (the classic interleaved-block pattern).
+pub fn two_phase_read(fs: &RomioLike, reqs: &[(u64, u64)]) -> Result<Vec<Vec<u8>>> {
+    let nprocs = reqs.len();
+    if nprocs == 0 {
+        return Ok(Vec::new());
+    }
+    let lo = reqs.iter().map(|&(o, _)| o).min().unwrap();
+    let hi = reqs.iter().map(|&(o, l)| o + l).max().unwrap();
+    let span = hi - lo;
+    let domain = span.div_ceil(nprocs as u64).max(1);
+
+    // phase 1: each "process" reads one contiguous domain (parallel)
+    let stage: Arc<Mutex<Vec<Vec<u8>>>> =
+        Arc::new(Mutex::new(vec![Vec::new(); nprocs]));
+    let barrier = Arc::new(Barrier::new(nprocs));
+    let mut handles = Vec::new();
+    for p in 0..nprocs {
+        let fs = fs.clone_handle();
+        let stage = stage.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let dlo = lo + p as u64 * domain;
+            let dhi = (dlo + domain).min(hi);
+            let mut buf = vec![0u8; dhi.saturating_sub(dlo) as usize];
+            if !buf.is_empty() {
+                fs.read_contig(dlo, &mut buf)?;
+            }
+            stage.lock().unwrap()[p] = buf;
+            barrier.wait();
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+
+    // phase 2: in-memory exchange
+    let stage = stage.lock().unwrap();
+    let mut out = Vec::with_capacity(nprocs);
+    for &(o, l) in reqs {
+        let mut buf = vec![0u8; l as usize];
+        let mut pos = o;
+        while pos < o + l {
+            let dom = ((pos - lo) / domain) as usize;
+            let dlo = lo + dom as u64 * domain;
+            let in_dom = pos - dlo;
+            let run = (domain - in_dom).min(o + l - pos);
+            let src = &stage[dom];
+            let s = in_dom as usize;
+            let e = (in_dom + run) as usize;
+            let dst = (pos - o) as usize;
+            buf[dst..dst + run as usize].copy_from_slice(&src[s..e.min(src.len()).max(s)]);
+            pos += run;
+        }
+        out.push(buf);
+    }
+    Ok(out)
+}
+
+/// Two-phase collective write: pieces are exchanged in memory into
+/// contiguous per-process file domains (phase 1), then each process
+/// writes its domain with one contiguous I/O (phase 2).
+pub fn two_phase_write(fs: &RomioLike, reqs: &[(u64, Vec<u8>)]) -> Result<()> {
+    let nprocs = reqs.len();
+    if nprocs == 0 {
+        return Ok(());
+    }
+    let lo = reqs.iter().map(|&(o, _)| o).min().unwrap();
+    let hi = reqs.iter().map(|(o, d)| o + d.len() as u64).max().unwrap();
+    let span = hi - lo;
+    let domain = span.div_ceil(nprocs as u64).max(1);
+
+    // phase 1: exchange — build each domain image (read-modify-write of
+    // the gaps, as ROMIO does, to preserve untouched bytes)
+    let mut domains: Vec<Vec<u8>> = Vec::with_capacity(nprocs);
+    for p in 0..nprocs {
+        let dlo = lo + p as u64 * domain;
+        let dhi = (dlo + domain).min(hi);
+        let mut img = vec![0u8; dhi.saturating_sub(dlo) as usize];
+        if !img.is_empty() {
+            fs.read_contig(dlo, &mut img)?;
+            for (o, d) in reqs {
+                let s = (*o).max(dlo);
+                let e = (o + d.len() as u64).min(dhi);
+                if s < e {
+                    let src = &d[(s - o) as usize..(e - o) as usize];
+                    img[(s - dlo) as usize..(e - dlo) as usize].copy_from_slice(src);
+                }
+            }
+        }
+        domains.push(img);
+    }
+
+    // phase 2: contiguous writes, one "process" per domain (parallel)
+    let mut handles = Vec::new();
+    for (p, img) in domains.into_iter().enumerate() {
+        let fs = fs.clone_handle();
+        let dlo = lo + p as u64 * domain;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            if !img.is_empty() {
+                fs.write_contig(dlo, &img)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::disk::MemDisk;
+
+    fn mem(n: usize) -> Vec<Arc<dyn Disk>> {
+        (0..n).map(|_| Arc::new(MemDisk::new()) as Arc<dyn Disk>).collect()
+    }
+
+    #[test]
+    fn unix_seq_stream() {
+        let d: Arc<dyn Disk> = Arc::new(MemDisk::new());
+        let mut f = UnixSeq::new(d);
+        f.write(b"hello world").unwrap();
+        f.seek(6);
+        let mut buf = [0u8; 5];
+        assert_eq!(f.read(&mut buf).unwrap(), 5);
+        assert_eq!(&buf, b"world");
+    }
+
+    #[test]
+    fn host_centralized_roundtrip() {
+        let d: Arc<dyn Disk> = Arc::new(MemDisk::new());
+        let host = HostCentralized::start(d);
+        let n1 = host.node();
+        let n2 = host.node();
+        n1.write(0, b"abcdef".to_vec());
+        assert_eq!(n2.read(2, 3), b"cde".to_vec());
+        host.stop();
+    }
+
+    #[test]
+    fn romio_striped_contig_roundtrip() {
+        let fs = RomioLike::new(mem(3), 8);
+        let data: Vec<u8> = (0..64u8).collect();
+        fs.write_contig(5, &data).unwrap();
+        let mut buf = vec![0u8; 64];
+        fs.read_contig(5, &mut buf).unwrap();
+        assert_eq!(buf, data);
+    }
+
+    #[test]
+    fn romio_sieved_read_matches_pattern() {
+        let fs = RomioLike::new(mem(2), 16);
+        let data: Vec<u8> = (0..100u8).collect();
+        fs.write_contig(0, &data).unwrap();
+        // every other 4-byte block
+        let view = AccessDesc::vector(1, 4, 4);
+        let mut buf = vec![0u8; 16];
+        let n = fs.read_sieved(&view, 0, 0, &mut buf).unwrap();
+        assert_eq!(n, 16);
+        assert_eq!(buf, vec![0, 1, 2, 3, 8, 9, 10, 11, 16, 17, 18, 19, 24, 25, 26, 27]);
+    }
+
+    #[test]
+    fn romio_sieved_write_preserves_gaps() {
+        let fs = RomioLike::new(mem(2), 16);
+        fs.write_contig(0, &[9u8; 32]).unwrap();
+        let view = AccessDesc::vector(1, 2, 6);
+        fs.write_sieved(&view, 0, 0, &[1, 1, 2, 2]).unwrap();
+        let mut buf = vec![0u8; 18];
+        fs.read_contig(0, &mut buf).unwrap();
+        assert_eq!(
+            buf,
+            vec![1, 1, 9, 9, 9, 9, 9, 9, 2, 2, 9, 9, 9, 9, 9, 9, 9, 9]
+        );
+    }
+
+    #[test]
+    fn romio_sieved_chunked_by_small_buffer() {
+        let mut fs = RomioLike::new(mem(2), 16);
+        fs.sieve_buf = 8; // force multiple sieve chunks
+        let data: Vec<u8> = (0..100u8).collect();
+        fs.write_contig(0, &data).unwrap();
+        let view = AccessDesc::vector(1, 3, 5);
+        let mut buf = vec![0u8; 12];
+        fs.read_sieved(&view, 0, 0, &mut buf).unwrap();
+        assert_eq!(buf, vec![0, 1, 2, 8, 9, 10, 16, 17, 18, 24, 25, 26]);
+    }
+
+    #[test]
+    fn two_phase_read_exchanges_correctly() {
+        let fs = RomioLike::new(mem(2), 8);
+        let data: Vec<u8> = (0..120u8).collect();
+        fs.write_contig(0, &data).unwrap();
+        // 3 processes, interleaved 10-byte slices of [0,120): p reads
+        // bytes p*10 + k*30 .. +10
+        let reqs: Vec<(u64, u64)> = (0..3).map(|p| (p as u64 * 40, 40)).collect();
+        let got = two_phase_read(&fs, &reqs).unwrap();
+        for (p, buf) in got.iter().enumerate() {
+            let want: Vec<u8> = (p as u8 * 40..p as u8 * 40 + 40).collect();
+            assert_eq!(buf, &want, "process {p}");
+        }
+    }
+
+    #[test]
+    fn two_phase_write_then_read_roundtrip() {
+        let fs = RomioLike::new(mem(3), 8);
+        // pre-existing data that the gaps must preserve
+        fs.write_contig(0, &[9u8; 64]).unwrap();
+        // 3 procs write interleaved 8-byte pieces, leaving [48,56) alone
+        let reqs: Vec<(u64, Vec<u8>)> = vec![
+            (0, vec![1u8; 16]),
+            (16, vec![2u8; 16]),
+            (40, vec![3u8; 8]),
+        ];
+        two_phase_write(&fs, &reqs).unwrap();
+        let mut buf = vec![0u8; 64];
+        fs.read_contig(0, &mut buf).unwrap();
+        assert_eq!(&buf[0..16], &[1u8; 16]);
+        assert_eq!(&buf[16..32], &[2u8; 16]);
+        assert_eq!(&buf[32..40], &[9u8; 8]); // gap preserved
+        assert_eq!(&buf[40..48], &[3u8; 8]);
+        assert_eq!(&buf[48..64], &[9u8; 16]); // outside span untouched
+    }
+
+    #[test]
+    fn two_phase_read_uneven_requests() {
+        let fs = RomioLike::new(mem(2), 8);
+        let data: Vec<u8> = (0..50u8).collect();
+        fs.write_contig(0, &data).unwrap();
+        let reqs = vec![(5u64, 7u64), (30, 3), (12, 18)];
+        let got = two_phase_read(&fs, &reqs).unwrap();
+        assert_eq!(got[0], (5..12u8).collect::<Vec<_>>());
+        assert_eq!(got[1], (30..33u8).collect::<Vec<_>>());
+        assert_eq!(got[2], (12..30u8).collect::<Vec<_>>());
+    }
+}

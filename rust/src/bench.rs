@@ -1,0 +1,916 @@
+//! Benchmark harness + workload generators regenerating the paper's
+//! Chapter-8 evaluation (experiment index in DESIGN.md §5).
+//!
+//! `cargo bench` (rust/benches/paper.rs) and `examples/bench_tables.rs`
+//! both drive these functions; they print rows shaped like the paper's
+//! tables (aggregate MB/s per client/server combination, etc.). Absolute
+//! numbers come from the [`SimCost`] disk model — 1998 disks scaled
+//! 10x — so *shapes* (who wins, scaling, crossovers) are the result.
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::access::AccessDesc;
+use crate::baselines::{two_phase_read, HostCentralized, RomioLike, UnixSeq};
+use crate::client::Client;
+use crate::disk::{Disk, SimCost, SimDisk};
+use crate::hints::{FileAdminHint, Hint};
+use crate::layout::Distribution;
+use crate::memory::CacheConfig;
+use crate::modes::ServerPool;
+use crate::msg::OpenMode;
+use crate::server::{DiskKind, ServerConfig};
+use crate::util::mbps;
+use crate::vimpios::{get_view_pattern, Basic, Datatype};
+
+// ------------------------------------------------------------- reporting
+
+/// Print a paper-style table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(|c| c.len()).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(0)
+        })
+        .collect();
+    let line = |cells: Vec<String>| {
+        let s: Vec<String> = cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("  {}", s.join("  "));
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}
+
+// ------------------------------------------------------------- workloads
+
+/// Default bench disk model + server config.
+pub fn bench_server_config(cache_bytes: u64, overhead_us: u64) -> ServerConfig {
+    ServerConfig {
+        disks: 1,
+        kind: DiskKind::Sim(SimCost::paper_1998()),
+        cache: CacheConfig {
+            page: 64 * 1024,
+            capacity: cache_bytes,
+            write_back: true,
+        },
+        prefetch: true,
+        readahead: 256 * 1024,
+        request_overhead: std::time::Duration::from_micros(overhead_us),
+    }
+}
+
+/// Result of one ViPIOS shared-file run.
+#[derive(Debug, Clone, Copy)]
+pub struct BwResult {
+    pub write_mbps: f64,
+    pub read_mbps: f64,
+}
+
+/// E1/E2/E5 workload: `nclients` SPMD clients write disjoint BLOCK
+/// regions of one shared file striped over `nservers`, then read them
+/// back; aggregate bandwidth per phase. `overhead_us > 0` models
+/// non-dedicated I/O nodes (CPU shared with compute, E2).
+pub fn vipios_shared_file(
+    nclients: usize,
+    nservers: usize,
+    total_bytes: u64,
+    req_bytes: u64,
+    cache_bytes: u64,
+    overhead_us: u64,
+) -> Result<BwResult> {
+    let pool = ServerPool::start(nservers, bench_server_config(cache_bytes, overhead_us))?;
+    // preparation phase: file-admin hint for the SPMD block distribution
+    {
+        let mut c = pool.client()?;
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: "bench".into(),
+            distribution: Distribution::block_for(total_bytes, nservers as u32),
+            nprocs: Some(nclients as u32),
+        }))?;
+        c.disconnect()?;
+    }
+    let per = total_bytes / nclients as u64;
+    let start = Arc::new(Barrier::new(nclients + 1));
+    let mid = Arc::new(Barrier::new(nclients + 1));
+    let end = Arc::new(Barrier::new(nclients + 1));
+    let mut handles = Vec::new();
+    for cidx in 0..nclients {
+        let world = pool.world().clone();
+        let (start, mid, end) = (start.clone(), mid.clone(), end.clone());
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut c = Client::connect(&world)?;
+            let h = c.open("bench", OpenMode::rdwr_create())?;
+            let base = cidx as u64 * per;
+            let chunk = vec![0xA5u8; req_bytes as usize];
+            start.wait();
+            let mut off = base;
+            while off < base + per {
+                let n = req_bytes.min(base + per - off);
+                c.write_at(h, off, &chunk[..n as usize])?;
+                off += n;
+            }
+            // flush delayed writes so the write phase pays its disk cost
+            c.sync(h)?;
+            mid.wait();
+            // read phase (after all writes land)
+            let mut buf = vec![0u8; req_bytes as usize];
+            let mut off = base;
+            end.wait();
+            while off < base + per {
+                let n = req_bytes.min(base + per - off);
+                c.read_at(h, off, &mut buf[..n as usize])?;
+                off += n;
+            }
+            c.close(h)?;
+            c.disconnect()?;
+            Ok(())
+        }));
+    }
+    start.wait();
+    let t0 = Instant::now();
+    mid.wait();
+    let write_t = t0.elapsed();
+    // cold-cache the read phase (the paper's read tests start with
+    // nothing resident)
+    {
+        let mut admin = pool.client()?;
+        for &s in pool.server_ranks() {
+            admin.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+        }
+        admin.disconnect()?;
+    }
+    let t1 = Instant::now();
+    end.wait();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let read_t = t1.elapsed();
+    pool.shutdown()?;
+    Ok(BwResult {
+        write_mbps: mbps(total_bytes, write_t),
+        read_mbps: mbps(total_bytes, read_t),
+    })
+}
+
+/// E3 baseline: single sequential UNIX stream over one sim disk.
+pub fn unix_seq_file(total_bytes: u64, req_bytes: u64) -> Result<BwResult> {
+    let disk: Arc<dyn Disk> = Arc::new(SimDisk::new(SimCost::paper_1998()));
+    let mut f = UnixSeq::new(disk);
+    let chunk = vec![0xA5u8; req_bytes as usize];
+    let t0 = Instant::now();
+    let mut off = 0;
+    while off < total_bytes {
+        let n = req_bytes.min(total_bytes - off) as usize;
+        f.write(&chunk[..n])?;
+        off += n as u64;
+    }
+    let wt = t0.elapsed();
+    f.seek(0);
+    let mut buf = vec![0u8; req_bytes as usize];
+    let t1 = Instant::now();
+    let mut off = 0;
+    while off < total_bytes {
+        let n = req_bytes.min(total_bytes - off) as usize;
+        f.read(&mut buf[..n])?;
+        off += n as u64;
+    }
+    let rt = t1.elapsed();
+    Ok(BwResult { write_mbps: mbps(total_bytes, wt), read_mbps: mbps(total_bytes, rt) })
+}
+
+/// E3 baseline: HPF host-node model — `nclients` node processes, all I/O
+/// through one host on one disk.
+pub fn host_centralized_file(
+    nclients: usize,
+    total_bytes: u64,
+    req_bytes: u64,
+) -> Result<BwResult> {
+    let disk: Arc<dyn Disk> = Arc::new(SimDisk::new(SimCost::paper_1998()));
+    let host = HostCentralized::start(disk);
+    let per = total_bytes / nclients as u64;
+    let run = |write: bool| -> std::time::Duration {
+        let barrier = Arc::new(Barrier::new(nclients + 1));
+        let done = Arc::new(Barrier::new(nclients + 1));
+        let mut hs = Vec::new();
+        for cidx in 0..nclients {
+            let node = host.node();
+            let (barrier, done) = (barrier.clone(), done.clone());
+            hs.push(std::thread::spawn(move || {
+                let base = cidx as u64 * per;
+                barrier.wait();
+                let mut off = base;
+                while off < base + per {
+                    let n = req_bytes.min(base + per - off);
+                    if write {
+                        node.write(off, vec![0xA5u8; n as usize]);
+                    } else {
+                        let _ = node.read(off, n);
+                    }
+                    off += n;
+                }
+                done.wait();
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        done.wait();
+        for h in hs {
+            h.join().unwrap();
+        }
+        t0.elapsed()
+    };
+    let wt = run(true);
+    let rt = run(false);
+    host.stop();
+    Ok(BwResult { write_mbps: mbps(total_bytes, wt), read_mbps: mbps(total_bytes, rt) })
+}
+
+/// E4: strided access — ViMPIOS (server-side view resolution) vs the
+/// ROMIO-like library (client-side data sieving). Pattern: every
+/// `stride`-th `blk`-byte record of a `total_bytes` file, one client.
+pub fn strided_vipios(
+    nservers: usize,
+    total_bytes: u64,
+    blk: u32,
+    stride: u32,
+) -> Result<f64> {
+    let pool = ServerPool::start(nservers, bench_server_config(2 << 20, 0))?;
+    let mut c = pool.client()?;
+    let h = c.open("strided", OpenMode::rdwr_create())?;
+    // write contiguous base data first
+    let chunk = vec![1u8; 1 << 20];
+    let mut off = 0;
+    while off < total_bytes {
+        let n = (1u64 << 20).min(total_bytes - off);
+        c.write_at(h, off, &chunk[..n as usize])?;
+        off += n;
+    }
+    c.sync(h)?;
+    for &s in pool.server_ranks() {
+        c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+    }
+    // strided read through a view
+    let dt = Datatype::vector(1, blk / 4, stride / 4, Datatype::Basic(Basic::Int));
+    let desc = get_view_pattern(&dt);
+    c.set_view(h, 0, desc)?;
+    let logical_total = total_bytes / stride as u64 * blk as u64;
+    let mut buf = vec![0u8; (1 << 20).min(logical_total as usize)];
+    let t0 = Instant::now();
+    let mut got = 0u64;
+    c.seek(h, 0)?;
+    while got < logical_total {
+        let n = c.read(h, &mut buf)?;
+        if n == 0 {
+            break;
+        }
+        got += n as u64;
+    }
+    let dt_e = t0.elapsed();
+    pool.shutdown()?;
+    Ok(mbps(got, dt_e))
+}
+
+/// E4 counterpart: the same strided pattern via ROMIO-style data sieving
+/// over the same striped sim disks.
+pub fn strided_romio(
+    ndisks: usize,
+    total_bytes: u64,
+    blk: u32,
+    stride: u32,
+) -> Result<f64> {
+    let disks: Vec<Arc<dyn Disk>> = (0..ndisks)
+        .map(|_| Arc::new(SimDisk::new(SimCost::paper_1998())) as Arc<dyn Disk>)
+        .collect();
+    let fs = RomioLike::new(disks, 64 * 1024);
+    let chunk = vec![1u8; 1 << 20];
+    let mut off = 0;
+    while off < total_bytes {
+        let n = (1u64 << 20).min(total_bytes - off);
+        fs.write_contig(off, &chunk[..n as usize])?;
+        off += n;
+    }
+    let view = AccessDesc::vector(1, blk, (stride - blk) as i64);
+    let logical_total = total_bytes / stride as u64 * blk as u64;
+    let mut buf = vec![0u8; (1 << 20).min(logical_total as usize)];
+    let t0 = Instant::now();
+    let mut got = 0u64;
+    while got < logical_total {
+        let n = (buf.len() as u64).min(logical_total - got);
+        let r = fs.read_sieved(&view, 0, got, &mut buf[..n as usize])?;
+        got += r as u64;
+        if r == 0 {
+            break;
+        }
+    }
+    Ok(mbps(got, t0.elapsed()))
+}
+
+/// E4 contiguous comparison: ROMIO-like direct striped access.
+pub fn contig_romio(ndisks: usize, total_bytes: u64, req_bytes: u64) -> Result<BwResult> {
+    let disks: Vec<Arc<dyn Disk>> = (0..ndisks)
+        .map(|_| Arc::new(SimDisk::new(SimCost::paper_1998())) as Arc<dyn Disk>)
+        .collect();
+    let fs = RomioLike::new(disks, 64 * 1024);
+    let chunk = vec![0xA5u8; req_bytes as usize];
+    let t0 = Instant::now();
+    let mut off = 0;
+    while off < total_bytes {
+        let n = req_bytes.min(total_bytes - off);
+        fs.write_contig(off, &chunk[..n as usize])?;
+        off += n;
+    }
+    let wt = t0.elapsed();
+    let mut buf = vec![0u8; req_bytes as usize];
+    let t1 = Instant::now();
+    let mut off = 0;
+    while off < total_bytes {
+        let n = req_bytes.min(total_bytes - off);
+        fs.read_contig(off, &mut buf[..n as usize])?;
+        off += n;
+    }
+    Ok(BwResult {
+        write_mbps: mbps(total_bytes, wt),
+        read_mbps: mbps(total_bytes, t1.elapsed()),
+    })
+}
+
+/// E4/two-phase: collective interleaved read via ROMIO two-phase.
+pub fn two_phase_romio(ndisks: usize, nprocs: usize, total_bytes: u64) -> Result<f64> {
+    let disks: Vec<Arc<dyn Disk>> = (0..ndisks)
+        .map(|_| Arc::new(SimDisk::new(SimCost::paper_1998())) as Arc<dyn Disk>)
+        .collect();
+    let fs = RomioLike::new(disks, 64 * 1024);
+    let chunk = vec![1u8; 1 << 20];
+    let mut off = 0;
+    while off < total_bytes {
+        let n = (1u64 << 20).min(total_bytes - off);
+        fs.write_contig(off, &chunk[..n as usize])?;
+        off += n;
+    }
+    let per = total_bytes / nprocs as u64;
+    let reqs: Vec<(u64, u64)> = (0..nprocs).map(|p| (p as u64 * per, per)).collect();
+    let t0 = Instant::now();
+    let out = two_phase_read(&fs, &reqs)?;
+    let got: u64 = out.iter().map(|b| b.len() as u64).sum();
+    Ok(mbps(got, t0.elapsed()))
+}
+
+/// E6: buffer-management sweep — re-read a working set through a cache
+/// of `cache_bytes`; returns (bandwidth MB/s, hit rate).
+pub fn cache_sweep(
+    working_set: u64,
+    cache_bytes: u64,
+    rounds: usize,
+) -> Result<(f64, f64)> {
+    let pool = ServerPool::start(1, bench_server_config(cache_bytes, 0))?;
+    let mut c = pool.client()?;
+    let h = c.open("ws", OpenMode::rdwr_create())?;
+    let chunk = vec![7u8; 64 * 1024];
+    let mut off = 0;
+    while off < working_set {
+        let n = (chunk.len() as u64).min(working_set - off);
+        c.write_at(h, off, &chunk[..n as usize])?;
+        off += n;
+    }
+    c.sync(h)?;
+    let mut buf = vec![0u8; 64 * 1024];
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let mut off = 0;
+        while off < working_set {
+            let n = (buf.len() as u64).min(working_set - off);
+            c.read_at(h, off, &mut buf[..n as usize])?;
+            off += n;
+        }
+    }
+    let el = t0.elapsed();
+    let server = pool.server_ranks()[0];
+    let stats = c.stats_of(server)?;
+    let hits = stats.cache_hits as f64;
+    let total = (stats.cache_hits + stats.cache_misses) as f64;
+    pool.shutdown()?;
+    Ok((mbps(working_set * rounds as u64, el), hits / total.max(1.0)))
+}
+
+/// E7: redistribution — write with BLOCK layout, read back as CYCLIC
+/// slices (a different distribution than written). ViPIOS serves the new
+/// view server-side; the ROMIO column re-reads with client-side sieving.
+pub fn redistribution_vipios(nservers: usize, total_bytes: u64, nclients: usize) -> Result<f64> {
+    let pool = ServerPool::start(nservers, bench_server_config(2 << 20, 0))?;
+    {
+        let mut c = pool.client()?;
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: "redist".into(),
+            distribution: Distribution::block_for(total_bytes, nservers as u32),
+            nprocs: Some(nclients as u32),
+        }))?;
+        let h = c.open("redist", OpenMode::rdwr_create())?;
+        let chunk = vec![3u8; 1 << 20];
+        let mut off = 0;
+        while off < total_bytes {
+            let n = (1u64 << 20).min(total_bytes - off);
+            c.write_at(h, off, &chunk[..n as usize])?;
+            off += n;
+        }
+        c.sync(h)?;
+        c.close(h)?;
+        for &s in pool.server_ranks() {
+            c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+        }
+        c.disconnect()?;
+    }
+    // read phase: each client reads its CYCLIC(64K) slice through a view
+    let barrier = Arc::new(Barrier::new(nclients + 1));
+    let done = Arc::new(Barrier::new(nclients + 1));
+    let mut handles = Vec::new();
+    for p in 0..nclients {
+        let world = pool.world().clone();
+        let (barrier, done) = (barrier.clone(), done.clone());
+        handles.push(std::thread::spawn(move || -> Result<u64> {
+            let mut c = Client::connect(&world)?;
+            let h = c.open("redist", OpenMode::rdonly())?;
+            let k = 64 * 1024u32;
+            let dt = Datatype::darray_cyclic1(
+                (total_bytes / 4) as u32,
+                k / 4,
+                p as u32,
+                nclients as u32,
+                Datatype::Basic(Basic::Int),
+            )
+            .map_err(anyhow::Error::from)?;
+            let desc = get_view_pattern(&dt);
+            c.set_view(h, 0, desc)?;
+            let mut buf = vec![0u8; 1 << 20];
+            barrier.wait();
+            let mut got = 0u64;
+            loop {
+                let n = c.read(h, &mut buf)?;
+                got += n as u64;
+                if n < buf.len() {
+                    break;
+                }
+            }
+            done.wait();
+            Ok(got)
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    done.wait();
+    let mut total_got = 0u64;
+    for h in handles {
+        total_got += h.join().unwrap()?;
+    }
+    let el = t0.elapsed();
+    pool.shutdown()?;
+    Ok(mbps(total_got, el))
+}
+
+// ------------------------------------------------------- table runners
+
+/// Full Chapter-8 table regeneration, shared by `cargo bench`,
+/// `examples/bench_tables` and `vipios bench`.
+pub mod tables {
+    use super::*;
+
+    const MB: u64 = 1 << 20;
+
+    fn sizes(quick: bool) -> (u64, u64) {
+        // (file size, request size)
+        if quick {
+            (4 * MB, 64 * 1024)
+        } else {
+            (16 * MB, 64 * 1024)
+        }
+    }
+
+    /// E1 — §8.2.1 dedicated I/O nodes: bandwidth vs (clients, servers).
+    pub fn dedicated(quick: bool) -> Result<()> {
+        let (file, req) = sizes(quick);
+        let clients = if quick { vec![1, 4] } else { vec![1, 2, 4, 8] };
+        let servers = if quick { vec![1, 4] } else { vec![1, 2, 4] };
+        let mut rows = Vec::new();
+        for &nc in &clients {
+            for &ns in &servers {
+                let r = vipios_shared_file(nc, ns, file, req, MB, 0)?;
+                rows.push(vec![
+                    nc.to_string(),
+                    ns.to_string(),
+                    format!("{:.1}", r.write_mbps),
+                    format!("{:.1}", r.read_mbps),
+                ]);
+            }
+        }
+        print_table(
+            "E1 (§8.2.1) dedicated I/O nodes — aggregate bandwidth",
+            &["clients", "servers", "write MB/s", "read MB/s"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    /// E2 — §8.2.2 non-dedicated I/O nodes (CPU shared with compute).
+    pub fn nondedicated(quick: bool) -> Result<()> {
+        let (file, req) = sizes(quick);
+        let combos = if quick { vec![(2, 2)] } else { vec![(2, 2), (4, 2), (4, 4)] };
+        let mut rows = Vec::new();
+        for &(nc, ns) in &combos {
+            let ded = vipios_shared_file(nc, ns, file, req, MB, 0)?;
+            let non = vipios_shared_file(nc, ns, file, req, MB, 1000)?;
+            rows.push(vec![
+                nc.to_string(),
+                ns.to_string(),
+                format!("{:.1}", ded.read_mbps),
+                format!("{:.1}", non.read_mbps),
+                format!("{:.2}x", ded.read_mbps / non.read_mbps.max(1e-9)),
+            ]);
+        }
+        print_table(
+            "E2 (§8.2.2) non-dedicated I/O nodes — read bandwidth",
+            &["clients", "servers", "dedicated", "non-dedicated", "slowdown"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    /// E3 — §8.3.1 ViPIOS vs UNIX file I/O vs host-centralised MPI.
+    pub fn vs_unix(quick: bool) -> Result<()> {
+        let (file, req) = sizes(quick);
+        let nclients = if quick { vec![1, 4] } else { vec![1, 2, 4, 8] };
+        let mut rows = Vec::new();
+        for &nc in &nclients {
+            let v = vipios_shared_file(nc, 4.min(nc.max(2)), file, req, MB, 0)?;
+            let h = host_centralized_file(nc, file, req)?;
+            let u = if nc == 1 {
+                unix_seq_file(file, req)?
+            } else {
+                // a single stream regardless of process count
+                unix_seq_file(file, req)?
+            };
+            rows.push(vec![
+                nc.to_string(),
+                format!("{:.1}", v.read_mbps),
+                format!("{:.1}", h.read_mbps),
+                format!("{:.1}", u.read_mbps),
+            ]);
+        }
+        print_table(
+            "E3 (§8.3.1) read bandwidth: ViPIOS vs host-node MPI vs UNIX",
+            &["clients", "ViPIOS", "host-MPI", "UNIX seq"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    /// E4 — §8.3.2/§8.4.2 ViMPIOS vs ROMIO-like: contiguous + strided +
+    /// two-phase collective.
+    pub fn vs_romio(quick: bool) -> Result<()> {
+        let (file, req) = sizes(quick);
+        let ns = 4;
+        let v = vipios_shared_file(1, ns, file, req, MB, 0)?;
+        let r = contig_romio(ns, file, req)?;
+        print_table(
+            "E4a (§8.3.2) contiguous read/write — ViMPIOS vs ROMIO-like",
+            &["system", "write MB/s", "read MB/s"],
+            &[
+                vec!["ViMPIOS".into(), format!("{:.1}", v.write_mbps), format!("{:.1}", v.read_mbps)],
+                vec!["ROMIO-like".into(), format!("{:.1}", r.write_mbps), format!("{:.1}", r.read_mbps)],
+            ],
+        );
+        let mut rows = Vec::new();
+        for &(blk, stride) in &[(4096u32, 8192u32), (4096, 16384), (1024, 8192)] {
+            let vi = strided_vipios(ns, file, blk, stride)?;
+            let ro = strided_romio(ns, file, blk, stride)?;
+            rows.push(vec![
+                format!("{blk}/{stride}"),
+                format!("{vi:.1}"),
+                format!("{ro:.1}"),
+                format!("{:.2}x", vi / ro.max(1e-9)),
+            ]);
+        }
+        print_table(
+            "E4b strided read (blk/stride bytes) — ViMPIOS view vs ROMIO sieving",
+            &["pattern", "ViMPIOS", "ROMIO-like", "speedup"],
+            &rows,
+        );
+        let tp = two_phase_romio(ns, 4, file)?;
+        print_table(
+            "E4c collective interleaved read",
+            &["system", "MB/s"],
+            &[vec!["ROMIO two-phase".into(), format!("{tp:.1}")]],
+        );
+        Ok(())
+    }
+
+    /// E5 — §8.4.1 scalability with file size.
+    pub fn scalability(quick: bool) -> Result<()> {
+        let sizes: Vec<u64> = if quick {
+            vec![MB, 4 * MB]
+        } else {
+            vec![MB, 4 * MB, 16 * MB, 64 * MB]
+        };
+        let mut rows = Vec::new();
+        for &s in &sizes {
+            let r = vipios_shared_file(4, 4, s, 64 * 1024, MB, 0)?;
+            rows.push(vec![
+                crate::util::fmt_bytes(s),
+                format!("{:.1}", r.write_mbps),
+                format!("{:.1}", r.read_mbps),
+            ]);
+        }
+        print_table(
+            "E5 (§8.4.1) scalability with file size (4 clients, 4 servers)",
+            &["file size", "write MB/s", "read MB/s"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    /// E6 — §8.5 buffer management: cache-size sweep.
+    pub fn buffer(quick: bool) -> Result<()> {
+        let ws = if quick { 4 * MB } else { 16 * MB };
+        let caches: Vec<u64> = if quick {
+            vec![MB, 8 * MB]
+        } else {
+            vec![MB, 2 * MB, 4 * MB, 8 * MB, 32 * MB]
+        };
+        let mut rows = Vec::new();
+        for &cb in &caches {
+            let (bw, hit) = cache_sweep(ws, cb, 3)?;
+            rows.push(vec![
+                crate::util::fmt_bytes(cb),
+                format!("{bw:.1}"),
+                format!("{:.1}%", hit * 100.0),
+            ]);
+        }
+        print_table(
+            "E6 (§8.5) buffer management — re-read bandwidth vs cache size",
+            &["cache", "MB/s", "hit rate"],
+            &rows,
+        );
+        Ok(())
+    }
+
+    /// E7 — redistribution flexibility (write BLOCK, read CYCLIC view).
+    pub fn redistribution(quick: bool) -> Result<()> {
+        let (file, _) = sizes(quick);
+        let bw = redistribution_vipios(4, file, 4)?;
+        let sieve = strided_romio(4, file, 64 * 1024, 4 * 64 * 1024)?;
+        print_table(
+            "E7 redistribution: write BLOCK, read CYCLIC slices",
+            &["system", "MB/s"],
+            &[
+                vec!["ViPIOS (view, server-side)".into(), format!("{bw:.1}")],
+                vec!["ROMIO-like (client sieve)".into(), format!("{sieve:.1}")],
+            ],
+        );
+        Ok(())
+    }
+
+    /// Ablations over the design choices DESIGN.md calls out: sequential
+    /// readahead, delayed writes (write-back), request size, and the
+    /// hint-driven layout (static fit) vs the default heuristic.
+    pub fn ablation(quick: bool) -> Result<()> {
+        let (file, req) = sizes(quick);
+
+        // (a) readahead prefetch on/off — sequential single-client read
+        let bw = |prefetch: bool| -> Result<f64> {
+            let mut cfg = bench_server_config(MB, 0);
+            cfg.prefetch = prefetch;
+            let pool = ServerPool::start(2, cfg)?;
+            let mut c = pool.client()?;
+            let h = c.open("abl", OpenMode::rdwr_create())?;
+            let chunk = vec![1u8; req as usize];
+            let mut off = 0;
+            while off < file {
+                c.write_at(h, off, &chunk)?;
+                off += req;
+            }
+            c.sync(h)?;
+            for &s in pool.server_ranks() {
+                c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+            }
+            let mut buf = vec![0u8; req as usize];
+            let t0 = Instant::now();
+            let mut off = 0;
+            while off < file {
+                c.read_at(h, off, &mut buf)?;
+                off += req;
+            }
+            let el = t0.elapsed();
+            pool.shutdown()?;
+            Ok(mbps(file, el))
+        };
+        let with_ra = bw(true)?;
+        let without_ra = bw(false)?;
+        print_table(
+            "A1 ablation: sequential readahead (1 client, 2 servers)",
+            &["readahead", "read MB/s"],
+            &[
+                vec!["on".into(), format!("{with_ra:.1}")],
+                vec!["off".into(), format!("{without_ra:.1}")],
+            ],
+        );
+
+        // (b) delayed writes (write-back) on/off — bursty writer
+        let wbw = |write_back: bool| -> Result<f64> {
+            let mut cfg = bench_server_config(4 * MB, 0);
+            cfg.cache.write_back = write_back;
+            let pool = ServerPool::start(2, cfg)?;
+            let mut c = pool.client()?;
+            let h = c.open("ablw", OpenMode::rdwr_create())?;
+            let chunk = vec![2u8; req as usize];
+            let t0 = Instant::now();
+            let mut off = 0;
+            while off < file / 2 {
+                c.write_at(h, off, &chunk)?;
+                off += req;
+            }
+            c.sync(h)?;
+            let el = t0.elapsed();
+            pool.shutdown()?;
+            Ok(mbps(file / 2, el))
+        };
+        let wb_on = wbw(true)?;
+        let wb_off = wbw(false)?;
+        print_table(
+            "A2 ablation: delayed writes (write-back cache)",
+            &["delayed writes", "write MB/s (incl. sync)"],
+            &[
+                vec!["on".into(), format!("{wb_on:.1}")],
+                vec!["off (write-through)".into(), format!("{wb_off:.1}")],
+            ],
+        );
+
+        // (c) request size sweep — seek/transfer crossover of the model
+        let mut rows = Vec::new();
+        for &rq in &[4 * 1024u64, 16 * 1024, 64 * 1024, 256 * 1024] {
+            let r = vipios_shared_file(2, 2, file / 2, rq, MB, 0)?;
+            rows.push(vec![
+                crate::util::fmt_bytes(rq),
+                format!("{:.1}", r.write_mbps),
+                format!("{:.1}", r.read_mbps),
+            ]);
+        }
+        print_table(
+            "A3 ablation: request size (2 clients, 2 servers)",
+            &["request", "write MB/s", "read MB/s"],
+            &rows,
+        );
+
+        // (d) static fit: hinted BLOCK layout vs default cyclic heuristic
+        let fit = |hinted: bool| -> Result<f64> {
+            let pool = ServerPool::start(4, bench_server_config(MB, 0))?;
+            {
+                let mut c = pool.client()?;
+                if hinted {
+                    c.hint(Hint::FileAdmin(FileAdminHint {
+                        name: "fit".into(),
+                        distribution: Distribution::block_for(file, 4),
+                        nprocs: Some(4),
+                    }))?;
+                }
+                c.disconnect()?;
+            }
+            let r = {
+                // 4 clients, each its quarter (as in E1) on this pool
+                let per = file / 4;
+                let barrier = Arc::new(Barrier::new(5));
+                let done = Arc::new(Barrier::new(5));
+                let mut hs = Vec::new();
+                for i in 0..4usize {
+                    let world = pool.world().clone();
+                    let (barrier, done) = (barrier.clone(), done.clone());
+                    hs.push(std::thread::spawn(move || -> Result<()> {
+                        let mut c = Client::connect(&world)?;
+                        let h = c.open("fit", OpenMode::rdwr_create())?;
+                        let chunk = vec![1u8; 64 * 1024];
+                        barrier.wait();
+                        let mut off = i as u64 * per;
+                        while off < (i as u64 + 1) * per {
+                            c.write_at(h, off, &chunk)?;
+                            off += 64 * 1024;
+                        }
+                        c.sync(h)?;
+                        done.wait();
+                        Ok(())
+                    }));
+                }
+                barrier.wait();
+                let t0 = Instant::now();
+                done.wait();
+                for h in hs {
+                    h.join().unwrap()?;
+                }
+                let el = t0.elapsed();
+                pool.shutdown()?;
+                mbps(file, el)
+            };
+            Ok(r)
+        };
+        let hinted = fit(true)?;
+        let heuristic = fit(false)?;
+        print_table(
+            "A4 ablation: hinted BLOCK layout (static fit) vs default heuristic",
+            &["layout", "write MB/s"],
+            &[
+                vec!["hinted BLOCK (static fit)".into(), format!("{hinted:.1}")],
+                vec!["default CYCLIC heuristic".into(), format!("{heuristic:.1}")],
+            ],
+        );
+        Ok(())
+    }
+
+    /// Dispatch by experiment name.
+    pub fn run(exp: &str, quick: bool) -> Result<()> {
+        match exp {
+            "dedicated" => dedicated(quick),
+            "nondedicated" => nondedicated(quick),
+            "vs_unix" => vs_unix(quick),
+            "vs_romio" => vs_romio(quick),
+            "scalability" => scalability(quick),
+            "buffer" => buffer(quick),
+            "redistribution" => redistribution(quick),
+            "ablation" => ablation(quick),
+            "all" => {
+                dedicated(quick)?;
+                nondedicated(quick)?;
+                vs_unix(quick)?;
+                vs_romio(quick)?;
+                scalability(quick)?;
+                buffer(quick)?;
+                redistribution(quick)?;
+                ablation(quick)
+            }
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Small-size smoke tests: the benches proper run via `cargo bench`.
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn vipios_shared_file_smoke() {
+        let r = vipios_shared_file(2, 2, 2 * MB, 64 * 1024, 8 * MB, 0).unwrap();
+        assert!(r.write_mbps > 0.0 && r.read_mbps > 0.0);
+    }
+
+    #[test]
+    fn baselines_smoke() {
+        let u = unix_seq_file(MB, 64 * 1024).unwrap();
+        assert!(u.write_mbps > 0.0);
+        let h = host_centralized_file(2, MB, 64 * 1024).unwrap();
+        assert!(h.read_mbps > 0.0);
+        let r = contig_romio(2, MB, 64 * 1024).unwrap();
+        assert!(r.read_mbps > 0.0);
+    }
+
+    #[test]
+    fn strided_smoke() {
+        let v = strided_vipios(2, MB, 4096, 8192).unwrap();
+        assert!(v > 0.0);
+        let r = strided_romio(2, MB, 4096, 8192).unwrap();
+        assert!(r > 0.0);
+    }
+
+    #[test]
+    fn cache_sweep_hit_rate_rises_with_capacity() {
+        let (_bw_small, hit_small) = cache_sweep(4 * MB, MB, 2).unwrap();
+        let (_bw_big, hit_big) = cache_sweep(4 * MB, 16 * MB, 2).unwrap();
+        assert!(
+            hit_big > hit_small,
+            "hit rate should rise with cache: {hit_small} vs {hit_big}"
+        );
+    }
+
+    #[test]
+    fn two_phase_smoke() {
+        let bw = two_phase_romio(2, 2, MB).unwrap();
+        assert!(bw > 0.0);
+    }
+
+    #[test]
+    fn redistribution_smoke() {
+        let bw = redistribution_vipios(2, 2 * MB, 2).unwrap();
+        assert!(bw > 0.0);
+    }
+}

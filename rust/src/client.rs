@@ -1,0 +1,515 @@
+//! The ViPIOS Interface VI (§4.2, §5.1.1, Appendix A) — the small library
+//! linked to every application process.
+//!
+//! The VI owns the file-handle table (position, view, async-op status —
+//! the paper notes this placement makes `Vipios_IOState` cheap and lets
+//! foe servers ACK the client directly), translates the `Vipios_*` calls
+//! into ER messages to the buddy, and collects the ACKs — including data
+//! ACKs arriving straight from foe servers, bypassing the buddy.
+//!
+//! Synchronous `read`/`write` are implemented on top of the immediate
+//! (`i*`) versions exactly as in the paper: "the VI tests and waits for
+//! the completion of the operation".
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::access::AccessDesc;
+use crate::hints::Hint;
+use crate::msg::{
+    Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
+    Role, ServerStats, View, World,
+};
+
+/// Client-side file handle (index into the VI's handle table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Vfh(u64);
+
+/// Async operation handle (`Vipios_IRead`/`Vipios_IWrite`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Op(u64);
+
+#[derive(Debug)]
+struct FileState {
+    file: FileId,
+    pos: u64,
+    view: Option<View>,
+    #[allow(dead_code)]
+    mode: OpenMode,
+}
+
+#[derive(Debug)]
+enum OpKind {
+    Read,
+    Write,
+    Admin,
+}
+
+#[derive(Debug)]
+struct OpState {
+    kind: OpKind,
+    /// Expected total (known for writes up front; reads learn it from
+    /// `ReadPlanned`).
+    expected: Option<u64>,
+    received: u64,
+    /// Read data staged as (dst_base, bytes).
+    staged: Vec<(u64, Vec<u8>)>,
+    /// Completed admin response.
+    done: Option<Response>,
+    error: Option<String>,
+}
+
+/// `Vipios_IOState` answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoState {
+    /// Still outstanding; bytes transferred so far.
+    InProgress { bytes_so_far: u64 },
+    /// Complete — `wait` will return the result.
+    Complete,
+    /// Failed — `wait` will return the error.
+    Failed,
+    /// Result already collected by a prior `wait`.
+    Collected,
+}
+
+/// Completed async operation result.
+#[derive(Debug)]
+pub enum OpResult {
+    /// Read data, assembled in request order (short at EOF).
+    Read(Vec<u8>),
+    /// Bytes written.
+    Written(u64),
+    /// Admin ack.
+    Admin(Response),
+}
+
+/// The VI: one per application process.
+pub struct Client {
+    ep: Endpoint,
+    buddy: Rank,
+    next_req: u64,
+    next_handle: u64,
+    handles: HashMap<u64, FileState>,
+    ops: HashMap<u64, OpState>,
+}
+
+impl Client {
+    /// `Vipios_Connect`: join the world and ask the connection controller
+    /// (first server) for a buddy assignment.
+    pub fn connect(world: &World) -> Result<Self> {
+        let ep = world.join(Role::Client);
+        let servers = world.servers();
+        let cc = *servers.first().ok_or_else(|| anyhow!("no ViPIOS servers running"))?;
+        let mut c = Self {
+            ep,
+            buddy: cc,
+            next_req: 0,
+            next_handle: 0,
+            handles: HashMap::new(),
+            ops: HashMap::new(),
+        };
+        let op = c.send_admin(cc, Request::Connect)?;
+        match c.wait(op)? {
+            OpResult::Admin(Response::Connected { buddy }) => {
+                c.buddy = buddy;
+                Ok(c)
+            }
+            other => bail!("connect failed: {other:?}"),
+        }
+    }
+
+    pub fn rank(&self) -> Rank {
+        self.ep.rank
+    }
+
+    pub fn buddy(&self) -> Rank {
+        self.buddy
+    }
+
+    /// `Vipios_Disconnect`.
+    pub fn disconnect(mut self) -> Result<()> {
+        let op = self.send_admin(self.buddy, Request::Disconnect)?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Disconnected) => Ok(()),
+            other => bail!("disconnect failed: {other:?}"),
+        }
+    }
+
+    // ------------------------------------------------------ file ops
+
+    /// `Vipios_Open`.
+    pub fn open(&mut self, name: &str, mode: OpenMode) -> Result<Vfh> {
+        let op = self.send_admin(
+            self.buddy,
+            Request::Open { name: name.to_string(), mode },
+        )?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Opened { file, .. }) => {
+                let h = self.next_handle;
+                self.next_handle += 1;
+                self.handles.insert(h, FileState { file, pos: 0, view: None, mode });
+                Ok(Vfh(h))
+            }
+            OpResult::Admin(Response::Error { msg }) => bail!("open: {msg}"),
+            other => bail!("open failed: {other:?}"),
+        }
+    }
+
+    /// `Vipios_Close`.
+    pub fn close(&mut self, h: Vfh) -> Result<()> {
+        let file = self.state(h)?.file;
+        self.handles.remove(&h.0);
+        let op = self.send_admin(self.buddy, Request::Close { file })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Closed) => Ok(()),
+            other => bail!("close failed: {other:?}"),
+        }
+    }
+
+    /// Remove a file by name.
+    pub fn remove(&mut self, name: &str) -> Result<()> {
+        let op = self.send_admin(
+            self.buddy,
+            Request::Remove { name: name.to_string() },
+        )?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Removed) => Ok(()),
+            other => bail!("remove failed: {other:?}"),
+        }
+    }
+
+    /// `ViPIOS_Seek` (absolute; relative modes are client-side sugar).
+    pub fn seek(&mut self, h: Vfh, pos: u64) -> Result<()> {
+        self.state_mut(h)?.pos = pos;
+        Ok(())
+    }
+
+    pub fn tell(&self, h: Vfh) -> Result<u64> {
+        Ok(self.state(h)?.pos)
+    }
+
+    /// Install a view (displacement + tiled descriptor). Offsets and the
+    /// file pointer are then in view-logical bytes.
+    pub fn set_view(&mut self, h: Vfh, disp: u64, desc: AccessDesc) -> Result<()> {
+        let st = self.state_mut(h)?;
+        st.view = Some(View { disp, desc });
+        st.pos = 0;
+        Ok(())
+    }
+
+    pub fn clear_view(&mut self, h: Vfh) -> Result<()> {
+        let st = self.state_mut(h)?;
+        st.view = None;
+        st.pos = 0;
+        Ok(())
+    }
+
+    /// `Vipios_IRead`: immediate read of `len` bytes at the file pointer.
+    pub fn iread(&mut self, h: Vfh, len: u64) -> Result<Op> {
+        let pos = self.state(h)?.pos;
+        let op = self.iread_at(h, pos, len)?;
+        // advance optimistically; EOF shortens on wait()
+        self.state_mut(h)?.pos += len;
+        Ok(op)
+    }
+
+    /// Immediate read at an explicit offset (no file-pointer update).
+    pub fn iread_at(&mut self, h: Vfh, offset: u64, len: u64) -> Result<Op> {
+        let st = self.state(h)?;
+        let (file, view) = (st.file, st.view.clone());
+        let id = self.send(
+            self.buddy,
+            MsgClass::ER,
+            Request::Read { file, offset, len, view, dst_base: 0 },
+        )?;
+        self.ops.insert(
+            id,
+            OpState {
+                kind: OpKind::Read,
+                expected: None,
+                received: 0,
+                staged: Vec::new(),
+                done: None,
+                error: None,
+            },
+        );
+        Ok(Op(id))
+    }
+
+    /// `Vipios_IWrite`.
+    pub fn iwrite(&mut self, h: Vfh, data: &[u8]) -> Result<Op> {
+        let pos = self.state(h)?.pos;
+        let op = self.iwrite_at(h, pos, data)?;
+        self.state_mut(h)?.pos += data.len() as u64;
+        Ok(op)
+    }
+
+    pub fn iwrite_at(&mut self, h: Vfh, offset: u64, data: &[u8]) -> Result<Op> {
+        let st = self.state(h)?;
+        let (file, view) = (st.file, st.view.clone());
+        let id = self.send(
+            self.buddy,
+            MsgClass::ER,
+            Request::Write { file, offset, data: data.to_vec(), view },
+        )?;
+        self.ops.insert(
+            id,
+            OpState {
+                kind: OpKind::Write,
+                expected: Some(data.len() as u64),
+                received: 0,
+                staged: Vec::new(),
+                done: None,
+                error: None,
+            },
+        );
+        Ok(Op(id))
+    }
+
+    /// `Vipios_Read` (blocking): returns bytes read (short at EOF).
+    pub fn read(&mut self, h: Vfh, buf: &mut [u8]) -> Result<usize> {
+        let op = self.iread(h, buf.len() as u64)?;
+        let before = self.state(h)?.pos - buf.len() as u64;
+        match self.wait(op)? {
+            OpResult::Read(data) => {
+                buf[..data.len()].copy_from_slice(&data);
+                // correct the optimistic advance on short reads
+                self.state_mut(h)?.pos = before + data.len() as u64;
+                Ok(data.len())
+            }
+            other => bail!("read failed: {other:?}"),
+        }
+    }
+
+    pub fn read_at(&mut self, h: Vfh, offset: u64, buf: &mut [u8]) -> Result<usize> {
+        let op = self.iread_at(h, offset, buf.len() as u64)?;
+        match self.wait(op)? {
+            OpResult::Read(data) => {
+                buf[..data.len()].copy_from_slice(&data);
+                Ok(data.len())
+            }
+            other => bail!("read_at failed: {other:?}"),
+        }
+    }
+
+    /// `Vipios_Write` (blocking): returns bytes written.
+    pub fn write(&mut self, h: Vfh, data: &[u8]) -> Result<u64> {
+        let op = self.iwrite(h, data)?;
+        match self.wait(op)? {
+            OpResult::Written(n) => Ok(n),
+            other => bail!("write failed: {other:?}"),
+        }
+    }
+
+    pub fn write_at(&mut self, h: Vfh, offset: u64, data: &[u8]) -> Result<u64> {
+        let op = self.iwrite_at(h, offset, data)?;
+        match self.wait(op)? {
+            OpResult::Written(n) => Ok(n),
+            other => bail!("write_at failed: {other:?}"),
+        }
+    }
+
+    pub fn get_size(&mut self, h: Vfh) -> Result<u64> {
+        let file = self.state(h)?.file;
+        let op = self.send_admin(self.buddy, Request::GetSize { file })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Size { size }) => Ok(size),
+            other => bail!("get_size failed: {other:?}"),
+        }
+    }
+
+    pub fn set_size(&mut self, h: Vfh, size: u64) -> Result<()> {
+        let file = self.state(h)?.file;
+        let op = self.send_admin(self.buddy, Request::SetSize { file, size })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Size { .. }) => Ok(()),
+            other => bail!("set_size failed: {other:?}"),
+        }
+    }
+
+    /// MPI_File_sync-style barrier: flush delayed writes + refresh meta.
+    pub fn sync(&mut self, h: Vfh) -> Result<()> {
+        let file = self.state(h)?.file;
+        let op = self.send_admin(self.buddy, Request::Sync { file })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Synced) => Ok(()),
+            other => bail!("sync failed: {other:?}"),
+        }
+    }
+
+    /// Send a hint (static or dynamic, §3.2.2).
+    pub fn hint(&mut self, h: Hint) -> Result<()> {
+        let buddy = self.buddy;
+        self.hint_to(buddy, h)
+    }
+
+    /// Send a hint to a specific server (system-admin hints like
+    /// `DropCaches` target every server, not just the buddy).
+    pub fn hint_to(&mut self, server: Rank, h: Hint) -> Result<()> {
+        let op = self.send_admin(server, Request::Hint(h))?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::HintAck) => Ok(()),
+            other => bail!("hint failed: {other:?}"),
+        }
+    }
+
+    /// Fetch a server's counters (admin interface).
+    pub fn stats_of(&mut self, server: Rank) -> Result<ServerStats> {
+        let op = self.send_admin(server, Request::Stat)?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Stats(s)) => Ok(*s),
+            other => bail!("stat failed: {other:?}"),
+        }
+    }
+
+    /// The underlying server-side file id (used by vimpios + hints).
+    pub fn file_id(&self, h: Vfh) -> Result<FileId> {
+        Ok(self.state(h)?.file)
+    }
+
+    // ------------------------------------------------- op completion
+
+    /// `Vipios_IOState`-style test: has the op completed?
+    pub fn test(&mut self, op: Op) -> Result<bool> {
+        self.pump(false)?;
+        Ok(self.op_done(op.0))
+    }
+
+    /// `Vipios_IOState`: status of an asynchronous operation (the paper
+    /// keeps this client-side precisely so it costs no message).
+    pub fn io_state(&mut self, op: Op) -> Result<IoState> {
+        self.pump(false)?;
+        Ok(match self.ops.get(&op.0) {
+            None => IoState::Collected,
+            Some(st) => {
+                if st.error.is_some() {
+                    IoState::Failed
+                } else if self.op_done(op.0) {
+                    IoState::Complete
+                } else {
+                    IoState::InProgress { bytes_so_far: st.received }
+                }
+            }
+        })
+    }
+
+    /// Wait for an async op and return its result.
+    pub fn wait(&mut self, op: Op) -> Result<OpResult> {
+        while !self.op_done(op.0) {
+            self.pump(true)?;
+        }
+        let st = self.ops.remove(&op.0).expect("op state");
+        if let Some(msg) = st.error {
+            bail!("{msg}");
+        }
+        Ok(match st.kind {
+            OpKind::Read => {
+                let total = st.expected.unwrap_or(0) as usize;
+                let mut data = vec![0u8; total];
+                for (base, part) in st.staged {
+                    let b = base as usize;
+                    data[b..b + part.len()].copy_from_slice(&part);
+                }
+                OpResult::Read(data)
+            }
+            OpKind::Write => OpResult::Written(st.received),
+            OpKind::Admin => OpResult::Admin(st.done.expect("admin response")),
+        })
+    }
+
+    fn op_done(&self, id: u64) -> bool {
+        match self.ops.get(&id) {
+            None => true, // already collected
+            Some(st) => {
+                if st.error.is_some() {
+                    return true;
+                }
+                match st.kind {
+                    OpKind::Admin => st.done.is_some(),
+                    _ => st.expected.is_some_and(|e| st.received >= e),
+                }
+            }
+        }
+    }
+
+    /// Drain the mailbox, demultiplexing ACKs to their ops.
+    fn pump(&mut self, block: bool) -> Result<()> {
+        let msg = if block {
+            self.ep
+                .recv()
+                .ok_or_else(|| anyhow!("client mailbox closed"))?
+        } else {
+            match self.ep.try_recv() {
+                Some(m) => m,
+                None => return Ok(()),
+            }
+        };
+        let id = msg.req_id;
+        let Body::Resp(resp) = msg.body else { return Ok(()) };
+        let Some(st) = self.ops.get_mut(&id) else { return Ok(()) };
+        match resp {
+            Response::ReadPlanned { total } => {
+                st.expected = Some(total);
+            }
+            Response::Data { dst_base, data } => {
+                st.received += data.len() as u64;
+                st.staged.push((dst_base, data));
+            }
+            Response::Written { bytes } => {
+                st.received += bytes;
+            }
+            Response::Error { msg } => {
+                st.error = Some(msg);
+            }
+            other => {
+                st.done = Some(other);
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- helpers
+
+    fn send(&mut self, dst: Rank, class: MsgClass, req: Request) -> Result<u64> {
+        self.next_req += 1;
+        let id = self.next_req;
+        self.ep
+            .send(
+                dst,
+                Msg {
+                    src: self.ep.rank,
+                    client: self.ep.rank,
+                    req_id: id,
+                    class,
+                    body: Body::Req(req),
+                },
+            )
+            .map_err(|e| anyhow!("send to {dst:?}: {e}"))?;
+        Ok(id)
+    }
+
+    fn send_admin(&mut self, dst: Rank, req: Request) -> Result<Op> {
+        let id = self.send(dst, MsgClass::ER, req)?;
+        self.ops.insert(
+            id,
+            OpState {
+                kind: OpKind::Admin,
+                expected: None,
+                received: 0,
+                staged: Vec::new(),
+                done: None,
+                error: None,
+            },
+        );
+        Ok(Op(id))
+    }
+
+    fn state(&self, h: Vfh) -> Result<&FileState> {
+        self.handles.get(&h.0).ok_or_else(|| anyhow!("bad file handle"))
+    }
+
+    fn state_mut(&mut self, h: Vfh) -> Result<&mut FileState> {
+        self.handles.get_mut(&h.0).ok_or_else(|| anyhow!("bad file handle"))
+    }
+}

@@ -1,0 +1,300 @@
+//! Directory-manager layer (§4.2): meta information about files and the
+//! fragments of them each server stores.
+//!
+//! The paper designs three modes — *centralized* (one directory server),
+//! *replicated* (all servers hold everything) and *localized* (each
+//! server knows only the data it stores; the implemented one, sufficient
+//! for clusters). We implement localized as the default with the same
+//! shape: each [`Directory`] instance belongs to one server and holds a
+//! [`FileEntry`] only for files it stores fragments of, plus cached
+//! [`FileMeta`] learned through the open protocol (buddy broadcast →
+//! owner reply, §5.1.2). Replicated/centralized are expressed by where
+//! entries get created (see [`crate::server`]).
+//!
+//! Fragment storage is extent-mapped: a server's portion of a file (its
+//! dense *local* byte space, produced by [`crate::layout`]) maps onto
+//! fixed-size disk extents allocated from a per-disk bump allocator —
+//! the "data layout on disks" the preparation phase optimises.
+
+use std::collections::HashMap;
+
+use crate::layout::Distribution;
+use crate::msg::{FileId, Rank};
+
+/// Size of one disk extent (1 MiB): large enough that sequential local
+/// access stays sequential on disk, small enough to interleave files.
+pub const EXTENT: u64 = 1 << 20;
+
+/// Global (logical-file) metadata, agreed at OPEN time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileMeta {
+    pub id: FileId,
+    pub name: String,
+    /// Distribution over `servers` (indexes into that list).
+    pub distribution: Distribution,
+    /// Server list in distribution order; `servers[0]` is the *home*
+    /// server (authoritative for the logical size).
+    pub servers: Vec<Rank>,
+    /// Logical size in bytes. Authoritative on the home server; cached
+    /// (refresh on open/sync) elsewhere — MPI-IO consistency semantics.
+    pub size: u64,
+}
+
+impl FileMeta {
+    pub fn home(&self) -> Rank {
+        self.servers[0]
+    }
+
+    /// Index of `rank` in the server list, if involved.
+    pub fn server_index(&self, rank: Rank) -> Option<u32> {
+        self.servers.iter().position(|&r| r == rank).map(|i| i as u32)
+    }
+}
+
+/// One server's fragment of a file: dense local byte space mapped onto
+/// disk extents.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Fragment {
+    /// Which of the server's disks holds this fragment.
+    pub disk_idx: usize,
+    /// extent number -> disk byte offset.
+    pub extents: Vec<u64>,
+    /// Bytes valid in the local space.
+    pub local_len: u64,
+}
+
+impl Fragment {
+    pub fn new(disk_idx: usize) -> Self {
+        Self { disk_idx, extents: Vec::new(), local_len: 0 }
+    }
+
+    /// Translate local `[off, off+len)` into disk `(offset, len)` runs,
+    /// allocating extents as needed via `alloc` (bytes are physically
+    /// contiguous within one extent).
+    pub fn map_alloc(
+        &mut self,
+        off: u64,
+        len: u64,
+        mut alloc: impl FnMut() -> u64,
+    ) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        let mut o = off;
+        let mut rem = len;
+        while rem > 0 {
+            let ext = (o / EXTENT) as usize;
+            while self.extents.len() <= ext {
+                self.extents.push(alloc());
+            }
+            let in_ext = o % EXTENT;
+            let run = (EXTENT - in_ext).min(rem);
+            let disk_off = self.extents[ext] + in_ext;
+            match out.last_mut() {
+                Some((d, l)) if *d + *l == disk_off => *l += run,
+                _ => out.push((disk_off, run)),
+            }
+            o += run;
+            rem -= run;
+        }
+        out
+    }
+
+    /// Read-path translation: local `[off, off+len)` as `(maybe_disk_off,
+    /// run_len)` — `None` for holes (extents never written), which read
+    /// as zeros.
+    pub fn runs(&self, off: u64, len: u64) -> Vec<(Option<u64>, u64)> {
+        let mut out: Vec<(Option<u64>, u64)> = Vec::new();
+        let mut o = off;
+        let mut rem = len;
+        while rem > 0 {
+            let ext = (o / EXTENT) as usize;
+            let in_ext = o % EXTENT;
+            let run = (EXTENT - in_ext).min(rem);
+            let d = self.extents.get(ext).map(|base| base + in_ext);
+            match (out.last_mut(), d) {
+                (Some((Some(prev), l)), Some(cur)) if *prev + *l == cur => *l += run,
+                (Some((None, l)), None) => *l += run,
+                _ => out.push((d, run)),
+            }
+            o += run;
+            rem -= run;
+        }
+        out
+    }
+
+    /// Read-only translation; ranges must lie within allocated extents
+    /// (callers clamp to `local_len` first).
+    pub fn map(&self, off: u64, len: u64) -> Vec<(u64, u64)> {
+        let mut frag = self.clone();
+        let mut panicked = false;
+        let out = frag.map_alloc(off, len, || {
+            panicked = true;
+            0
+        });
+        assert!(!panicked, "map() beyond allocated extents (off={off} len={len} local_len={})", self.local_len);
+        out
+    }
+}
+
+/// A server's directory: fragments it stores + meta it learned.
+#[derive(Default)]
+pub struct Directory {
+    files: HashMap<FileId, FileEntry>,
+    by_name: HashMap<String, FileId>,
+}
+
+pub struct FileEntry {
+    pub meta: FileMeta,
+    /// Present iff this server stores data of the file.
+    pub frag: Option<Fragment>,
+}
+
+impl Directory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, meta: FileMeta, frag: Option<Fragment>) {
+        self.by_name.insert(meta.name.clone(), meta.id);
+        self.files.insert(meta.id, FileEntry { meta, frag });
+    }
+
+    pub fn get(&self, id: FileId) -> Option<&FileEntry> {
+        self.files.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: FileId) -> Option<&mut FileEntry> {
+        self.files.get_mut(&id)
+    }
+
+    pub fn id_by_name(&self, name: &str) -> Option<FileId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn remove(&mut self, id: FileId) -> Option<FileEntry> {
+        if let Some(e) = self.files.remove(&id) {
+            self.by_name.remove(&e.meta.name);
+            Some(e)
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.files.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&FileId, &FileEntry)> {
+        self.files.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, name: &str) -> FileMeta {
+        FileMeta {
+            id: FileId(id),
+            name: name.into(),
+            distribution: Distribution::Cyclic { chunk: 16 },
+            servers: vec![Rank(0), Rank(1)],
+            size: 0,
+        }
+    }
+
+    #[test]
+    fn insert_lookup_remove() {
+        let mut d = Directory::new();
+        d.insert(meta(1, "a"), Some(Fragment::new(0)));
+        assert_eq!(d.id_by_name("a"), Some(FileId(1)));
+        assert!(d.get(FileId(1)).unwrap().frag.is_some());
+        let e = d.remove(FileId(1)).unwrap();
+        assert_eq!(e.meta.name, "a");
+        assert!(d.is_empty());
+        assert_eq!(d.id_by_name("a"), None);
+    }
+
+    #[test]
+    fn meta_home_and_index() {
+        let m = meta(1, "x");
+        assert_eq!(m.home(), Rank(0));
+        assert_eq!(m.server_index(Rank(1)), Some(1));
+        assert_eq!(m.server_index(Rank(9)), None);
+    }
+
+    #[test]
+    fn fragment_allocates_extents_lazily() {
+        let mut f = Fragment::new(0);
+        let mut next = 0u64;
+        let mut alloc = || {
+            let v = next;
+            next += EXTENT;
+            v
+        };
+        // small write in extent 0
+        let runs = f.map_alloc(10, 20, &mut alloc);
+        assert_eq!(runs, vec![(10, 20)]);
+        assert_eq!(f.extents.len(), 1);
+        // spanning into extent 1
+        let runs = f.map_alloc(EXTENT - 5, 10, &mut alloc);
+        assert_eq!(f.extents.len(), 2);
+        assert_eq!(runs, vec![(EXTENT - 5, 10)]); // extents happen adjacent
+    }
+
+    #[test]
+    fn fragment_nonadjacent_extents_split_runs() {
+        let mut f = Fragment::new(0);
+        // extents deliberately far apart
+        let offsets = [0u64, 10 * EXTENT];
+        let mut i = 0;
+        let mut alloc = || {
+            let v = offsets[i];
+            i += 1;
+            v
+        };
+        let runs = f.map_alloc(EXTENT - 4, 8, &mut alloc);
+        assert_eq!(runs, vec![(EXTENT - 4, 4), (10 * EXTENT, 4)]);
+    }
+
+    #[test]
+    fn map_ro_within_allocated() {
+        let mut f = Fragment::new(0);
+        let mut next = 100u64;
+        f.map_alloc(0, 32, || {
+            let v = next;
+            next += EXTENT;
+            v
+        });
+        f.local_len = 32;
+        assert_eq!(f.map(4, 8), vec![(104, 8)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond allocated")]
+    fn map_ro_beyond_extents_panics() {
+        let f = Fragment::new(0);
+        f.map(0, 1);
+    }
+
+    #[test]
+    fn runs_reports_holes() {
+        let mut f = Fragment::new(0);
+        let mut next = 100u64;
+        f.map_alloc(0, 8, || {
+            let v = next;
+            next += EXTENT;
+            v
+        });
+        // extent 0 allocated at 100; extent 1 is a hole
+        let runs = f.runs(EXTENT - 4, 8);
+        assert_eq!(runs, vec![(Some(100 + EXTENT - 4), 4), (None, 4)]);
+        // fully-hole read
+        assert_eq!(f.runs(3 * EXTENT, 5), vec![(None, 5)]);
+        // adjacent same-extent runs coalesce
+        assert_eq!(f.runs(0, 8), vec![(Some(100), 8)]);
+    }
+}

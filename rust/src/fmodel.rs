@@ -1,0 +1,416 @@
+//! Formal file model — an executable transcription of Definitions 1–7 of
+//! the paper (§4.5 "Abstract File Model").
+//!
+//! The model describes files as sequences of equally-sized records, views
+//! as *mapping functions* ψ_t (tuples of record indices), and the exact
+//! semantics of `OPEN/CLOSE/SEEK/READ/WRITE/INSERT` including their error
+//! conditions. It is deliberately naive — it exists as the **oracle** the
+//! production code ([`crate::access`], [`crate::server`]) is property-
+//! tested against, mirroring how the paper uses the model as the basis of
+//! its cost estimation and correctness arguments.
+//!
+//! Paper notation mapping: indices here are 0-based (the paper's are
+//! 1-based); the paper's `'nil'` record is represented by `None` returns.
+
+use std::collections::BTreeSet;
+
+/// Def. 4 — access modes. The paper's M = {'read', 'write'}.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Mode {
+    Read,
+    Write,
+}
+
+/// Def. 2 — a file: records of one common positive size.
+///
+/// Invariant: `data.len() % rec_size == 0`; an empty file may have any
+/// record size (it is fixed by the first WRITE/INSERT, per Def. 7).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelFile {
+    rec_size: usize,
+    data: Vec<u8>,
+}
+
+impl ModelFile {
+    /// An empty file (record size chosen by the first write).
+    pub fn empty() -> Self {
+        Self { rec_size: 0, data: Vec::new() }
+    }
+
+    /// A file of `n` records of `rec_size` bytes taken from `bytes`.
+    pub fn from_bytes(rec_size: usize, bytes: &[u8]) -> Option<Self> {
+        if rec_size == 0 || bytes.len() % rec_size != 0 {
+            return None;
+        }
+        Some(Self { rec_size, data: bytes.to_vec() })
+    }
+
+    /// `flen(f)` — number of records.
+    pub fn flen(&self) -> usize {
+        if self.rec_size == 0 { 0 } else { self.data.len() / self.rec_size }
+    }
+
+    pub fn rec_size(&self) -> usize {
+        self.rec_size
+    }
+
+    /// `frec(f, i)` — record `i` (0-based), `None` == the paper's 'nil'.
+    pub fn frec(&self, i: usize) -> Option<&[u8]> {
+        if self.rec_size == 0 || i >= self.flen() {
+            return None;
+        }
+        Some(&self.data[i * self.rec_size..(i + 1) * self.rec_size])
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// Def. 5 — a mapping function ψ_t: the view is the file
+/// `<frec(f,t_0), frec(f,t_1), ...>`. Indices may repeat (replication) and
+/// need not be a permutation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MappingFn {
+    t: Vec<usize>,
+}
+
+impl MappingFn {
+    pub fn new(t: Vec<usize>) -> Self {
+        Self { t }
+    }
+
+    /// ψ_() — the empty mapping (yields the empty file).
+    pub fn empty() -> Self {
+        Self { t: Vec::new() }
+    }
+
+    /// ψ* for a file of `n` records — identity mapping.
+    pub fn identity(n: usize) -> Self {
+        Self { t: (0..n).collect() }
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.t
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Apply ψ_t(f): materialise the view as a new file. Records beyond
+    /// `flen(f)` are 'nil' and — since model files cannot hold nil records
+    /// — are dropped, which matches the paper's READ bound
+    /// `flen(ψ(f)) - p` when all indices are in range (the only case its
+    /// operations exercise).
+    pub fn apply(&self, f: &ModelFile) -> ModelFile {
+        let mut data = Vec::with_capacity(self.t.len() * f.rec_size);
+        for &i in &self.t {
+            if let Some(r) = f.frec(i) {
+                data.extend_from_slice(r);
+            }
+        }
+        ModelFile { rec_size: f.rec_size, data }
+    }
+}
+
+/// Def. 6 — file handle `H = F x (P(M)-∅) x N x Ψ`.
+#[derive(Debug, Clone)]
+pub struct Handle {
+    file: ModelFile,
+    mode: BTreeSet<Mode>,
+    pos: usize,
+    map: MappingFn,
+}
+
+/// Errors exactly as flagged `'error'` in Def. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelError {
+    /// SEEK beyond `flen(ψ(f))`.
+    SeekPastView,
+    /// READ without 'read' mode, or nothing readable (i <= 0).
+    BadRead,
+    /// WRITE/INSERT without 'write' mode, size mismatch, or n > dlen(d).
+    BadWrite,
+}
+
+impl Handle {
+    /// Def. 7 — OPEN(f, m, fh, ψ). Always succeeds (the model has no
+    /// security); `mode` must be non-empty per Def. 6.
+    pub fn open(file: ModelFile, mode: &[Mode], map: MappingFn) -> Self {
+        assert!(!mode.is_empty(), "P(M) - ∅: mode set must be non-empty");
+        Self { file, mode: mode.iter().copied().collect(), pos: 0, map }
+    }
+
+    /// Def. 7 — CLOSE(fh): fh <- (<>, {'read'}, 0, ψ_()).
+    pub fn close(&mut self) {
+        self.file = ModelFile::empty();
+        self.mode = [Mode::Read].into_iter().collect();
+        self.pos = 0;
+        self.map = MappingFn::empty();
+    }
+
+    pub fn file(&self) -> &ModelFile {
+        &self.file
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn map(&self) -> &MappingFn {
+        &self.map
+    }
+
+    /// The view ψ(f) this handle reads through.
+    pub fn view(&self) -> ModelFile {
+        self.map.apply(&self.file)
+    }
+
+    /// Def. 7 — SEEK(fh, n): ok iff `flen(ψ(f)) >= n`.
+    pub fn seek(&mut self, n: usize) -> Result<(), ModelError> {
+        if self.view().flen() >= n {
+            self.pos = n;
+            Ok(())
+        } else {
+            Err(ModelError::SeekPastView)
+        }
+    }
+
+    /// Def. 7 — READ(fh, n, d): read up to `n` records from ψ(f) at `pos`
+    /// into a buffer of capacity `dsize` bytes. Returns the records read;
+    /// `i = min(n, floor(dsize/rec), flen(ψ(f)) - p)` must be > 0.
+    pub fn read(&mut self, n: usize, dsize: usize) -> Result<Vec<u8>, ModelError> {
+        if !self.mode.contains(&Mode::Read) || n == 0 {
+            return Err(ModelError::BadRead);
+        }
+        let view = self.view();
+        let rs = view.rec_size.max(1);
+        let fit = dsize / rs;
+        let avail = view.flen().saturating_sub(self.pos);
+        let i = n.min(fit).min(avail);
+        if i == 0 {
+            return Err(ModelError::BadRead);
+        }
+        let start = self.pos * view.rec_size;
+        let out = view.data[start..start + i * view.rec_size].to_vec();
+        self.pos += i;
+        Ok(out)
+    }
+
+    /// Def. 7 — WRITE(fh, n, d): overwrite/append `n` records from `d` at
+    /// `pos` **in the underlying file f** (the paper writes through to f,
+    /// not through ψ). `d` must consist of records matching the file's
+    /// record size (or fix the size if f is empty).
+    pub fn write(&mut self, n: usize, d: &ModelFile) -> Result<(), ModelError> {
+        if !self.write_ok(n, d) {
+            return Err(ModelError::BadWrite);
+        }
+        let rs = if self.file.flen() == 0 { d.rec_size } else { self.file.rec_size };
+        self.file.rec_size = rs;
+        let need_end = (self.pos + n) * rs;
+        if self.file.data.len() < need_end {
+            self.file.data.resize(need_end, 0);
+        }
+        let src = &d.data[..n * rs];
+        self.file.data[self.pos * rs..need_end].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Def. 7 — INSERT(fh, n, d): like WRITE but splices the records in at
+    /// `pos`, always growing the file by `n`.
+    pub fn insert(&mut self, n: usize, d: &ModelFile) -> Result<(), ModelError> {
+        if !self.write_ok(n, d) {
+            return Err(ModelError::BadWrite);
+        }
+        let rs = if self.file.flen() == 0 { d.rec_size } else { self.file.rec_size };
+        self.file.rec_size = rs;
+        // The model allows pos beyond EOF only implicitly via WRITE's
+        // resize; INSERT splices at min(pos, flen).
+        let at = self.pos.min(self.file.flen()) * rs;
+        let src = d.data[..n * rs].to_vec();
+        let tail = self.file.data.split_off(at);
+        self.file.data.extend_from_slice(&src);
+        self.file.data.extend_from_slice(&tail);
+        Ok(())
+    }
+
+    fn write_ok(&self, n: usize, d: &ModelFile) -> bool {
+        if !self.mode.contains(&Mode::Write) || n == 0 || n > d.flen() {
+            return false;
+        }
+        // f = <> and d uniform, or rec sizes agree.
+        self.file.flen() == 0 || d.rec_size == self.file.rec_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(rs: usize, n: usize) -> ModelFile {
+        let bytes: Vec<u8> = (0..rs * n).map(|i| i as u8).collect();
+        ModelFile::from_bytes(rs, &bytes).unwrap()
+    }
+
+    #[test]
+    fn flen_and_frec() {
+        let f = file(4, 3);
+        assert_eq!(f.flen(), 3);
+        assert_eq!(f.frec(0), Some(&[0, 1, 2, 3][..]));
+        assert_eq!(f.frec(2), Some(&[8, 9, 10, 11][..]));
+        assert_eq!(f.frec(3), None); // 'nil'
+    }
+
+    #[test]
+    fn from_bytes_rejects_ragged() {
+        assert!(ModelFile::from_bytes(4, &[0u8; 6]).is_none());
+        assert!(ModelFile::from_bytes(0, &[]).is_none());
+    }
+
+    #[test]
+    fn mapping_replicates_and_reorders() {
+        // ψ_(2,4,2,6) example from Def. 5 (1-based there; 1,3,1,5 here).
+        let f = file(2, 6);
+        let v = MappingFn::new(vec![1, 3, 1, 5]).apply(&f);
+        assert_eq!(v.flen(), 4);
+        assert_eq!(v.frec(0), f.frec(1));
+        assert_eq!(v.frec(1), f.frec(3));
+        assert_eq!(v.frec(2), f.frec(1));
+        assert_eq!(v.frec(3), f.frec(5));
+    }
+
+    #[test]
+    fn identity_is_fixpoint() {
+        let f = file(3, 5);
+        assert_eq!(MappingFn::identity(5).apply(&f), f);
+    }
+
+    #[test]
+    fn open_seek_read() {
+        let f = file(4, 8);
+        let mut h = Handle::open(f.clone(), &[Mode::Read], MappingFn::identity(8));
+        assert!(h.seek(8).is_ok()); // seek to EOF allowed: flen >= n
+        assert_eq!(h.seek(9), Err(ModelError::SeekPastView));
+        h.seek(2).unwrap();
+        let d = h.read(3, 1024).unwrap();
+        assert_eq!(d, f.as_bytes()[8..20].to_vec());
+        assert_eq!(h.pos(), 5);
+    }
+
+    #[test]
+    fn read_bounded_by_buffer_and_eof() {
+        let f = file(4, 4);
+        let mut h = Handle::open(f, &[Mode::Read], MappingFn::identity(4));
+        // buffer fits one record only
+        assert_eq!(h.read(3, 5).unwrap().len(), 4);
+        // eof bound: pos=1, 3 remain, ask 10
+        assert_eq!(h.read(10, 1024).unwrap().len(), 12);
+        // nothing left -> 'error' (i == 0)
+        assert_eq!(h.read(1, 1024), Err(ModelError::BadRead));
+    }
+
+    #[test]
+    fn read_without_mode_errors() {
+        let f = file(2, 2);
+        let mut h = Handle::open(f, &[Mode::Write], MappingFn::identity(2));
+        assert_eq!(h.read(1, 16), Err(ModelError::BadRead));
+    }
+
+    #[test]
+    fn read_through_view() {
+        let f = file(1, 10);
+        // view of every 2nd record, reversed tail
+        let mut h = Handle::open(
+            f,
+            &[Mode::Read],
+            MappingFn::new(vec![0, 2, 4, 6, 8]),
+        );
+        let d = h.read(5, 100).unwrap();
+        assert_eq!(d, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn write_overwrites_and_appends() {
+        let f = file(2, 3);
+        let mut h =
+            Handle::open(f, &[Mode::Read, Mode::Write], MappingFn::identity(3));
+        h.seek(2).unwrap();
+        let d = ModelFile::from_bytes(2, &[9, 9, 8, 8]).unwrap();
+        h.write(2, &d).unwrap(); // overwrite rec 2, append rec 3
+        assert_eq!(h.file().flen(), 4);
+        assert_eq!(h.file().frec(2), Some(&[9, 9][..]));
+        assert_eq!(h.file().frec(3), Some(&[8, 8][..]));
+        // file length only grows by records actually appended
+        assert_eq!(h.file().as_bytes()[..4], [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn write_rejects_mismatched_records() {
+        let f = file(2, 3);
+        let mut h = Handle::open(f, &[Mode::Write], MappingFn::identity(3));
+        let d3 = ModelFile::from_bytes(3, &[1, 2, 3]).unwrap();
+        assert_eq!(h.write(1, &d3), Err(ModelError::BadWrite));
+        // n > dlen(d)
+        let d2 = ModelFile::from_bytes(2, &[1, 2]).unwrap();
+        assert_eq!(h.write(2, &d2), Err(ModelError::BadWrite));
+    }
+
+    #[test]
+    fn write_to_empty_file_fixes_record_size() {
+        let mut h = Handle::open(
+            ModelFile::empty(),
+            &[Mode::Write],
+            MappingFn::empty(),
+        );
+        let d = ModelFile::from_bytes(8, &[7u8; 16]).unwrap();
+        h.write(2, &d).unwrap();
+        assert_eq!(h.file().rec_size(), 8);
+        assert_eq!(h.file().flen(), 2);
+    }
+
+    #[test]
+    fn insert_splices() {
+        let f = file(1, 4); // [0,1,2,3]
+        let mut h =
+            Handle::open(f, &[Mode::Read, Mode::Write], MappingFn::identity(4));
+        h.seek(2).unwrap();
+        let d = ModelFile::from_bytes(1, &[9]).unwrap();
+        h.insert(1, &d).unwrap();
+        assert_eq!(h.file().as_bytes(), &[0, 1, 9, 2, 3]);
+        assert_eq!(h.file().flen(), 5);
+    }
+
+    #[test]
+    fn insert_equals_write_at_eof() {
+        // Def. 7 footnote: INSERT == WRITE iff pos == flen(file).
+        let f = file(1, 3);
+        let d = ModelFile::from_bytes(1, &[7, 8]).unwrap();
+
+        let mut hw =
+            Handle::open(f.clone(), &[Mode::Write], MappingFn::identity(3));
+        hw.pos = 3;
+        hw.write(2, &d).unwrap();
+
+        let mut hi = Handle::open(f, &[Mode::Write], MappingFn::identity(3));
+        hi.pos = 3;
+        hi.insert(2, &d).unwrap();
+
+        assert_eq!(hw.file(), hi.file());
+    }
+
+    #[test]
+    fn close_resets() {
+        let f = file(2, 2);
+        let mut h = Handle::open(f, &[Mode::Read], MappingFn::identity(2));
+        h.close();
+        assert_eq!(h.file().flen(), 0);
+        assert_eq!(h.pos(), 0);
+        assert!(h.map().is_empty());
+        assert_eq!(h.read(1, 16), Err(ModelError::BadRead));
+    }
+}

@@ -1,0 +1,238 @@
+//! The Fragmenter — "ViPIOS's brain" (§4.2): decides data layout in the
+//! preparation phase and decomposes client requests into local and
+//! remote sub-requests in the administration phase (§5.1.2).
+//!
+//! A request arrives at the buddy as a logical byte range, optionally
+//! through a view ([`crate::msg::View`]). The fragmenter
+//!
+//! 1. resolves the view into physical file-space extents
+//!    ([`crate::access::AccessDesc::resolve`]),
+//! 2. splits every extent across the file's [`Distribution`] into
+//!    per-server *local* runs, and
+//! 3. groups the runs into one [`SubRequest`] per server, each run
+//!    tagged with its destination offset in the client's buffer — so a
+//!    foe server can ACK its data **directly to the client's VI**
+//!    bypassing the buddy (Method 2 data transfer, §5.1.2).
+//!
+//! Invariant (property-tested): the buffer offsets of all runs of all
+//! sub-requests partition `[0, len)` exactly — no gap, no overlap.
+
+use crate::directory::FileMeta;
+use crate::hints::FileAdminHint;
+use crate::layout::Distribution;
+use crate::msg::{Rank, View};
+
+/// One server's share of a fragmented request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubRequest {
+    pub server: Rank,
+    /// `(local_offset, len, buf_offset)` runs in that server's dense
+    /// local byte space, in client-buffer order.
+    pub parts: Vec<(u64, u64, u64)>,
+}
+
+impl SubRequest {
+    pub fn bytes(&self) -> u64 {
+        self.parts.iter().map(|p| p.1).sum()
+    }
+}
+
+/// Decompose `[offset, offset+len)` (view-logical when `view` is given,
+/// raw file bytes otherwise) into per-server sub-requests.
+pub fn fragment(
+    meta: &FileMeta,
+    view: Option<&View>,
+    offset: u64,
+    len: u64,
+) -> Vec<SubRequest> {
+    let nservers = meta.servers.len() as u32;
+    // file-space extents in buffer order
+    let extents: Vec<(u64, u64)> = match view {
+        Some(v) => v.desc.resolve(v.disp, offset, len),
+        None => {
+            if len == 0 {
+                Vec::new()
+            } else {
+                vec![(offset, len)]
+            }
+        }
+    };
+
+    let mut subs: Vec<SubRequest> = meta
+        .servers
+        .iter()
+        .map(|&server| SubRequest { server, parts: Vec::new() })
+        .collect();
+
+    let mut buf_off = 0u64;
+    for (file_off, elen) in extents {
+        for (srv, local, run) in meta.distribution.extents(nservers, file_off, elen) {
+            let sub = &mut subs[srv as usize];
+            // coalesce runs that are adjacent in both spaces
+            match sub.parts.last_mut() {
+                Some((lo, ll, bo)) if *lo + *ll == local && *bo + *ll == buf_off => {
+                    *ll += run
+                }
+                _ => sub.parts.push((local, run, buf_off)),
+            }
+            buf_off += run;
+        }
+    }
+    debug_assert_eq!(buf_off, len);
+    subs.retain(|s| !s.parts.is_empty());
+    subs
+}
+
+/// Preparation-phase layout decision (§3.2.3): honour a file-admin hint
+/// when present, otherwise apply the default heuristic. The paper's
+/// current fragmenter "only applies basic data distribution schemes
+/// which parallel the data distribution used in the client applications"
+/// — which is exactly what the hint carries; the blackboard search over
+/// candidate layouts is listed as future work there and out of scope
+/// here too.
+pub fn choose_distribution(
+    hint: Option<&FileAdminHint>,
+    nservers: u32,
+) -> Distribution {
+    match hint {
+        Some(h) => match h.distribution {
+            // normalise degenerate hints
+            Distribution::Contiguous { server } => Distribution::Contiguous {
+                server: server.min(nservers.saturating_sub(1)),
+            },
+            d => d,
+        },
+        None => Distribution::default_heuristic(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::access::AccessDesc;
+    use crate::msg::FileId;
+
+    fn meta(dist: Distribution, nserv: u32) -> FileMeta {
+        FileMeta {
+            id: FileId(1),
+            name: "f".into(),
+            distribution: dist,
+            servers: (0..nserv).map(Rank).collect(),
+            size: 1 << 20,
+        }
+    }
+
+    fn check_partition(subs: &[SubRequest], len: u64) {
+        let mut covered: Vec<(u64, u64)> = subs
+            .iter()
+            .flat_map(|s| s.parts.iter().map(|&(_, l, b)| (b, l)))
+            .collect();
+        covered.sort_unstable();
+        let mut pos = 0u64;
+        for (b, l) in covered {
+            assert_eq!(b, pos, "gap or overlap at buffer offset {pos}");
+            pos += l;
+        }
+        assert_eq!(pos, len);
+    }
+
+    #[test]
+    fn contiguous_request_single_server() {
+        let m = meta(Distribution::Contiguous { server: 0 }, 1);
+        let subs = fragment(&m, None, 100, 50);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].parts, vec![(100, 50, 0)]);
+        check_partition(&subs, 50);
+    }
+
+    #[test]
+    fn cyclic_request_spreads_over_servers() {
+        let m = meta(Distribution::Cyclic { chunk: 10 }, 2);
+        // [5, 30): srv0 gets [5,10)@buf0 + [20,30)->local[10,20)? no:
+        // chunks srv0: file[0,10)=local[0,10), file[20,30)=local[10,20)
+        let subs = fragment(&m, None, 5, 25);
+        check_partition(&subs, 25);
+        let s0 = subs.iter().find(|s| s.server == Rank(0)).unwrap();
+        let s1 = subs.iter().find(|s| s.server == Rank(1)).unwrap();
+        assert_eq!(s0.parts, vec![(5, 5, 0), (10, 10, 15)]);
+        assert_eq!(s1.parts, vec![(0, 10, 5)]);
+        assert_eq!(s0.bytes() + s1.bytes(), 25);
+    }
+
+    #[test]
+    fn block_request_hits_only_involved_servers() {
+        let m = meta(Distribution::Block { part: 100 }, 4);
+        let subs = fragment(&m, None, 150, 100);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].server, Rank(1));
+        assert_eq!(subs[0].parts, vec![(50, 50, 0)]);
+        assert_eq!(subs[1].server, Rank(2));
+        assert_eq!(subs[1].parts, vec![(0, 50, 50)]);
+        check_partition(&subs, 100);
+    }
+
+    #[test]
+    fn view_request_resolves_then_splits() {
+        // view: 4-byte blocks every 8 bytes; cyclic 8 over 2 servers
+        // => logical block i lives at file 8i..8i+4, alternating servers
+        let m = meta(Distribution::Cyclic { chunk: 8 }, 2);
+        let v = View { disp: 0, desc: AccessDesc::vector(1, 4, 4) };
+        let subs = fragment(&m, Some(&v), 0, 12);
+        check_partition(&subs, 12);
+        let s0 = subs.iter().find(|s| s.server == Rank(0)).unwrap();
+        let s1 = subs.iter().find(|s| s.server == Rank(1)).unwrap();
+        // file extents: (0,4)->srv0 local 0; (8,4)->srv1 local 0; (16,4)->srv0 local 8
+        assert_eq!(s0.parts, vec![(0, 4, 0), (8, 4, 8)]);
+        assert_eq!(s1.parts, vec![(0, 4, 4)]);
+    }
+
+    #[test]
+    fn view_displacement_shifts_physical() {
+        let m = meta(Distribution::Contiguous { server: 0 }, 1);
+        let v = View { disp: 100, desc: AccessDesc::contiguous(16) };
+        let subs = fragment(&m, Some(&v), 0, 16);
+        assert_eq!(subs[0].parts, vec![(100, 16, 0)]);
+    }
+
+    #[test]
+    fn zero_len_yields_nothing() {
+        let m = meta(Distribution::Cyclic { chunk: 8 }, 2);
+        assert!(fragment(&m, None, 42, 0).is_empty());
+    }
+
+    #[test]
+    fn adjacent_runs_coalesce() {
+        // single server: every chunk boundary split must merge back
+        let m = meta(Distribution::Cyclic { chunk: 4 }, 1);
+        let subs = fragment(&m, None, 0, 64);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].parts, vec![(0, 64, 0)]);
+    }
+
+    #[test]
+    fn choose_distribution_respects_hint() {
+        let h = FileAdminHint {
+            name: "f".into(),
+            distribution: Distribution::Block { part: 512 },
+            nprocs: Some(4),
+        };
+        assert_eq!(
+            choose_distribution(Some(&h), 4),
+            Distribution::Block { part: 512 }
+        );
+        assert_eq!(
+            choose_distribution(None, 4),
+            Distribution::default_heuristic()
+        );
+        // degenerate contiguous hint clamped to pool
+        let h2 = FileAdminHint {
+            name: "f".into(),
+            distribution: Distribution::Contiguous { server: 99 },
+            nprocs: None,
+        };
+        assert_eq!(
+            choose_distribution(Some(&h2), 2),
+            Distribution::Contiguous { server: 1 }
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Hints — the paper's information channel into the data administration
+//! process (§3.2.2).
+//!
+//! Three hint families are distinguished: *file administration* hints
+//! (problem-specific data distribution, normally emitted by the HPF
+//! compiler), *data prefetching* hints (advance reads, delayed writes,
+//! alignment), and *ViPIOS administration* hints (system configuration).
+//! Hints are *static* (valid for the whole run, may arrive at any time
+//! including the preparation phase) or *dynamic* (condition reached at
+//! run time, always sent by an application process).
+
+use crate::layout::Distribution;
+use crate::msg::FileId;
+
+/// File-administration hint: how the application's SPMD processes will
+/// access a file, so the physical layout can match the problem
+/// distribution (the *static fit*).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileAdminHint {
+    /// File (by name, since the hint may precede OPEN — preparation
+    /// phase).
+    pub name: String,
+    /// Requested physical distribution over servers.
+    pub distribution: Distribution,
+    /// Number of application processes that will access the file.
+    pub nprocs: Option<u32>,
+}
+
+/// Prefetching hint: pipelined parallelism (advance reads, delayed
+/// writes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrefetchHint {
+    /// The client will soon read `[offset, offset+len)` of `file`.
+    AdvanceRead { file: FileId, offset: u64, len: u64 },
+    /// Writes to `file` may be buffered and flushed lazily.
+    DelayedWrite { file: FileId, enable: bool },
+    /// Sequential scan expected: enable readahead of `window` bytes.
+    Sequential { file: FileId, window: u64 },
+}
+
+/// System-administration hint: configuration of the server pool.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemHint {
+    /// Cache budget per server, in bytes.
+    CacheBytes(u64),
+    /// Toggle the prefetcher.
+    Prefetch(bool),
+    /// Write back and drop all cached pages (cold-cache; used by the
+    /// benchmark harness between phases, as the paper's read tests
+    /// start with nothing resident).
+    DropCaches,
+}
+
+/// A hint message (see [`crate::msg::Request::Hint`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Hint {
+    FileAdmin(FileAdminHint),
+    Prefetch(PrefetchHint),
+    System(SystemHint),
+}
+
+impl Hint {
+    /// Static hints may be given at any time (compile/startup/run);
+    /// dynamic hints only at run time (§3.2.2).
+    pub fn is_static(&self) -> bool {
+        match self {
+            Hint::FileAdmin(_) | Hint::System(_) => true,
+            Hint::Prefetch(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Distribution;
+
+    #[test]
+    fn static_vs_dynamic() {
+        let h = Hint::FileAdmin(FileAdminHint {
+            name: "a".into(),
+            distribution: Distribution::Cyclic { chunk: 65536 },
+            nprocs: Some(4),
+        });
+        assert!(h.is_static());
+        let p = Hint::Prefetch(PrefetchHint::AdvanceRead {
+            file: FileId(1),
+            offset: 0,
+            len: 4096,
+        });
+        assert!(!p.is_static());
+        assert!(Hint::System(SystemHint::Prefetch(true)).is_static());
+    }
+}

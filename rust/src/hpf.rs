@@ -1,0 +1,413 @@
+//! HPF interface (Chapter 7) — what the VFC compiler emits for FORTRAN
+//! READ/WRITE statements on distributed arrays.
+//!
+//! An HPF program declares `!HPF$ DISTRIBUTE A(BLOCK, CYCLIC(k)) ONTO P`;
+//! the compiler knows, for every SPMD process, exactly which elements of
+//! the global array it owns, and turns I/O statements on `A` into calls
+//! that read/write *that process's elements* from the canonical
+//! (row-major, element-ordered) file image of the array. The paper's
+//! §7.2 carries this ownership description to ViPIOS in the
+//! `Access_Desc`/`basic_block` structures — reproduced here by
+//! [`ArrayDesc::local_view`], which composes the per-dimension
+//! distributions into one nested [`AccessDesc`].
+//!
+//! With the view installed, a FORTRAN `READ(A)` is a single contiguous
+//! ViPIOS read of the process's local element count: the strided global
+//! pattern is resolved server-side ([`read_local`], [`write_local`]).
+
+use anyhow::{bail, Result};
+
+use crate::access::{AccessDesc, BasicBlock};
+use crate::client::{Client, Vfh};
+
+/// Per-dimension HPF distribution directives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dist {
+    /// `BLOCK`: contiguous chunk of ceil(n/p) elements per processor.
+    Block,
+    /// `CYCLIC(k)`: round-robin chunks of `k` elements.
+    Cyclic(u32),
+    /// `*`: dimension not distributed (every processor owns it whole).
+    Star,
+}
+
+/// A distributed global array (element type is fixed-size opaque bytes).
+#[derive(Debug, Clone)]
+pub struct ArrayDesc {
+    /// Global extent per dimension (row-major; last dim fastest).
+    pub dims: Vec<u32>,
+    /// Distribution per dimension.
+    pub dist: Vec<Dist>,
+    /// Processor-grid extent per dimension (1 for `Star` dims).
+    pub grid: Vec<u32>,
+    /// Element size in bytes.
+    pub elem: u32,
+}
+
+impl ArrayDesc {
+    pub fn new(dims: &[u32], dist: &[Dist], grid: &[u32], elem: u32) -> Result<Self> {
+        if dims.len() != dist.len() || dims.len() != grid.len() {
+            bail!("dims/dist/grid rank mismatch");
+        }
+        if elem == 0 || dims.iter().any(|&d| d == 0) {
+            bail!("zero extent");
+        }
+        for (d, &g) in dist.iter().zip(grid) {
+            if g == 0 || (matches!(d, Dist::Star) && g != 1) {
+                bail!("grid extent must be 1 for '*' dims, nonzero otherwise");
+            }
+        }
+        Ok(Self {
+            dims: dims.to_vec(),
+            dist: dist.to_vec(),
+            grid: grid.to_vec(),
+            elem,
+        })
+    }
+
+    /// Total processors in the grid.
+    pub fn nprocs(&self) -> u32 {
+        self.grid.iter().product()
+    }
+
+    /// Grid coordinates of a linear processor rank (row-major).
+    fn coords(&self, rank: u32) -> Vec<u32> {
+        let mut c = vec![0; self.grid.len()];
+        let mut r = rank;
+        for i in (0..self.grid.len()).rev() {
+            c[i] = r % self.grid[i];
+            r /= self.grid[i];
+        }
+        c
+    }
+
+    /// The index ranges processor-coordinate `p` owns in dimension `d`,
+    /// as `(start, len)` runs.
+    fn owned_runs(&self, d: usize, p: u32) -> Vec<(u32, u32)> {
+        let n = self.dims[d];
+        match self.dist[d] {
+            Dist::Star => vec![(0, n)],
+            Dist::Block => {
+                let part = n.div_ceil(self.grid[d]);
+                let start = (p * part).min(n);
+                let len = part.min(n - start);
+                if len == 0 {
+                    vec![]
+                } else {
+                    vec![(start, len)]
+                }
+            }
+            Dist::Cyclic(k) => {
+                let k = k.max(1);
+                let mut runs = Vec::new();
+                let mut s = p * k;
+                while s < n {
+                    runs.push((s, k.min(n - s)));
+                    s += self.grid[d] * k;
+                }
+                runs
+            }
+        }
+    }
+
+    /// Number of elements processor `rank` owns.
+    pub fn local_elems(&self, rank: u32) -> u64 {
+        let c = self.coords(rank);
+        (0..self.dims.len())
+            .map(|d| {
+                self.owned_runs(d, c[d])
+                    .iter()
+                    .map(|&(_, l)| l as u64)
+                    .sum::<u64>()
+            })
+            .product()
+    }
+
+    /// Build the `Access_Desc` selecting processor `rank`'s elements out
+    /// of the canonical row-major file image (§7.2): dimensions compose
+    /// by nesting — the dim-`d` pattern's unit is the whole sub-array
+    /// below it.
+    pub fn local_view(&self, rank: u32) -> Result<AccessDesc> {
+        if rank >= self.nprocs() {
+            bail!("rank {rank} out of grid {:?}", self.grid);
+        }
+        let c = self.coords(rank);
+        // bytes spanned by one index step in dim d
+        let mut pitch = vec![0u64; self.dims.len()];
+        let mut acc = self.elem as u64;
+        for d in (0..self.dims.len()).rev() {
+            pitch[d] = acc;
+            acc *= self.dims[d] as u64;
+        }
+
+        // innermost first: start from "elem bytes", wrap outward
+        let mut inner: Option<AccessDesc> = None;
+        for d in (0..self.dims.len()).rev() {
+            let runs = self.owned_runs(d, c[d]);
+            if runs.is_empty() {
+                bail!("rank {rank} owns nothing in dim {d}");
+            }
+            let unit = pitch[d]; // bytes per index step at this dim
+            let mut blocks = Vec::new();
+            let mut prev_end = 0i64; // in index units
+            for &(s, l) in &runs {
+                let gap_bytes = (s as i64 - prev_end) * unit as i64;
+                let block = match &inner {
+                    None => BasicBlock {
+                        offset: gap_bytes,
+                        repeat: 1,
+                        count: (l as u64 * unit) as u32,
+                        stride: 0,
+                        subtype: None,
+                    },
+                    Some(sub) => {
+                        // each owned index selects one inner pattern and
+                        // advances by `unit` bytes; the inner pattern's
+                        // extent may be smaller than unit (it selects a
+                        // subset), so pad per index with stride.
+                        let sub_extent = sub.extent();
+                        BasicBlock {
+                            offset: gap_bytes,
+                            repeat: l,
+                            count: 1,
+                            stride: unit as i64 - sub_extent,
+                            subtype: Some(Box::new(sub.clone())),
+                        }
+                    }
+                };
+                blocks.push(block);
+                prev_end = (s + l) as i64;
+            }
+            // skip the tail of this dimension so one pass spans it fully
+            let span = self.dims[d] as i64 * unit as i64;
+            let consumed: i64 = blocks
+                .iter()
+                .map(|b| {
+                    b.offset
+                        + b.repeat as i64
+                            * (b.count as i64
+                                * b.subtype.as_ref().map_or(1, |s| s.extent())
+                                + b.stride)
+                })
+                .sum();
+            inner = Some(AccessDesc { skip: span - consumed, blocks });
+        }
+        let mut desc = inner.expect("rank > 0 dims");
+        // outermost dim: one pass covers the whole array; stop tiling by
+        // zeroing skip at top level (the array image is read exactly once
+        // per pass anyway — tiling repeats for multi-record files).
+        let _ = &mut desc;
+        Ok(desc)
+    }
+}
+
+/// FORTRAN `READ(A)` for this process: fills `buf` (local elements, in
+/// global row-major order) from the array's canonical file image at
+/// displacement `disp`.
+pub fn read_local(
+    client: &mut Client,
+    h: Vfh,
+    array: &ArrayDesc,
+    rank: u32,
+    disp: u64,
+    buf: &mut [u8],
+) -> Result<usize> {
+    let view = array.local_view(rank)?;
+    client.set_view(h, disp, view)?;
+    let need = (array.local_elems(rank) * array.elem as u64) as usize;
+    if buf.len() < need {
+        bail!("buffer too small: {} < {need}", buf.len());
+    }
+    let n = client.read_at(h, 0, &mut buf[..need])?;
+    client.clear_view(h)?;
+    Ok(n)
+}
+
+/// FORTRAN `WRITE(A)` for this process.
+pub fn write_local(
+    client: &mut Client,
+    h: Vfh,
+    array: &ArrayDesc,
+    rank: u32,
+    disp: u64,
+    data: &[u8],
+) -> Result<u64> {
+    let view = array.local_view(rank)?;
+    client.set_view(h, disp, view)?;
+    let need = (array.local_elems(rank) * array.elem as u64) as usize;
+    if data.len() != need {
+        bail!("data must be exactly the local size {need}, got {}", data.len());
+    }
+    let n = client.write_at(h, 0, data)?;
+    client.clear_view(h)?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modes::ServerPool;
+    use crate::msg::OpenMode;
+    use crate::server::ServerConfig;
+
+    /// Oracle: global element indices owned by `rank`, in row-major
+    /// order.
+    fn owned_indices(a: &ArrayDesc, rank: u32) -> Vec<u64> {
+        let c = a.coords(rank);
+        let mut idx = Vec::new();
+        let mut dims_runs: Vec<Vec<u32>> = Vec::new();
+        for d in 0..a.dims.len() {
+            let mut v = Vec::new();
+            for (s, l) in a.owned_runs(d, c[d]) {
+                v.extend(s..s + l);
+            }
+            dims_runs.push(v);
+        }
+        // cartesian product in row-major order
+        fn rec(a: &ArrayDesc, dr: &[Vec<u32>], d: usize, base: u64, out: &mut Vec<u64>) {
+            if d == dr.len() {
+                out.push(base);
+                return;
+            }
+            let pitch: u64 = a.dims[d + 1..].iter().map(|&x| x as u64).product();
+            for &i in &dr[d] {
+                rec(a, dr, d + 1, base + i as u64 * pitch, out);
+            }
+        }
+        rec(a, &dims_runs, 0, 0, &mut idx);
+        idx
+    }
+
+    fn check_view_matches_oracle(a: &ArrayDesc) {
+        let total: u64 = (0..a.nprocs()).map(|r| a.local_elems(r)).sum();
+        let global: u64 = a.dims.iter().map(|&d| d as u64).product();
+        assert_eq!(total, global, "ownership must partition the array");
+        for rank in 0..a.nprocs() {
+            let view = a.local_view(rank).unwrap();
+            let nbytes = a.local_elems(rank) * a.elem as u64;
+            assert_eq!(view.data_len(), nbytes, "rank {rank} data_len");
+            let extents = view.resolve(0, 0, nbytes);
+            // flatten to element indices
+            let mut got = Vec::new();
+            for (off, len) in extents {
+                assert_eq!(off % a.elem as u64, 0);
+                assert_eq!(len % a.elem as u64, 0);
+                for i in 0..len / a.elem as u64 {
+                    got.push(off / a.elem as u64 + i);
+                }
+            }
+            assert_eq!(got, owned_indices(a, rank), "rank {rank} of {a:?}");
+        }
+    }
+
+    #[test]
+    fn block_1d() {
+        let a = ArrayDesc::new(&[10], &[Dist::Block], &[3], 4).unwrap();
+        assert_eq!(a.local_elems(0), 4);
+        assert_eq!(a.local_elems(2), 2);
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn cyclic_1d() {
+        let a = ArrayDesc::new(&[13], &[Dist::Cyclic(2)], &[3], 8).unwrap();
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn block_block_2d() {
+        let a = ArrayDesc::new(
+            &[8, 6],
+            &[Dist::Block, Dist::Block],
+            &[2, 3],
+            4,
+        )
+        .unwrap();
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn block_star_2d() {
+        let a = ArrayDesc::new(&[6, 5], &[Dist::Block, Dist::Star], &[3, 1], 4).unwrap();
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn cyclic_cyclic_2d() {
+        let a = ArrayDesc::new(
+            &[9, 8],
+            &[Dist::Cyclic(2), Dist::Cyclic(3)],
+            &[2, 2],
+            2,
+        )
+        .unwrap();
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn star_cyclic_3d() {
+        let a = ArrayDesc::new(
+            &[3, 4, 5],
+            &[Dist::Star, Dist::Cyclic(1), Dist::Block],
+            &[1, 2, 2],
+            4,
+        )
+        .unwrap();
+        check_view_matches_oracle(&a);
+    }
+
+    #[test]
+    fn rejects_bad_descriptors() {
+        assert!(ArrayDesc::new(&[4], &[Dist::Block, Dist::Block], &[2], 4).is_err());
+        assert!(ArrayDesc::new(&[4], &[Dist::Star], &[2], 4).is_err());
+        assert!(ArrayDesc::new(&[0], &[Dist::Block], &[2], 4).is_err());
+        let a = ArrayDesc::new(&[4], &[Dist::Block], &[2], 4).unwrap();
+        assert!(a.local_view(2).is_err());
+    }
+
+    #[test]
+    fn hpf_write_then_read_roundtrip_through_vipios() {
+        // 4 SPMD "processes" write their pieces of A(8,8) BLOCK,BLOCK on
+        // a 2x2 grid; the canonical file image must be the full array;
+        // each then reads its piece back.
+        let a = ArrayDesc::new(&[8, 8], &[Dist::Block, Dist::Block], &[2, 2], 4).unwrap();
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        for rank in 0..4u32 {
+            let mut c = pool.client().unwrap();
+            let h = c.open("hpf", OpenMode::rdwr_create()).unwrap();
+            // element value = global index, so the image is checkable
+            let idx = owned_indices(&a, rank);
+            let data: Vec<u8> = idx
+                .iter()
+                .flat_map(|&i| (i as u32).to_le_bytes())
+                .collect();
+            write_local(&mut c, h, &a, rank, 0, &data).unwrap();
+            c.sync(h).unwrap();
+            c.disconnect().unwrap();
+        }
+        // canonical image: element i == i
+        let mut c = pool.client().unwrap();
+        let h = c.open("hpf", OpenMode::rdonly()).unwrap();
+        let mut buf = vec![0u8; 64 * 4];
+        assert_eq!(c.read_at(h, 0, &mut buf).unwrap(), 256);
+        for i in 0..64u32 {
+            let v = u32::from_le_bytes(buf[i as usize * 4..][..4].try_into().unwrap());
+            assert_eq!(v, i, "canonical image at element {i}");
+        }
+        // per-rank read-back
+        for rank in 0..4u32 {
+            let mut c = pool.client().unwrap();
+            let h = c.open("hpf", OpenMode::rdonly()).unwrap();
+            let n = (a.local_elems(rank) * 4) as usize;
+            let mut buf = vec![0u8; n];
+            assert_eq!(read_local(&mut c, h, &a, rank, 0, &mut buf).unwrap(), n);
+            let idx = owned_indices(&a, rank);
+            for (j, &gi) in idx.iter().enumerate() {
+                let v = u32::from_le_bytes(buf[j * 4..][..4].try_into().unwrap());
+                assert_eq!(v as u64, gi, "rank {rank} local elem {j}");
+            }
+            c.disconnect().unwrap();
+        }
+        pool.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,216 @@
+//! Physical data layout — distribution of a logical file over the server
+//! pool (§4.4 "data layer", §3.2.3 preparation phase).
+//!
+//! The fragmenter picks a [`Distribution`] per file (from a file-admin
+//! hint, or the default heuristic) during the *preparation phase*; the
+//! directory records it; every subsequent request is decomposed against
+//! it. The distributions mirror HPF's BLOCK / CYCLIC(k) data-distribution
+//! schemes so the physical layout can match the SPMD problem
+//! distribution (the paper's *logical data locality* / *static fit*).
+
+/// How a logical byte space is spread across `n` servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// Entire file on one server (the paper's sequential-mode layout).
+    Contiguous { server: u32 },
+    /// Round-robin chunks over all servers — HPF CYCLIC(chunk) /
+    /// BLOCK_CYCLIC. The default: it parallels block-wise SPMD access for
+    /// any process count dividing the server count.
+    Cyclic { chunk: u64 },
+    /// Contiguous partition into `part` fixed-size byte ranges — HPF
+    /// BLOCK. `part` is fixed in the preparation phase from the expected
+    /// file size (`ceil(size / nservers)`).
+    Block { part: u64 },
+}
+
+impl Distribution {
+    /// Default layout heuristic when no hint is available (§3.1: "general
+    /// heuristics"): cyclic 64 KiB chunks.
+    pub fn default_heuristic() -> Self {
+        Distribution::Cyclic { chunk: 64 * 1024 }
+    }
+
+    /// BLOCK distribution for an expected file size.
+    pub fn block_for(size: u64, nservers: u32) -> Self {
+        let n = nservers.max(1) as u64;
+        Distribution::Block { part: size.div_ceil(n).max(1) }
+    }
+
+    /// Map a logical byte offset to `(server_index, server_local_offset)`.
+    ///
+    /// `server_index` is an index into the file's server list (not a
+    /// rank). Local offsets are dense per server so each server stores
+    /// its fragments contiguously (the paper's physical data locality).
+    pub fn locate(&self, nservers: u32, off: u64) -> (u32, u64) {
+        let n = nservers.max(1) as u64;
+        match *self {
+            Distribution::Contiguous { server } => (server % nservers.max(1), off),
+            Distribution::Cyclic { chunk } => {
+                let c = chunk.max(1);
+                let idx = off / c;
+                let srv = (idx % n) as u32;
+                let local = (idx / n) * c + off % c;
+                (srv, local)
+            }
+            Distribution::Block { part } => {
+                let p = part.max(1);
+                let srv = (off / p).min(n - 1) as u32;
+                // last server absorbs the tail beyond part*n
+                let local = off - srv as u64 * p;
+                (srv, local)
+            }
+        }
+    }
+
+    /// Inverse of [`locate`](Self::locate): logical offset of a server's
+    /// local byte. Needed by redistribution and recovery.
+    pub fn logical(&self, nservers: u32, server: u32, local: u64) -> u64 {
+        let n = nservers.max(1) as u64;
+        match *self {
+            Distribution::Contiguous { .. } => local,
+            Distribution::Cyclic { chunk } => {
+                let c = chunk.max(1);
+                let round = local / c;
+                (round * n + server as u64) * c + local % c
+            }
+            Distribution::Block { part } => server as u64 * part + local,
+        }
+    }
+
+    /// Longest contiguous run on one server starting at logical `off`
+    /// (capped at `len`). The decomposition step of the fragmenter.
+    pub fn run_len(&self, nservers: u32, off: u64, len: u64) -> u64 {
+        match *self {
+            Distribution::Contiguous { .. } => len,
+            Distribution::Cyclic { chunk } => {
+                let c = chunk.max(1);
+                (c - off % c).min(len)
+            }
+            Distribution::Block { part } => {
+                let p = part.max(1);
+                let n = nservers.max(1) as u64;
+                if off / p >= n - 1 {
+                    len // tail lives entirely on the last server
+                } else {
+                    (p - off % p).min(len)
+                }
+            }
+        }
+    }
+
+    /// Decompose logical `[off, off+len)` into per-server extents
+    /// `(server_index, local_offset, len)`, in logical order.
+    pub fn extents(&self, nservers: u32, off: u64, len: u64) -> Vec<(u32, u64, u64)> {
+        let mut out: Vec<(u32, u64, u64)> = Vec::new();
+        let mut o = off;
+        let mut rem = len;
+        while rem > 0 {
+            let run = self.run_len(nservers, o, rem);
+            let (srv, local) = self.locate(nservers, o);
+            match out.last_mut() {
+                Some((s, l, ll)) if *s == srv && *l + *ll == local => *ll += run,
+                _ => out.push((srv, local, run)),
+            }
+            o += run;
+            rem -= run;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_all_on_one() {
+        let d = Distribution::Contiguous { server: 2 };
+        assert_eq!(d.locate(4, 0), (2, 0));
+        assert_eq!(d.locate(4, 999), (2, 999));
+        assert_eq!(d.extents(4, 10, 100), vec![(2, 10, 100)]);
+    }
+
+    #[test]
+    fn cyclic_round_robin() {
+        let d = Distribution::Cyclic { chunk: 10 };
+        // chunks: srv0: [0,10) [40,50) ... srv1: [10,20) [50,60) ...
+        assert_eq!(d.locate(4, 0), (0, 0));
+        assert_eq!(d.locate(4, 10), (1, 0));
+        assert_eq!(d.locate(4, 39), (3, 9));
+        assert_eq!(d.locate(4, 40), (0, 10));
+        assert_eq!(d.locate(4, 45), (0, 15));
+    }
+
+    #[test]
+    fn cyclic_extents_split_at_chunks() {
+        let d = Distribution::Cyclic { chunk: 10 };
+        assert_eq!(
+            d.extents(2, 5, 20),
+            vec![(0, 5, 5), (1, 0, 10), (0, 10, 5)]
+        );
+    }
+
+    #[test]
+    fn cyclic_single_server_coalesces() {
+        let d = Distribution::Cyclic { chunk: 10 };
+        // with one server every chunk is local and adjacent
+        assert_eq!(d.extents(1, 0, 35), vec![(0, 0, 35)]);
+    }
+
+    #[test]
+    fn block_partition() {
+        let d = Distribution::block_for(100, 4);
+        assert_eq!(d, Distribution::Block { part: 25 });
+        assert_eq!(d.locate(4, 0), (0, 0));
+        assert_eq!(d.locate(4, 24), (0, 24));
+        assert_eq!(d.locate(4, 25), (1, 0));
+        assert_eq!(d.locate(4, 99), (3, 24));
+        // overflow beyond expected size goes to the last server
+        assert_eq!(d.locate(4, 120), (3, 45));
+    }
+
+    #[test]
+    fn block_extents() {
+        let d = Distribution::Block { part: 25 };
+        assert_eq!(
+            d.extents(4, 20, 15),
+            vec![(0, 20, 5), (1, 0, 10)]
+        );
+        // tail stays on last server
+        assert_eq!(d.extents(2, 40, 100), vec![(1, 15, 100)]);
+    }
+
+    #[test]
+    fn logical_is_inverse_of_locate() {
+        for d in [
+            Distribution::Contiguous { server: 1 },
+            Distribution::Cyclic { chunk: 7 },
+            Distribution::Block { part: 13 },
+        ] {
+            for off in [0u64, 1, 6, 7, 12, 13, 20, 99, 1000] {
+                let (s, l) = d.locate(3, off);
+                assert_eq!(d.logical(3, s, l), off, "{d:?} off={off}");
+            }
+        }
+    }
+
+    #[test]
+    fn extents_partition_exactly() {
+        // quick determinism check; the full property test lives in
+        // rust/tests/prop_invariants.rs
+        let d = Distribution::Cyclic { chunk: 3 };
+        let ex = d.extents(5, 2, 31);
+        let total: u64 = ex.iter().map(|e| e.2).sum();
+        assert_eq!(total, 31);
+    }
+
+    #[test]
+    fn run_len_never_zero_or_overlong() {
+        let d = Distribution::Cyclic { chunk: 8 };
+        for off in 0..40u64 {
+            let r = d.run_len(3, off, 100);
+            assert!(r > 0 && r <= 8);
+        }
+        assert_eq!(d.run_len(3, 5, 2), 2);
+    }
+}

@@ -1,0 +1,44 @@
+//! # ViPIOS — VIenna Parallel Input Output System (reproduction)
+//!
+//! A Rust reproduction of the client–server parallel I/O system of
+//! Schikuta et al. (FWF P11006-MAT, 1996–1998; report revised 2018), built
+//! as the L3 coordinator of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the ViPIOS system itself: message-passing
+//!   substrate ([`msg`]), server processes with fragmenter / directory /
+//!   memory / disk-manager layers ([`server`], [`fragmenter`],
+//!   [`directory`], [`memory`], [`disk`]), the two-phase data
+//!   administration ([`layout`], [`hints`]), the client interface
+//!   ([`client`]), the ViMPIOS MPI-IO layer ([`vimpios`]), operation modes
+//!   ([`modes`]) and the paper's baselines ([`baselines`]).
+//! * **L2/L1 (python/compile)** — JAX graphs + Pallas kernels for the
+//!   out-of-core compute workloads, AOT-lowered to HLO text once at build
+//!   time and executed from Rust via PJRT ([`runtime`], [`ooc`]).
+//!
+//! Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper's Chapter 8 to a bench target.
+
+pub mod access;
+pub mod baselines;
+pub mod bench;
+pub mod client;
+pub mod directory;
+pub mod disk;
+pub mod fmodel;
+pub mod fragmenter;
+pub mod hints;
+pub mod hpf;
+pub mod layout;
+pub mod memory;
+pub mod modes;
+pub mod msg;
+pub mod ooc;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod vimpios;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

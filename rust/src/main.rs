@@ -1,0 +1,77 @@
+//! `vipios` — CLI launcher for the ViPIOS reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the vendored set):
+//!
+//! ```text
+//! vipios demo                          quickstart write/read through a pool
+//! vipios bench <exp> [--quick]         regenerate a Chapter-8 experiment
+//!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
+//!          buffer | redistribution | all
+//! vipios inspect [artifacts-dir]       load + describe the HLO artifacts
+//! ```
+
+use vipios::bench::tables;
+use vipios::modes::ServerPool;
+use vipios::msg::OpenMode;
+use vipios::server::ServerConfig;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let quick = args.iter().any(|a| a == "--quick");
+    let result = match cmd {
+        "demo" => demo(),
+        "bench" => {
+            let exp = args
+                .iter()
+                .nth(1)
+                .filter(|a| !a.starts_with("--"))
+                .map(String::as_str)
+                .unwrap_or("all");
+            tables::run(exp, quick)
+        }
+        "inspect" => {
+            let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
+            inspect(dir)
+        }
+        _ => {
+            eprintln!(
+                "usage: vipios demo | bench <exp> [--quick] | inspect [dir]\n\
+                 exps: dedicated nondedicated vs_unix vs_romio scalability \
+                 buffer redistribution all"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn demo() -> anyhow::Result<()> {
+    let pool = ServerPool::start(4, ServerConfig::default())?;
+    let mut c = pool.client()?;
+    let h = c.open("demo", OpenMode::rdwr_create())?;
+    let msg = b"ViPIOS demo: parallel I/O across 4 servers";
+    c.write(h, msg)?;
+    let mut buf = vec![0u8; msg.len()];
+    c.read_at(h, 0, &mut buf)?;
+    println!("{}", String::from_utf8_lossy(&buf));
+    c.close(h)?;
+    c.disconnect()?;
+    pool.shutdown()?;
+    Ok(())
+}
+
+fn inspect(dir: &str) -> anyhow::Result<()> {
+    let mut rt = vipios::runtime::Runtime::new(dir)?;
+    println!("platform: {}", rt.platform());
+    for name in ["stencil5", "jacobi_step", "matmul_tile", "block_reduce"] {
+        match rt.load(name) {
+            Ok(e) => println!("  {}: compiled OK", e.name),
+            Err(e) => println!("  {name}: {e:#}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Operation modes (§5.2): *library*, *dependent* and *independent* —
+//! the paper's answer to MPI-1's static process model.
+//!
+//! * **Independent** — servers run standalone ([`ServerPool::start`]);
+//!   clients connect and disconnect dynamically at any time, possibly in
+//!   several generations (client groups). The only mode supporting the
+//!   full two-phase administration (hints can arrive before any client).
+//! * **Dependent** — servers and clients start together
+//!   ([`ServerPool::start_with_clients`]); no preparation phase before
+//!   startup, otherwise identical.
+//! * **Library** — no independent servers: ViPIOS runs as a runtime
+//!   library inside the application. Background optimisation (prefetch,
+//!   delayed writes) is unavailable — exactly the restrictions the paper
+//!   lists for this mode — so the pool runs one server with prefetch off
+//!   and a write-through cache, and the VI blocks on every call.
+//!
+//! Substitution note: processes are threads and "starting together"
+//! means being spawned by the same constructor; the semantics that
+//! matter downstream (who may connect when, which optimisations exist)
+//! are preserved. See DESIGN.md §3.
+
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::client::Client;
+use crate::memory::CacheConfig;
+use crate::msg::{Body, Msg, MsgClass, Rank, Request, Role, World};
+use crate::server::{Server, ServerConfig};
+
+/// Which paper mode a pool emulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpMode {
+    Library,
+    Dependent,
+    Independent,
+}
+
+/// A running pool of ViPIOS server processes.
+pub struct ServerPool {
+    world: World,
+    mode: OpMode,
+    servers: Vec<Rank>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ServerPool {
+    /// *Independent mode*: start `n` servers; clients connect later via
+    /// [`ServerPool::client`].
+    pub fn start(n: usize, cfg: ServerConfig) -> Result<Self> {
+        Self::start_mode(n, cfg, OpMode::Independent)
+    }
+
+    /// *Dependent mode*: servers and `nclients` clients come up together.
+    pub fn start_with_clients(
+        n: usize,
+        cfg: ServerConfig,
+        nclients: usize,
+    ) -> Result<(Self, Vec<Client>)> {
+        let pool = Self::start_mode(n, cfg, OpMode::Dependent)?;
+        let clients = (0..nclients)
+            .map(|_| pool.client())
+            .collect::<Result<Vec<_>>>()?;
+        Ok((pool, clients))
+    }
+
+    /// *Library mode*: one server thread standing in for the linked-in
+    /// runtime, prefetch off, write-through cache (blocking I/O only).
+    pub fn library(mut cfg: ServerConfig) -> Result<(Self, Client)> {
+        cfg.prefetch = false;
+        cfg.cache = CacheConfig { write_back: false, ..cfg.cache };
+        let pool = Self::start_mode(1, cfg, OpMode::Library)?;
+        let client = pool.client()?;
+        Ok((pool, client))
+    }
+
+    fn start_mode(n: usize, cfg: ServerConfig, mode: OpMode) -> Result<Self> {
+        assert!(n > 0, "need at least one server");
+        let world = World::new();
+        let mut servers = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let ep = world.join(Role::Server);
+            servers.push(ep.rank);
+            let server = Server::new(ep, cfg.clone())?;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("vipios-vs{i}"))
+                    .spawn(move || server.run())
+                    .expect("spawn server"),
+            );
+        }
+        Ok(Self { world, mode, servers, handles })
+    }
+
+    pub fn mode(&self) -> OpMode {
+        self.mode
+    }
+
+    pub fn world(&self) -> &World {
+        &self.world
+    }
+
+    pub fn server_ranks(&self) -> &[Rank] {
+        &self.servers
+    }
+
+    /// Connect a new client (any time — independent mode's client
+    /// groups).
+    pub fn client(&self) -> Result<Client> {
+        Client::connect(&self.world)
+    }
+
+    /// Kill one server without shutdown (failure injection).
+    pub fn kill_server(&self, rank: Rank) {
+        self.world.leave(rank);
+    }
+
+    /// Orderly shutdown: ask every server to stop, join the threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        let ep = self.world.join(Role::Client);
+        for &s in &self.servers {
+            let _ = ep.send(
+                s,
+                Msg {
+                    src: ep.rank,
+                    client: ep.rank,
+                    req_id: 0,
+                    class: MsgClass::ER,
+                    body: Body::Req(Request::Shutdown),
+                },
+            );
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::OpenMode;
+
+    #[test]
+    fn independent_mode_dynamic_client_groups() {
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        // group 1
+        {
+            let mut c = pool.client().unwrap();
+            let h = c.open("g1", OpenMode::rdwr_create()).unwrap();
+            c.write(h, b"first group").unwrap();
+            c.close(h).unwrap();
+            c.disconnect().unwrap();
+        }
+        // group 2, connected after group 1 is gone, sees the file
+        {
+            let mut c = pool.client().unwrap();
+            let h = c.open("g1", OpenMode::rdonly()).unwrap();
+            let mut buf = [0u8; 11];
+            assert_eq!(c.read(h, &mut buf).unwrap(), 11);
+            assert_eq!(&buf, b"first group");
+            c.disconnect().unwrap();
+        }
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dependent_mode_starts_together() {
+        let (pool, mut clients) =
+            ServerPool::start_with_clients(2, ServerConfig::default(), 3).unwrap();
+        assert_eq!(clients.len(), 3);
+        // buddies round-robin over servers
+        let buddies: Vec<_> = clients.iter().map(|c| c.buddy()).collect();
+        assert_ne!(buddies[0], buddies[1]);
+        let mut c = clients.remove(0);
+        let h = c.open("dep", OpenMode::rdwr_create()).unwrap();
+        c.write(h, &[1, 2, 3]).unwrap();
+        let mut buf = [0u8; 3];
+        c.seek(h, 0).unwrap();
+        assert_eq!(c.read(h, &mut buf).unwrap(), 3);
+        assert_eq!(buf, [1, 2, 3]);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn library_mode_blocking_io() {
+        let (pool, mut c) = ServerPool::library(ServerConfig::default()).unwrap();
+        assert_eq!(pool.mode(), OpMode::Library);
+        let h = c.open("lib", OpenMode::rdwr_create()).unwrap();
+        c.write(h, &[9u8; 64]).unwrap();
+        let mut buf = [0u8; 64];
+        c.read_at(h, 0, &mut buf).unwrap();
+        assert_eq!(buf, [9u8; 64]);
+        pool.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,474 @@
+//! Message-passing substrate — the paper's MPI layer (§5.1).
+//!
+//! ViPIOS builds on MPI for all client↔server and server↔server traffic.
+//! Here the substrate is an in-process transport: every process (thread)
+//! owns a mailbox ([`Endpoint`]) registered in a [`World`], and messages
+//! carry the paper's header (sender, client id, request id, message class)
+//! plus a typed body. The paper's protocol structure is preserved exactly:
+//!
+//! * **ER** — external request, VI → BUDDY;
+//! * **DI** — directed internal request, VS → specific VS;
+//! * **BI** — broadcast internal request, VS → all other VSs;
+//! * **ACK** — acknowledgement, VS → VS or VS → VI; *data ACKs from foe
+//!   servers go directly to the client's VI, bypassing the buddy* (§5.1.2
+//!   "control and message flow"), which the tests assert.
+//!
+//! Substitution note (DESIGN.md §3): the paper's portability battles —
+//! MPI-1 static process sets, shared `MPI_COMM_WORLD`, non-thread-safe
+//! MPICH/LAM — are wire-level; the routing/fragmentation protocol above
+//! them is what the system contributes, so an in-process transport with
+//! dynamic rank registration (= MPI-2 `connect/accept`, the paper's
+//! *independent mode*) preserves the relevant behaviour.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::access::AccessDesc;
+use crate::hints::Hint;
+
+/// Process rank in the universal communicator (the paper's
+/// `MPI_COMM_UNIVERSAL` after the `MPI_COMM_WORLD` split trick, §5.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Rank(pub u32);
+
+/// Server-assigned file identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u64);
+
+/// Message classes of §5.1.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgClass {
+    /// External request: VI → BUDDY.
+    ER,
+    /// Directed internal request: VS → one VS.
+    DI,
+    /// Broadcast internal request: VS → all other VSs.
+    BI,
+    /// Acknowledgement (possibly carrying data): VS → VI or VS → VS.
+    ACK,
+}
+
+/// Open flags (paper: READ, WRITE, CREATE, EXCLUSIVE).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpenMode {
+    pub read: bool,
+    pub write: bool,
+    pub create: bool,
+    pub exclusive: bool,
+}
+
+impl OpenMode {
+    pub fn rdwr_create() -> Self {
+        Self { read: true, write: true, create: true, exclusive: false }
+    }
+    pub fn rdonly() -> Self {
+        Self { read: true, ..Self::default() }
+    }
+}
+
+/// A view installed on an open file: displacement + tiled descriptor
+/// (ViMPIOS `MPI_File_set_view` maps onto this, §6.3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct View {
+    pub disp: u64,
+    pub desc: AccessDesc,
+}
+
+/// Request bodies (the paper's basic message types of §5.1.1 plus the
+/// administrative ones).
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// `Vipios_Connect` — sent to the connection controller (CC).
+    Connect,
+    /// `Vipios_Disconnect`.
+    Disconnect,
+    Open {
+        name: String,
+        mode: OpenMode,
+    },
+    Close {
+        file: FileId,
+    },
+    Remove {
+        name: String,
+    },
+    /// Read `len` logical bytes at `offset` (offset in view units when a
+    /// view is given, raw file bytes otherwise). `dst_base` is the offset
+    /// inside the client's destination buffer — sub-requests created by
+    /// the fragmenter shift it so foe ACKs land directly in place.
+    Read {
+        file: FileId,
+        offset: u64,
+        len: u64,
+        view: Option<View>,
+        dst_base: u64,
+    },
+    Write {
+        file: FileId,
+        offset: u64,
+        data: Vec<u8>,
+        view: Option<View>,
+    },
+    SetSize {
+        file: FileId,
+        size: u64,
+    },
+    GetSize {
+        file: FileId,
+    },
+    Sync {
+        file: FileId,
+    },
+    Hint(Hint),
+    /// Directory/stat inquiry (admin interface).
+    Stat,
+    Shutdown,
+
+    // ---- internal protocol (VS <-> VS), never sent by a VI ----
+    /// BI: who stores file `name`? Foes answer with `LookupAck`.
+    Lookup { name: String },
+    /// DI to the system controller (SC): resolve-or-create the meta for
+    /// `name`. The SC serialises creation, so concurrent creates of one
+    /// name converge on a single file (§5.1.1 centralized controller).
+    OpenMeta { name: String, mode: OpenMode, requester: Rank },
+    /// DI to the SC: unregister `name` (SC broadcasts `RemoveInt` and
+    /// ACKs the client).
+    RemoveName { name: String },
+    /// DI: flush delayed writes for a Sync initiated at another buddy.
+    FlushInt,
+    /// DI: fetch authoritative meta (home server answers `MetaAck`).
+    GetMeta { file: FileId },
+    /// DI: serve these runs of the server's local fragment space and ACK
+    /// the data *directly to the client* (foe access, §4.4).
+    LocalRead {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        /// `(local_offset, len, dst_base)` runs.
+        parts: Vec<(u64, u64, u64)>,
+    },
+    /// DI: write these runs into the local fragment and ACK `Written`
+    /// directly to the client.
+    LocalWrite {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        /// `(local_offset, data)` runs.
+        parts: Vec<(u64, Vec<u8>)>,
+    },
+    /// DI: pull these local runs into the cache (pipelined prefetch).
+    LocalPrefetch {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        parts: Vec<(u64, u64)>,
+    },
+    /// DI to the home server: logical size grew to (or was set to) `size`.
+    SizeUpdate { file: FileId, size: u64, exact: bool },
+    /// DI/BI: truncate/extend local fragment bookkeeping for a SetSize.
+    TruncFrag {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        size: u64,
+    },
+    /// BI: drop all local state of a removed file.
+    RemoveInt { file: FileId },
+}
+
+/// Per-server counters reported by `Request::Stat`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServerStats {
+    pub ext_requests: u64,
+    pub int_requests: u64,
+    pub broadcasts_rx: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub disk_time_us: u64,
+}
+
+/// Response bodies (ACK payloads).
+#[derive(Debug, Clone)]
+pub enum Response {
+    Connected { buddy: Rank },
+    Disconnected,
+    Opened { file: FileId, size: u64 },
+    Removed,
+    Closed,
+    /// Read admission: the buddy has fragmented the request; `total`
+    /// bytes of `Data` ACKs (possibly from several servers) will follow.
+    ReadPlanned { total: u64 },
+    /// Partial read data: place at `dst_base` in the request buffer.
+    Data { dst_base: u64, data: Vec<u8> },
+    /// BI `Lookup` answer (to the asking server).
+    LookupAck { meta: Option<crate::directory::FileMeta> },
+    /// `GetMeta` answer (authoritative, from the home server).
+    MetaAck { meta: crate::directory::FileMeta },
+    /// Write (sub-)completion.
+    Written { bytes: u64 },
+    Size { size: u64 },
+    Synced,
+    HintAck,
+    Stats(Box<ServerStats>),
+    /// Request failed; `Vipios_IOState` surfaces this.
+    Error { msg: String },
+}
+
+#[derive(Debug, Clone)]
+pub enum Body {
+    Req(Request),
+    Resp(Response),
+}
+
+/// A message: the paper's header (sender, client, request id, class) plus
+/// body. File ids travel inside the bodies.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub src: Rank,
+    /// Originating client (so foe servers can ACK it directly).
+    pub client: Rank,
+    pub req_id: u64,
+    pub class: MsgClass,
+    pub body: Body,
+}
+
+#[derive(Debug)]
+pub enum SendError {
+    /// Destination rank unknown (process dead or never registered) —
+    /// the failure-injection hook.
+    NoSuchRank(Rank),
+}
+
+impl std::fmt::Display for SendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SendError::NoSuchRank(r) => write!(f, "no such rank {:?}", r),
+        }
+    }
+}
+
+impl std::error::Error for SendError {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Server,
+    Client,
+}
+
+struct WorldInner {
+    next_rank: u32,
+    mailboxes: HashMap<Rank, Sender<Msg>>,
+    roles: HashMap<Rank, Role>,
+    servers: Vec<Rank>,
+}
+
+/// The process universe: rank allocation + mailbox registry. Cheap to
+/// clone (Arc). Servers join at startup; clients may join/leave at any
+/// time (*independent mode*).
+#[derive(Clone)]
+pub struct World {
+    inner: Arc<Mutex<WorldInner>>,
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl World {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(WorldInner {
+                next_rank: 0,
+                mailboxes: HashMap::new(),
+                roles: HashMap::new(),
+                servers: Vec::new(),
+            })),
+        }
+    }
+
+    /// Register a new process; returns its endpoint.
+    pub fn join(&self, role: Role) -> Endpoint {
+        let (tx, rx) = channel();
+        let mut w = self.inner.lock().unwrap();
+        let rank = Rank(w.next_rank);
+        w.next_rank += 1;
+        w.mailboxes.insert(rank, tx);
+        w.roles.insert(rank, role);
+        if role == Role::Server {
+            w.servers.push(rank);
+        }
+        Endpoint { rank, rx, world: self.clone() }
+    }
+
+    /// Deregister (process exit / crash injection). Messages to this rank
+    /// now fail with [`SendError::NoSuchRank`].
+    pub fn leave(&self, rank: Rank) {
+        let mut w = self.inner.lock().unwrap();
+        w.mailboxes.remove(&rank);
+        w.roles.remove(&rank);
+        w.servers.retain(|&r| r != rank);
+    }
+
+    pub fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
+        let tx = {
+            let w = self.inner.lock().unwrap();
+            w.mailboxes.get(&dst).cloned()
+        };
+        match tx {
+            Some(tx) => tx.send(msg).map_err(|_| SendError::NoSuchRank(dst)),
+            None => Err(SendError::NoSuchRank(dst)),
+        }
+    }
+
+    /// All server ranks (the `MPI_COMM_SERV` side of the split).
+    pub fn servers(&self) -> Vec<Rank> {
+        self.inner.lock().unwrap().servers.clone()
+    }
+
+    pub fn role(&self, rank: Rank) -> Option<Role> {
+        self.inner.lock().unwrap().roles.get(&rank).copied()
+    }
+
+    /// Broadcast to all servers except `except` (BI semantics). Dead
+    /// ranks are skipped (their absence is the failure signal).
+    pub fn broadcast_servers(&self, except: Rank, msg: &Msg) -> usize {
+        let servers = self.servers();
+        let mut sent = 0;
+        for s in servers {
+            if s != except && self.send(s, msg.clone()).is_ok() {
+                sent += 1;
+            }
+        }
+        sent
+    }
+}
+
+/// A process's receive endpoint + identity.
+pub struct Endpoint {
+    pub rank: Rank,
+    rx: Receiver<Msg>,
+    pub world: World,
+}
+
+impl Endpoint {
+    /// Blocking receive.
+    pub fn recv(&self) -> Option<Msg> {
+        self.rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Result<Msg, RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+
+    pub fn try_recv(&self) -> Option<Msg> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
+        self.world.send(dst, msg)
+    }
+}
+
+impl Drop for Endpoint {
+    fn drop(&mut self) {
+        self.world.leave(self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_msg(src: Rank, class: MsgClass, req: Request) -> Msg {
+        Msg { src, client: src, req_id: 1, class, body: Body::Req(req) }
+    }
+
+    #[test]
+    fn ranks_are_sequential_and_roles_tracked() {
+        let w = World::new();
+        let s0 = w.join(Role::Server);
+        let s1 = w.join(Role::Server);
+        let c0 = w.join(Role::Client);
+        assert_eq!(s0.rank, Rank(0));
+        assert_eq!(s1.rank, Rank(1));
+        assert_eq!(c0.rank, Rank(2));
+        assert_eq!(w.servers(), vec![Rank(0), Rank(1)]);
+        assert_eq!(w.role(c0.rank), Some(Role::Client));
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c = w.join(Role::Client);
+        c.send(s.rank, req_msg(c.rank, MsgClass::ER, Request::Stat)).unwrap();
+        let m = s.recv().unwrap();
+        assert_eq!(m.src, c.rank);
+        assert_eq!(m.class, MsgClass::ER);
+        assert!(matches!(m.body, Body::Req(Request::Stat)));
+    }
+
+    #[test]
+    fn send_to_dead_rank_fails() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c = w.join(Role::Client);
+        let dead = s.rank;
+        drop(s); // leaves the world
+        let err = c.send(dead, req_msg(c.rank, MsgClass::ER, Request::Stat));
+        assert!(matches!(err, Err(SendError::NoSuchRank(r)) if r == dead));
+    }
+
+    #[test]
+    fn broadcast_reaches_all_other_servers() {
+        let w = World::new();
+        let s0 = w.join(Role::Server);
+        let s1 = w.join(Role::Server);
+        let s2 = w.join(Role::Server);
+        let _c = w.join(Role::Client);
+        let m = req_msg(s0.rank, MsgClass::BI, Request::Stat);
+        let n = w.broadcast_servers(s0.rank, &m);
+        assert_eq!(n, 2);
+        assert!(s1.try_recv().is_some());
+        assert!(s2.try_recv().is_some());
+        // sender excluded
+        assert!(s0.try_recv().is_none());
+    }
+
+    #[test]
+    fn broadcast_skips_dead_servers() {
+        let w = World::new();
+        let s0 = w.join(Role::Server);
+        let s1 = w.join(Role::Server);
+        let s2 = w.join(Role::Server);
+        drop(s1);
+        let m = req_msg(s0.rank, MsgClass::BI, Request::Stat);
+        assert_eq!(w.broadcast_servers(s0.rank, &m), 1);
+        assert!(s2.try_recv().is_some());
+    }
+
+    #[test]
+    fn dynamic_join_after_servers_started() {
+        // independent-mode shape: clients join long after servers
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c1 = w.join(Role::Client);
+        drop(c1);
+        let c2 = w.join(Role::Client);
+        c2.send(s.rank, req_msg(c2.rank, MsgClass::ER, Request::Connect))
+            .unwrap();
+        assert!(s.recv().is_some());
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let r = s.recv_timeout(Duration::from_millis(10));
+        assert!(r.is_err());
+    }
+}

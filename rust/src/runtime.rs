@@ -1,0 +1,238 @@
+//! Runtime bridge — load and execute the AOT-compiled L2/L1 artifacts
+//! via the PJRT CPU client (`xla` crate).
+//!
+//! Artifacts are HLO **text** (`artifacts/*.hlo.txt`) produced once by
+//! `python/compile/aot.py`; Python never runs on the request path. Each
+//! [`Executable`] is compiled once at load and reused for every block —
+//! the pattern of /opt/xla-example/load_hlo.
+//!
+//! All shipped artifacts take/return f32 tensors and return a tuple (the
+//! lowering uses `return_tuple=True`), so helpers here work in `Vec<f32>`
+//! + shape.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Block edge hard-wired into the shipped artifacts (must equal
+/// `python/compile/model.py::BLOCK`).
+pub const BLOCK: usize = 256;
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// A typed f32 tensor travelling between ViPIOS buffers and PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {shape:?} != data len {}", data.len()));
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0f32; n] }
+    }
+
+    /// Reinterpret a ViPIOS byte buffer as f32 (little-endian).
+    pub fn from_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            return Err(anyhow!("expected {} bytes, got {}", n * 4, bytes.len()));
+        }
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { shape, data })
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            exes: HashMap::new(),
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .with_context(|| format!("load {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes
+                .insert(name.to_string(), Executable { exe, name: name.to_string() });
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Execute a loaded artifact on f32 tensors; returns the tuple
+    /// elements.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?;
+        let exe = &self.exes[name];
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>()?;
+                Tensor::new(dims, data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("stencil5.hlo.txt").exists()
+    }
+
+    #[test]
+    fn tensor_bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.5, -3.0, 0.0]).unwrap();
+        let b = t.to_bytes();
+        assert_eq!(b.len(), 16);
+        let t2 = Tensor::from_bytes(vec![2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+        assert!(Tensor::from_bytes(vec![2, 2], &b[..8]).is_err());
+        assert!(Tensor::new(vec![3], vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn stencil_artifact_matches_cpu_reference() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let n = BLOCK + 2;
+        let mut x = Tensor::zeros(vec![n, n]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i % 97) as f32 * 0.25;
+        }
+        let out = rt.run("stencil5", &[x.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        let y = &out[0];
+        assert_eq!(y.shape, vec![BLOCK, BLOCK]);
+        // spot-check the stencil at a few interior points
+        let at = |r: usize, c: usize| x.data[r * n + c];
+        for &(r, c) in &[(1usize, 1usize), (5, 9), (200, 17), (256, 256)] {
+            let want = 0.25 * (at(r - 1, c) + at(r + 1, c) + at(r, c - 1) + at(r, c + 1));
+            let got = y.data[(r - 1) * BLOCK + (c - 1)];
+            assert!((got - want).abs() < 1e-5, "({r},{c}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn matmul_artifact_accumulates() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        // identity @ identity + identity = 2*identity
+        let mut eye = Tensor::zeros(vec![BLOCK, BLOCK]);
+        for i in 0..BLOCK {
+            eye.data[i * BLOCK + i] = 1.0;
+        }
+        let out = rt
+            .run("matmul_tile", &[eye.clone(), eye.clone(), eye.clone()])
+            .unwrap();
+        let c = &out[0];
+        assert!((c.data[0] - 2.0).abs() < 1e-6);
+        assert!((c.data[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jacobi_step_returns_residual() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let n = BLOCK + 2;
+        let mut x = Tensor::zeros(vec![n, n]);
+        x.data[n * (n / 2) + n / 2] = 100.0; // a spike
+        let out = rt.run("jacobi_step", &[x]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape, vec![BLOCK, BLOCK]);
+        assert_eq!(out[1].shape, vec![2]);
+        // residual sumsq > 0 because the spike diffuses
+        assert!(out[1].data[1] > 0.0);
+    }
+
+    #[test]
+    fn block_reduce_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let mut x = Tensor::zeros(vec![BLOCK, BLOCK]);
+        x.data.fill(2.0);
+        let out = rt.run("block_reduce", &[x]).unwrap();
+        let n = (BLOCK * BLOCK) as f32;
+        assert!((out[0].data[0] - 2.0 * n).abs() < 1.0);
+        assert!((out[0].data[1] - 4.0 * n).abs() < 1.0);
+    }
+}

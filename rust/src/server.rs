@@ -1,0 +1,1188 @@
+//! The ViPIOS server process VS (§4.2, §5.1) — interface layer, kernel
+//! layer (fragmenter + directory manager + memory manager) and disk-
+//! manager layer behind one event loop.
+//!
+//! Message flow (§5.1.2): external requests (ER) arrive from a client's
+//! VI; the fragmenter splits them into a locally-servable part and
+//! directed internal requests (DI) to foe servers (the owner is always
+//! known from the file's distribution — the BI broadcast is only needed
+//! for name lookups at OPEN). Every server that resolves a sub-request
+//! ACKs **directly to the client's VI**, bypassing the buddy; only
+//! external requests may trigger further messages, so message
+//! amplification per client request is bounded (asserted in tests).
+//!
+//! Controller services (§5.1.1): the first server of a [`crate::msg::World`] acts as
+//! system controller (SC) and connection controller (CC) in centralized
+//! mode — the configuration the paper implemented.
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::directory::{Directory, FileMeta, Fragment, EXTENT};
+use crate::disk::{Disk, MemDisk, SimCost, SimDisk, UnixDisk};
+use crate::fragmenter::{choose_distribution, fragment};
+use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
+use crate::memory::{BufferCache, CacheConfig, Prefetcher};
+use crate::msg::{
+    Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
+    ServerStats, View,
+};
+
+/// What backs a server's disks.
+#[derive(Debug, Clone)]
+pub enum DiskKind {
+    /// RAM store (tests).
+    Mem,
+    /// Simulated seek/transfer cost model (benches; DESIGN.md §3).
+    Sim(SimCost),
+    /// Real files under the given directory (one per disk).
+    Unix(std::path::PathBuf),
+}
+
+/// Per-server configuration (set in the preparation phase).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub disks: usize,
+    pub kind: DiskKind,
+    pub cache: CacheConfig,
+    /// Run the async prefetch worker + sequential readahead.
+    pub prefetch: bool,
+    /// Readahead window (bytes of local fragment space).
+    pub readahead: u64,
+    /// Fixed CPU cost charged per data request — models a *non-dedicated*
+    /// I/O node whose CPU is shared with an application process (E2).
+    pub request_overhead: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            disks: 1,
+            kind: DiskKind::Mem,
+            cache: CacheConfig::default(),
+            prefetch: true,
+            readahead: 256 * 1024,
+            request_overhead: Duration::ZERO,
+        }
+    }
+}
+
+/// Continuations for requests that needed another server's answer.
+enum Pending {
+    /// OPEN waiting for the system controller's resolve-or-create.
+    OpenViaSc { client: Rank, req_id: u64 },
+    /// OPEN/SYNC/GETSIZE waiting for home-server meta.
+    MetaWait {
+        client: Rank,
+        req_id: u64,
+        kind: MetaWaitKind,
+    },
+    /// SYNC waiting for foe flush acknowledgements.
+    SyncWait {
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        acks_left: usize,
+    },
+}
+
+enum MetaWaitKind {
+    Open,
+    GetSize,
+    Sync,
+}
+
+/// One ViPIOS server. Construct with [`Server::new`], then either run
+/// the event loop on a thread ([`Server::run`]) or drive it directly
+/// ([`Server::handle`], used by library mode).
+pub struct Server {
+    pub ep: Endpoint,
+    cfg: ServerConfig,
+    disks: Vec<Arc<dyn Disk>>,
+    alloc: Vec<u64>,
+    cache: Arc<BufferCache>,
+    prefetcher: Option<Prefetcher>,
+    dir: Directory,
+    /// Preparation-phase file-admin hints, by file name.
+    admin_hints: HashMap<String, FileAdminHint>,
+    /// Sequential-scan tracking: (client, file) -> next expected local
+    /// offset (per-server local readahead).
+    seq: HashMap<(Rank, FileId), u64>,
+    /// Files with an active Sequential prefetch hint window.
+    seq_hint: HashMap<FileId, u64>,
+    pending: HashMap<u64, Pending>,
+    next_internal: u64,
+    next_file: u64,
+    /// Round-robin buddy assignment state (only used on the CC).
+    next_buddy: usize,
+    stats: ServerStats,
+    /// Shared shutdown flag for pools.
+    pub running: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn new(ep: Endpoint, cfg: ServerConfig) -> crate::Result<Self> {
+        let mut disks: Vec<Arc<dyn Disk>> = Vec::new();
+        for i in 0..cfg.disks.max(1) {
+            let d: Arc<dyn Disk> = match &cfg.kind {
+                DiskKind::Mem => Arc::new(MemDisk::new()),
+                DiskKind::Sim(cost) => Arc::new(SimDisk::new(*cost)),
+                DiskKind::Unix(dir) => {
+                    std::fs::create_dir_all(dir)?;
+                    let path = dir.join(format!(
+                        "vs{}_disk{}.dat",
+                        ep.rank.0, i
+                    ));
+                    Arc::new(UnixDisk::create(&path)?)
+                }
+            };
+            disks.push(d);
+        }
+        let cache = Arc::new(BufferCache::new(cfg.cache));
+        let prefetcher = if cfg.prefetch {
+            Some(Prefetcher::start(cache.clone()))
+        } else {
+            None
+        };
+        let alloc = vec![0u64; disks.len()];
+        Ok(Self {
+            ep,
+            cfg,
+            disks,
+            alloc,
+            cache,
+            prefetcher,
+            dir: Directory::new(),
+            admin_hints: HashMap::new(),
+            seq: HashMap::new(),
+            seq_hint: HashMap::new(),
+            pending: HashMap::new(),
+            next_internal: 0,
+            next_file: 0,
+            next_buddy: 0,
+            stats: ServerStats::default(),
+            running: Arc::new(AtomicU64::new(1)),
+        })
+    }
+
+    /// Event loop: serve until `Shutdown`.
+    pub fn run(mut self) {
+        while let Some(msg) = self.ep.recv() {
+            if !self.handle(msg) {
+                break;
+            }
+        }
+        // final write-back
+        for (i, d) in self.disks.clone().iter().enumerate() {
+            let _ = self.cache.flush(i, d);
+        }
+    }
+
+    fn ack(&self, dst: Rank, client: Rank, req_id: u64, resp: Response) {
+        let _ = self.ep.send(
+            dst,
+            Msg {
+                src: self.ep.rank,
+                client,
+                req_id,
+                class: MsgClass::ACK,
+                body: Body::Resp(resp),
+            },
+        );
+    }
+
+    fn di(&self, dst: Rank, client: Rank, req_id: u64, req: Request) -> bool {
+        self.ep
+            .send(
+                dst,
+                Msg {
+                    src: self.ep.rank,
+                    client,
+                    req_id,
+                    class: MsgClass::DI,
+                    body: Body::Req(req),
+                },
+            )
+            .is_ok()
+    }
+
+    #[allow(dead_code)]
+    fn alloc_extent(&mut self, disk_idx: usize) -> u64 {
+        let off = self.alloc[disk_idx];
+        self.alloc[disk_idx] += EXTENT;
+        off
+    }
+
+    /// Make sure the directory knows this file (foe servers learn meta
+    /// lazily from the sub-request itself).
+    fn ensure_entry(&mut self, meta: &FileMeta) {
+        if self.dir.get(meta.id).is_none() {
+            let frag = meta
+                .server_index(self.ep.rank)
+                .map(|_| Fragment::new((meta.id.0 as usize) % self.disks.len()));
+            self.dir.insert(meta.clone(), frag);
+        }
+    }
+
+    // ------------------------------------------------------ data path
+
+    /// Read local fragment runs and ACK them directly to the client.
+    fn serve_local_read(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        parts: &[(u64, u64, u64)],
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let entry = match self.dir.get(file) {
+            Some(e) => e,
+            None => {
+                // file unknown here: everything reads as zeros (hole)
+                for &(_, len, dst) in parts {
+                    self.ack(
+                        client,
+                        client,
+                        req_id,
+                        Response::Data { dst_base: dst, data: vec![0; len as usize] },
+                    );
+                }
+                return;
+            }
+        };
+        let frag = entry.frag.clone().unwrap_or_default();
+        let disk_idx = frag.disk_idx;
+        let disk = self.disks[disk_idx].clone();
+        let mut total = 0u64;
+        for &(local, len, dst) in parts {
+            let mut buf = vec![0u8; len as usize];
+            let mut at = 0usize;
+            for (d, run) in frag.runs(local, len) {
+                if let Some(doff) = d {
+                    let _ = self.cache.read(
+                        disk_idx,
+                        &disk,
+                        doff,
+                        &mut buf[at..at + run as usize],
+                    );
+                }
+                at += run as usize;
+            }
+            total += len;
+            self.ack(client, client, req_id, Response::Data { dst_base: dst, data: buf });
+        }
+        self.stats.bytes_read += total;
+        self.readahead(client, file, parts);
+    }
+
+    /// Per-server local sequential readahead (pipelined parallelism).
+    fn readahead(&mut self, client: Rank, file: FileId, parts: &[(u64, u64, u64)]) {
+        let Some(pf) = &self.prefetcher else { return };
+        let Some((last_local, last_len, _)) = parts.last().copied() else { return };
+        let end = last_local + last_len;
+        let key = (client, file);
+        let sequential = self.seq.get(&key).copied() == Some(parts[0].0)
+            || self.seq_hint.contains_key(&file);
+        self.seq.insert(key, end);
+        if !sequential {
+            return;
+        }
+        let window = self
+            .seq_hint
+            .get(&file)
+            .copied()
+            .unwrap_or(self.cfg.readahead);
+        if let Some(e) = self.dir.get(file) {
+            if let Some(frag) = &e.frag {
+                // only prefetch what exists
+                let avail = frag.local_len.saturating_sub(end);
+                let len = window.min(avail);
+                if len > 0 {
+                    for (d, run) in frag.runs(end, len) {
+                        if let Some(doff) = d {
+                            pf.submit(
+                                frag.disk_idx,
+                                self.disks[frag.disk_idx].clone(),
+                                doff,
+                                run,
+                            );
+                            self.stats.prefetch_issued += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Write local fragment runs; ACK `Written` directly to the client.
+    fn serve_local_write(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        parts: Vec<(u64, Vec<u8>)>,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let mut bytes = 0u64;
+        let Some(entry) = self.dir.get_mut(file) else {
+            self.ack(
+                client,
+                client,
+                req_id,
+                Response::Error { msg: format!("write to unknown file {file:?}") },
+            );
+            return;
+        };
+        let mut frag = entry.frag.take().unwrap_or_else(|| {
+            Fragment::new((file.0 as usize) % 1)
+        });
+        let disk_idx = frag.disk_idx;
+        let disk = self.disks[disk_idx].clone();
+        let mut failed: Option<String> = None;
+        for (local, data) in &parts {
+            let mut next_alloc = self.alloc[disk_idx];
+            let runs = frag.map_alloc(*local, data.len() as u64, || {
+                let v = next_alloc;
+                next_alloc += EXTENT;
+                v
+            });
+            self.alloc[disk_idx] = next_alloc;
+            let mut at = 0usize;
+            for (doff, run) in runs {
+                if let Err(e) =
+                    self.cache.write(disk_idx, &disk, doff, &data[at..at + run as usize])
+                {
+                    failed = Some(e.to_string());
+                    break;
+                }
+                at += run as usize;
+            }
+            if failed.is_some() {
+                break;
+            }
+            frag.local_len = frag.local_len.max(local + data.len() as u64);
+            bytes += data.len() as u64;
+        }
+        // restore fragment
+        if let Some(entry) = self.dir.get_mut(file) {
+            entry.frag = Some(frag);
+        }
+        self.stats.bytes_written += bytes;
+        match failed {
+            Some(msg) => self.ack(client, client, req_id, Response::Error { msg }),
+            None => self.ack(client, client, req_id, Response::Written { bytes }),
+        }
+    }
+
+    fn serve_local_prefetch(&mut self, file: FileId, parts: &[(u64, u64)]) {
+        let Some(entry) = self.dir.get(file) else { return };
+        let Some(frag) = entry.frag.clone() else { return };
+        let Some(pf) = &self.prefetcher else { return };
+        for &(local, len) in parts {
+            let len = len.min(frag.local_len.saturating_sub(local));
+            for (d, run) in frag.runs(local, len) {
+                if let Some(doff) = d {
+                    pf.submit(frag.disk_idx, self.disks[frag.disk_idx].clone(), doff, run);
+                    self.stats.prefetch_issued += 1;
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------- request entry
+
+    /// Handle one message; returns `false` on shutdown.
+    pub fn handle(&mut self, msg: Msg) -> bool {
+        let Msg { src, client, req_id, class, body } = msg;
+        match class {
+            MsgClass::ER => self.stats.ext_requests += 1,
+            MsgClass::DI => self.stats.int_requests += 1,
+            MsgClass::BI => self.stats.broadcasts_rx += 1,
+            MsgClass::ACK => {}
+        }
+        match body {
+            Body::Req(req) => self.handle_req(src, client, req_id, class, req),
+            Body::Resp(resp) => {
+                self.handle_resp(req_id, resp);
+                true
+            }
+        }
+    }
+
+    fn handle_req(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        _class: MsgClass,
+        req: Request,
+    ) -> bool {
+        match req {
+            Request::Connect => {
+                // CC: round-robin buddy assignment (logical data locality
+                // stand-in; the paper picks by topological distance).
+                let servers = self.ep.world.servers();
+                let buddy = servers[self.next_buddy % servers.len()];
+                self.next_buddy += 1;
+                self.ack(src, client, req_id, Response::Connected { buddy });
+            }
+            Request::Disconnect => {
+                self.seq.retain(|(c, _), _| *c != client);
+                self.ack(src, client, req_id, Response::Disconnected);
+            }
+            Request::Open { name, mode } => self.open(src, client, req_id, name, mode),
+            Request::Close { file } => {
+                // flush delayed writes of that file's disk
+                if let Some(e) = self.dir.get(file) {
+                    if let Some(frag) = &e.frag {
+                        let idx = frag.disk_idx;
+                        let disk = self.disks[idx].clone();
+                        let _ = self.cache.flush(idx, &disk);
+                    }
+                }
+                self.ack(src, client, req_id, Response::Closed);
+            }
+            Request::Remove { name } => {
+                // name authority is the SC; forward unless we are it
+                if self.ep.rank == self.sc() {
+                    self.sc_remove(src, client, req_id, &name);
+                } else {
+                    self.di(self.sc(), src, req_id, Request::RemoveName { name });
+                }
+            }
+            Request::RemoveName { name } => {
+                // we are the SC; `client` is the VI to acknowledge
+                self.sc_remove(client, client, req_id, &name);
+            }
+            Request::RemoveInt { file } => {
+                self.dir.remove(file);
+            }
+            Request::Read { file, offset, len, view, dst_base } => {
+                self.read(src, client, req_id, file, offset, len, view, dst_base)
+            }
+            Request::Write { file, offset, data, view } => {
+                self.write(src, client, req_id, file, offset, data, view)
+            }
+            Request::LocalRead { file, meta, parts } => {
+                self.ensure_entry(&meta);
+                self.serve_local_read(client, req_id, file, &parts);
+            }
+            Request::LocalWrite { file, meta, parts } => {
+                self.ensure_entry(&meta);
+                self.serve_local_write(client, req_id, file, parts);
+            }
+            Request::LocalPrefetch { file, meta, parts } => {
+                self.ensure_entry(&meta);
+                self.serve_local_prefetch(file, &parts);
+            }
+            Request::SizeUpdate { file, size, exact } => {
+                if let Some(e) = self.dir.get_mut(file) {
+                    if exact {
+                        e.meta.size = size;
+                    } else {
+                        e.meta.size = e.meta.size.max(size);
+                    }
+                }
+            }
+            Request::TruncFrag { file, meta, size } => {
+                self.ensure_entry(&meta);
+                self.trunc_local(file, size);
+            }
+            Request::SetSize { file, size } => self.set_size(src, client, req_id, file, size),
+            Request::GetSize { file } => self.get_size(src, client, req_id, file),
+            Request::Sync { file } => self.sync(src, client, req_id, file),
+            Request::FlushInt => {
+                self.flush_all();
+                // ack to the requesting *server* with its internal id
+                self.ack(src, client, req_id, Response::Synced);
+            }
+            Request::Hint(h) => {
+                self.hint(client, h);
+                self.ack(src, client, req_id, Response::HintAck);
+            }
+            Request::Lookup { name } => {
+                let meta = self
+                    .dir
+                    .id_by_name(&name)
+                    .and_then(|id| self.dir.get(id))
+                    .map(|e| e.meta.clone());
+                self.ack(src, client, req_id, Response::LookupAck { meta });
+            }
+            Request::OpenMeta { name, mode, requester } => {
+                // we are the SC: serialised resolve-or-create
+                match self.sc_open_meta(&name, mode, requester) {
+                    Ok(meta) => self.ack(src, client, req_id, Response::MetaAck { meta }),
+                    Err(msg) => self.ack(src, client, req_id, Response::Error { msg }),
+                }
+            }
+            Request::GetMeta { file } => {
+                if let Some(e) = self.dir.get(file) {
+                    self.ack(src, client, req_id, Response::MetaAck { meta: e.meta.clone() });
+                } else {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error { msg: format!("no meta for {file:?}") },
+                    );
+                }
+            }
+            Request::Stat => {
+                let mut s = self.stats.clone();
+                let cs = self.cache.stats();
+                s.cache_hits = cs.hits;
+                s.cache_misses = cs.misses;
+                s.disk_time_us = self.disks.iter().map(|d| d.stats().busy_us).sum();
+                if let Some(pf) = &self.prefetcher {
+                    s.prefetch_hits = pf.issued();
+                }
+                self.ack(src, client, req_id, Response::Stats(Box::new(s)));
+            }
+            Request::Shutdown => {
+                self.ack(src, client, req_id, Response::Synced);
+                return false;
+            }
+        }
+        true
+    }
+
+    // --------------------------------------------------------- OPEN
+
+    fn open(&mut self, src: Rank, client: Rank, req_id: u64, name: String, mode: OpenMode) {
+        if let Some(id) = self.dir.id_by_name(&name) {
+            let meta = self.dir.get(id).unwrap().meta.clone();
+            if mode.exclusive && mode.create {
+                self.ack(
+                    src,
+                    client,
+                    req_id,
+                    Response::Error { msg: format!("file exists: {name}") },
+                );
+                return;
+            }
+            if meta.home() == self.ep.rank {
+                self.ack(src, client, req_id, Response::Opened { file: id, size: meta.size });
+            } else {
+                // refresh size from home
+                let iid = self.internal_id();
+                self.pending.insert(
+                    iid,
+                    Pending::MetaWait { client: src, req_id, kind: MetaWaitKind::Open },
+                );
+                self.di(meta.home(), client, iid, Request::GetMeta { file: id });
+            }
+            return;
+        }
+        // name unknown here: ask the system controller, which serialises
+        // resolve-or-create (concurrent creates of one name converge)
+        if self.ep.rank == self.sc() {
+            match self.sc_open_meta(&name, mode, self.ep.rank) {
+                Ok(meta) => self.open_with_meta(src, client, req_id, meta),
+                Err(msg) => self.ack(src, client, req_id, Response::Error { msg }),
+            }
+        } else {
+            let iid = self.internal_id();
+            self.pending
+                .insert(iid, Pending::OpenViaSc { client: src, req_id });
+            self.di(
+                self.sc(),
+                client,
+                iid,
+                Request::OpenMeta { name, mode, requester: self.ep.rank },
+            );
+        }
+    }
+
+    /// The system controller rank (centralized SC/CC mode, §5.1.1).
+    fn sc(&self) -> Rank {
+        self.ep.world.servers()[0]
+    }
+
+    /// SC-side resolve-or-create of a file name.
+    fn sc_open_meta(
+        &mut self,
+        name: &str,
+        mode: OpenMode,
+        requester: Rank,
+    ) -> Result<FileMeta, String> {
+        if let Some(id) = self.dir.id_by_name(name) {
+            if mode.create && mode.exclusive {
+                return Err(format!("file exists: {name}"));
+            }
+            return Ok(self.dir.get(id).unwrap().meta.clone());
+        }
+        if !mode.create {
+            return Err(format!("no such file: {name}"));
+        }
+        // preparation phase: layout decision from the hints the SC holds
+        let servers = self.ep.world.servers();
+        let hint = self.admin_hints.get(name).cloned();
+        let dist = choose_distribution(hint.as_ref(), servers.len() as u32);
+        let id = FileId(((self.ep.rank.0 as u64) << 32) | self.next_file);
+        self.next_file += 1;
+        // home = the requesting buddy (data locality: the buddy stores
+        // the first fragment), then the rest in rank order.
+        let mut order = vec![requester];
+        order.extend(servers.into_iter().filter(|&r| r != requester));
+        let meta = FileMeta {
+            id,
+            name: name.to_string(),
+            distribution: dist,
+            servers: order,
+            size: 0,
+        };
+        self.ensure_entry(&meta);
+        Ok(meta)
+    }
+
+    /// Buddy-side continuation once meta is known: register + reply, or
+    /// chase the home server for a fresh size.
+    fn open_with_meta(&mut self, vi: Rank, client: Rank, req_id: u64, meta: FileMeta) {
+        self.ensure_entry(&meta);
+        if let Some(e) = self.dir.get_mut(meta.id) {
+            e.meta = meta.clone();
+        }
+        if meta.home() == self.ep.rank {
+            self.ack(vi, client, req_id, Response::Opened { file: meta.id, size: meta.size });
+        } else {
+            let iid = self.internal_id();
+            self.pending.insert(
+                iid,
+                Pending::MetaWait { client: vi, req_id, kind: MetaWaitKind::Open },
+            );
+            self.di(meta.home(), client, iid, Request::GetMeta { file: meta.id });
+        }
+    }
+
+    /// SC-side remove: unregister the name, broadcast fragment removal,
+    /// ACK the client.
+    fn sc_remove(&mut self, vi: Rank, client: Rank, req_id: u64, name: &str) {
+        if let Some(id) = self.dir.id_by_name(name) {
+            self.dir.remove(id);
+            let m = Msg {
+                src: self.ep.rank,
+                client,
+                req_id,
+                class: MsgClass::BI,
+                body: Body::Req(Request::RemoveInt { file: id }),
+            };
+            self.ep.world.broadcast_servers(self.ep.rank, &m);
+        }
+        self.ack(vi, client, req_id, Response::Removed);
+    }
+
+    // --------------------------------------------------- READ/WRITE
+
+    #[allow(clippy::too_many_arguments)]
+    fn read(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        offset: u64,
+        len: u64,
+        view: Option<View>,
+        dst_base: u64,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let Some(entry) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        let meta = entry.meta.clone();
+        // EOF clamp in view-logical space: with a view, the number of
+        // *data* bytes visible before EOF is bounded by how much of the
+        // tiled pattern lies below meta.size.
+        let len = match &view {
+            None => len.min(meta.size.saturating_sub(offset.min(meta.size))),
+            Some(v) => {
+                // conservative: count view bytes whose physical extent
+                // starts below size (exact per-extent clamp happens via
+                // fragment local_len -> zeros; MPI-IO reads at EOF are
+                // short only for reads past the last written byte).
+                let mut visible = 0u64;
+                if len > 0 {
+                    for (poff, plen) in v.desc.resolve(v.disp, offset, len) {
+                        if poff >= meta.size {
+                            break;
+                        }
+                        visible += plen.min(meta.size - poff);
+                        if poff + plen >= meta.size {
+                            break;
+                        }
+                    }
+                }
+                visible
+            }
+        };
+        self.ack(src, client, req_id, Response::ReadPlanned { total: len });
+        if len == 0 {
+            return;
+        }
+        let subs = fragment(&meta, view.as_ref(), offset, len);
+        for sub in subs {
+            let parts: Vec<(u64, u64, u64)> = sub
+                .parts
+                .iter()
+                .map(|&(l, ln, b)| (l, ln, b + dst_base))
+                .collect();
+            if sub.server == self.ep.rank {
+                self.serve_local_read(src, req_id, file, &parts);
+            } else {
+                let ok = self.di(
+                    sub.server,
+                    src,
+                    req_id,
+                    Request::LocalRead { file, meta: meta.clone(), parts: parts.clone() },
+                );
+                if !ok {
+                    // foe dead: fail that part over to zeros + error note
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error {
+                            msg: format!("server {:?} unreachable", sub.server),
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    fn write(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        offset: u64,
+        data: Vec<u8>,
+        view: Option<View>,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let Some(entry) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        let meta = entry.meta.clone();
+        let len = data.len() as u64;
+        let subs = fragment(&meta, view.as_ref(), offset, len);
+        // new logical size = max physical byte written + 1
+        let new_end = match &view {
+            None => offset + len,
+            Some(v) => v.desc.physical_span(v.disp, offset + len),
+        };
+        for sub in subs {
+            let parts: Vec<(u64, Vec<u8>)> = sub
+                .parts
+                .iter()
+                .map(|&(l, ln, b)| (l, data[b as usize..(b + ln) as usize].to_vec()))
+                .collect();
+            if sub.server == self.ep.rank {
+                self.serve_local_write(src, req_id, file, parts);
+            } else {
+                let ok = self.di(
+                    sub.server,
+                    src,
+                    req_id,
+                    Request::LocalWrite { file, meta: meta.clone(), parts },
+                );
+                if !ok {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error {
+                            msg: format!("server {:?} unreachable", sub.server),
+                        },
+                    );
+                }
+            }
+        }
+        // size bookkeeping: locally + at home (fire-and-forget DI)
+        if let Some(e) = self.dir.get_mut(file) {
+            e.meta.size = e.meta.size.max(new_end);
+        }
+        if meta.home() != self.ep.rank {
+            self.di(
+                meta.home(),
+                client,
+                req_id,
+                Request::SizeUpdate { file, size: new_end, exact: false },
+            );
+        }
+    }
+
+    // ------------------------------------------------ size/sync/hint
+
+    fn trunc_local(&mut self, file: FileId, size: u64) {
+        let Some(e) = self.dir.get_mut(file) else { return };
+        e.meta.size = size;
+        let nservers = e.meta.servers.len() as u32;
+        let my_idx = e.meta.server_index(self.ep.rank);
+        if let (Some(frag), Some(idx)) = (e.frag.as_mut(), my_idx) {
+            // this server's share of logical [0, size): truncation shrinks
+            // the fragment, extension grows it with (zero) holes
+            let mut local_end = 0u64;
+            if size > 0 {
+                for (srv, local, run) in e.meta.distribution.extents(nservers, 0, size) {
+                    if srv == idx {
+                        local_end = local_end.max(local + run);
+                    }
+                }
+            }
+            frag.local_len = local_end;
+        }
+    }
+
+    fn set_size(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId, size: u64) {
+        let Some(e) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        let meta = e.meta.clone();
+        self.trunc_local(file, size);
+        for &s in &meta.servers {
+            if s != self.ep.rank {
+                self.di(
+                    s,
+                    client,
+                    req_id,
+                    Request::TruncFrag { file, meta: meta.clone(), size },
+                );
+            }
+        }
+        if meta.home() != self.ep.rank {
+            self.di(meta.home(), client, req_id, Request::SizeUpdate { file, size, exact: true });
+        }
+        self.ack(src, client, req_id, Response::Size { size });
+    }
+
+    fn get_size(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
+        let Some(e) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        if e.meta.home() == self.ep.rank {
+            let size = e.meta.size;
+            self.ack(src, client, req_id, Response::Size { size });
+        } else {
+            let home = e.meta.home();
+            let iid = self.internal_id();
+            self.pending.insert(
+                iid,
+                Pending::MetaWait { client: src, req_id, kind: MetaWaitKind::GetSize },
+            );
+            self.di(home, client, iid, Request::GetMeta { file });
+        }
+    }
+
+    fn sync(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
+        // flush own disks (delayed writes)
+        self.flush_all();
+        let Some(e) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Synced);
+            return;
+        };
+        // every involved server must flush too — writes land on foes
+        let others: Vec<Rank> = e
+            .meta
+            .servers
+            .iter()
+            .copied()
+            .filter(|&r| r != self.ep.rank)
+            .collect();
+        if others.is_empty() {
+            self.sync_finish(src, client, req_id, file);
+            return;
+        }
+        let iid = self.internal_id();
+        let mut sent = 0;
+        for s in &others {
+            if self.di(*s, client, iid, Request::FlushInt) {
+                sent += 1;
+            }
+        }
+        if sent == 0 {
+            self.sync_finish(src, client, req_id, file);
+            return;
+        }
+        self.pending.insert(
+            iid,
+            Pending::SyncWait { client: src, req_id, file, acks_left: sent },
+        );
+    }
+
+    /// After all flushes: refresh meta from home (FIFO per channel pair
+    /// means our earlier SizeUpdates are already applied there), then ACK.
+    fn sync_finish(&mut self, vi: Rank, client: Rank, req_id: u64, file: FileId) {
+        let Some(e) = self.dir.get(file) else {
+            self.ack(vi, client, req_id, Response::Synced);
+            return;
+        };
+        if e.meta.home() == self.ep.rank {
+            self.ack(vi, client, req_id, Response::Synced);
+        } else {
+            let home = e.meta.home();
+            let iid = self.internal_id();
+            self.pending.insert(
+                iid,
+                Pending::MetaWait { client: vi, req_id, kind: MetaWaitKind::Sync },
+            );
+            self.di(home, client, iid, Request::GetMeta { file });
+        }
+    }
+
+    fn flush_all(&mut self) {
+        for (i, d) in self.disks.clone().iter().enumerate() {
+            let _ = self.cache.flush(i, d);
+        }
+    }
+
+    fn hint(&mut self, client: Rank, h: Hint) {
+        match h {
+            Hint::FileAdmin(fa) => {
+                // the SC makes the layout decision at create time, so
+                // file-admin hints must reach it too
+                if self.ep.rank != self.sc() {
+                    self.di(self.sc(), client, 0, Request::Hint(Hint::FileAdmin(fa.clone())));
+                }
+                self.admin_hints.insert(fa.name.clone(), fa);
+            }
+            Hint::Prefetch(PrefetchHint::AdvanceRead { file, offset, len }) => {
+                // fragment like a read, prefetch locally + DI to foes
+                let Some(e) = self.dir.get(file) else { return };
+                let meta = e.meta.clone();
+                let len = len.min(meta.size.saturating_sub(offset.min(meta.size)));
+                if len == 0 {
+                    return;
+                }
+                for sub in fragment(&meta, None, offset, len) {
+                    let parts: Vec<(u64, u64)> =
+                        sub.parts.iter().map(|&(l, ln, _)| (l, ln)).collect();
+                    if sub.server == self.ep.rank {
+                        self.serve_local_prefetch(file, &parts);
+                    } else {
+                        self.di(
+                            sub.server,
+                            client,
+                            0,
+                            Request::LocalPrefetch { file, meta: meta.clone(), parts },
+                        );
+                    }
+                }
+            }
+            Hint::Prefetch(PrefetchHint::Sequential { file, window }) => {
+                self.seq_hint.insert(file, window);
+            }
+            Hint::Prefetch(PrefetchHint::DelayedWrite { .. }) => {
+                // write-back is the cache default; hint is a no-op here
+            }
+            Hint::System(SystemHint::Prefetch(on)) => {
+                if !on {
+                    self.prefetcher = None;
+                } else if self.prefetcher.is_none() {
+                    self.prefetcher = Some(Prefetcher::start(self.cache.clone()));
+                }
+            }
+            Hint::System(SystemHint::CacheBytes(_)) => {
+                // cache capacity is fixed at construction in this
+                // implementation; the bench varies it via ServerConfig.
+            }
+            Hint::System(SystemHint::DropCaches) => {
+                let _ = self.cache.drop_all(&self.disks);
+            }
+        }
+    }
+
+    // ----------------------------------------------------- responses
+
+    fn internal_id(&mut self) -> u64 {
+        self.next_internal += 1;
+        // high bit marks internal ids so they never collide with client
+        // request ids
+        self.next_internal | (1 << 63)
+    }
+
+    fn handle_resp(&mut self, req_id: u64, resp: Response) {
+        let Some(p) = self.pending.remove(&req_id) else { return };
+        match (p, resp) {
+            (Pending::OpenViaSc { client, req_id: orig }, Response::MetaAck { meta }) => {
+                self.open_with_meta(client, client, orig, meta);
+            }
+            (Pending::OpenViaSc { client, req_id: orig }, Response::Error { msg }) => {
+                self.ack(client, client, orig, Response::Error { msg });
+            }
+            (Pending::MetaWait { client, req_id: orig, kind }, Response::MetaAck { meta }) => {
+                self.ensure_entry(&meta);
+                if let Some(e) = self.dir.get_mut(meta.id) {
+                    e.meta.size = meta.size;
+                }
+                match kind {
+                    MetaWaitKind::Open => self.ack(
+                        client,
+                        client,
+                        orig,
+                        Response::Opened { file: meta.id, size: meta.size },
+                    ),
+                    MetaWaitKind::GetSize => {
+                        self.ack(client, client, orig, Response::Size { size: meta.size })
+                    }
+                    MetaWaitKind::Sync => self.ack(client, client, orig, Response::Synced),
+                }
+            }
+            (Pending::MetaWait { client, req_id: orig, kind }, Response::Error { msg }) => {
+                let _ = kind;
+                self.ack(client, client, orig, Response::Error { msg });
+            }
+            (
+                Pending::SyncWait { client, req_id: orig, file, mut acks_left },
+                Response::Synced,
+            ) => {
+                acks_left -= 1;
+                if acks_left == 0 {
+                    self.sync_finish(client, client, orig, file);
+                } else {
+                    self.pending.insert(
+                        req_id,
+                        Pending::SyncWait { client, req_id: orig, file, acks_left },
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The server is exercised end-to-end through the client in
+    // rust/tests/integration_modes.rs; unit tests here cover pieces that
+    // do not need a full world.
+    use super::*;
+    use crate::msg::{Role, World};
+
+    fn one_server() -> (World, Server) {
+        let w = World::new();
+        let ep = w.join(Role::Server);
+        let s = Server::new(ep, ServerConfig::default()).unwrap();
+        (w, s)
+    }
+
+    #[test]
+    fn connect_assigns_round_robin_buddy() {
+        let (w, mut s) = one_server();
+        let c = w.join(Role::Client);
+        let msg = Msg {
+            src: c.rank,
+            client: c.rank,
+            req_id: 1,
+            class: MsgClass::ER,
+            body: Body::Req(Request::Connect),
+        };
+        assert!(s.handle(msg.clone()));
+        assert!(s.handle(msg));
+        // single server: both connects get the same buddy
+        for _ in 0..2 {
+            let m = c.recv().unwrap();
+            match m.body {
+                Body::Resp(Response::Connected { buddy }) => assert_eq!(buddy, s.ep.rank),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn open_create_read_write_single_server() {
+        let (w, mut s) = one_server();
+        let c = w.join(Role::Client);
+        let er = |req: Request, id: u64| Msg {
+            src: c.rank,
+            client: c.rank,
+            req_id: id,
+            class: MsgClass::ER,
+            body: Body::Req(req),
+        };
+        s.handle(er(
+            Request::Open { name: "t".into(), mode: OpenMode::rdwr_create() },
+            1,
+        ));
+        let file = match c.recv().unwrap().body {
+            Body::Resp(Response::Opened { file, size }) => {
+                assert_eq!(size, 0);
+                file
+            }
+            other => panic!("{other:?}"),
+        };
+        s.handle(er(
+            Request::Write { file, offset: 0, data: vec![7u8; 100], view: None },
+            2,
+        ));
+        match c.recv().unwrap().body {
+            Body::Resp(Response::Written { bytes }) => assert_eq!(bytes, 100),
+            other => panic!("{other:?}"),
+        }
+        s.handle(er(
+            Request::Read { file, offset: 10, len: 50, view: None, dst_base: 0 },
+            3,
+        ));
+        match c.recv().unwrap().body {
+            Body::Resp(Response::ReadPlanned { total }) => assert_eq!(total, 50),
+            other => panic!("{other:?}"),
+        }
+        match c.recv().unwrap().body {
+            Body::Resp(Response::Data { dst_base, data }) => {
+                assert_eq!(dst_base, 0);
+                assert_eq!(data, vec![7u8; 50]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_past_eof_plans_zero() {
+        let (w, mut s) = one_server();
+        let c = w.join(Role::Client);
+        let er = |req: Request, id: u64| Msg {
+            src: c.rank,
+            client: c.rank,
+            req_id: id,
+            class: MsgClass::ER,
+            body: Body::Req(req),
+        };
+        s.handle(er(
+            Request::Open { name: "t".into(), mode: OpenMode::rdwr_create() },
+            1,
+        ));
+        let file = match c.recv().unwrap().body {
+            Body::Resp(Response::Opened { file, .. }) => file,
+            other => panic!("{other:?}"),
+        };
+        s.handle(er(Request::Read { file, offset: 0, len: 10, view: None, dst_base: 0 }, 2));
+        match c.recv().unwrap().body {
+            Body::Resp(Response::ReadPlanned { total }) => assert_eq!(total, 0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn open_missing_without_create_errors() {
+        let (w, mut s) = one_server();
+        let c = w.join(Role::Client);
+        s.handle(Msg {
+            src: c.rank,
+            client: c.rank,
+            req_id: 1,
+            class: MsgClass::ER,
+            body: Body::Req(Request::Open { name: "nope".into(), mode: OpenMode::rdonly() }),
+        });
+        match c.recv().unwrap().body {
+            Body::Resp(Response::Error { msg }) => assert!(msg.contains("no such file")),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,1188 @@
+//! ViMPIOS — the MPI-IO interface on top of the ViPIOS client API
+//! (Chapter 6).
+//!
+//! The centrepiece is the paper's §6.3.3 machinery: MPI derived
+//! datatypes ([`Datatype`]) are mapped by [`get_view_pattern`] onto the
+//! ViPIOS [`AccessDesc`] — including the paper's exact stride/offset
+//! arithmetic (`stride = mpi_stride_bytes - blocklen*extent`, indexed
+//! gaps relative to the previous block end) — and installed as file
+//! views. Offsets in data-access routines are counted in **etype
+//! units**, seeks in view-relative etypes, exactly as MPI-IO specifies.
+//!
+//! Like the paper's ViMPIOS we implement the MPI-2 I/O chapter minus
+//! shared file pointers and split collectives; additionally the
+//! `subarray`/`darray` constructors of §6.2 ("useful for accessing
+//! arrays stored in files") are provided. Collective calls
+//! (`*_all`) synchronise a [`ClientGroup`] (the communicator).
+
+use std::sync::{Arc, Barrier};
+
+use anyhow::{bail, Result};
+
+use crate::access::{AccessDesc, BasicBlock};
+use crate::client::{Client, Op, OpResult, Vfh};
+use crate::msg::OpenMode;
+
+// ------------------------------------------------------------- datatypes
+
+/// MPI basic datatypes (the subset the paper's `convert_datatype`
+/// handles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Basic {
+    Byte,
+    Char,
+    Short,
+    Int,
+    Long,
+    Float,
+    Double,
+}
+
+impl Basic {
+    /// `sizeof` — the paper's `convert_datatype` multiplier.
+    pub fn extent(self) -> u64 {
+        match self {
+            Basic::Byte | Basic::Char => 1,
+            Basic::Short => 2,
+            Basic::Int | Basic::Float => 4,
+            Basic::Long | Basic::Double => 8,
+        }
+    }
+}
+
+/// MPI derived datatypes (§6.1.5) as a tree, mirroring `MPIR_DATATYPE`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Datatype {
+    Basic(Basic),
+    /// `MPI_Type_contiguous(count, old)`.
+    Contiguous { count: u32, old: Box<Datatype> },
+    /// `MPI_Type_vector(count, blocklen, stride_in_oldtypes, old)`.
+    Vector { count: u32, blocklen: u32, stride: u32, old: Box<Datatype> },
+    /// `MPI_Type_hvector` — stride in bytes.
+    Hvector { count: u32, blocklen: u32, stride_bytes: i64, old: Box<Datatype> },
+    /// `MPI_Type_indexed` — displacements in oldtype multiples.
+    Indexed { blocklens: Vec<u32>, disps: Vec<u32>, old: Box<Datatype> },
+    /// `MPI_Type_hindexed` — displacements in bytes.
+    Hindexed { blocklens: Vec<u32>, disps: Vec<i64>, old: Box<Datatype> },
+    /// `MPI_Type_struct` — per-block oldtypes, byte displacements.
+    Struct { blocklens: Vec<u32>, disps: Vec<i64>, olds: Vec<Datatype> },
+    /// `MPI_Type_create_resized` — override the extent (the LB/UB
+    /// markers MPI's subarray/darray use so the tiled filetype advances
+    /// by the whole array, not by the last selected byte).
+    Resized { old: Box<Datatype>, extent_bytes: u64 },
+}
+
+impl Datatype {
+    pub fn contiguous(count: u32, old: Datatype) -> Self {
+        Datatype::Contiguous { count, old: Box::new(old) }
+    }
+
+    pub fn vector(count: u32, blocklen: u32, stride: u32, old: Datatype) -> Self {
+        Datatype::Vector { count, blocklen, stride, old: Box::new(old) }
+    }
+
+    /// `MPI_Type_create_subarray` (§6.3.6 "advanced derived datatypes"),
+    /// C order, for a 2-D array of `old` elements: the `(rows, cols)`
+    /// subarray at `(start_r, start_c)` of an `(nr, nc)` array.
+    pub fn subarray2(
+        (nr, nc): (u32, u32),
+        (rows, cols): (u32, u32),
+        (start_r, start_c): (u32, u32),
+        old: Datatype,
+    ) -> Result<Self> {
+        if start_r + rows > nr || start_c + cols > nc {
+            bail!("subarray out of bounds");
+        }
+        // rows x (cols contiguous elements), row pitch = nc elements;
+        // the leading displacement selects the start corner.
+        let disp = start_r * nc + start_c;
+        let full = nr as u64 * nc as u64 * old.extent();
+        Ok(Datatype::Resized {
+            old: Box::new(Datatype::Indexed {
+                blocklens: vec![cols; rows as usize],
+                disps: (0..rows).map(|r| disp + r * nc).collect(),
+                old: Box::new(old),
+            }),
+            extent_bytes: full,
+        })
+    }
+
+    /// `MPI_Type_create_darray` for the common 1-D BLOCK case: the piece
+    /// of a `gsize`-element array owned by `rank` of `nprocs`.
+    pub fn darray_block1(gsize: u32, rank: u32, nprocs: u32, old: Datatype) -> Result<Self> {
+        if nprocs == 0 || rank >= nprocs {
+            bail!("bad darray rank {rank}/{nprocs}");
+        }
+        let part = gsize.div_ceil(nprocs);
+        let start = (rank * part).min(gsize);
+        let len = part.min(gsize - start);
+        let full = gsize as u64 * old.extent();
+        Ok(Datatype::Resized {
+            old: Box::new(Datatype::Hindexed {
+                blocklens: vec![len],
+                disps: vec![start as i64 * old.extent() as i64],
+                old: Box::new(old),
+            }),
+            extent_bytes: full,
+        })
+    }
+
+    /// `MPI_Type_create_darray`, 1-D CYCLIC(k).
+    pub fn darray_cyclic1(
+        gsize: u32,
+        k: u32,
+        rank: u32,
+        nprocs: u32,
+        old: Datatype,
+    ) -> Result<Self> {
+        if nprocs == 0 || rank >= nprocs || k == 0 {
+            bail!("bad darray args");
+        }
+        let mut blocklens = Vec::new();
+        let mut disps = Vec::new();
+        let mut start = rank * k;
+        while start < gsize {
+            blocklens.push(k.min(gsize - start));
+            disps.push(start);
+            start += nprocs * k;
+        }
+        let full = gsize as u64 * old.extent();
+        Ok(Datatype::Resized {
+            old: Box::new(Datatype::Indexed { blocklens, disps, old: Box::new(old) }),
+            extent_bytes: full,
+        })
+    }
+
+    /// Total bytes of data selected by one instance.
+    pub fn size(&self) -> u64 {
+        match self {
+            Datatype::Basic(b) => b.extent(),
+            Datatype::Contiguous { count, old } => *count as u64 * old.size(),
+            Datatype::Vector { count, blocklen, old, .. }
+            | Datatype::Hvector { count, blocklen, old, .. } => {
+                *count as u64 * *blocklen as u64 * old.size()
+            }
+            Datatype::Indexed { blocklens, old, .. } => {
+                blocklens.iter().map(|&b| b as u64).sum::<u64>() * old.size()
+            }
+            Datatype::Hindexed { blocklens, old, .. } => {
+                blocklens.iter().map(|&b| b as u64).sum::<u64>() * old.size()
+            }
+            Datatype::Struct { blocklens, olds, .. } => blocklens
+                .iter()
+                .zip(olds)
+                .map(|(&b, o)| b as u64 * o.size())
+                .sum(),
+            Datatype::Resized { old, .. } => old.size(),
+        }
+    }
+
+    /// Extent in bytes (span from first to last byte, MPI semantics for
+    /// types without LB/UB markers).
+    pub fn extent(&self) -> u64 {
+        match self {
+            Datatype::Basic(b) => b.extent(),
+            Datatype::Contiguous { count, old } => *count as u64 * old.extent(),
+            Datatype::Vector { count, blocklen, stride, old } => {
+                if *count == 0 {
+                    0
+                } else {
+                    ((*count as u64 - 1) * *stride as u64 + *blocklen as u64)
+                        * old.extent()
+                }
+            }
+            Datatype::Hvector { count, blocklen, stride_bytes, old } => {
+                if *count == 0 {
+                    0
+                } else {
+                    (*count as u64 - 1) * (*stride_bytes).unsigned_abs()
+                        + *blocklen as u64 * old.extent()
+                }
+            }
+            Datatype::Indexed { blocklens, disps, old } => blocklens
+                .iter()
+                .zip(disps)
+                .map(|(&b, &d)| (d as u64 + b as u64) * old.extent())
+                .max()
+                .unwrap_or(0),
+            Datatype::Hindexed { blocklens, disps, old } => blocklens
+                .iter()
+                .zip(disps)
+                .map(|(&b, &d)| d as u64 + b as u64 * old.extent())
+                .max()
+                .unwrap_or(0),
+            Datatype::Struct { blocklens, disps, olds } => blocklens
+                .iter()
+                .zip(disps)
+                .zip(olds)
+                .map(|((&b, &d), o)| d as u64 + b as u64 * o.extent())
+                .max()
+                .unwrap_or(0),
+            Datatype::Resized { extent_bytes, .. } => *extent_bytes,
+        }
+    }
+
+    /// The elementary (leaf) datatype — the paper's `get_oldtype`
+    /// (§6.3.3), used to verify etype/filetype compatibility.
+    pub fn leaf(&self) -> Basic {
+        match self {
+            Datatype::Basic(b) => *b,
+            Datatype::Contiguous { old, .. }
+            | Datatype::Vector { old, .. }
+            | Datatype::Hvector { old, .. }
+            | Datatype::Indexed { old, .. }
+            | Datatype::Hindexed { old, .. }
+            | Datatype::Resized { old, .. } => old.leaf(),
+            Datatype::Struct { olds, .. } => {
+                olds.first().map(|o| o.leaf()).unwrap_or(Basic::Byte)
+            }
+        }
+    }
+
+    /// Is the selection gap-free? (paper: `is_contig` short-circuit)
+    pub fn is_contiguous(&self) -> bool {
+        self.size() == self.extent()
+    }
+}
+
+/// The paper's `get_view_pattern` (§6.3.3): map a derived datatype onto
+/// the ViPIOS `Access_Desc`, reproducing its arithmetic —
+/// `stride = mpi_stride_bytes - blocklen * old_extent`, indexed offsets
+/// relative to the previous block's end.
+pub fn get_view_pattern(dt: &Datatype) -> AccessDesc {
+    match dt {
+        Datatype::Basic(b) => AccessDesc::contiguous(b.extent() as u32),
+        Datatype::Contiguous { count, old } => {
+            if old.is_contiguous() {
+                AccessDesc::contiguous((*count as u64 * old.size()) as u32)
+            } else {
+                AccessDesc {
+                    skip: 0,
+                    blocks: vec![BasicBlock {
+                        offset: 0,
+                        repeat: 1,
+                        count: *count,
+                        stride: 0,
+                        subtype: Some(Box::new(get_view_pattern(old))),
+                    }],
+                }
+            }
+        }
+        Datatype::Vector { count, blocklen, stride, old } => {
+            let hv = Datatype::Hvector {
+                count: *count,
+                blocklen: *blocklen,
+                stride_bytes: *stride as i64 * old.extent() as i64,
+                old: old.clone(),
+            };
+            get_view_pattern(&hv)
+        }
+        Datatype::Hvector { count, blocklen, stride_bytes, old } => {
+            let blk = *blocklen as i64 * old.extent() as i64;
+            if old.is_contiguous() {
+                AccessDesc {
+                    skip: 0,
+                    blocks: vec![BasicBlock {
+                        offset: 0,
+                        repeat: *count,
+                        count: blk as u32,
+                        stride: stride_bytes - blk,
+                        subtype: None,
+                    }],
+                }
+            } else {
+                AccessDesc {
+                    skip: 0,
+                    blocks: vec![BasicBlock {
+                        offset: 0,
+                        repeat: *count,
+                        count: *blocklen,
+                        stride: stride_bytes - blk,
+                        subtype: Some(Box::new(get_view_pattern(old))),
+                    }],
+                }
+            }
+        }
+        Datatype::Indexed { blocklens, disps, old } => {
+            let hx = Datatype::Hindexed {
+                blocklens: blocklens.clone(),
+                disps: disps.iter().map(|&d| d as i64 * old.extent() as i64).collect(),
+                old: old.clone(),
+            };
+            get_view_pattern(&hx)
+        }
+        Datatype::Hindexed { blocklens, disps, old } => {
+            let ext = old.extent() as i64;
+            let mut blocks = Vec::new();
+            let mut prev_end = 0i64;
+            for (&bl, &d) in blocklens.iter().zip(disps) {
+                // paper: offset relative to previous block's end
+                let gap = d - prev_end;
+                if old.is_contiguous() {
+                    blocks.push(BasicBlock {
+                        offset: gap,
+                        repeat: 1,
+                        count: (bl as i64 * ext) as u32,
+                        stride: 0,
+                        subtype: None,
+                    });
+                } else {
+                    blocks.push(BasicBlock {
+                        offset: gap,
+                        repeat: 1,
+                        count: bl,
+                        stride: 0,
+                        subtype: Some(Box::new(get_view_pattern(old))),
+                    });
+                }
+                prev_end = d + bl as i64 * ext;
+            }
+            AccessDesc { skip: 0, blocks }
+        }
+        Datatype::Struct { blocklens, disps, olds } => {
+            let mut blocks = Vec::new();
+            let mut prev_end = 0i64;
+            for ((&bl, &d), old) in blocklens.iter().zip(disps).zip(olds) {
+                let ext = old.extent() as i64;
+                let gap = d - prev_end;
+                if old.is_contiguous() {
+                    blocks.push(BasicBlock {
+                        offset: gap,
+                        repeat: 1,
+                        count: (bl as i64 * ext) as u32,
+                        stride: 0,
+                        subtype: None,
+                    });
+                } else {
+                    blocks.push(BasicBlock {
+                        offset: gap,
+                        repeat: 1,
+                        count: bl,
+                        stride: 0,
+                        subtype: Some(Box::new(get_view_pattern(old))),
+                    });
+                }
+                prev_end = d + bl as i64 * ext;
+            }
+            AccessDesc { skip: 0, blocks }
+        }
+        Datatype::Resized { old, extent_bytes } => {
+            let mut d = get_view_pattern(old);
+            // pad (or shrink) the pass extent to the declared one
+            d.skip += *extent_bytes as i64 - old.extent() as i64;
+            d
+        }
+    }
+}
+
+// ------------------------------------------------------------ file layer
+
+/// MPI-IO open modes (§6.2.4).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Amode {
+    pub rdonly: bool,
+    pub rdwr: bool,
+    pub wronly: bool,
+    pub create: bool,
+    pub excl: bool,
+    pub delete_on_close: bool,
+}
+
+impl Amode {
+    pub fn rdwr_create() -> Self {
+        Self { rdwr: true, create: true, ..Self::default() }
+    }
+
+    pub fn rdonly() -> Self {
+        Self { rdonly: true, ..Self::default() }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let prim = [self.rdonly, self.rdwr, self.wronly];
+        if prim.iter().filter(|&&b| b).count() != 1 {
+            bail!("exactly one of RDONLY/RDWR/WRONLY required");
+        }
+        if self.rdonly && (self.create || self.excl) {
+            bail!("CREATE/EXCL with RDONLY is erroneous (MPI-2 §9.2.1)");
+        }
+        Ok(())
+    }
+
+    fn to_open_mode(self) -> OpenMode {
+        OpenMode {
+            read: self.rdonly || self.rdwr,
+            write: self.wronly || self.rdwr,
+            create: self.create,
+            exclusive: self.excl,
+        }
+    }
+}
+
+/// The current view: etype + filetype (displacement lives server-side).
+#[derive(Debug, Clone)]
+struct MpiView {
+    etype: Datatype,
+    filetype: Datatype,
+}
+
+/// An MPI-IO file handle (`MPI_File`).
+pub struct MpiFile {
+    vfh: Vfh,
+    name: String,
+    amode: Amode,
+    view: Option<MpiView>,
+    atomic: bool,
+    /// At most one active split collective per handle (MPI-2 §9.4.5).
+    split_active: bool,
+}
+
+/// `MPIO_Status`: bytes transferred (the paper extends MPI_Status this
+/// way so status can report access sizes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Status {
+    pub bytes: u64,
+}
+
+impl Status {
+    /// `MPI_Get_count` in `dt` units.
+    pub fn count(&self, dt: &Datatype) -> u64 {
+        self.bytes / dt.size().max(1)
+    }
+}
+
+/// Pending non-blocking request (the paper's `MPI_File_Request`).
+pub struct MpiRequest {
+    op: Op,
+}
+
+impl MpiFile {
+    /// `MPI_File_open` (per process; collective agreement is handled by
+    /// [`open_all`]).
+    pub fn open(client: &mut Client, name: &str, amode: Amode) -> Result<Self> {
+        amode.validate()?;
+        let vfh = client.open(name, amode.to_open_mode())?;
+        Ok(Self {
+            vfh,
+            name: name.to_string(),
+            amode,
+            view: None,
+            atomic: false,
+            split_active: false,
+        })
+    }
+
+    /// `MPI_File_close` (handles DELETE_ON_CLOSE).
+    pub fn close(self, client: &mut Client) -> Result<()> {
+        client.close(self.vfh)?;
+        if self.amode.delete_on_close {
+            client.remove(&self.name)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_File_delete`.
+    pub fn delete(client: &mut Client, name: &str) -> Result<()> {
+        client.remove(name)
+    }
+
+    /// `MPI_File_set_view(disp, etype, filetype)`: checks etype/filetype
+    /// leaf compatibility (the paper's `get_oldtype` verification), maps
+    /// the filetype via [`get_view_pattern`], installs it, resets the
+    /// individual file pointer.
+    pub fn set_view(
+        &mut self,
+        client: &mut Client,
+        disp: u64,
+        etype: Datatype,
+        filetype: Datatype,
+    ) -> Result<()> {
+        if etype.leaf() != filetype.leaf() {
+            bail!(
+                "etype {:?} incompatible with filetype leaf {:?}",
+                etype.leaf(),
+                filetype.leaf()
+            );
+        }
+        if filetype.size() % etype.size() != 0 {
+            bail!("filetype must hold a whole number of etypes");
+        }
+        let desc = get_view_pattern(&filetype);
+        client.set_view(self.vfh, disp, desc)?;
+        self.view = Some(MpiView { etype, filetype });
+        Ok(())
+    }
+
+    /// `MPI_File_get_view` etype/filetype.
+    pub fn view(&self) -> Option<(&Datatype, &Datatype)> {
+        self.view.as_ref().map(|v| (&v.etype, &v.filetype))
+    }
+
+    fn unit(&self) -> u64 {
+        self.view.as_ref().map(|v| v.etype.size()).unwrap_or(1).max(1)
+    }
+
+    // -------------------------------------------------- data access
+
+    /// `MPI_File_read`: `count` elements of `dt` at the individual file
+    /// pointer.
+    pub fn read(
+        &mut self,
+        client: &mut Client,
+        buf: &mut [u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let bytes = count * dt.size();
+        let need = bytes.min(buf.len() as u64) as usize;
+        let n = client.read(self.vfh, &mut buf[..need])?;
+        Ok(Status { bytes: n as u64 })
+    }
+
+    /// `MPI_File_read_at`: explicit offset in etype units; does not move
+    /// the individual file pointer.
+    pub fn read_at(
+        &mut self,
+        client: &mut Client,
+        offset: u64,
+        buf: &mut [u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let bytes = count * dt.size();
+        let need = bytes.min(buf.len() as u64) as usize;
+        let n = client.read_at(self.vfh, offset * self.unit(), &mut buf[..need])?;
+        Ok(Status { bytes: n as u64 })
+    }
+
+    /// `MPI_File_write`.
+    pub fn write(
+        &mut self,
+        client: &mut Client,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let n = client.write(self.vfh, &buf[..bytes])?;
+        if self.atomic {
+            client.sync(self.vfh)?;
+        }
+        Ok(Status { bytes: n })
+    }
+
+    /// `MPI_File_write_at`.
+    pub fn write_at(
+        &mut self,
+        client: &mut Client,
+        offset: u64,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let n = client.write_at(self.vfh, offset * self.unit(), &buf[..bytes])?;
+        if self.atomic {
+            client.sync(self.vfh)?;
+        }
+        Ok(Status { bytes: n })
+    }
+
+    /// `MPI_File_iread` (non-blocking; complete with [`MpiFile::wait`] =
+    /// the paper's `MPI_File_wait`).
+    pub fn iread(
+        &mut self,
+        client: &mut Client,
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<MpiRequest> {
+        let op = client.iread(self.vfh, count * dt.size())?;
+        Ok(MpiRequest { op })
+    }
+
+    /// `MPI_File_iwrite`.
+    pub fn iwrite(
+        &mut self,
+        client: &mut Client,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<MpiRequest> {
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let op = client.iwrite(self.vfh, &buf[..bytes])?;
+        Ok(MpiRequest { op })
+    }
+
+    /// `MPI_File_wait`: complete a request; read data is copied to `buf`.
+    pub fn wait(
+        &mut self,
+        client: &mut Client,
+        req: MpiRequest,
+        buf: Option<&mut [u8]>,
+    ) -> Result<Status> {
+        match client.wait(req.op)? {
+            OpResult::Read(data) => {
+                let n = data.len();
+                if let Some(buf) = buf {
+                    buf[..n].copy_from_slice(&data);
+                }
+                Ok(Status { bytes: n as u64 })
+            }
+            OpResult::Written(n) => Ok(Status { bytes: n }),
+            other => bail!("unexpected completion {other:?}"),
+        }
+    }
+
+    /// The paper's `MPI_File_test`.
+    pub fn test(&mut self, client: &mut Client, req: &MpiRequest) -> Result<bool> {
+        client.test(req.op)
+    }
+
+    /// `MPI_File_seek` in etype units (SET/CUR/END).
+    pub fn seek(&mut self, client: &mut Client, offset: i64, whence: Whence) -> Result<()> {
+        let unit = self.unit();
+        let cur = client.tell(self.vfh)?;
+        let base = match whence {
+            Whence::Set => 0i64,
+            Whence::Cur => (cur / unit) as i64,
+            Whence::End => (client.get_size(self.vfh)? / unit) as i64,
+        };
+        let target = base + offset;
+        if target < 0 {
+            bail!("seek before start of view");
+        }
+        client.seek(self.vfh, target as u64 * unit)
+    }
+
+    /// `MPI_File_get_position` (etype units, view-relative).
+    pub fn position(&self, client: &Client) -> Result<u64> {
+        Ok(client.tell(self.vfh)? / self.unit())
+    }
+
+    /// `MPI_File_get_size` / `set_size` / `preallocate` (§6.2.4).
+    pub fn size(&self, client: &mut Client) -> Result<u64> {
+        client.get_size(self.vfh)
+    }
+
+    pub fn set_size(&mut self, client: &mut Client, size: u64) -> Result<()> {
+        client.set_size(self.vfh, size)
+    }
+
+    /// Like set_size but never truncates.
+    pub fn preallocate(&mut self, client: &mut Client, size: u64) -> Result<()> {
+        if client.get_size(self.vfh)? < size {
+            client.set_size(self.vfh, size)?;
+        }
+        Ok(())
+    }
+
+    /// `MPI_File_get_amode`.
+    pub fn amode(&self) -> Amode {
+        self.amode
+    }
+
+    /// `MPI_File_sync`.
+    pub fn sync(&mut self, client: &mut Client) -> Result<()> {
+        client.sync(self.vfh)
+    }
+
+    /// `MPI_File_set_atomicity` / `get_atomicity`.
+    pub fn set_atomicity(&mut self, atomic: bool) {
+        self.atomic = atomic;
+    }
+
+    pub fn atomicity(&self) -> bool {
+        self.atomic
+    }
+
+    /// Underlying VI handle (for hints and stats).
+    pub fn vfh(&self) -> Vfh {
+        self.vfh
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Whence {
+    Set,
+    Cur,
+    End,
+}
+
+// ----------------------------------------------------------- collectives
+
+/// A communicator of SPMD client processes for collective I/O. Each
+/// participant holds one [`GroupMember`]; collective calls rendezvous on
+/// a barrier after the access (the paper implements `*_all` as the
+/// non-collective call plus a closing barrier, §6.3.4).
+pub struct ClientGroup {
+    size: usize,
+    barrier: Arc<Barrier>,
+}
+
+impl ClientGroup {
+    pub fn new(size: usize) -> Self {
+        Self { size, barrier: Arc::new(Barrier::new(size)) }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn member(&self, rank: usize) -> GroupMember {
+        assert!(rank < self.size);
+        GroupMember { rank, size: self.size, barrier: self.barrier.clone() }
+    }
+}
+
+/// One process's membership in a [`ClientGroup`].
+#[derive(Clone)]
+pub struct GroupMember {
+    pub rank: usize,
+    pub size: usize,
+    barrier: Arc<Barrier>,
+}
+
+impl GroupMember {
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// `MPI_File_read_all`.
+    pub fn read_all(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        buf: &mut [u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let st = file.read(client, buf, count, dt)?;
+        self.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_File_write_all`.
+    pub fn write_all(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let st = file.write(client, buf, count, dt)?;
+        self.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_File_read_at_all`.
+    pub fn read_at_all(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        offset: u64,
+        buf: &mut [u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let st = file.read_at(client, offset, buf, count, dt)?;
+        self.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_File_write_at_all`.
+    pub fn write_at_all(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        offset: u64,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<Status> {
+        let st = file.write_at(client, offset, buf, count, dt)?;
+        self.barrier();
+        Ok(st)
+    }
+}
+
+/// An in-flight split collective (`MPI_File_*_all_begin` token).
+///
+/// The paper's ViMPIOS left split collectives unimplemented; they are
+/// provided here as the natural extension: `begin` issues the immediate
+/// operation, `end` completes it and synchronises the group.
+pub struct SplitColl {
+    req: MpiRequest,
+}
+
+impl GroupMember {
+    /// `MPI_File_read_all_begin`.
+    pub fn read_all_begin(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<SplitColl> {
+        if file.split_active {
+            bail!("a split collective is already active on this handle");
+        }
+        let req = file.iread(client, count, dt)?;
+        file.split_active = true;
+        Ok(SplitColl { req })
+    }
+
+    /// `MPI_File_read_all_end`.
+    pub fn read_all_end(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        sc: SplitColl,
+        buf: &mut [u8],
+    ) -> Result<Status> {
+        let st = file.wait(client, sc.req, Some(buf))?;
+        file.split_active = false;
+        self.barrier();
+        Ok(st)
+    }
+
+    /// `MPI_File_write_all_begin`.
+    pub fn write_all_begin(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        buf: &[u8],
+        count: u64,
+        dt: &Datatype,
+    ) -> Result<SplitColl> {
+        if file.split_active {
+            bail!("a split collective is already active on this handle");
+        }
+        let req = file.iwrite(client, buf, count, dt)?;
+        file.split_active = true;
+        Ok(SplitColl { req })
+    }
+
+    /// `MPI_File_write_all_end`.
+    pub fn write_all_end(
+        &self,
+        file: &mut MpiFile,
+        client: &mut Client,
+        sc: SplitColl,
+    ) -> Result<Status> {
+        let st = file.wait(client, sc.req, None)?;
+        file.split_active = false;
+        self.barrier();
+        Ok(st)
+    }
+}
+
+/// Collective open: all members must pass the same name/amode (enforced
+/// by fanning out from a single call site).
+pub fn open_all(clients: &mut [Client], name: &str, amode: Amode) -> Result<Vec<MpiFile>> {
+    clients
+        .iter_mut()
+        .map(|c| MpiFile::open(c, name, amode))
+        .collect()
+}
+
+// ---------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modes::ServerPool;
+    use crate::server::ServerConfig;
+
+    fn int() -> Datatype {
+        Datatype::Basic(Basic::Int)
+    }
+
+    #[test]
+    fn datatype_size_extent_leaf() {
+        let v = Datatype::vector(2, 5, 10, int());
+        assert_eq!(v.size(), 40);
+        assert_eq!(v.extent(), (10 + 5) * 4);
+        assert_eq!(v.leaf(), Basic::Int);
+        assert!(!v.is_contiguous());
+        let c = Datatype::contiguous(25, int());
+        assert_eq!(c.size(), 100);
+        assert!(c.is_contiguous());
+    }
+
+    #[test]
+    fn view_pattern_vector_matches_paper_example() {
+        // paper §6.3.3: MPI_Type_hvector(2,5,40,MPI_INT) ->
+        // repeat=2, count=20 bytes, stride=40-20=20
+        let hv = Datatype::Hvector {
+            count: 2,
+            blocklen: 5,
+            stride_bytes: 40,
+            old: Box::new(int()),
+        };
+        let d = get_view_pattern(&hv);
+        assert_eq!(d.blocks.len(), 1);
+        let b = &d.blocks[0];
+        assert_eq!((b.repeat, b.count, b.stride), (2, 20, 20));
+        assert_eq!(d.data_len(), 40);
+    }
+
+    #[test]
+    fn view_pattern_struct_matches_paper_offsets() {
+        // paper §6.3.3 struct example: INT x3 @0, DOUBLE x2 @20, CHAR x16 @60
+        // offsets: 0, 20-12-0=8, 60-16-20=24
+        let st = Datatype::Struct {
+            blocklens: vec![3, 2, 16],
+            disps: vec![0, 20, 60],
+            olds: vec![
+                int(),
+                Datatype::Basic(Basic::Double),
+                Datatype::Basic(Basic::Char),
+            ],
+        };
+        let d = get_view_pattern(&st);
+        let offs: Vec<i64> = d.blocks.iter().map(|b| b.offset).collect();
+        assert_eq!(offs, vec![0, 8, 24]);
+        let counts: Vec<u32> = d.blocks.iter().map(|b| b.count).collect();
+        assert_eq!(counts, vec![12, 16, 16]);
+    }
+
+    #[test]
+    fn view_pattern_indexed_lower_triangle() {
+        // paper Fig 6.2: 5x5 lower triangle, blocklens i+1 at disps 5i
+        let ix = Datatype::Indexed {
+            blocklens: (1..=5).collect(),
+            disps: (0..5).map(|i| i * 5).collect(),
+            old: Box::new(int()),
+        };
+        let d = get_view_pattern(&ix);
+        assert_eq!(d.data_len(), (1 + 2 + 3 + 4 + 5) * 4);
+        let ext = d.resolve(0, 0, 12);
+        assert_eq!(ext, vec![(0, 4), (20, 8)]);
+    }
+
+    #[test]
+    fn subarray2_selects_rows() {
+        // 4x6 array of ints, 2x3 subarray at (1,2)
+        let s = Datatype::subarray2((4, 6), (2, 3), (1, 2), int()).unwrap();
+        let d = get_view_pattern(&s);
+        assert_eq!(d.data_len(), 2 * 3 * 4);
+        let ext = d.resolve(0, 0, 24);
+        // row 1: elements 8..11 -> bytes 32..44; row 2: 14..17 -> 56..68
+        assert_eq!(ext, vec![(32, 12), (56, 12)]);
+        assert!(Datatype::subarray2((4, 6), (4, 4), (1, 2), int()).is_err());
+    }
+
+    #[test]
+    fn darray_block_and_cyclic() {
+        let b = Datatype::darray_block1(10, 1, 2, int()).unwrap();
+        let d = get_view_pattern(&b);
+        assert_eq!(d.resolve(0, 0, 20), vec![(20, 20)]);
+        let c = Datatype::darray_cyclic1(8, 2, 1, 2, int()).unwrap();
+        let dc = get_view_pattern(&c);
+        // rank1 owns elements 2,3 and 6,7 -> bytes 8..16, 24..32
+        assert_eq!(dc.resolve(0, 0, 16), vec![(8, 8), (24, 8)]);
+        assert!(Datatype::darray_block1(10, 3, 2, int()).is_err());
+    }
+
+    #[test]
+    fn amode_validation() {
+        assert!(Amode::rdwr_create().validate().is_ok());
+        assert!(Amode::default().validate().is_err());
+        let bad = Amode { rdonly: true, create: true, ..Amode::default() };
+        assert!(bad.validate().is_err());
+        let two = Amode { rdonly: true, rdwr: true, ..Amode::default() };
+        assert!(two.validate().is_err());
+    }
+
+    #[test]
+    fn set_view_rejects_leaf_mismatch() {
+        let pool = ServerPool::start(1, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "v", Amode::rdwr_create()).unwrap();
+        let ft = Datatype::vector(2, 1, 2, Datatype::Basic(Basic::Double));
+        assert!(f.set_view(&mut c, 0, int(), ft).is_err());
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn strided_view_read_roundtrip() {
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "w", Amode::rdwr_create()).unwrap();
+        // file = 24 ints 0..24
+        let raw: Vec<u8> = (0..24u32).flat_map(|v| v.to_le_bytes()).collect();
+        f.write(&mut c, &raw, 24, &int()).unwrap();
+
+        // view: every 3rd int (paper Fig 6.4)
+        let ft = Datatype::vector(1, 1, 3, int());
+        f.set_view(&mut c, 0, int(), ft).unwrap();
+        let mut buf = vec![0u8; 8 * 4];
+        let st = f.read(&mut c, &mut buf, 8, &int()).unwrap();
+        assert_eq!(st.bytes, 32);
+        let got: Vec<u32> = buf
+            .chunks(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        assert_eq!(got, vec![0, 3, 6, 9, 12, 15, 18, 21]);
+        f.close(&mut c).unwrap();
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn three_process_complementary_views() {
+        // paper Fig 6.5: processes partition the file by stride-3 offsets
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        let mut c0 = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c0, "part", Amode::rdwr_create()).unwrap();
+        let raw: Vec<u8> = (0..30u32).flat_map(|v| v.to_le_bytes()).collect();
+        f.write(&mut c0, &raw, 30, &int()).unwrap();
+        f.sync(&mut c0).unwrap();
+
+        let mut seen = Vec::new();
+        for p in 0..3u64 {
+            let mut c = pool.client().unwrap();
+            let mut fp = MpiFile::open(&mut c, "part", Amode::rdonly()).unwrap();
+            let ft = Datatype::vector(1, 1, 3, int());
+            fp.set_view(&mut c, p * 4, int(), ft).unwrap();
+            let mut buf = vec![0u8; 40];
+            fp.read(&mut c, &mut buf, 10, &int()).unwrap();
+            seen.extend(
+                buf.chunks(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())),
+            );
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..30).collect::<Vec<u32>>());
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn explicit_offset_does_not_move_pointer() {
+        // paper §6.2.4 example: read_at must not update the pointer
+        let pool = ServerPool::start(1, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "fp", Amode::rdwr_create()).unwrap();
+        let raw: Vec<u8> = (0..100u32).flat_map(|v| v.to_le_bytes()).collect();
+        f.write(&mut c, &raw, 100, &int()).unwrap();
+        f.seek(&mut c, 0, Whence::Set).unwrap();
+        f.set_view(&mut c, 0, int(), int()).unwrap();
+
+        let mut b1 = vec![0u8; 40];
+        f.read(&mut c, &mut b1, 10, &int()).unwrap(); // pos -> 10
+        let mut b3 = vec![0u8; 40];
+        f.read_at(&mut c, 50, &mut b3, 10, &int()).unwrap(); // no move
+        assert_eq!(f.position(&c).unwrap(), 10);
+        let mut b4 = vec![0u8; 40];
+        f.read(&mut c, &mut b4, 10, &int()).unwrap(); // continues at 10
+        let first = |b: &[u8]| u32::from_le_bytes(b[..4].try_into().unwrap());
+        assert_eq!(first(&b1), 0);
+        assert_eq!(first(&b3), 50);
+        assert_eq!(first(&b4), 10);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_iread_iwrite() {
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "nb", Amode::rdwr_create()).unwrap();
+        let data = vec![0xAB; 4096];
+        let wr = f.iwrite(&mut c, &data, 1024, &int()).unwrap();
+        let st = f.wait(&mut c, wr, None).unwrap();
+        assert_eq!(st.bytes, 4096);
+        f.seek(&mut c, 0, Whence::Set).unwrap();
+        let rd = f.iread(&mut c, 1024, &int()).unwrap();
+        let mut buf = vec![0u8; 4096];
+        let st = f.wait(&mut c, rd, Some(&mut buf)).unwrap();
+        assert_eq!(st.bytes, 4096);
+        assert_eq!(buf, data);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn seek_whence_modes() {
+        let pool = ServerPool::start(1, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "sk", Amode::rdwr_create()).unwrap();
+        let raw = vec![0u8; 400];
+        f.write(&mut c, &raw, 100, &int()).unwrap();
+        f.set_view(&mut c, 0, int(), int()).unwrap();
+        f.seek(&mut c, 10, Whence::Set).unwrap();
+        assert_eq!(f.position(&c).unwrap(), 10);
+        f.seek(&mut c, 5, Whence::Cur).unwrap();
+        assert_eq!(f.position(&c).unwrap(), 15);
+        f.seek(&mut c, -5, Whence::End).unwrap();
+        assert_eq!(f.position(&c).unwrap(), 95);
+        assert!(f.seek(&mut c, -1, Whence::Set).is_err());
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn set_size_and_preallocate() {
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let mut f = MpiFile::open(&mut c, "sz", Amode::rdwr_create()).unwrap();
+        f.write(&mut c, &[1u8; 100], 25, &int()).unwrap();
+        assert_eq!(f.size(&mut c).unwrap(), 100);
+        f.set_size(&mut c, 40).unwrap();
+        assert_eq!(f.size(&mut c).unwrap(), 40);
+        f.preallocate(&mut c, 20).unwrap(); // never truncates
+        assert_eq!(f.size(&mut c).unwrap(), 40);
+        f.preallocate(&mut c, 200).unwrap();
+        assert_eq!(f.size(&mut c).unwrap(), 200);
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn status_count() {
+        let st = Status { bytes: 40 };
+        assert_eq!(st.count(&int()), 10);
+        assert_eq!(st.count(&Datatype::Basic(Basic::Double)), 5);
+    }
+
+    #[test]
+    fn delete_on_close() {
+        let pool = ServerPool::start(1, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        let amode =
+            Amode { rdwr: true, create: true, delete_on_close: true, ..Amode::default() };
+        let mut f = MpiFile::open(&mut c, "tmp", amode).unwrap();
+        f.write(&mut c, &[1u8; 8], 2, &int()).unwrap();
+        f.close(&mut c).unwrap();
+        assert!(MpiFile::open(&mut c, "tmp", Amode::rdonly()).is_err());
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn collective_write_then_read_all() {
+        let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+        let group = ClientGroup::new(3);
+        let mut handles = Vec::new();
+        for rank in 0..3usize {
+            let member = group.member(rank);
+            let pool_world = pool.world().clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = crate::client::Client::connect(&pool_world).unwrap();
+                let mut f =
+                    MpiFile::open(&mut c, "coll", Amode::rdwr_create()).unwrap();
+                // each rank owns a BLOCK slice of 30 ints
+                let ft =
+                    Datatype::darray_block1(30, rank as u32, 3, int()).unwrap();
+                f.set_view(&mut c, 0, int(), ft).unwrap();
+                let mine: Vec<u8> = (0..10u32)
+                    .map(|i| rank as u32 * 10 + i)
+                    .flat_map(|v| v.to_le_bytes())
+                    .collect();
+                member.write_all(&mut f, &mut c, &mine, 10, &int()).unwrap();
+                member.barrier();
+                f.seek(&mut c, 0, Whence::Set).unwrap();
+                let mut buf = vec![0u8; 40];
+                member.read_all(&mut f, &mut c, &mut buf, 10, &int()).unwrap();
+                assert_eq!(buf, mine);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        pool.shutdown().unwrap();
+    }
+}

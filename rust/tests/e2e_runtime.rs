@@ -1,0 +1,178 @@
+//! End-to-end three-layer tests: blocks flow ViPIOS -> PJRT (AOT
+//! Pallas/JAX artifacts) -> ViPIOS, validated against in-memory oracles.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use vipios::modes::ServerPool;
+use vipios::ooc::{jacobi_sweep, jacobi_sweep_oracle, BlockedArray};
+use vipios::runtime::{Runtime, Tensor, BLOCK};
+use vipios::server::ServerConfig;
+use vipios::util::XorShift64;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("jacobi_step.hlo.txt").exists()
+}
+
+#[test]
+fn ooc_jacobi_matches_in_memory_oracle() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let nb = 2;
+    let edge = nb * BLOCK;
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+
+    // random initial field
+    let mut rng = XorShift64::new(42);
+    let mut field = vec![0f32; edge * edge];
+    for v in field.iter_mut() {
+        *v = (rng.below(1000) as f32) / 100.0;
+    }
+
+    // store as blocks
+    let src = BlockedArray::create(&mut c, "osrc", nb).unwrap();
+    let dst = BlockedArray::create(&mut c, "odst", nb).unwrap();
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
+            for r in 0..BLOCK {
+                for col in 0..BLOCK {
+                    t.data[r * BLOCK + col] =
+                        field[(bi * BLOCK + r) * edge + bj * BLOCK + col];
+                }
+            }
+            src.write_block(&mut c, bi, bj, &t).unwrap();
+        }
+    }
+
+    // one OOC sweep through the PJRT artifact
+    let stats = jacobi_sweep(&mut c, &mut rt, &src, &dst, true).unwrap();
+    assert_eq!(stats.blocks, nb * nb);
+
+    // oracle sweep in memory
+    let (want, res_want) = jacobi_sweep_oracle(&field, edge);
+
+    // compare every block
+    let mut max_err = 0f32;
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let t = dst.read_block(&mut c, bi, bj).unwrap();
+            for r in 0..BLOCK {
+                for col in 0..BLOCK {
+                    let got = t.data[r * BLOCK + col];
+                    let w = want[(bi * BLOCK + r) * edge + bj * BLOCK + col];
+                    max_err = max_err.max((got - w).abs());
+                }
+            }
+        }
+    }
+    assert!(max_err < 1e-4, "max err {max_err}");
+    // residual agrees with the oracle to float tolerance
+    let rel = (stats.residual_sumsq - res_want).abs() / res_want.max(1e-9);
+    assert!(rel < 1e-3, "residual {} vs oracle {}", stats.residual_sumsq, res_want);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn ooc_matmul_blocks_match_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // C = A @ B with 2x2 blocks of BLOCK^2, all through ViPIOS + PJRT
+    let nb = 2;
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+
+    let mut rng = XorShift64::new(7);
+    let mut rand_block = || {
+        let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
+        for v in t.data.iter_mut() {
+            *v = (rng.below(100) as f32 - 50.0) / 50.0;
+        }
+        t
+    };
+    let a = BlockedArray::create(&mut c, "ma", nb).unwrap();
+    let b = BlockedArray::create(&mut c, "mb", nb).unwrap();
+    let out = BlockedArray::create(&mut c, "mc", nb).unwrap();
+    let mut a_blocks = Vec::new();
+    let mut b_blocks = Vec::new();
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let ta = rand_block();
+            let tb = rand_block();
+            a.write_block(&mut c, bi, bj, &ta).unwrap();
+            b.write_block(&mut c, bi, bj, &tb).unwrap();
+            a_blocks.push(ta);
+            b_blocks.push(tb);
+        }
+    }
+
+    // OOC blocked matmul: C[i,j] = sum_k A[i,k] @ B[k,j]
+    for bi in 0..nb {
+        for bj in 0..nb {
+            let mut acc = Tensor::zeros(vec![BLOCK, BLOCK]);
+            for bk in 0..nb {
+                let ta = a.read_block(&mut c, bi, bk).unwrap();
+                let tb = b.read_block(&mut c, bk, bj).unwrap();
+                let r = rt.run("matmul_tile", &[ta, tb, acc]).unwrap();
+                acc = r.into_iter().next().unwrap();
+            }
+            out.write_block(&mut c, bi, bj, &acc).unwrap();
+        }
+    }
+
+    // spot-check one output block against a naive f32 matmul
+    let (bi, bj) = (1, 0);
+    let got = out.read_block(&mut c, bi, bj).unwrap();
+    // naive: row band bi of A times column band bj of B
+    let idx = |i: usize, j: usize| i * nb + j;
+    let mut want = vec![0f64; BLOCK * BLOCK];
+    for bk in 0..nb {
+        let ta = &a_blocks[idx(bi, bk)];
+        let tb = &b_blocks[idx(bk, bj)];
+        // sample a subset of entries (full naive matmul is slow)
+        for &(r, col) in &[(0usize, 0usize), (1, 5), (100, 200), (255, 255), (17, 93)] {
+            let mut s = 0f64;
+            for k in 0..BLOCK {
+                s += ta.data[r * BLOCK + k] as f64 * tb.data[k * BLOCK + col] as f64;
+            }
+            want[r * BLOCK + col] += s;
+        }
+    }
+    for &(r, col) in &[(0usize, 0usize), (1, 5), (100, 200), (255, 255), (17, 93)] {
+        let g = got.data[r * BLOCK + col] as f64;
+        let w = want[r * BLOCK + col];
+        assert!((g - w).abs() < 1e-2, "({r},{col}): {g} vs {w}");
+    }
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn block_reduce_checksum_through_vipios() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let arr = BlockedArray::create(&mut c, "ck", 1).unwrap();
+    let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
+    t.data.fill(0.5);
+    arr.write_block(&mut c, 0, 0, &t).unwrap();
+    let back = arr.read_block(&mut c, 0, 0).unwrap();
+    let out = rt.run("block_reduce", &[back]).unwrap();
+    let n = (BLOCK * BLOCK) as f32;
+    assert!((out[0].data[0] - 0.5 * n).abs() < 1.0);
+    assert!((out[0].data[1] - 0.25 * n).abs() < 1.0);
+    pool.shutdown().unwrap();
+}

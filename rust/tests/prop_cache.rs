@@ -1,0 +1,164 @@
+//! Property tests for the memory manager: a random stream of
+//! reads/writes/flushes/prefetches through the [`BufferCache`] must be
+//! indistinguishable from direct disk access, and flush must leave the
+//! disk byte-identical to the logical state.
+
+use std::sync::Arc;
+
+use vipios::disk::{Disk, MemDisk};
+use vipios::memory::{BufferCache, CacheConfig};
+use vipios::util::XorShift64;
+
+fn setup(page: usize, cap: u64, wb: bool) -> (Arc<dyn Disk>, BufferCache) {
+    (
+        Arc::new(MemDisk::new()) as Arc<dyn Disk>,
+        BufferCache::new(CacheConfig { page, capacity: cap, write_back: wb }),
+    )
+}
+
+#[test]
+fn random_ops_match_logical_oracle() {
+    let mut r = XorShift64::new(0xCAC4E);
+    for case in 0..30 {
+        // tiny caches force constant eviction/write-back traffic
+        let page = [16usize, 64, 256][case % 3];
+        let cap = (page * [1, 3, 7][case / 3 % 3]) as u64;
+        let (disk, cache) = setup(page, cap, true);
+        let mut oracle: Vec<u8> = Vec::new();
+        for _ in 0..200 {
+            let off = r.below(4000);
+            match r.below(4) {
+                0 | 1 => {
+                    let len = r.range(1, 700) as usize;
+                    let data = r.bytes(len);
+                    cache.write(0, &disk, off, &data).unwrap();
+                    let end = off as usize + len;
+                    if oracle.len() < end {
+                        oracle.resize(end, 0);
+                    }
+                    oracle[off as usize..end].copy_from_slice(&data);
+                }
+                2 => {
+                    let len = r.range(1, 700) as usize;
+                    let mut buf = vec![0u8; len];
+                    cache.read(0, &disk, off, &mut buf).unwrap();
+                    // logical view: oracle bytes where defined, else 0
+                    for (i, &b) in buf.iter().enumerate() {
+                        let want = oracle
+                            .get(off as usize + i)
+                            .copied()
+                            .unwrap_or(0);
+                        assert_eq!(b, want, "case {case} read@{off}+{i}");
+                    }
+                }
+                _ => {
+                    if r.chance(1, 2) {
+                        cache.flush(0, &disk).unwrap();
+                    } else {
+                        cache.prefetch(0, &disk, off, r.range(1, 500)).unwrap();
+                    }
+                }
+            }
+        }
+        // final flush: disk content == oracle (within oracle's extent)
+        cache.flush(0, &disk).unwrap();
+        let mut dbuf = vec![0u8; oracle.len()];
+        let n = disk.read_at(0, &mut dbuf).unwrap();
+        assert_eq!(&dbuf[..n], &oracle[..n], "case {case} final flush");
+        for &b in &oracle[n..] {
+            assert_eq!(b, 0, "case {case}: tail must be zeros");
+        }
+    }
+}
+
+#[test]
+fn write_through_mode_always_matches_disk() {
+    let mut r = XorShift64::new(0x7777);
+    let (disk, cache) = setup(64, 64 * 4, false);
+    let mut oracle: Vec<u8> = Vec::new();
+    for _ in 0..100 {
+        let off = r.below(1000);
+        let len = r.range(1, 300) as usize;
+        let data = r.bytes(len);
+        cache.write(0, &disk, off, &data).unwrap();
+        let end = off as usize + len;
+        if oracle.len() < end {
+            oracle.resize(end, 0);
+        }
+        oracle[off as usize..end].copy_from_slice(&data);
+        // without any flush, the DISK must already agree (write-through)
+        let mut dbuf = vec![0u8; oracle.len()];
+        let n = disk.read_at(0, &mut dbuf).unwrap();
+        assert_eq!(&dbuf[..n], &oracle[..n]);
+    }
+}
+
+#[test]
+fn drop_all_preserves_data_and_empties_cache() {
+    let mut r = XorShift64::new(0xD20B);
+    let (disk, cache) = setup(64, 64 * 8, true);
+    let data = r.bytes(2000);
+    cache.write(0, &disk, 100, &data).unwrap();
+    cache.drop_all(std::slice::from_ref(&disk)).unwrap();
+    assert!(!cache.covers(0, 100, 1), "cache must be empty after drop");
+    let mut buf = vec![0u8; 2000];
+    cache.read(0, &disk, 100, &mut buf).unwrap();
+    assert_eq!(buf, data);
+    // those reads were all misses
+    let s = cache.stats();
+    assert!(s.misses > 0);
+}
+
+#[test]
+fn eviction_pressure_never_loses_dirty_data() {
+    // cache of 2 pages, write 64 pages, read them all back
+    let mut r = XorShift64::new(0xE71C);
+    let (disk, cache) = setup(32, 64, true);
+    let data = r.bytes(32 * 64);
+    for (i, chunk) in data.chunks(32).enumerate() {
+        cache.write(0, &disk, (i * 32) as u64, chunk).unwrap();
+    }
+    let mut buf = vec![0u8; data.len()];
+    cache.read(0, &disk, 0, &mut buf).unwrap();
+    assert_eq!(buf, data);
+    let s = cache.stats();
+    assert!(s.evictions >= 60, "expected heavy eviction, got {s:?}");
+}
+
+#[test]
+fn concurrent_readers_and_prefetchers_are_coherent() {
+    // many threads hammering one cache: no torn pages, no lost bytes
+    let (disk, cache) = setup(256, 256 * 8, true);
+    let cache = Arc::new(cache);
+    let mut base = XorShift64::new(0xC0C0);
+    let data = base.bytes(64 * 1024);
+    cache.write(0, &disk, 0, &data).unwrap();
+    cache.flush(0, &disk).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let cache = cache.clone();
+        let disk = disk.clone();
+        let data = data.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut r = XorShift64::new(0xF00 + t);
+            for _ in 0..300 {
+                let off = r.below(63 * 1024);
+                let len = r.range(1, 1024) as usize;
+                if r.chance(1, 5) {
+                    cache.prefetch(0, &disk, off, len as u64).unwrap();
+                } else {
+                    let mut buf = vec![0u8; len];
+                    cache.read(0, &disk, off, &mut buf).unwrap();
+                    assert_eq!(
+                        &buf[..],
+                        &data[off as usize..off as usize + len],
+                        "thread {t} off={off} len={len}"
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,323 @@
+//! Property-based invariant tests (deterministic xorshift PRNG in place
+//! of proptest, which is not in the vendored crate set). Each test runs
+//! hundreds of randomized cases; the seed is part of the assertion
+//! message for reproduction.
+
+use vipios::access::{AccessDesc, BasicBlock};
+use vipios::directory::{FileMeta, Fragment, EXTENT};
+use vipios::fmodel::{Handle, MappingFn, Mode, ModelFile};
+use vipios::fragmenter::fragment;
+use vipios::layout::Distribution;
+use vipios::msg::{FileId, Rank, View};
+use vipios::util::XorShift64;
+
+fn rand_distribution(r: &mut XorShift64) -> Distribution {
+    match r.below(3) {
+        0 => Distribution::Contiguous { server: r.below(4) as u32 },
+        1 => Distribution::Cyclic { chunk: r.range(1, 64) },
+        _ => Distribution::Block { part: r.range(1, 128) },
+    }
+}
+
+fn rand_desc(r: &mut XorShift64, depth: u32) -> AccessDesc {
+    let nblocks = r.range(1, 3) as usize;
+    let blocks = (0..nblocks)
+        .map(|_| {
+            let subtype = if depth > 0 && r.chance(1, 4) {
+                Some(Box::new(rand_desc(r, depth - 1)))
+            } else {
+                None
+            };
+            BasicBlock {
+                offset: r.below(16) as i64,
+                repeat: r.range(1, 4) as u32,
+                count: r.range(1, 16) as u32,
+                stride: r.below(16) as i64,
+                subtype,
+            }
+        })
+        .collect();
+    AccessDesc { skip: r.below(8) as i64, blocks }
+}
+
+// ------------------------------------------------------------ layout
+
+/// Distribution extents partition every request exactly: no byte lost,
+/// no byte duplicated, order preserved, locate/logical inverse.
+#[test]
+fn layout_extents_partition_exactly() {
+    let mut r = XorShift64::new(0x1A70);
+    for case in 0..500 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let off = r.below(1000);
+        let len = r.range(1, 2000);
+        let ex = d.extents(nservers, off, len);
+        let total: u64 = ex.iter().map(|e| e.2).sum();
+        assert_eq!(total, len, "case {case}: {d:?} off={off} len={len}");
+        // walking the extents in order must reproduce the logical range
+        let mut logical = off;
+        for &(srv, local, l) in &ex {
+            assert!(srv < nservers, "case {case}");
+            for i in (0..l).step_by(37) {
+                assert_eq!(
+                    d.logical(nservers, srv, local + i),
+                    logical + i,
+                    "case {case}: {d:?}"
+                );
+            }
+            logical += l;
+        }
+    }
+}
+
+/// locate() and logical() are mutually inverse everywhere.
+#[test]
+fn layout_locate_logical_roundtrip() {
+    let mut r = XorShift64::new(0xBEEF);
+    for case in 0..2000 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 8) as u32;
+        let off = r.below(100_000);
+        let (s, l) = d.locate(nservers, off);
+        assert_eq!(d.logical(nservers, s, l), off, "case {case}: {d:?}");
+    }
+}
+
+// ------------------------------------------------------------ access
+
+/// AccessDesc::resolve against a naive byte-walking oracle.
+fn naive_extents(desc: &AccessDesc, disp: u64, logical: u64, len: u64) -> Vec<(u64, u64)> {
+    // enumerate data bytes one at a time by walking passes
+    fn walk_bytes(d: &AccessDesc, phys: i64, out: &mut Vec<i64>) -> i64 {
+        let mut p = phys;
+        for b in &d.blocks {
+            p += b.offset;
+            for _ in 0..b.repeat {
+                match &b.subtype {
+                    None => {
+                        for i in 0..b.count {
+                            out.push(p + i as i64);
+                        }
+                        p += b.count as i64;
+                    }
+                    Some(sub) => {
+                        for _ in 0..b.count {
+                            p = walk_bytes(sub, p, out);
+                        }
+                    }
+                }
+                p += b.stride;
+            }
+        }
+        p + d.skip
+    }
+    let mut bytes = Vec::new();
+    let mut phys = disp as i64;
+    while (bytes.len() as u64) < logical + len {
+        phys = walk_bytes(desc, phys, &mut bytes);
+    }
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for &b in bytes.iter().skip(logical as usize).take(len as usize) {
+        let b = b as u64;
+        match out.last_mut() {
+            Some((o, l)) if *o + *l == b => *l += 1,
+            _ => out.push((b, 1)),
+        }
+    }
+    out
+}
+
+#[test]
+fn access_resolve_matches_naive_oracle() {
+    let mut r = XorShift64::new(0xACCE55);
+    let mut nontrivial = 0;
+    for case in 0..300 {
+        let d = rand_desc(&mut r, 1);
+        if d.data_len() == 0 {
+            continue;
+        }
+        let disp = r.below(32);
+        let logical = r.below(3 * d.data_len());
+        let len = r.range(1, 2 * d.data_len());
+        let got = d.resolve(disp, logical, len);
+        let want = naive_extents(&d, disp, logical, len);
+        assert_eq!(got, want, "case {case} seed-desc {d:?} disp={disp} logical={logical} len={len}");
+        if got.len() > 1 {
+            nontrivial += 1;
+        }
+    }
+    assert!(nontrivial > 50, "test generated too few strided cases");
+}
+
+/// data_len/extent are consistent with resolve.
+#[test]
+fn access_len_extent_consistency() {
+    let mut r = XorShift64::new(0x5EED);
+    for _ in 0..200 {
+        let d = rand_desc(&mut r, 1);
+        let per = d.data_len();
+        if per == 0 {
+            continue;
+        }
+        // reading exactly one pass covers physical span <= extent
+        let ex = d.resolve(0, 0, per);
+        let total: u64 = ex.iter().map(|e| e.1).sum();
+        assert_eq!(total, per);
+        // second pass is the first shifted by extent
+        let ex2 = d.resolve(0, per, per);
+        let shift = d.extent();
+        for (a, b) in ex.iter().zip(&ex2) {
+            assert_eq!(a.0 as i64 + shift, b.0 as i64);
+            assert_eq!(a.1, b.1);
+        }
+    }
+}
+
+// --------------------------------------------------------- fragmenter
+
+/// The fragmenter's sub-requests partition the client buffer exactly.
+#[test]
+fn fragmenter_partitions_buffer_exactly() {
+    let mut r = XorShift64::new(0xF4A6);
+    for case in 0..300 {
+        let nservers = r.range(1, 5) as u32;
+        let meta = FileMeta {
+            id: FileId(1),
+            name: "p".into(),
+            distribution: rand_distribution(&mut r),
+            servers: (0..nservers).map(Rank).collect(),
+            size: u64::MAX,
+        };
+        let view = if r.chance(1, 2) {
+            let d = rand_desc(&mut r, 0);
+            if d.data_len() == 0 {
+                None
+            } else {
+                Some(View { disp: r.below(64), desc: d })
+            }
+        } else {
+            None
+        };
+        let offset = r.below(4096);
+        let len = r.range(1, 8192);
+        let subs = fragment(&meta, view.as_ref(), offset, len);
+        let mut covered: Vec<(u64, u64)> = subs
+            .iter()
+            .flat_map(|s| s.parts.iter().map(|&(_, l, b)| (b, l)))
+            .collect();
+        covered.sort_unstable();
+        let mut pos = 0u64;
+        for (b, l) in covered {
+            assert_eq!(b, pos, "case {case}: gap/overlap at {pos}");
+            pos += l;
+        }
+        assert_eq!(pos, len, "case {case}");
+        // every sub-request touches a valid server
+        for s in &subs {
+            assert!(meta.servers.contains(&s.server), "case {case}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- fmodel
+
+/// fmodel READ through ψ equals materialising ψ(f) and slicing.
+#[test]
+fn fmodel_read_matches_view_materialisation() {
+    let mut r = XorShift64::new(0xF0DE);
+    for case in 0..300 {
+        let rec = r.range(1, 8) as usize;
+        let nrec = r.range(1, 40) as usize;
+        let bytes = r.bytes(rec * nrec);
+        let f = ModelFile::from_bytes(rec, &bytes).unwrap();
+        let t: Vec<usize> = (0..r.range(0, 30)).map(|_| r.below(nrec as u64) as usize).collect();
+        let map = MappingFn::new(t);
+        let view = map.apply(&f);
+        let mut h = Handle::open(f, &[Mode::Read], map);
+        let pos = r.below(view.flen() as u64 + 1) as usize;
+        if h.seek(pos).is_err() {
+            continue;
+        }
+        let n = r.range(1, 50) as usize;
+        match h.read(n, 10_000) {
+            Ok(data) => {
+                let i = n.min(view.flen() - pos);
+                let want =
+                    view.as_bytes()[pos * rec..(pos + i) * rec].to_vec();
+                assert_eq!(data, want, "case {case}");
+            }
+            Err(_) => {
+                assert!(pos >= view.flen(), "case {case}: spurious error");
+            }
+        }
+    }
+}
+
+/// WRITE then READ at same pos round-trips (identity view).
+#[test]
+fn fmodel_write_read_roundtrip() {
+    let mut r = XorShift64::new(0x57AB);
+    for case in 0..300 {
+        let rec = r.range(1, 6) as usize;
+        let nrec = r.range(1, 20) as usize;
+        let f = ModelFile::from_bytes(rec, &r.bytes(rec * nrec)).unwrap();
+        let mut h = Handle::open(
+            f,
+            &[Mode::Read, Mode::Write],
+            MappingFn::identity(nrec),
+        );
+        let pos = r.below(nrec as u64) as usize;
+        h.seek(pos).unwrap();
+        let n = r.range(1, 10) as usize;
+        let payload = ModelFile::from_bytes(rec, &r.bytes(rec * n)).unwrap();
+        h.write(n, &payload).unwrap();
+        // re-open with identity over the new length
+        let newlen = h.file().flen();
+        let mut h2 = Handle::open(
+            h.file().clone(),
+            &[Mode::Read],
+            MappingFn::identity(newlen),
+        );
+        h2.seek(pos).unwrap();
+        let got = h2.read(n, rec * n).unwrap();
+        assert_eq!(got, payload.as_bytes(), "case {case}");
+    }
+}
+
+// ----------------------------------------------------------- fragment
+
+/// Extent-mapped fragments: map_alloc/runs agree; holes stay holes.
+#[test]
+fn fragment_map_runs_agree() {
+    let mut r = XorShift64::new(0xD15C);
+    for case in 0..200 {
+        let mut f = Fragment::new(0);
+        let mut next = 0u64;
+        // random writes allocate extents
+        for _ in 0..r.range(1, 6) {
+            let off = r.below(3 * EXTENT);
+            let len = r.range(1, EXTENT);
+            f.map_alloc(off, len, || {
+                let v = next;
+                next += EXTENT;
+                v
+            });
+        }
+        // runs over the whole space: allocated runs equal map() output
+        let probe_off = r.below(3 * EXTENT);
+        let probe_len = r.range(1, EXTENT * 2);
+        let runs = f.runs(probe_off, probe_len);
+        let total: u64 = runs.iter().map(|r| r.1).sum();
+        assert_eq!(total, probe_len, "case {case}");
+        // allocated sections agree with map_alloc's view
+        let mut o = probe_off;
+        for (d, l) in runs {
+            if let Some(doff) = d {
+                let m = f.map(o, l);
+                assert_eq!(m[0].0, doff, "case {case}");
+            }
+            o += l;
+        }
+    }
+}

@@ -1,0 +1,390 @@
+//! `testmpio` — the paper's §6.4 regression suite, transcribed: a long
+//! scripted sequence of MPI-IO operations exercising file management,
+//! views, data access, consistency and error cases, run against a live
+//! server pool.
+
+use vipios::modes::ServerPool;
+use vipios::server::ServerConfig;
+use vipios::vimpios::{
+    get_view_pattern, open_all, Amode, Basic, ClientGroup, Datatype, MpiFile,
+    Status, Whence,
+};
+
+fn ints(v: &[u32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn from_ints(b: &[u8]) -> Vec<u32> {
+    b.chunks(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+fn int() -> Datatype {
+    Datatype::Basic(Basic::Int)
+}
+
+#[test]
+fn t01_open_modes_and_amode_query() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    // open RDWR|CREATE, query amode
+    let f = MpiFile::open(&mut c, "t01", Amode::rdwr_create()).unwrap();
+    assert!(f.amode().rdwr && f.amode().create);
+    f.close(&mut c).unwrap();
+    // reopen RDONLY works; missing file fails
+    let f = MpiFile::open(&mut c, "t01", Amode::rdonly()).unwrap();
+    f.close(&mut c).unwrap();
+    assert!(MpiFile::open(&mut c, "missing", Amode::rdonly()).is_err());
+    // EXCL on existing fails
+    let excl = Amode { rdwr: true, create: true, excl: true, ..Amode::default() };
+    assert!(MpiFile::open(&mut c, "t01", excl).is_err());
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t02_write_read_get_count() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t02", Amode::rdwr_create()).unwrap();
+    let data: Vec<u32> = (0..500).collect();
+    let st = f.write(&mut c, &ints(&data), 500, &int()).unwrap();
+    assert_eq!(st.count(&int()), 500);
+    f.seek(&mut c, 0, Whence::Set).unwrap();
+    let mut buf = vec![0u8; 2000];
+    let st = f.read(&mut c, &mut buf, 500, &int()).unwrap();
+    assert_eq!(st, Status { bytes: 2000 });
+    assert_eq!(from_ints(&buf), data);
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t03_file_size_ops() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t03", Amode::rdwr_create()).unwrap();
+    f.write(&mut c, &vec![1u8; 4096], 1024, &int()).unwrap();
+    assert_eq!(f.size(&mut c).unwrap(), 4096);
+    f.set_size(&mut c, 1000).unwrap();
+    assert_eq!(f.size(&mut c).unwrap(), 1000);
+    f.preallocate(&mut c, 5000).unwrap();
+    assert_eq!(f.size(&mut c).unwrap(), 5000);
+    // MPI-2: data between old and new size after extension is
+    // *undefined*, but the read itself must succeed within the new size.
+    // No view is set, so the default etype is a byte and offsets are in
+    // bytes (MPI-IO default file view).
+    let mut buf = vec![7u8; 8];
+    let st = f.read_at(&mut c, 1200, &mut buf, 8, &Datatype::Basic(Basic::Byte)).unwrap();
+    assert_eq!(st.bytes, 8);
+    // reads at/past the new size are empty
+    let st = f.read_at(&mut c, 5000, &mut buf, 8, &Datatype::Basic(Basic::Byte)).unwrap();
+    assert_eq!(st.bytes, 0);
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t04_etype_units_and_views() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t04", Amode::rdwr_create()).unwrap();
+    let data: Vec<u32> = (0..100).collect();
+    f.write(&mut c, &ints(&data), 100, &int()).unwrap();
+    // view with displacement 200 bytes = element 50 (paper §6.2.4 ex.)
+    f.set_view(&mut c, 200, int(), Datatype::vector(1, 1, 2, int())).unwrap();
+    let mut buf = vec![0u8; 40];
+    f.seek(&mut c, 0, Whence::Set).unwrap();
+    f.read(&mut c, &mut buf, 10, &int()).unwrap();
+    assert_eq!(from_ints(&buf), vec![50, 52, 54, 56, 58, 60, 62, 64, 66, 68]);
+    // get_view returns what we set
+    let (et, ft) = f.view().unwrap();
+    assert_eq!(et, &int());
+    assert!(matches!(ft, Datatype::Vector { .. }));
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t05_view_write_through_holes() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t05", Amode::rdwr_create()).unwrap();
+    // base: 20 ints of 0xFFFFFFFF
+    f.write(&mut c, &ints(&vec![u32::MAX; 20]), 20, &int()).unwrap();
+    // write 0..10 through an every-2nd view: holes must be preserved
+    let mut fv = MpiFile::open(&mut c, "t05", Amode::rdwr_create()).unwrap();
+    fv.set_view(&mut c, 0, int(), Datatype::vector(1, 1, 2, int())).unwrap();
+    let vals: Vec<u32> = (0..10).collect();
+    fv.write(&mut c, &ints(&vals), 10, &int()).unwrap();
+    fv.sync(&mut c).unwrap();
+    // raw image alternates value/0xFFFFFFFF
+    f.seek(&mut c, 0, Whence::Set).unwrap();
+    let mut buf = vec![0u8; 80];
+    f.read(&mut c, &mut buf, 20, &int()).unwrap();
+    let got = from_ints(&buf);
+    for i in 0..10 {
+        assert_eq!(got[2 * i], i as u32, "data slot {i}");
+        assert_eq!(got[2 * i + 1], u32::MAX, "hole {i}");
+    }
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t06_nonblocking_wait_test() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t06", Amode::rdwr_create()).unwrap();
+    let data = ints(&(0..1000u32).collect::<Vec<_>>());
+    let w = f.iwrite(&mut c, &data, 1000, &int()).unwrap();
+    // MPI_File_test until done, then wait must still succeed
+    let mut spins = 0;
+    while !f.test(&mut c, &w).unwrap() {
+        spins += 1;
+        if spins > 1_000_000 {
+            panic!("iwrite never completed");
+        }
+    }
+    let st = f.wait(&mut c, w, None).unwrap();
+    assert_eq!(st.bytes, 4000);
+    f.seek(&mut c, 0, Whence::Set).unwrap();
+    let r = f.iread(&mut c, 1000, &int()).unwrap();
+    let mut buf = vec![0u8; 4000];
+    let st = f.wait(&mut c, r, Some(&mut buf)).unwrap();
+    assert_eq!(st.bytes, 4000);
+    assert_eq!(buf, data);
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t07_sync_barrier_sync_consistency() {
+    // the paper's §6.2.4 consistency example: writer syncs, barrier,
+    // reader syncs, reads — must see the data.
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let group = ClientGroup::new(2);
+    let mut handles = Vec::new();
+    for rank in 0..2usize {
+        let member = group.member(rank);
+        let world = pool.world().clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = vipios::client::Client::connect(&world).unwrap();
+            let mut f = MpiFile::open(&mut c, "t07", Amode::rdwr_create()).unwrap();
+            if rank == 0 {
+                let data = ints(&(0..250u32).collect::<Vec<_>>());
+                f.write(&mut c, &data, 250, &int()).unwrap();
+                f.sync(&mut c).unwrap();
+                member.barrier();
+                f.sync(&mut c).unwrap();
+            } else {
+                f.sync(&mut c).unwrap();
+                member.barrier();
+                f.sync(&mut c).unwrap();
+                let mut buf = vec![0u8; 1000];
+                let st = f.read_at(&mut c, 0, &mut buf, 250, &int()).unwrap();
+                assert_eq!(st.bytes, 1000);
+                assert_eq!(from_ints(&buf), (0..250).collect::<Vec<u32>>());
+            }
+            f.close(&mut c).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t08_atomic_mode() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t08", Amode::rdwr_create()).unwrap();
+    assert!(!f.atomicity());
+    f.set_atomicity(true);
+    assert!(f.atomicity());
+    // atomic writes are immediately visible to a second handle
+    f.write(&mut c, &ints(&[42; 10]), 10, &int()).unwrap();
+    let mut c2 = pool.client().unwrap();
+    let mut f2 = MpiFile::open(&mut c2, "t08", Amode::rdonly()).unwrap();
+    let mut buf = vec![0u8; 40];
+    f2.read_at(&mut c2, 0, &mut buf, 10, &int()).unwrap();
+    assert_eq!(from_ints(&buf), vec![42; 10]);
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t09_delete_semantics() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let f = MpiFile::open(&mut c, "t09", Amode::rdwr_create()).unwrap();
+    f.close(&mut c).unwrap();
+    MpiFile::delete(&mut c, "t09").unwrap();
+    assert!(MpiFile::open(&mut c, "t09", Amode::rdonly()).is_err());
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t10_collective_subarray_matrix_io() {
+    // 4 processes write a 32x32 int matrix as 16x16 quadrants via
+    // subarray filetypes (the §6.3.6 machinery), then cross-read.
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let group = ClientGroup::new(4);
+    let mut handles = Vec::new();
+    for rank in 0..4usize {
+        let member = group.member(rank);
+        let world = pool.world().clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = vipios::client::Client::connect(&world).unwrap();
+            let mut f =
+                MpiFile::open(&mut c, "t10", Amode::rdwr_create()).unwrap();
+            let (sr, sc) = ((rank / 2 * 16) as u32, (rank % 2 * 16) as u32);
+            let sub =
+                Datatype::subarray2((32, 32), (16, 16), (sr, sc), int()).unwrap();
+            f.set_view(&mut c, 0, int(), sub).unwrap();
+            // each element = its global (row*32+col)
+            let mine: Vec<u32> = (0..16 * 16)
+                .map(|i| {
+                    let (r, col) = (i / 16, i % 16);
+                    (sr + r) * 32 + sc + col
+                })
+                .collect();
+            member
+                .write_all(&mut f, &mut c, &ints(&mine), 256, &int())
+                .unwrap();
+            f.sync(&mut c).unwrap();
+            member.barrier();
+            // read the OPPOSITE quadrant and verify
+            let opp = 3 - rank;
+            let (or, oc) = ((opp / 2 * 16) as u32, (opp % 2 * 16) as u32);
+            let sub2 =
+                Datatype::subarray2((32, 32), (16, 16), (or, oc), int()).unwrap();
+            f.set_view(&mut c, 0, int(), sub2).unwrap();
+            f.seek(&mut c, 0, Whence::Set).unwrap();
+            let mut buf = vec![0u8; 1024];
+            member.read_all(&mut f, &mut c, &mut buf, 256, &int()).unwrap();
+            let got = from_ints(&buf);
+            for (i, &v) in got.iter().enumerate() {
+                let (r, col) = (i as u32 / 16, i as u32 % 16);
+                assert_eq!(v, (or + r) * 32 + oc + col, "rank {rank} elem {i}");
+            }
+            f.close(&mut c).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t11_struct_filetype_mixed_records() {
+    // records of [int x3][double x2][char x16] at displacements 0/20/40
+    // (the paper's §6.1.5 struct example): write ints through a view
+    // selecting only the int fields.
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let mut f = MpiFile::open(&mut c, "t11", Amode::rdwr_create()).unwrap();
+    // file: 4 records of 56 bytes, zero-filled
+    f.write(&mut c, &vec![0u8; 4 * 56], 56, &int()).unwrap();
+    let st = Datatype::Struct {
+        blocklens: vec![3, 2, 16],
+        disps: vec![0, 20, 40],
+        olds: vec![
+            int(),
+            Datatype::Basic(Basic::Double),
+            Datatype::Basic(Basic::Char),
+        ],
+    };
+    // view selecting the whole struct; etype byte so offsets are bytes
+    let desc = get_view_pattern(&st);
+    assert_eq!(desc.data_len(), 12 + 16 + 16);
+    // write one full struct instance through the raw client view
+    c.set_view(f.vfh(), 0, desc).unwrap();
+    let payload: Vec<u8> = (0..44u8).collect();
+    c.write_at(f.vfh(), 0, &payload).unwrap();
+    c.clear_view(f.vfh()).unwrap();
+    // raw image: ints at 0..12, doubles at 20..36, chars at 40..56
+    let mut buf = vec![0u8; 56];
+    c.read_at(f.vfh(), 0, &mut buf).unwrap();
+    assert_eq!(&buf[0..12], &payload[0..12]);
+    assert_eq!(&buf[12..20], &[0u8; 8]); // gap preserved
+    assert_eq!(&buf[20..36], &payload[12..28]);
+    assert_eq!(&buf[36..40], &[0u8; 4]); // gap preserved
+    assert_eq!(&buf[40..56], &payload[28..44]);
+    f.close(&mut c).unwrap();
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t13_split_collectives() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let group = ClientGroup::new(2);
+    let mut handles = Vec::new();
+    for rank in 0..2usize {
+        let member = group.member(rank);
+        let world = pool.world().clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = vipios::client::Client::connect(&world).unwrap();
+            let mut f = MpiFile::open(&mut c, "t13", Amode::rdwr_create()).unwrap();
+            let ft = Datatype::darray_block1(200, rank as u32, 2, int()).unwrap();
+            f.set_view(&mut c, 0, int(), ft).unwrap();
+            let mine: Vec<u32> = (0..100).map(|i| (rank * 100 + i) as u32).collect();
+            // write_all_begin / _end
+            let sc = member
+                .write_all_begin(&mut f, &mut c, &ints(&mine), 100, &int())
+                .unwrap();
+            // second begin on the same handle must fail (MPI-2 §9.4.5)
+            assert!(member
+                .write_all_begin(&mut f, &mut c, &[0u8; 4], 1, &int())
+                .is_err());
+            let st = member.write_all_end(&mut f, &mut c, sc).unwrap();
+            assert_eq!(st.bytes, 400);
+            f.sync(&mut c).unwrap();
+            member.barrier();
+            // read_all_begin / _end
+            f.seek(&mut c, 0, Whence::Set).unwrap();
+            let sc = member.read_all_begin(&mut f, &mut c, 100, &int()).unwrap();
+            let mut buf = vec![0u8; 400];
+            let st = member.read_all_end(&mut f, &mut c, sc, &mut buf).unwrap();
+            assert_eq!(st.bytes, 400);
+            assert_eq!(from_ints(&buf), mine);
+            f.close(&mut c).unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t14_io_state_progression() {
+    use vipios::client::IoState;
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let h = c.open("t14", vipios::msg::OpenMode::rdwr_create()).unwrap();
+    let op = c.iwrite(h, &vec![1u8; 256 * 1024]).unwrap();
+    // state is one of the live states until wait()
+    loop {
+        match c.io_state(op).unwrap() {
+            IoState::InProgress { .. } => continue,
+            IoState::Complete => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    c.wait(op).unwrap();
+    assert_eq!(c.io_state(op).unwrap(), IoState::Collected);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn t12_open_all_collective() {
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut clients: Vec<_> = (0..3).map(|_| pool.client().unwrap()).collect();
+    let files = open_all(&mut clients, "t12", Amode::rdwr_create()).unwrap();
+    assert_eq!(files.len(), 3);
+    for (f, c) in files.into_iter().zip(clients.iter_mut()) {
+        f.close(c).unwrap();
+    }
+    pool.shutdown().unwrap();
+}
