@@ -1,0 +1,40 @@
+# ViPIOS reproduction — build/test entry points.
+#
+# The Rust crate is hermetic: `make test` needs no Python, no XLA and no
+# network (the default build interprets the compute kernels with the
+# pure-Rust reference backend, see rust/src/runtime.rs).
+#
+# `make artifacts` AOT-lowers the JAX/Pallas kernels to HLO text for the
+# optional PJRT backend (`cargo build --features xla`). It needs the Python
+# toolchain (jax) and is a no-op when the inputs are unchanged.
+
+PYTHON ?= python3
+KERNELS := stencil5 jacobi_step matmul_tile block_reduce
+ARTIFACTS := $(KERNELS:%=artifacts/%.hlo.txt)
+PY_SOURCES := python/compile/aot.py python/compile/model.py \
+              $(wildcard python/compile/kernels/*.py)
+
+.PHONY: all build test bench artifacts pytest clean
+
+all: build
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench -- all --quick
+
+# AOT artifacts for the `xla` feature (no-op when inputs are unchanged).
+artifacts: $(ARTIFACTS)
+
+artifacts/%.hlo.txt: $(PY_SOURCES)
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts --only $*
+
+pytest:
+	cd python && $(PYTHON) -m pytest -q
+
+clean:
+	rm -rf rust/target target artifacts

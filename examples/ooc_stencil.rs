@@ -1,16 +1,16 @@
 //! End-to-end driver (DESIGN.md E8): out-of-core Jacobi iteration on a
 //! 2048x2048 f32 array stored in ViPIOS across 4 servers, with the block
-//! kernel executed through the AOT-compiled Pallas/JAX artifact
-//! (`jacobi_step.hlo.txt`) on the PJRT CPU client.
+//! kernel executed through the runtime's compute backend — the pure-Rust
+//! reference interpreter on the default feature set, or the AOT-compiled
+//! Pallas/JAX artifact (`jacobi_step.hlo.txt`) on the PJRT CPU client
+//! when built with `--features xla` after `make artifacts`.
 //!
-//! This proves all three layers compose: L3 rust coordinator (ViPIOS
-//! servers + VI) moves blocks, the PJRT runtime executes the L2 JAX graph
-//! containing the L1 Pallas stencil kernel, and Python is nowhere on the
-//! path. The residual sum-of-squares is the convergence metric (it must
-//! decrease monotonically for Jacobi on a zero-BC problem) and the run is
-//! recorded in EXPERIMENTS.md.
+//! This proves the layers compose: the L3 rust coordinator (ViPIOS
+//! servers + VI) moves blocks and the backend executes the L2/L1 kernel
+//! semantics, with Python nowhere on the path. The residual
+//! sum-of-squares is the convergence metric (it must decrease
+//! monotonically for Jacobi on a zero-BC problem).
 //!
-//! Requires `make artifacts` first.
 //! Run: `cargo run --release --example ooc_stencil [sweeps] [nb]`
 
 use std::time::Instant;
@@ -36,10 +36,13 @@ fn main() -> anyhow::Result<()> {
     let pool = ServerPool::start(4, ServerConfig::default())?;
     let mut c = pool.client()?;
 
-    // runtime: load the AOT artifact once
-    let mut rt = Runtime::new("artifacts")?;
+    // runtime: load the kernel once (repo-root artifacts/ under the
+    // `xla` feature — where `make artifacts` writes; reference backend
+    // otherwise)
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+    let mut rt = Runtime::new(artifacts)?;
     rt.load("jacobi_step")?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("compute platform: {}", rt.platform());
 
     // initialise: hot square in the centre of the array
     let src = BlockedArray::create(&mut c, "jacobi_src", nb)?;

@@ -2,18 +2,51 @@
 //! Chapter 8 at full size (criterion is not in the vendored crate set;
 //! this is a custom harness, `harness = false`).
 //!
-//! Experiment index: DESIGN.md §5 (E1..E7). The end-to-end OOC run (E8)
-//! lives in `examples/ooc_stencil.rs`.
+//! Experiment index: DESIGN.md §5 (E1..E7 + A1..A4). The end-to-end OOC
+//! run (E8) lives in `examples/ooc_stencil.rs`.
+//!
+//! Usage: `cargo bench -- [<exp>] [--quick]` where `<exp>` is one of
+//! `dedicated | nondedicated | vs_unix | vs_romio | scalability | buffer |
+//! redistribution | ablation | all` (default `all`).
 
 fn main() -> anyhow::Result<()> {
-    // `cargo bench -- <exp> [--quick]`
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let quick = args.iter().any(|a| a == "--quick");
-    let exp = args
-        .iter()
-        .find(|a| !a.starts_with("--") && !a.contains("bench"))
-        .cloned()
-        .unwrap_or_else(|| "all".into());
+    // Explicit positional parsing. Cargo appends its own flags (notably
+    // `--bench`) to `harness = false` targets, so flags we don't know are
+    // skipped rather than mistaken for experiment names — and experiment
+    // names are taken verbatim, never substring-filtered (an experiment
+    // called e.g. "bench_buffer" must not be swallowed).
+    let mut quick = false;
+    let mut exp: Option<String> = None;
+    for arg in std::env::args().skip(1) {
+        if arg == "--quick" {
+            quick = true;
+            continue;
+        }
+        if arg == "--bench" {
+            // cargo injects this flag for `harness = false` targets
+            continue;
+        }
+        if arg == "--test" {
+            // test mode (the [[bench]] sets `test = false`, but be safe):
+            // benches are not a smoke test — nothing to do
+            println!("paper bench harness: skipping in test mode");
+            return Ok(());
+        }
+        if arg.starts_with('-') {
+            // a typo'd --quick must not launch a full-size run
+            anyhow::bail!(
+                "unrecognized flag `{arg}`; usage: cargo bench -- [<exp>] [--quick]"
+            );
+        }
+        if let Some(first) = &exp {
+            anyhow::bail!(
+                "unexpected extra experiment `{arg}` (already running `{first}`); \
+                 usage: cargo bench -- [<exp>] [--quick]"
+            );
+        }
+        exp = Some(arg);
+    }
+    let exp = exp.unwrap_or_else(|| "all".into());
     let t0 = std::time::Instant::now();
     vipios::bench::tables::run(&exp, quick)?;
     println!("\ntotal bench time: {:.1}s", t0.elapsed().as_secs_f64());

@@ -45,7 +45,7 @@ pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
         let s: Vec<String> = cells
             .iter()
             .zip(&widths)
-            .map(|(c, w)| format!("{c:>w$}"))
+            .map(|(c, &w)| format!("{c:>w$}"))
             .collect();
         println!("  {}", s.join("  "));
     };

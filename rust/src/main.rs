@@ -6,8 +6,8 @@
 //! vipios demo                          quickstart write/read through a pool
 //! vipios bench <exp> [--quick]         regenerate a Chapter-8 experiment
 //!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
-//!          buffer | redistribution | all
-//! vipios inspect [artifacts-dir]       load + describe the HLO artifacts
+//!          buffer | redistribution | ablation | all
+//! vipios inspect [artifacts-dir]       load + describe the compute kernels
 //! ```
 
 use vipios::bench::tables;
@@ -22,23 +22,30 @@ fn main() {
     let result = match cmd {
         "demo" => demo(),
         "bench" => {
-            let exp = args
+            // first positional after the subcommand, wherever it sits
+            // relative to flags (`bench --quick buffer` == `bench buffer
+            // --quick`)
+            let exp = args[1..]
                 .iter()
-                .nth(1)
-                .filter(|a| !a.starts_with("--"))
+                .find(|a| !a.starts_with("--"))
                 .map(String::as_str)
                 .unwrap_or("all");
             tables::run(exp, quick)
         }
         "inspect" => {
-            let dir = args.get(1).map(String::as_str).unwrap_or("artifacts");
+            // default: repo-root artifacts/, where `make artifacts` writes
+            // (the crate lives one level down in rust/)
+            let dir = args
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts"));
             inspect(dir)
         }
         _ => {
             eprintln!(
                 "usage: vipios demo | bench <exp> [--quick] | inspect [dir]\n\
                  exps: dedicated nondedicated vs_unix vs_romio scalability \
-                 buffer redistribution all"
+                 buffer redistribution ablation all"
             );
             Ok(())
         }
@@ -67,9 +74,9 @@ fn demo() -> anyhow::Result<()> {
 fn inspect(dir: &str) -> anyhow::Result<()> {
     let mut rt = vipios::runtime::Runtime::new(dir)?;
     println!("platform: {}", rt.platform());
-    for name in ["stencil5", "jacobi_step", "matmul_tile", "block_reduce"] {
+    for name in vipios::runtime::KERNELS {
         match rt.load(name) {
-            Ok(e) => println!("  {}: compiled OK", e.name),
+            Ok(()) => println!("  {name}: OK"),
             Err(e) => println!("  {name}: {e:#}"),
         }
     }

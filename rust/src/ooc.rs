@@ -7,7 +7,9 @@
 //! order (block (bi,bj) is contiguous — the layout the preparation phase
 //! picks for SPMD block distribution), assembles halo-padded input
 //! tensors with [`crate::vimpios`]-style subarray reads, executes the
-//! `jacobi_step` artifact via [`crate::runtime`], and overlaps the next
+//! `jacobi_step` kernel through whichever [`crate::runtime::Backend`] the
+//! [`Runtime`] carries (reference interpreter by default, PJRT artifact
+//! under the `xla` feature), and overlaps the next
 //! block's read with the current block's compute using the VI's
 //! immediate operations (`Vipios_IRead`) — the pipelined parallelism the
 //! paper's prefetching hints target.

@@ -1,31 +1,37 @@
-//! Runtime bridge — load and execute the AOT-compiled L2/L1 artifacts
-//! via the PJRT CPU client (`xla` crate).
+//! Runtime bridge — execute the L2/L1 compute kernels from the L3 (Rust)
+//! coordinator through a pluggable [`Backend`].
 //!
-//! Artifacts are HLO **text** (`artifacts/*.hlo.txt`) produced once by
-//! `python/compile/aot.py`; Python never runs on the request path. Each
-//! [`Executable`] is compiled once at load and reused for every block —
-//! the pattern of /opt/xla-example/load_hlo.
+//! The paper's whole point is a *runtime system* applications can link
+//! against, so — like MPI-IO implementations built on a portable ADIO
+//! layer — the compute/IO bridge is swappable (DESIGN.md §4):
 //!
-//! All shipped artifacts take/return f32 tensors and return a tuple (the
-//! lowering uses `return_tuple=True`), so helpers here work in `Vec<f32>`
-//! + shape.
+//! * [`ReferenceBackend`] (default, always available) natively interprets
+//!   the shipped kernels in pure Rust with semantics matching
+//!   `python/compile/kernels/ref.py`, so [`crate::ooc`], the benches and
+//!   the end-to-end tests run hermetically with zero Python/XLA.
+//! * `XlaBackend` (cargo feature `xla`, off by default) loads the HLO
+//!   **text** artifacts (`artifacts/*.hlo.txt`) produced once by
+//!   `python/compile/aot.py` (`make artifacts`) and executes them via the
+//!   PJRT CPU client. Each module is compiled once at load and reused for
+//!   every block.
+//!
+//! All kernels take/return f32 tensors and return a tuple (the AOT
+//! lowering uses `return_tuple=True`), so everything here works in
+//! `Vec<f32>` + shape ([`Tensor`]).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 /// Block edge hard-wired into the shipped artifacts (must equal
 /// `python/compile/model.py::BLOCK`).
 pub const BLOCK: usize = 256;
 
-/// One compiled HLO module.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+/// The kernels every backend must serve (the artifact set of
+/// `python/compile/model.py::ARTIFACTS`).
+pub const KERNELS: [&str; 4] = ["stencil5", "jacobi_step", "matmul_tile", "block_reduce"];
 
-/// A typed f32 tensor travelling between ViPIOS buffers and PJRT.
+/// A typed f32 tensor travelling between ViPIOS buffers and a backend.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
@@ -66,72 +72,333 @@ impl Tensor {
         }
         out
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+/// A compute backend: executes a named kernel on f32 tensors and returns
+/// the tuple elements. Deliberately not `Send`-bounded: PJRT client
+/// handles need not be thread-safe, and the OOC drivers run the backend
+/// on the caller's thread.
+pub trait Backend {
+    /// Human-readable platform name (`"reference"`, `"cpu"`, ...).
+    fn platform(&self) -> &str;
+
+    /// Prepare `name` for execution (compile/validate); cached, cheap to
+    /// repeat. [`Backend::execute`] loads on demand, so calling this is
+    /// optional — it exists to front-load compile cost and surface clear
+    /// errors early.
+    fn load(&mut self, name: &str) -> Result<()>;
+
+    /// Execute kernel `name` on `inputs`; returns the output tuple.
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+// ------------------------------------------------------ reference backend
+
+/// Pure-Rust interpreter for the shipped kernels, semantics pinned to
+/// `python/compile/kernels/ref.py` (the correctness ground truth the
+/// Python test suite certifies the artifacts against):
+///
+/// * `stencil5(x)`: 5-point Jacobi sweep over a halo-padded block —
+///   `0.25 * (x[:-2,1:-1] + x[2:,1:-1] + x[1:-1,:-2] + x[1:-1,2:])`;
+/// * `jacobi_step(x)`: `y = stencil5(x)` plus the residual reduction
+///   `[sum, sumsq]` of `y - x[1:-1,1:-1]`;
+/// * `matmul_tile(a, b, c)`: the OOC accumulator update `c + a @ b` in
+///   f32 (`preferred_element_type = f32`);
+/// * `block_reduce(x)`: `[sum(x), sum(x*x)]` in f32.
+///
+/// Shapes are validated but not hard-wired to [`BLOCK`]; any consistent
+/// sizes work (the artifacts themselves are fixed-shape, the reference
+/// semantics are not).
+#[derive(Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        Self
     }
 }
 
-/// The PJRT runtime: one CPU client + a cache of compiled executables.
+fn want_inputs(name: &str, inputs: &[Tensor], n: usize) -> Result<()> {
+    if inputs.len() != n {
+        return Err(anyhow!("{name}: expected {n} inputs, got {}", inputs.len()));
+    }
+    Ok(())
+}
+
+/// `(rows, cols)` of a rank-2 tensor.
+fn dims2(name: &str, t: &Tensor) -> Result<(usize, usize)> {
+    match t.shape[..] {
+        [r, c] => Ok((r, c)),
+        _ => Err(anyhow!("{name}: expected rank-2 tensor, got shape {:?}", t.shape)),
+    }
+}
+
+/// Halo-padded input `(mr+2, mc+2)` -> interior `(mr, mc)`. Like
+/// `ref.py` (pure slicing), rectangles are fine; only the halo must fit.
+fn halo_dims(name: &str, t: &Tensor) -> Result<(usize, usize)> {
+    let (r, c) = dims2(name, t)?;
+    if r < 3 || c < 3 {
+        return Err(anyhow!("{name}: expected halo-padded input (>= 3x3), got {:?}", t.shape));
+    }
+    Ok((r - 2, c - 2))
+}
+
+/// `stencil5_ref`: interior update of a halo-padded block. Addition order
+/// mirrors ref.py (`up + down + left + right`) so f32 results agree
+/// bit-for-bit on the common path.
+fn ref_stencil5(x: &Tensor) -> Result<Tensor> {
+    let (mr, mc) = halo_dims("stencil5", x)?;
+    let n = mc + 2;
+    let mut y = Tensor::zeros(vec![mr, mc]);
+    for r in 0..mr {
+        for c in 0..mc {
+            let up = x.data[r * n + (c + 1)];
+            let down = x.data[(r + 2) * n + (c + 1)];
+            let left = x.data[(r + 1) * n + c];
+            let right = x.data[(r + 1) * n + (c + 2)];
+            y.data[r * mc + c] = 0.25 * (up + down + left + right);
+        }
+    }
+    Ok(y)
+}
+
+/// `block_reduce_ref`: `[sum, sumsq]`. Accumulated in f64 (matching XLA's
+/// better-than-naive reduction accuracy), rounded to f32 at the end.
+fn ref_block_reduce(data: &[f32]) -> Tensor {
+    let mut sum = 0f64;
+    let mut sumsq = 0f64;
+    for &v in data {
+        sum += v as f64;
+        sumsq += (v as f64) * (v as f64);
+    }
+    Tensor { shape: vec![2], data: vec![sum as f32, sumsq as f32] }
+}
+
+/// `matmul_tile_ref` + accumulator: `c + a @ b` in f32.
+fn ref_matmul_acc(a: &Tensor, b: &Tensor, c: &Tensor) -> Result<Tensor> {
+    let (m, ka) = dims2("matmul_tile lhs", a)?;
+    let (kb, n) = dims2("matmul_tile rhs", b)?;
+    let (cm, cn) = dims2("matmul_tile acc", c)?;
+    if ka != kb || cm != m || cn != n {
+        return Err(anyhow!(
+            "matmul_tile: incompatible shapes {:?} x {:?} + {:?}",
+            a.shape,
+            b.shape,
+            c.shape
+        ));
+    }
+    let mut out = c.data.clone();
+    for i in 0..m {
+        let a_row = &a.data[i * ka..(i + 1) * ka];
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for (k, &a_ik) in a_row.iter().enumerate() {
+            let b_row = &b.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                out_row[j] += a_ik * b_row[j];
+            }
+        }
+    }
+    Ok(Tensor { shape: vec![m, n], data: out })
+}
+
+impl Backend for ReferenceBackend {
+    fn platform(&self) -> &str {
+        "reference"
+    }
+
+    fn load(&mut self, name: &str) -> Result<()> {
+        if KERNELS.contains(&name) {
+            Ok(())
+        } else {
+            Err(anyhow!("unknown kernel `{name}` (have: {KERNELS:?})"))
+        }
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // single gate for the kernel set (keeps load/execute in agreement)
+        self.load(name)?;
+        match name {
+            "stencil5" => {
+                want_inputs(name, inputs, 1)?;
+                Ok(vec![ref_stencil5(&inputs[0])?])
+            }
+            "jacobi_step" => {
+                want_inputs(name, inputs, 1)?;
+                let x = &inputs[0];
+                let y = ref_stencil5(x)?;
+                let (mr, mc) = (y.shape[0], y.shape[1]);
+                let n = mc + 2;
+                // d = y - x[1:-1, 1:-1], reduced to [sum, sumsq]
+                let mut diff = Vec::with_capacity(mr * mc);
+                for r in 0..mr {
+                    for c in 0..mc {
+                        diff.push(y.data[r * mc + c] - x.data[(r + 1) * n + (c + 1)]);
+                    }
+                }
+                let res = ref_block_reduce(&diff);
+                Ok(vec![y, res])
+            }
+            "matmul_tile" => {
+                want_inputs(name, inputs, 3)?;
+                Ok(vec![ref_matmul_acc(&inputs[0], &inputs[1], &inputs[2])?])
+            }
+            "block_reduce" => {
+                want_inputs(name, inputs, 1)?;
+                Ok(vec![ref_block_reduce(&inputs[0].data)])
+            }
+            _ => unreachable!("load() vetted `{name}` against KERNELS"),
+        }
+    }
+}
+
+// ------------------------------------------------------------ XLA backend
+
+/// PJRT-backed execution of the AOT artifacts (cargo feature `xla`).
+#[cfg(feature = "xla")]
+pub mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{Backend, Tensor};
+
+    fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+    }
+
+    /// The PJRT runtime: one CPU client + a cache of compiled executables,
+    /// rooted at an artifacts directory (the pattern of
+    /// /opt/xla-example/load_hlo).
+    pub struct XlaBackend {
+        client: xla::PjRtClient,
+        platform: String,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        dir: PathBuf,
+    }
+
+    impl XlaBackend {
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let platform = client.platform_name();
+            Ok(Self {
+                client,
+                platform,
+                exes: HashMap::new(),
+                dir: artifacts_dir.as_ref().to_path_buf(),
+            })
+        }
+    }
+
+    impl Backend for XlaBackend {
+        fn platform(&self) -> &str {
+            &self.platform
+        }
+
+        /// Load + compile `<name>.hlo.txt` (cached).
+        fn load(&mut self, name: &str) -> Result<()> {
+            if !self.exes.contains_key(name) {
+                let path = self.dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+                )
+                .with_context(|| format!("load {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.exes.insert(name.to_string(), exe);
+            }
+            Ok(())
+        }
+
+        fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            self.load(name)?;
+            let exe = &self.exes[name];
+            let lits: Vec<xla::Literal> =
+                inputs.iter().map(to_literal).collect::<Result<_>>()?;
+            let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape()?;
+                    let dims: Vec<usize> =
+                        shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit.to_vec::<f32>()?;
+                    Tensor::new(dims, data)
+                })
+                .collect()
+        }
+    }
+}
+
+// ---------------------------------------------------------------- runtime
+
+/// The runtime facade the rest of the system talks to: a boxed
+/// [`Backend`] behind the stable `load`/`run` API.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, Executable>,
-    dir: PathBuf,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
+    /// The pure-Rust reference backend (always available, hermetic).
+    pub fn reference() -> Self {
+        Self { backend: Box::new(ReferenceBackend::new()) }
+    }
+
+    /// Wrap an explicit backend.
+    pub fn with_backend(backend: Box<dyn Backend>) -> Self {
+        Self { backend }
+    }
+
+    /// Runtime rooted at an artifacts directory.
+    ///
+    /// With the `xla` feature this builds the PJRT backend, verifying the
+    /// AOT artifacts exist up front so a missing `make artifacts` fails
+    /// with a clear message instead of on the first `load()`. Without the
+    /// feature (the default) the directory is informational only and the
+    /// reference backend serves every kernel.
+    #[cfg(feature = "xla")]
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            exes: HashMap::new(),
-            dir: artifacts_dir.as_ref().to_path_buf(),
-        })
+        let dir = artifacts_dir.as_ref();
+        let missing: Vec<String> = KERNELS
+            .iter()
+            .filter(|name| !dir.join(format!("{name}.hlo.txt")).exists())
+            .map(|name| format!("{name}.hlo.txt"))
+            .collect();
+        if !missing.is_empty() {
+            return Err(anyhow!(
+                "AOT artifacts missing from `{}`: {}. Run `make artifacts` to \
+                 lower them with python/compile/aot.py, or build without the \
+                 `xla` feature to use the pure-Rust reference backend \
+                 (Runtime::reference())",
+                dir.display(),
+                missing.join(", ")
+            ));
+        }
+        Ok(Self { backend: Box::new(pjrt::XlaBackend::new(dir)?) })
+    }
+
+    /// See the `xla`-feature variant; the default build always uses the
+    /// reference backend and cannot fail.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifacts_dir.as_ref();
+        Ok(Self::reference())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform().to_string()
     }
 
-    /// Load + compile `<name>.hlo.txt` (cached).
-    pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.exes.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .with_context(|| format!("load {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.exes
-                .insert(name.to_string(), Executable { exe, name: name.to_string() });
-        }
-        Ok(&self.exes[name])
+    /// Prepare a kernel (compile/validate); cached.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        self.backend.load(name)
     }
 
-    /// Execute a loaded artifact on f32 tensors; returns the tuple
-    /// elements.
+    /// Execute a kernel on f32 tensors; returns the tuple elements.
     pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        self.load(name)?;
-        let exe = &self.exes[name];
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape()?;
-                let dims: Vec<usize> =
-                    shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>()?;
-                Tensor::new(dims, data)
-            })
-            .collect()
+        self.backend.execute(name, inputs)
     }
 }
 
@@ -139,12 +406,8 @@ impl Runtime {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn have_artifacts() -> bool {
-        artifacts_dir().join("stencil5.hlo.txt").exists()
+    fn runtime() -> Runtime {
+        Runtime::reference()
     }
 
     #[test]
@@ -159,12 +422,18 @@ mod tests {
     }
 
     #[test]
-    fn stencil_artifact_matches_cpu_reference() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
+    fn unknown_kernel_is_an_error() {
+        let mut rt = runtime();
+        assert!(rt.load("nope").is_err());
+        assert!(rt.run("nope", &[]).is_err());
+        for k in KERNELS {
+            rt.load(k).unwrap();
         }
-        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    }
+
+    #[test]
+    fn stencil_matches_cpu_reference_at_block_256() {
+        let mut rt = runtime();
         let n = BLOCK + 2;
         let mut x = Tensor::zeros(vec![n, n]);
         for (i, v) in x.data.iter_mut().enumerate() {
@@ -174,7 +443,7 @@ mod tests {
         assert_eq!(out.len(), 1);
         let y = &out[0];
         assert_eq!(y.shape, vec![BLOCK, BLOCK]);
-        // spot-check the stencil at a few interior points
+        // spot-check the stencil at interior points (ref.py semantics)
         let at = |r: usize, c: usize| x.data[r * n + c];
         for &(r, c) in &[(1usize, 1usize), (5, 9), (200, 17), (256, 256)] {
             let want = 0.25 * (at(r - 1, c) + at(r + 1, c) + at(r, c - 1) + at(r, c + 1));
@@ -183,14 +452,32 @@ mod tests {
         }
     }
 
+    /// Golden values for stencil5 on a constant-1 field with zero halo:
+    /// deep interior stays exactly 1.0, output corners see two zero halo
+    /// neighbours (0.5), edge midpoints one (0.75). These are exact in
+    /// f32 and pin the ref.py slicing conventions.
     #[test]
-    fn matmul_artifact_accumulates() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
+    fn stencil_golden_constant_field() {
+        let mut rt = runtime();
+        let n = BLOCK + 2;
+        let mut x = Tensor::zeros(vec![n, n]);
+        for r in 1..=BLOCK {
+            for c in 1..=BLOCK {
+                x.data[r * n + c] = 1.0;
+            }
         }
-        let mut rt = Runtime::new(artifacts_dir()).unwrap();
-        // identity @ identity + identity = 2*identity
+        let y = rt.run("stencil5", &[x]).unwrap().remove(0);
+        assert_eq!(y.data[0], 0.5); // corner (0,0)
+        assert_eq!(y.data[BLOCK - 1], 0.5); // corner (0, B-1)
+        assert_eq!(y.data[BLOCK / 2], 0.75); // top edge midpoint
+        assert_eq!(y.data[(BLOCK / 2) * BLOCK + BLOCK / 2], 1.0); // interior
+        assert_eq!(y.data[(BLOCK - 1) * BLOCK + BLOCK - 1], 0.5); // far corner
+    }
+
+    #[test]
+    fn matmul_golden_identity_accumulates() {
+        let mut rt = runtime();
+        // identity @ identity + identity = 2*identity (exact in f32)
         let mut eye = Tensor::zeros(vec![BLOCK, BLOCK]);
         for i in 0..BLOCK {
             eye.data[i * BLOCK + i] = 1.0;
@@ -199,17 +486,41 @@ mod tests {
             .run("matmul_tile", &[eye.clone(), eye.clone(), eye.clone()])
             .unwrap();
         let c = &out[0];
-        assert!((c.data[0] - 2.0).abs() < 1e-6);
-        assert!((c.data[1]).abs() < 1e-6);
+        assert_eq!(c.shape, vec![BLOCK, BLOCK]);
+        assert_eq!(c.data[0], 2.0);
+        assert_eq!(c.data[1], 0.0);
+        assert_eq!(c.data[BLOCK * BLOCK - 1], 2.0);
+    }
+
+    #[test]
+    fn matmul_matches_naive_oracle() {
+        let mut rt = runtime();
+        let mut rng = crate::util::XorShift64::new(11);
+        let rand_block = |rng: &mut crate::util::XorShift64| {
+            let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
+            for v in t.data.iter_mut() {
+                *v = (rng.below(100) as f32 - 50.0) / 50.0;
+            }
+            t
+        };
+        let a = rand_block(&mut rng);
+        let b = rand_block(&mut rng);
+        let c = rand_block(&mut rng);
+        let out = rt.run("matmul_tile", &[a.clone(), b.clone(), c.clone()]).unwrap();
+        let got = &out[0];
+        for &(r, col) in &[(0usize, 0usize), (1, 5), (100, 200), (255, 255), (17, 93)] {
+            let mut want = c.data[r * BLOCK + col] as f64;
+            for k in 0..BLOCK {
+                want += a.data[r * BLOCK + k] as f64 * b.data[k * BLOCK + col] as f64;
+            }
+            let g = got.data[r * BLOCK + col] as f64;
+            assert!((g - want).abs() < 1e-3, "({r},{col}): {g} vs {want}");
+        }
     }
 
     #[test]
     fn jacobi_step_returns_residual() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let mut rt = runtime();
         let n = BLOCK + 2;
         let mut x = Tensor::zeros(vec![n, n]);
         x.data[n * (n / 2) + n / 2] = 100.0; // a spike
@@ -221,18 +532,73 @@ mod tests {
         assert!(out[1].data[1] > 0.0);
     }
 
+    /// Golden values for jacobi_step on the spike field: the spike cell
+    /// loses all its heat (update -100), its four neighbours each gain 25
+    /// — so sum(d) = 0 and sumsq(d) = 100^2 + 4*25^2 = 12500, exact.
     #[test]
-    fn block_reduce_artifact() {
-        if !have_artifacts() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    fn jacobi_step_golden_spike() {
+        let mut rt = runtime();
+        let n = BLOCK + 2;
+        let mut x = Tensor::zeros(vec![n, n]);
+        x.data[n * (n / 2) + n / 2] = 100.0;
+        let out = rt.run("jacobi_step", &[x]).unwrap();
+        let res = &out[1];
+        assert_eq!(res.data[0], 0.0);
+        assert_eq!(res.data[1], 12500.0);
+        // the spiked cell itself is swept to 0; each neighbour holds 25
+        let y = &out[0];
+        let (r, c) = (n / 2 - 1, n / 2 - 1); // spike in output coords
+        assert_eq!(y.data[r * BLOCK + c], 0.0);
+        assert_eq!(y.data[(r - 1) * BLOCK + c], 25.0);
+        assert_eq!(y.data[r * BLOCK + c + 1], 25.0);
+    }
+
+    #[test]
+    fn block_reduce_golden() {
+        let mut rt = runtime();
         let mut x = Tensor::zeros(vec![BLOCK, BLOCK]);
         x.data.fill(2.0);
         let out = rt.run("block_reduce", &[x]).unwrap();
         let n = (BLOCK * BLOCK) as f32;
-        assert!((out[0].data[0] - 2.0 * n).abs() < 1.0);
-        assert!((out[0].data[1] - 4.0 * n).abs() < 1.0);
+        // exact: 2*65536 and 4*65536 are representable f32 integers
+        assert_eq!(out[0].shape, vec![2]);
+        assert_eq!(out[0].data[0], 2.0 * n);
+        assert_eq!(out[0].data[1], 4.0 * n);
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let mut rt = runtime();
+        // stencil needs a rank-2 input big enough to carry a halo
+        assert!(rt.run("stencil5", &[Tensor::zeros(vec![4])]).is_err());
+        assert!(rt.run("stencil5", &[Tensor::zeros(vec![2, 5])]).is_err());
+        // rectangular halo blocks are fine (ref.py is shape-agnostic)
+        let y = rt.run("stencil5", &[Tensor::zeros(vec![4, 5])]).unwrap();
+        assert_eq!(y[0].shape, vec![2, 3]);
+        // matmul needs compatible shapes
+        let a = Tensor::zeros(vec![4, 3]);
+        let b = Tensor::zeros(vec![4, 4]);
+        let c = Tensor::zeros(vec![4, 4]);
+        assert!(rt.run("matmul_tile", &[a, b, c]).is_err());
+        // and exactly 3 inputs
+        assert!(rt
+            .run("matmul_tile", &[Tensor::zeros(vec![2, 2])])
+            .is_err());
+    }
+
+    #[test]
+    fn runtime_new_defaults_to_reference_without_xla() {
+        #[cfg(not(feature = "xla"))]
+        {
+            let rt = Runtime::new("definitely/not/a/dir").unwrap();
+            assert_eq!(rt.platform(), "reference");
+        }
+        #[cfg(feature = "xla")]
+        {
+            // without artifacts the error must point at `make artifacts`
+            let err = Runtime::new("definitely/not/a/dir").err().unwrap();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+        }
     }
 }

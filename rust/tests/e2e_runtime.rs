@@ -1,7 +1,7 @@
-//! End-to-end three-layer tests: blocks flow ViPIOS -> PJRT (AOT
-//! Pallas/JAX artifacts) -> ViPIOS, validated against in-memory oracles.
-//!
-//! Requires `make artifacts` (skipped gracefully otherwise).
+//! End-to-end three-layer tests: blocks flow ViPIOS -> compute backend
+//! (reference interpreter by default, PJRT AOT artifacts under the `xla`
+//! feature) -> ViPIOS, validated against in-memory oracles. Hermetic: no
+//! Python, no XLA, no artifacts required on the default feature set.
 
 use vipios::modes::ServerPool;
 use vipios::ooc::{jacobi_sweep, jacobi_sweep_oracle, BlockedArray};
@@ -9,25 +9,30 @@ use vipios::runtime::{Runtime, Tensor, BLOCK};
 use vipios::server::ServerConfig;
 use vipios::util::XorShift64;
 
+/// Repo-root `artifacts/` — where `make artifacts` writes the AOT output
+/// (the crate lives in `rust/`, one level below).
 fn artifacts_dir() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("artifacts")
 }
 
-fn have_artifacts() -> bool {
-    artifacts_dir().join("jacobi_step.hlo.txt").exists()
+/// Reference backend on the default features; the PJRT artifact backend
+/// under `--features xla`. With `xla` enabled a broken artifact/PJRT
+/// setup must fail the tests loudly — silently falling back to the
+/// reference backend would validate nothing.
+fn runtime() -> Runtime {
+    Runtime::new(artifacts_dir())
+        .expect("runtime init failed (with --features xla, run `make artifacts` first)")
 }
 
 #[test]
 fn ooc_jacobi_matches_in_memory_oracle() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let nb = 2;
     let edge = nb * BLOCK;
     let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
     let mut c = pool.client().unwrap();
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = runtime();
 
     // random initial field
     let mut rng = XorShift64::new(42);
@@ -82,15 +87,11 @@ fn ooc_jacobi_matches_in_memory_oracle() {
 
 #[test]
 fn ooc_matmul_blocks_match_reference() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    // C = A @ B with 2x2 blocks of BLOCK^2, all through ViPIOS + PJRT
+    // C = A @ B with 2x2 blocks of BLOCK^2, all through ViPIOS + backend
     let nb = 2;
     let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
     let mut c = pool.client().unwrap();
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = runtime();
 
     let mut rng = XorShift64::new(7);
     let mut rand_block = || {
@@ -158,13 +159,9 @@ fn ooc_matmul_blocks_match_reference() {
 
 #[test]
 fn block_reduce_checksum_through_vipios() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
     let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
     let mut c = pool.client().unwrap();
-    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let mut rt = runtime();
     let arr = BlockedArray::create(&mut c, "ck", 1).unwrap();
     let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
     t.data.fill(0.5);

@@ -1,0 +1,98 @@
+//! Property tests for the runtime tensor type: `to_bytes`/`from_bytes`
+//! must round-trip for arbitrary shapes, and every shape/length mismatch
+//! must be rejected (deterministic xorshift PRNG in place of proptest,
+//! which is not in the vendored crate set).
+
+use vipios::runtime::Tensor;
+use vipios::util::XorShift64;
+
+fn rand_shape(r: &mut XorShift64) -> Vec<usize> {
+    let rank = r.below(4) as usize; // rank 0..=3 (rank 0 = scalar, 1 elem)
+    (0..rank).map(|_| r.range(1, 9) as usize).collect()
+}
+
+fn rand_tensor(r: &mut XorShift64, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n)
+        .map(|_| (r.below(2_000_001) as f32 - 1_000_000.0) / 128.0)
+        .collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+#[test]
+fn bytes_roundtrip_arbitrary_shapes() {
+    let mut r = XorShift64::new(0x7E2507);
+    for case in 0..500 {
+        let shape = rand_shape(&mut r);
+        let t = rand_tensor(&mut r, shape.clone());
+        let bytes = t.to_bytes();
+        assert_eq!(bytes.len(), t.data.len() * 4, "case {case}");
+        let back = Tensor::from_bytes(shape, &bytes).unwrap();
+        assert_eq!(back, t, "case {case}");
+        // and the re-serialisation is byte-identical
+        assert_eq!(back.to_bytes(), bytes, "case {case}");
+    }
+}
+
+#[test]
+fn from_bytes_rejects_length_mismatch() {
+    let mut r = XorShift64::new(0xBAD5);
+    for case in 0..300 {
+        let shape = rand_shape(&mut r);
+        let n: usize = shape.iter().product();
+        let want = n * 4;
+        // any byte length != n*4 must error (try a few perturbations)
+        for delta in [1usize, 3, 4, want + 4] {
+            let bad_len = if r.chance(1, 2) {
+                want + delta
+            } else {
+                want.saturating_sub(delta)
+            };
+            if bad_len == want {
+                continue;
+            }
+            let bytes = vec![0u8; bad_len];
+            assert!(
+                Tensor::from_bytes(shape.clone(), &bytes).is_err(),
+                "case {case}: shape {shape:?} accepted {bad_len} bytes (want {want})"
+            );
+        }
+        // the exact length is accepted
+        assert!(Tensor::from_bytes(shape.clone(), &vec![0u8; want]).is_ok());
+    }
+}
+
+#[test]
+fn new_rejects_shape_data_mismatch() {
+    let mut r = XorShift64::new(0x5AFE);
+    for _ in 0..300 {
+        let shape = rand_shape(&mut r);
+        let n: usize = shape.iter().product();
+        let wrong = if r.chance(1, 2) { n + r.range(1, 5) as usize } else { n.saturating_sub(1) };
+        if wrong == n {
+            continue;
+        }
+        assert!(Tensor::new(shape, vec![0f32; wrong]).is_err());
+    }
+}
+
+#[test]
+fn zeros_matches_shape_and_serialises() {
+    let t = Tensor::zeros(vec![3, 5, 2]);
+    assert_eq!(t.data.len(), 30);
+    assert!(t.data.iter().all(|&v| v == 0.0));
+    let b = t.to_bytes();
+    assert_eq!(b.len(), 120);
+    assert!(b.iter().all(|&x| x == 0));
+    let back = Tensor::from_bytes(vec![3, 5, 2], &b).unwrap();
+    assert_eq!(back, t);
+}
+
+#[test]
+fn le_byte_order_is_pinned() {
+    // 1.0f32 = 0x3F800000 -> little-endian bytes [0, 0, 0x80, 0x3F]
+    let t = Tensor::new(vec![1], vec![1.0]).unwrap();
+    assert_eq!(t.to_bytes(), vec![0x00, 0x00, 0x80, 0x3F]);
+    let back = Tensor::from_bytes(vec![1], &[0x00, 0x00, 0x80, 0x3F]).unwrap();
+    assert_eq!(back.data, vec![1.0]);
+}

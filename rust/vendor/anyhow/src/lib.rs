@@ -1,0 +1,178 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The ViPIOS build is hermetic (DESIGN.md §3): a clean checkout must build
+//! with no network and no registry, so the one error-handling dependency is
+//! vendored as this small path crate. It covers exactly the surface the
+//! repository uses:
+//!
+//! * [`Result<T>`] / [`Error`] — dynamic error type, `Send + Sync`;
+//! * [`anyhow!`] / [`bail!`] — format-style error construction;
+//! * [`Context::context`] / [`Context::with_context`] — error wrapping;
+//! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`
+//!   (so `?` converts `std::io::Error` and friends);
+//! * `Display` prints the outermost message, `{:#}` prints the whole
+//!   `outer: inner: root` chain, `Debug` prints the chain in the
+//!   "Caused by" style — matching real-anyhow conventions that the CLI
+//!   and tests rely on.
+//!
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus a cause chain.
+///
+/// Deliberately *not* `std::error::Error` (exactly like real anyhow), so
+/// the blanket `From<E: std::error::Error>` below cannot overlap with the
+/// identity `From<Error> for Error`.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recently added) message; the last
+    /// element is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what [`Context`] uses).
+    #[must_use]
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow convention).
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Extension trait adding `context`/`with_context` to `Result`.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: boom");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().root_cause(), "boom");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn g() -> Result<()> {
+            bail!("nope: {}", 1 + 1)
+        }
+        assert_eq!(g().unwrap_err().to_string(), "nope: 2");
+    }
+
+    #[test]
+    fn with_context_wraps_anyhow_results_too() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "while testing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while testing: inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

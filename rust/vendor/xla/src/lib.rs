@@ -1,0 +1,203 @@
+//! Stub of the `xla` (xla-rs) API surface used by the vipios `xla` feature.
+//!
+//! The container/CI image has no XLA/PJRT toolchain, but the PJRT backend in
+//! `vipios::runtime` must keep *type-checking* so the real crate can be
+//! swapped in with a one-line `Cargo.toml` change (DESIGN.md §4). This crate
+//! mirrors exactly the types and signatures that backend uses:
+//!
+//! * entry points that would require a live PJRT runtime
+//!   ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) return a
+//!   descriptive [`Error`];
+//! * everything downstream of those entry points is statically unreachable,
+//!   which is encoded with an uninhabited field — no `unimplemented!` can
+//!   ever fire at run time;
+//! * [`Literal`] is genuinely functional (host-side f32 buffer + dims) since
+//!   it is constructed before any client call.
+
+use std::fmt;
+
+/// Error type matching xla-rs's `Error` role; converts into `anyhow::Error`
+/// via `std::error::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Self(format!(
+            "{what}: vipios was built against the vendored `xla` stub; point the \
+             `xla` dependency in rust/Cargo.toml at the real xla-rs crate (and \
+             install its PJRT runtime) to execute AOT artifacts, or use the \
+             default pure-Rust reference backend"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited marker: values of stub types past the failing entry points
+/// cannot exist.
+#[derive(Clone, Copy)]
+enum Void {}
+
+fn absurd<T>(v: Void) -> T {
+    match v {}
+}
+
+/// Types accepted by [`PjRtLoadedExecutable::execute`].
+pub trait BufferArgument {}
+
+impl BufferArgument for Literal {}
+
+/// A host-side typed array (functional in the stub: f32 data + dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Element types [`Literal`] can carry in the stub.
+pub trait NativeType: Copy {
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            data: v.iter().map(|&t| t.to_f32()).collect(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. Tuple literals only come out of
+    /// [`PjRtBuffer::to_literal_sync`], which cannot exist in the stub.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&f| T::from_f32(f)).collect())
+    }
+}
+
+/// Array shape (dims in elements).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (text format).
+pub struct HloModuleProto(Void);
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation built from an [`HloModuleProto`].
+pub struct XlaComputation(Void);
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        absurd(proto.0)
+    }
+}
+
+/// A PJRT client (CPU platform in vipios's use).
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        absurd(self.0)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        absurd(self.0)
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    /// Execute on device buffers created from `args`; returns per-device,
+    /// per-output buffers (vipios uses `[0][0]`).
+    pub fn execute<L: BufferArgument>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        absurd(self.0)
+    }
+}
+
+/// A device buffer.
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        absurd(self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn entry_points_fail_with_guidance() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
