@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::access::AccessDesc;
 use crate::hints::Hint;
+use crate::layout::Distribution;
 use crate::msg::{
     Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
     Role, ServerStats, View, World,
@@ -71,6 +72,17 @@ pub enum IoState {
     Failed,
     /// Result already collected by a prior `wait`.
     Collected,
+}
+
+/// What a physical redistribution cost (`Vipios_Redistribute`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReorgReport {
+    /// Bytes that crossed servers in the shuffle (bytes that were
+    /// already in place are copied locally and not counted).
+    pub bytes_moved: u64,
+    /// Reorg DI messages the shuffle took (3 control rounds per server
+    /// plus the batched data messages).
+    pub messages: u64,
 }
 
 /// Completed async operation result.
@@ -325,6 +337,23 @@ impl Client {
         match self.wait(op)? {
             OpResult::Admin(Response::Size { .. }) => Ok(()),
             other => bail!("set_size failed: {other:?}"),
+        }
+    }
+
+    /// Physically move the file's fragments to the `target` distribution
+    /// — the paper's "redistribution of data stored on disks" (§3.1),
+    /// executed as a server-to-server two-phase shuffle
+    /// ([`crate::reorg`]). Blocks until the new layout is committed on
+    /// every server; concurrent readers see the old or the new layout,
+    /// never torn data.
+    pub fn redistribute(&mut self, h: Vfh, target: Distribution) -> Result<ReorgReport> {
+        let file = self.state(h)?.file;
+        let op = self.send_admin(self.buddy, Request::Redistribute { file, target })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::Redistributed { bytes_moved, messages }) => {
+                Ok(ReorgReport { bytes_moved, messages })
+            }
+            other => bail!("redistribute failed: {other:?}"),
         }
     }
 

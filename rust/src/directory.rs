@@ -38,6 +38,11 @@ pub struct FileMeta {
     /// Logical size in bytes. Authoritative on the home server; cached
     /// (refresh on open/sync) elsewhere — MPI-IO consistency semantics.
     pub size: u64,
+    /// Layout generation, bumped at every committed physical
+    /// redistribution. Internal data requests carry the sender's meta,
+    /// so a server can tell a stale peer view of the layout from the
+    /// current one and reroute it (see [`crate::reorg`]).
+    pub epoch: u64,
 }
 
 impl FileMeta {
@@ -203,6 +208,7 @@ mod tests {
             distribution: Distribution::Cyclic { chunk: 16 },
             servers: vec![Rank(0), Rank(1)],
             size: 0,
+            epoch: 0,
         }
     }
 

@@ -95,13 +95,8 @@ pub fn choose_distribution(
     nservers: u32,
 ) -> Distribution {
     match hint {
-        Some(h) => match h.distribution {
-            // normalise degenerate hints
-            Distribution::Contiguous { server } => Distribution::Contiguous {
-                server: server.min(nservers.saturating_sub(1)),
-            },
-            d => d,
-        },
+        // normalise degenerate hints
+        Some(h) => h.distribution.normalized(nservers),
         None => Distribution::default_heuristic(),
     }
 }
@@ -119,6 +114,7 @@ mod tests {
             distribution: dist,
             servers: (0..nserv).map(Rank).collect(),
             size: 1 << 20,
+            epoch: 0,
         }
     }
 

@@ -15,6 +15,13 @@ use crate::msg::FileId;
 /// File-administration hint: how the application's SPMD processes will
 /// access a file, so the physical layout can match the problem
 /// distribution (the *static fit*).
+///
+/// For a file that does not exist yet, the hint steers the preparation
+/// phase's layout decision. For a file that *already* exists with a
+/// different layout, it triggers the automatic physical redistribution
+/// path: the servers move the bytes with the [`crate::reorg`] shuffle in
+/// the background (the paper's "redistribution of data stored on
+/// disks").
 #[derive(Debug, Clone, PartialEq)]
 pub struct FileAdminHint {
     /// File (by name, since the hint may precede OPEN — preparation

@@ -36,6 +36,21 @@ impl Distribution {
         Distribution::Block { part: size.div_ceil(n).max(1) }
     }
 
+    /// Clamp degenerate parameters to the canonical layout they behave
+    /// as (`locate` already saturates internally): an out-of-range
+    /// Contiguous owner, and zero chunk/part. Both the preparation-phase
+    /// layout decision and redistribution targets normalise through
+    /// here, so `==` means "same physical layout".
+    pub fn normalized(self, nservers: u32) -> Self {
+        match self {
+            Distribution::Contiguous { server } => Distribution::Contiguous {
+                server: server.min(nservers.saturating_sub(1)),
+            },
+            Distribution::Cyclic { chunk } => Distribution::Cyclic { chunk: chunk.max(1) },
+            Distribution::Block { part } => Distribution::Block { part: part.max(1) },
+        }
+    }
+
     /// Map a logical byte offset to `(server_index, server_local_offset)`.
     ///
     /// `server_index` is an index into the file's server list (not a
@@ -96,6 +111,90 @@ impl Distribution {
                 }
             }
         }
+    }
+
+    /// Bytes of logical `[0, size)` that land on `server` — the dense
+    /// length of that server's fragment. Redistribution sizes shadow
+    /// fragments with it; closed-form so it stays O(1) per server.
+    pub fn server_share(&self, nservers: u32, server: u32, size: u64) -> u64 {
+        if size == 0 {
+            return 0;
+        }
+        let n = nservers.max(1) as u64;
+        let s = server as u64;
+        match *self {
+            Distribution::Contiguous { server: owner } => {
+                if owner % nservers.max(1) == server {
+                    size
+                } else {
+                    0
+                }
+            }
+            Distribution::Cyclic { chunk } => {
+                let c = chunk.max(1);
+                let full = size / c; // complete chunks
+                let rem = size % c;
+                let mut share = (full / n) * c;
+                if full % n > s {
+                    share += c;
+                }
+                if full % n == s {
+                    share += rem; // the partial chunk
+                }
+                share
+            }
+            Distribution::Block { part } => {
+                let p = part.max(1);
+                if s + 1 == n {
+                    // last server absorbs the tail beyond part*n
+                    size.saturating_sub(s * p)
+                } else {
+                    size.saturating_sub(s * p).min(p)
+                }
+            }
+        }
+    }
+
+    /// Longest run starting at a server's `local` byte (capped at `len`)
+    /// whose logical image is contiguous — the local-side counterpart of
+    /// [`run_len`](Self::run_len). Redistribution and stale-request
+    /// translation walk fragments with it.
+    pub fn local_run_len(&self, local: u64, len: u64) -> u64 {
+        match *self {
+            // one server's block (tail included) is a single logical range
+            Distribution::Contiguous { .. } | Distribution::Block { .. } => len,
+            Distribution::Cyclic { chunk } => {
+                let c = chunk.max(1);
+                (c - local % c).min(len)
+            }
+        }
+    }
+
+    /// Enumerate the logical image of a server's local range
+    /// `[local, local+len)` as `(logical_offset, len)` runs in local
+    /// order — the inverse-side companion of [`extents`](Self::extents),
+    /// used by redistribution to map fragment bytes back to file space.
+    pub fn logical_extents(
+        &self,
+        nservers: u32,
+        server: u32,
+        local: u64,
+        len: u64,
+    ) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        let mut o = local;
+        let mut rem = len;
+        while rem > 0 {
+            let run = self.local_run_len(o, rem);
+            let log = self.logical(nservers, server, o);
+            match out.last_mut() {
+                Some((lo, ll)) if *lo + *ll == log => *ll += run,
+                _ => out.push((log, run)),
+            }
+            o += run;
+            rem -= run;
+        }
+        out
     }
 
     /// Decompose logical `[off, off+len)` into per-server extents
@@ -202,6 +301,48 @@ mod tests {
         let ex = d.extents(5, 2, 31);
         let total: u64 = ex.iter().map(|e| e.2).sum();
         assert_eq!(total, 31);
+    }
+
+    #[test]
+    fn server_share_matches_extents_sum() {
+        for d in [
+            Distribution::Contiguous { server: 2 },
+            Distribution::Cyclic { chunk: 10 },
+            Distribution::Block { part: 25 },
+        ] {
+            for nservers in 1..=4u32 {
+                for size in [0u64, 1, 9, 10, 25, 99, 100, 101, 250] {
+                    let ex = d.extents(nservers, 0, size);
+                    for srv in 0..nservers {
+                        let want: u64 = ex
+                            .iter()
+                            .filter(|e| e.0 == srv)
+                            .map(|e| e.2)
+                            .sum();
+                        assert_eq!(
+                            d.server_share(nservers, srv, size),
+                            want,
+                            "{d:?} n={nservers} srv={srv} size={size}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logical_extents_inverts_extents() {
+        let d = Distribution::Cyclic { chunk: 10 };
+        // srv0 local [0,25) = file [0,10) + [40,50) + [80,85)
+        assert_eq!(
+            d.logical_extents(4, 0, 0, 25),
+            vec![(0, 10), (40, 10), (80, 5)]
+        );
+        // Block tail stays one logical run
+        let b = Distribution::Block { part: 25 };
+        assert_eq!(b.logical_extents(2, 1, 15, 100), vec![(40, 100)]);
+        // single server: everything coalesces
+        assert_eq!(d.logical_extents(1, 0, 3, 30), vec![(3, 30)]);
     }
 
     #[test]

@@ -122,6 +122,15 @@ pub enum Request {
         file: FileId,
     },
     Hint(Hint),
+    /// ER (or buddy-forwarded DI): physically move `file`'s fragments to
+    /// the `target` distribution with the two-phase server shuffle
+    /// ([`crate::reorg`]). Routed to the file's home server, which
+    /// coordinates and ACKs `Redistributed` directly to the client VI.
+    /// `req_id == 0` marks the hint-driven automatic path (no VI waits).
+    Redistribute {
+        file: FileId,
+        target: crate::layout::Distribution,
+    },
     /// Directory/stat inquiry (admin interface).
     Stat,
     Shutdown,
@@ -172,6 +181,29 @@ pub enum Request {
     },
     /// BI: drop all local state of a removed file.
     RemoveInt { file: FileId },
+
+    // ---- reorg protocol (coordinator = home server; DESIGN.md §4.1) ----
+    /// DI round 1: enter the reorg window. Participants defer client
+    /// writes and keep serving reads from the old layout; the freeze
+    /// acks double as the mailbox-order barrier that guarantees every
+    /// pre-window write is on disk before shipping starts.
+    ReorgFreeze {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        target: crate::layout::Distribution,
+    },
+    /// DI round 2: compute the ship plan against the authoritative
+    /// `size` and move the data ([`crate::reorg::ship_plan`]).
+    ReorgShip { file: FileId, size: u64 },
+    /// DI between participants: apply these `(new_local, data)` runs to
+    /// the shadow fragment. Batched at [`crate::reorg::SHIP_BATCH`].
+    ReorgData {
+        file: FileId,
+        parts: Vec<(u64, Vec<u8>)>,
+    },
+    /// DI round 3: the commit point — swap the shadow fragment in, bump
+    /// the layout epoch, replay deferred writes under the new layout.
+    ReorgCommit { file: FileId },
 }
 
 /// Per-server counters reported by `Request::Stat`.
@@ -187,6 +219,11 @@ pub struct ServerStats {
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
     pub disk_time_us: u64,
+    /// Bytes this server shipped to peers in reorg shuffles (kept out of
+    /// `bytes_read`/`bytes_written`, which count client traffic only).
+    pub reorg_bytes_shipped: u64,
+    /// `ReorgData` DI messages this server sent.
+    pub reorg_di_msgs: u64,
 }
 
 /// Response bodies (ACK payloads).
@@ -211,6 +248,18 @@ pub enum Response {
     Size { size: u64 },
     Synced,
     HintAck,
+    /// Reorg window entered (participant -> coordinator).
+    ReorgFrozen,
+    /// Ship phase done; `bytes`/`msgs` = `ReorgData` payload this
+    /// participant sent to peers (participant -> coordinator).
+    ReorgShipped { bytes: u64, msgs: u64 },
+    /// `ReorgData` batch applied to the shadow (receiver -> shipper).
+    ReorgDataAck,
+    /// New layout committed locally (participant -> coordinator).
+    ReorgCommitted,
+    /// Redistribution complete (coordinator -> client VI): bytes that
+    /// crossed servers and reorg DI messages (control + data) it took.
+    Redistributed { bytes_moved: u64, messages: u64 },
     Stats(Box<ServerStats>),
     /// Request failed; `Vipios_IOState` surfaces this.
     Error { msg: String },

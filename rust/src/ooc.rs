@@ -35,8 +35,12 @@ impl BlockedArray {
         Ok(Self { name: name.to_string(), nb, handle })
     }
 
+    /// Open an existing blocked array. Unlike [`BlockedArray::create`]
+    /// this errors when the array does not exist — silently creating an
+    /// empty array here would turn a typo into an all-zeros input.
     pub fn open(client: &mut Client, name: &str, nb: usize) -> Result<Self> {
-        let handle = client.open(name, OpenMode::rdwr_create())?;
+        let mode = OpenMode { read: true, write: true, create: false, exclusive: false };
+        let handle = client.open(name, mode)?;
         Ok(Self { name: name.to_string(), nb, handle })
     }
 
@@ -291,6 +295,22 @@ mod tests {
         assert_eq!(h.data[1 * n], 0.0); // left boundary -> zero
         assert_eq!(h.data[1 * n + n - 1], 2.0); // right halo from (0,1)
         assert_eq!(h.data[(n - 1) * n + 1], 3.0); // bottom halo from (1,0)
+        pool.shutdown().unwrap();
+    }
+
+    #[test]
+    fn open_missing_array_errors_instead_of_creating() {
+        let pool = ServerPool::start(1, ServerConfig::default()).unwrap();
+        let mut c = pool.client().unwrap();
+        assert!(
+            BlockedArray::open(&mut c, "never-created", 2).is_err(),
+            "open must not silently create an empty array"
+        );
+        // and it did not leave a file behind
+        assert!(BlockedArray::open(&mut c, "never-created", 2).is_err());
+        // create-then-open round-trips
+        BlockedArray::create(&mut c, "exists", 2).unwrap();
+        BlockedArray::open(&mut c, "exists", 2).unwrap();
         pool.shutdown().unwrap();
     }
 

@@ -1,0 +1,213 @@
+//! Physical redistribution planning — the shuffle side of the paper's
+//! "redistribution of data stored on disks" headline capability (§3.1).
+//!
+//! E7a proved the *logical* half: a BLOCK-written file can be read
+//! through CYCLIC views with no client-side repartitioning. This module
+//! plans the *physical* half: moving a file's fragments from one
+//! [`Distribution`] to another with an all-to-all server shuffle, the
+//! same reorganization two-phase I/O performs between its I/O and
+//! communication phases (Thakur et al., *Optimizing Noncontiguous
+//! Accesses in MPI-IO*) — except the exchange runs server-to-server, as
+//! PVFS argues for noncontiguous I/O, instead of bouncing through a
+//! client.
+//!
+//! The planner is pure layout algebra (no I/O): every server derives,
+//! from `locate`/`logical`/`run_len` alone, the minimal set of
+//! contiguous runs it must ship to each peer. The execution state
+//! machine lives in [`crate::server`]; the protocol is documented in
+//! DESIGN.md §4.1.
+
+use crate::layout::Distribution;
+
+/// Max payload bytes of one `ReorgData` DI message. Batching bounds the
+/// per-message memory and pipelines the shuffle: the receiver applies
+/// batch *k* to its shadow fragment while the sender is still reading
+/// batch *k+1* from disk (the double-buffering of two-phase I/O). Note
+/// there is no end-to-end flow control yet — a sender enqueues its whole
+/// cross-server share before waiting for acks, so a receiver slower than
+/// the sender's disk reads buffers the difference in its mailbox
+/// (windowed shipping is future work; see DESIGN.md §4.1).
+pub const SHIP_BATCH: u64 = 1 << 20;
+
+/// One contiguous run a server must move: `len` bytes sitting at
+/// `src_local` in its fragment under the old layout that belong at
+/// `dst_local` on server index `dest` under the new one. `dest` may be
+/// the shipper itself (the bytes change position, not server).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShipRun {
+    pub dest: u32,
+    pub src_local: u64,
+    pub dst_local: u64,
+    pub len: u64,
+}
+
+/// The ship plan of server `me`: walk logical `[0, size)` once, keep the
+/// stretches `old` places on `me`, and split them wherever either layout
+/// breaks contiguity. Runs come out in ascending `src_local` order,
+/// coalesced when source and destination advance together — the minimal
+/// run set for this server pair of layouts.
+pub fn ship_plan(
+    old: &Distribution,
+    new: &Distribution,
+    nservers: u32,
+    size: u64,
+    me: u32,
+) -> Vec<ShipRun> {
+    let mut out: Vec<ShipRun> = Vec::new();
+    let mut off = 0u64;
+    while off < size {
+        let rem = size - off;
+        let run = old
+            .run_len(nservers, off, rem)
+            .min(new.run_len(nservers, off, rem));
+        let (osrv, olocal) = old.locate(nservers, off);
+        if osrv == me {
+            let (nsrv, nlocal) = new.locate(nservers, off);
+            match out.last_mut() {
+                Some(r)
+                    if r.dest == nsrv
+                        && r.src_local + r.len == olocal
+                        && r.dst_local + r.len == nlocal =>
+                {
+                    r.len += run
+                }
+                _ => out.push(ShipRun {
+                    dest: nsrv,
+                    src_local: olocal,
+                    dst_local: nlocal,
+                    len: run,
+                }),
+            }
+        }
+        off += run;
+    }
+    out
+}
+
+/// Aggregate shuffle cost of `old -> new` over all servers:
+/// `(cross_server_bytes, cross_server_runs)` — runs whose destination is
+/// the shipper itself are local copies and excluded. Tests derive the
+/// message-amplification bound from this (DI data messages never exceed
+/// `cross_runs + cross_bytes / SHIP_BATCH` since batching only merges
+/// runs or splits them at `SHIP_BATCH` boundaries).
+pub fn plan_stats(
+    old: &Distribution,
+    new: &Distribution,
+    nservers: u32,
+    size: u64,
+) -> (u64, u64) {
+    let mut bytes = 0u64;
+    let mut runs = 0u64;
+    for me in 0..nservers.max(1) {
+        for r in ship_plan(old, new, nservers, size, me) {
+            if r.dest != me {
+                bytes += r.len;
+                runs += 1;
+            }
+        }
+    }
+    (bytes, runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    fn rand_distribution(r: &mut XorShift64) -> Distribution {
+        match r.below(3) {
+            0 => Distribution::Contiguous { server: r.below(4) as u32 },
+            1 => Distribution::Cyclic { chunk: r.range(1, 64) },
+            _ => Distribution::Block { part: r.range(1, 128) },
+        }
+    }
+
+    /// Every logical byte is shipped exactly once, from where `old` put
+    /// it to where `new` wants it.
+    #[test]
+    fn ship_plan_is_a_permutation() {
+        let mut r = XorShift64::new(0x5EAF);
+        for case in 0..200 {
+            let old = rand_distribution(&mut r);
+            let new = rand_distribution(&mut r);
+            let n = r.range(1, 5) as u32;
+            let size = r.range(1, 4096);
+            let mut seen = vec![false; size as usize];
+            for me in 0..n {
+                for run in ship_plan(&old, &new, n, size, me) {
+                    for i in 0..run.len {
+                        let logical = old.logical(n, me, run.src_local + i);
+                        assert!(
+                            logical < size,
+                            "case {case}: run past EOF ({old:?} -> {new:?})"
+                        );
+                        assert!(
+                            !seen[logical as usize],
+                            "case {case}: byte {logical} shipped twice"
+                        );
+                        seen[logical as usize] = true;
+                        // the run lands where the new layout expects it
+                        assert_eq!(
+                            new.locate(n, logical),
+                            (run.dest, run.dst_local + i),
+                            "case {case}: {old:?} -> {new:?}"
+                        );
+                    }
+                }
+            }
+            assert!(
+                seen.iter().all(|&s| s),
+                "case {case}: bytes lost ({old:?} -> {new:?})"
+            );
+        }
+    }
+
+    /// Identity reorg ships nothing across servers and keeps offsets.
+    #[test]
+    fn identity_plan_moves_nothing() {
+        for d in [
+            Distribution::Contiguous { server: 1 },
+            Distribution::Cyclic { chunk: 7 },
+            Distribution::Block { part: 13 },
+        ] {
+            let (bytes, runs) = plan_stats(&d, &d, 3, 1000);
+            assert_eq!((bytes, runs), (0, 0), "{d:?}");
+            for me in 0..3 {
+                for run in ship_plan(&d, &d, 3, 1000, me) {
+                    assert_eq!(run.dest, me);
+                    assert_eq!(run.src_local, run.dst_local);
+                }
+            }
+        }
+    }
+
+    /// BLOCK -> CYCLIC over 2 servers: the classic half-swap — each
+    /// server keeps its aligned chunks and ships the interleaved rest.
+    #[test]
+    fn block_to_cyclic_plan_shape() {
+        let old = Distribution::Block { part: 40 };
+        let new = Distribution::Cyclic { chunk: 10 };
+        // server 0 holds file [0,40): chunks 0,2 stay (dest 0), 1,3 ship
+        let plan = ship_plan(&old, &new, 2, 80, 0);
+        let shipped: u64 = plan.iter().filter(|r| r.dest == 1).map(|r| r.len).sum();
+        let kept: u64 = plan.iter().filter(|r| r.dest == 0).map(|r| r.len).sum();
+        assert_eq!(shipped, 20);
+        assert_eq!(kept, 20);
+        let (bytes, _) = plan_stats(&old, &new, 2, 80);
+        assert_eq!(bytes, 40); // both servers ship half
+    }
+
+    /// The Block tail (beyond part*n) ships correctly from the last
+    /// server — the case layout.rs:60 special-cases.
+    #[test]
+    fn block_tail_ships_from_last_server() {
+        let old = Distribution::Block { part: 10 }; // 2 servers, size 35
+        let new = Distribution::Contiguous { server: 0 };
+        let plan = ship_plan(&old, &new, 2, 35, 1);
+        // server 1 holds local [0,25) = file [10,35), all bound for 0
+        assert_eq!(
+            plan,
+            vec![ShipRun { dest: 0, src_local: 0, dst_local: 10, len: 25 }]
+        );
+    }
+}

@@ -10,6 +10,11 @@
 //! ACKs **directly to the client's VI**, bypassing the buddy; only
 //! external requests may trigger further messages, so message
 //! amplification per client request is bounded (asserted in tests).
+//! The one exception is the reorg subsystem ([`crate::reorg`]): during a
+//! redistribution's commit wave, a sub-request fragmented against the
+//! just-replaced layout is translated back to logical space and
+//! re-routed — at most one extra DI per involved server, once per layout
+//! epoch (asserted in tests too).
 //!
 //! Controller services (§5.1.1): the first server of a [`crate::msg::World`] acts as
 //! system controller (SC) and connection controller (CC) in centralized
@@ -24,7 +29,9 @@ use crate::directory::{Directory, FileMeta, Fragment, EXTENT};
 use crate::disk::{Disk, MemDisk, SimCost, SimDisk, UnixDisk};
 use crate::fragmenter::{choose_distribution, fragment};
 use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
+use crate::layout::Distribution;
 use crate::memory::{BufferCache, CacheConfig, Prefetcher};
+use crate::reorg::{ship_plan, SHIP_BATCH};
 use crate::msg::{
     Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
     ServerStats, View,
@@ -86,12 +93,56 @@ enum Pending {
         file: FileId,
         acks_left: usize,
     },
+    /// Reorg coordinator round 1: freeze acks outstanding. Collecting
+    /// them is the pre-ship write barrier (DESIGN.md §4.1).
+    ReorgFreezeWait { file: FileId, acks_left: usize },
+    /// Reorg coordinator round 2: ship reports outstanding.
+    ReorgShipWait { file: FileId, acks_left: usize },
+    /// Reorg coordinator round 3: commit acks outstanding.
+    ReorgCommitWait { file: FileId, acks_left: usize },
+    /// Reorg participant: `ReorgData` acks outstanding before reporting
+    /// `ReorgShipped` to the coordinator.
+    ReorgDataWait { file: FileId, acks_left: usize },
 }
 
 enum MetaWaitKind {
     Open,
     GetSize,
     Sync,
+}
+
+/// Coordinator-side state of one in-flight redistribution (the file's
+/// home server coordinates; §5.1.1 centralized-controller style).
+struct ReorgCo {
+    /// VI to ACK at commit. `req_id == 0` = hint-driven automatic path,
+    /// nobody waits for the ack.
+    client: Rank,
+    req_id: u64,
+    /// Cross-server bytes / `ReorgData` DIs, summed from ship reports.
+    bytes_moved: u64,
+    messages: u64,
+    /// Control DIs (freeze/ship/commit waves) that reached a live
+    /// mailbox — what `Redistributed.messages` charges beyond the data.
+    control: u64,
+}
+
+/// Participant-side state of one in-flight redistribution: the window
+/// between `ReorgFreeze` and `ReorgCommit`.
+struct ReorgLocal {
+    coordinator: Rank,
+    /// Client rank carried on internal reorg ACKs.
+    client: Rank,
+    /// Coordinator request id to answer `ReorgShipped` with.
+    co_req: u64,
+    target: Distribution,
+    /// The new layout's fragment, filled during the ship phase and
+    /// swapped in at the commit point.
+    shadow: Fragment,
+    /// Client data requests deferred during the window; replayed in
+    /// order at commit, fragmenting under the new layout.
+    deferred: Vec<(Rank, Rank, u64, Request)>,
+    ship_bytes: u64,
+    ship_msgs: u64,
 }
 
 /// One ViPIOS server. Construct with [`Server::new`], then either run
@@ -113,6 +164,10 @@ pub struct Server {
     /// Files with an active Sequential prefetch hint window.
     seq_hint: HashMap<FileId, u64>,
     pending: HashMap<u64, Pending>,
+    /// Reorg coordination state (we are the home server), by file.
+    reorg_co: HashMap<FileId, ReorgCo>,
+    /// Reorg participant state (window open), by file.
+    reorg_local: HashMap<FileId, ReorgLocal>,
     next_internal: u64,
     next_file: u64,
     /// Round-robin buddy assignment state (only used on the CC).
@@ -159,6 +214,8 @@ impl Server {
             seq: HashMap::new(),
             seq_hint: HashMap::new(),
             pending: HashMap::new(),
+            reorg_co: HashMap::new(),
+            reorg_local: HashMap::new(),
             next_internal: 0,
             next_file: 0,
             next_buddy: 0,
@@ -253,28 +310,46 @@ impl Server {
             }
         };
         let frag = entry.frag.clone().unwrap_or_default();
-        let disk_idx = frag.disk_idx;
-        let disk = self.disks[disk_idx].clone();
-        let mut total = 0u64;
-        for &(local, len, dst) in parts {
-            let mut buf = vec![0u8; len as usize];
-            let mut at = 0usize;
-            for (d, run) in frag.runs(local, len) {
-                if let Some(doff) = d {
-                    let _ = self.cache.read(
-                        disk_idx,
-                        &disk,
-                        doff,
-                        &mut buf[at..at + run as usize],
-                    );
-                }
-                at += run as usize;
-            }
-            total += len;
-            self.ack(client, client, req_id, Response::Data { dst_base: dst, data: buf });
-        }
+        let total = self.read_frag_parts(&frag, client, req_id, parts);
         self.stats.bytes_read += total;
         self.readahead(client, file, parts);
+    }
+
+    /// Read `(local, len, dst)` runs of one fragment and ACK each as
+    /// `Data` directly to the client's VI; returns bytes served.
+    fn read_frag_parts(
+        &mut self,
+        frag: &Fragment,
+        client: Rank,
+        req_id: u64,
+        parts: &[(u64, u64, u64)],
+    ) -> u64 {
+        let mut total = 0u64;
+        for &(local, len, dst) in parts {
+            let data = self.read_frag_bytes(frag, local, len);
+            total += len;
+            self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
+        }
+        total
+    }
+
+    /// Read one local run through the cache; holes come back as zeros.
+    fn read_frag_bytes(&mut self, frag: &Fragment, local: u64, len: u64) -> Vec<u8> {
+        let disk = self.disks[frag.disk_idx].clone();
+        let mut buf = vec![0u8; len as usize];
+        let mut at = 0usize;
+        for (d, run) in frag.runs(local, len) {
+            if let Some(doff) = d {
+                let _ = self.cache.read(
+                    frag.disk_idx,
+                    &disk,
+                    doff,
+                    &mut buf[at..at + run as usize],
+                );
+            }
+            at += run as usize;
+        }
+        buf
     }
 
     /// Per-server local sequential readahead (pipelined parallelism).
@@ -419,6 +494,27 @@ impl Server {
         _class: MsgClass,
         req: Request,
     ) -> bool {
+        // reorg window: client writes are deferred until the new layout
+        // commits (replayed in order there); reads keep being served
+        // from the old layout. A sync is deferred only when this window
+        // already deferred writes — it must not complete ahead of them.
+        let defer = match &req {
+            Request::Write { file, .. } | Request::SetSize { file, .. } => {
+                self.reorg_local.contains_key(file).then_some(*file)
+            }
+            Request::Sync { file } => self
+                .reorg_local
+                .get(file)
+                .filter(|st| !st.deferred.is_empty())
+                .map(|_| *file),
+            _ => None,
+        };
+        if let Some(f) = defer {
+            if let Some(st) = self.reorg_local.get_mut(&f) {
+                st.deferred.push((src, client, req_id, req));
+                return true;
+            }
+        }
         match req {
             Request::Connect => {
                 // CC: round-robin buddy assignment (logical data locality
@@ -458,6 +554,21 @@ impl Server {
             }
             Request::RemoveInt { file } => {
                 self.dir.remove(file);
+                // fail deferred writers instead of dropping their
+                // requests (they are blocked waiting for Written acks)
+                if let Some(mut st) = self.reorg_local.remove(&file) {
+                    for (_, dclient, did, _) in st.deferred.drain(..) {
+                        self.ack(
+                            dclient,
+                            dclient,
+                            did,
+                            Response::Error {
+                                msg: format!("{file:?} removed during redistribution"),
+                            },
+                        );
+                    }
+                }
+                self.reorg_abort(file, format!("{file:?} removed during redistribution"));
             }
             Request::Read { file, offset, len, view, dst_base } => {
                 self.read(src, client, req_id, file, offset, len, view, dst_base)
@@ -467,11 +578,42 @@ impl Server {
             }
             Request::LocalRead { file, meta, parts } => {
                 self.ensure_entry(&meta);
-                self.serve_local_read(client, req_id, file, &parts);
+                let my_epoch = self.dir.get(file).map_or(meta.epoch, |e| e.meta.epoch);
+                if meta.epoch < my_epoch {
+                    // sender fragmented against a pre-reorg layout; its
+                    // commit notice is still in flight
+                    self.reroute_stale_read(client, req_id, file, &meta, &parts);
+                    return true;
+                }
+                let shadow = if meta.epoch > my_epoch {
+                    // sender committed first: serve its view from the
+                    // shadow (complete — shipping finished before any
+                    // commit was sent)
+                    self.reorg_local.get(&file).map(|st| st.shadow.clone())
+                } else {
+                    None
+                };
+                match shadow {
+                    Some(frag) => {
+                        let total = self.read_frag_parts(&frag, client, req_id, &parts);
+                        self.stats.bytes_read += total;
+                    }
+                    None => self.serve_local_read(client, req_id, file, &parts),
+                }
             }
             Request::LocalWrite { file, meta, parts } => {
                 self.ensure_entry(&meta);
-                self.serve_local_write(client, req_id, file, parts);
+                let my_epoch = self.dir.get(file).map_or(meta.epoch, |e| e.meta.epoch);
+                if meta.epoch < my_epoch {
+                    self.reroute_stale_write(client, req_id, file, &meta, parts);
+                } else if meta.epoch > my_epoch && self.reorg_local.contains_key(&file) {
+                    // the write belongs to the layout we are about to
+                    // commit: apply it to the shadow
+                    let bytes = self.shadow_apply(file, parts);
+                    self.ack(client, client, req_id, Response::Written { bytes });
+                } else {
+                    self.serve_local_write(client, req_id, file, parts);
+                }
             }
             Request::LocalPrefetch { file, meta, parts } => {
                 self.ensure_entry(&meta);
@@ -528,6 +670,22 @@ impl Server {
                         Response::Error { msg: format!("no meta for {file:?}") },
                     );
                 }
+            }
+            Request::Redistribute { file, target } => {
+                self.redistribute(src, client, req_id, file, target)
+            }
+            Request::ReorgFreeze { file: _, meta, target } => {
+                self.reorg_freeze(src, client, req_id, meta, target)
+            }
+            Request::ReorgShip { file, size } => {
+                self.reorg_ship(src, client, req_id, file, size)
+            }
+            Request::ReorgData { file, parts } => {
+                self.shadow_apply(file, parts);
+                self.ack(src, client, req_id, Response::ReorgDataAck);
+            }
+            Request::ReorgCommit { file } => {
+                self.reorg_commit(src, client, req_id, file)
             }
             Request::Stat => {
                 let mut s = self.stats.clone();
@@ -632,6 +790,7 @@ impl Server {
             distribution: dist,
             servers: order,
             size: 0,
+            epoch: 0,
         };
         self.ensure_entry(&meta);
         Ok(meta)
@@ -951,6 +1110,19 @@ impl Server {
                 if self.ep.rank != self.sc() {
                     self.di(self.sc(), client, 0, Request::Hint(Hint::FileAdmin(fa.clone())));
                 }
+                // hint for a file that already exists: move the bytes —
+                // the automatic physical-redistribution path ("redistri-
+                // bution of data stored on disks", §3.1). req_id 0 =
+                // fire-and-forget, nobody waits for the Redistributed ack.
+                if let Some(id) = self.dir.id_by_name(&fa.name) {
+                    if let Some(e) = self.dir.get(id) {
+                        let n = e.meta.servers.len() as u32;
+                        let target = choose_distribution(Some(&fa), n);
+                        if e.meta.distribution != target {
+                            self.redistribute(client, client, 0, id, target);
+                        }
+                    }
+                }
                 self.admin_hints.insert(fa.name.clone(), fa);
             }
             Hint::Prefetch(PrefetchHint::AdvanceRead { file, offset, len }) => {
@@ -995,6 +1167,393 @@ impl Server {
             }
             Hint::System(SystemHint::DropCaches) => {
                 let _ = self.cache.drop_all(&self.disks);
+            }
+        }
+    }
+
+    // --------------------------------------------------------- reorg
+    //
+    // Physical redistribution (DESIGN.md §4.1): the home server runs
+    // three DI rounds over every server of the file — freeze (write
+    // barrier), ship (two-phase shuffle into shadow fragments, planned
+    // by crate::reorg), commit (atomic layout swap + epoch bump) — then
+    // ACKs the client VI directly. Reads are served from the old layout
+    // for the whole window; writes are deferred and replayed at commit.
+
+    /// `Redistribute` entry: route to the home server; as home, start
+    /// the freeze round.
+    fn redistribute(
+        &mut self,
+        _src: Rank,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        target: Distribution,
+    ) {
+        let Some(e) = self.dir.get(file) else {
+            if req_id != 0 {
+                self.ack(client, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            }
+            return;
+        };
+        let meta = e.meta.clone();
+        if meta.home() != self.ep.rank {
+            self.di(meta.home(), client, req_id, Request::Redistribute { file, target });
+            return;
+        }
+        let nservers = meta.servers.len() as u32;
+        // normalise degenerate targets the same way the fragmenter does
+        let target = target.normalized(nservers);
+        if self.reorg_co.contains_key(&file) {
+            if req_id != 0 {
+                self.ack(
+                    client,
+                    client,
+                    req_id,
+                    Response::Error { msg: format!("redistribution of {file:?} already in flight") },
+                );
+            }
+            return;
+        }
+        if meta.distribution == target {
+            if req_id != 0 {
+                self.ack(
+                    client,
+                    client,
+                    req_id,
+                    Response::Redistributed { bytes_moved: 0, messages: 0 },
+                );
+            }
+            return;
+        }
+        // round 1: freeze everyone, ourselves included (uniformly via the
+        // mailbox). Collecting the acks is a barrier: a write fragmented
+        // before its buddy froze was pushed into every target mailbox
+        // before that buddy's ack, hence before any ReorgShip — mailboxes
+        // are single FIFO queues, so it is applied before shipping reads
+        // the fragment.
+        // A dead peer never acks: only count sends that reached a live
+        // mailbox (we are in the list, so at least our own always does).
+        let iid = self.internal_id();
+        let mut sent = 0usize;
+        for &s in &meta.servers {
+            if self.di(s, client, iid, Request::ReorgFreeze { file, meta: meta.clone(), target }) {
+                sent += 1;
+            }
+        }
+        self.reorg_co.insert(
+            file,
+            ReorgCo { client, req_id, bytes_moved: 0, messages: 0, control: sent as u64 },
+        );
+        self.pending
+            .insert(iid, Pending::ReorgFreezeWait { file, acks_left: sent });
+    }
+
+    /// Participant freeze: open the window — create the shadow, start
+    /// deferring client writes; reads keep flowing from the old layout.
+    fn reorg_freeze(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        meta: FileMeta,
+        target: Distribution,
+    ) {
+        self.ensure_entry(&meta);
+        let file = meta.id;
+        let disk_idx = self
+            .dir
+            .get(file)
+            .and_then(|e| e.frag.as_ref().map(|f| f.disk_idx))
+            .unwrap_or((file.0 as usize) % self.disks.len());
+        self.reorg_local.insert(
+            file,
+            ReorgLocal {
+                coordinator: src,
+                client,
+                co_req: req_id,
+                target,
+                shadow: Fragment::new(disk_idx),
+                deferred: Vec::new(),
+                ship_bytes: 0,
+                ship_msgs: 0,
+            },
+        );
+        self.ack(src, client, req_id, Response::ReorgFrozen);
+    }
+
+    /// Participant ship phase: read every run the plan assigns us and
+    /// move it — peers get `ReorgData` batches (≤ SHIP_BATCH bytes), our
+    /// own share goes straight to the shadow. Batches pipeline the
+    /// shuffle: a receiver applies batch *k* while we read batch *k+1*
+    /// from disk (two-phase I/O's double buffering).
+    fn reorg_ship(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId, size: u64) {
+        let Some(mut st) = self.reorg_local.remove(&file) else {
+            // never frozen: nothing to ship
+            self.ack(src, client, req_id, Response::ReorgShipped { bytes: 0, msgs: 0 });
+            return;
+        };
+        let Some(e) = self.dir.get(file) else {
+            // file vanished mid-window: fail the deferred writers rather
+            // than dropping their requests on the floor
+            for (_, dclient, did, _) in st.deferred.drain(..) {
+                self.ack(
+                    dclient,
+                    dclient,
+                    did,
+                    Response::Error { msg: format!("{file:?} removed during redistribution") },
+                );
+            }
+            self.ack(src, client, req_id, Response::ReorgShipped { bytes: 0, msgs: 0 });
+            return;
+        };
+        st.coordinator = src;
+        st.co_req = req_id;
+        let meta = e.meta.clone();
+        let frag = e.frag.clone().unwrap_or_default();
+        let nservers = meta.servers.len() as u32;
+        let my_idx = meta.server_index(self.ep.rank);
+        let plan = my_idx
+            .map(|i| ship_plan(&meta.distribution, &st.target, nservers, size, i))
+            .unwrap_or_default();
+        if let Some(i) = my_idx {
+            // size the shadow up front so unwritten holes keep reading
+            // as zeros after the swap
+            st.shadow.local_len = st.target.server_share(nservers, i, size);
+        }
+        let me = my_idx.unwrap_or(u32::MAX);
+        let iid = self.internal_id();
+        let mut batch: Vec<Vec<(u64, Vec<u8>)>> = vec![Vec::new(); meta.servers.len()];
+        let mut batch_bytes = vec![0u64; meta.servers.len()];
+        let mut sent = 0usize;
+        let mut cross = 0u64;
+        for run in plan {
+            let mut o = 0u64;
+            while o < run.len {
+                let piece = (run.len - o).min(SHIP_BATCH);
+                let data = self.read_frag_bytes(&frag, run.src_local + o, piece);
+                let dst_local = run.dst_local + o;
+                if run.dest == me {
+                    // local copy: straight to the shadow, one batch at a
+                    // time — only cross-server traffic needs buffering
+                    self.shadow_apply_frag(&mut st.shadow, &[(dst_local, data)]);
+                } else {
+                    let d = run.dest as usize;
+                    // flush first if this piece would overflow, so one
+                    // ReorgData never exceeds SHIP_BATCH payload bytes
+                    if batch_bytes[d] + piece > SHIP_BATCH && !batch[d].is_empty() {
+                        let parts = std::mem::take(&mut batch[d]);
+                        cross += batch_bytes[d];
+                        batch_bytes[d] = 0;
+                        if self.di(meta.servers[d], client, iid, Request::ReorgData { file, parts })
+                        {
+                            sent += 1;
+                        }
+                    }
+                    batch_bytes[d] += piece;
+                    batch[d].push((dst_local, data));
+                }
+                o += piece;
+            }
+        }
+        for (d, parts) in batch.into_iter().enumerate() {
+            if parts.is_empty() {
+                continue;
+            }
+            cross += batch_bytes[d];
+            // a dead peer drops its share — the same failure signal as
+            // the read path (DESIGN.md §4.1 failure behaviour)
+            if self.di(meta.servers[d], client, iid, Request::ReorgData { file, parts }) {
+                sent += 1;
+            }
+        }
+        st.ship_bytes = cross;
+        st.ship_msgs = sent as u64;
+        self.stats.reorg_bytes_shipped += cross;
+        self.stats.reorg_di_msgs += sent as u64;
+        self.reorg_local.insert(file, st);
+        if sent == 0 {
+            self.ack(src, client, req_id, Response::ReorgShipped { bytes: cross, msgs: 0 });
+        } else {
+            self.pending.insert(iid, Pending::ReorgDataWait { file, acks_left: sent });
+        }
+    }
+
+    /// Apply `(new_local, data)` runs to the shadow fragment, allocating
+    /// extents as needed; returns bytes applied. No-op when no reorg
+    /// window is open for the file.
+    fn shadow_apply(&mut self, file: FileId, parts: Vec<(u64, Vec<u8>)>) -> u64 {
+        let Some(mut st) = self.reorg_local.remove(&file) else { return 0 };
+        let bytes = self.shadow_apply_frag(&mut st.shadow, &parts);
+        self.reorg_local.insert(file, st);
+        bytes
+    }
+
+    /// The write half of [`shadow_apply`], against a shadow fragment the
+    /// caller already holds (the local-copy fast path of the ship phase).
+    fn shadow_apply_frag(&mut self, shadow: &mut Fragment, parts: &[(u64, Vec<u8>)]) -> u64 {
+        let disk_idx = shadow.disk_idx;
+        let disk = self.disks[disk_idx].clone();
+        let mut bytes = 0u64;
+        for (local, data) in parts {
+            let mut next_alloc = self.alloc[disk_idx];
+            let runs = shadow.map_alloc(*local, data.len() as u64, || {
+                let v = next_alloc;
+                next_alloc += EXTENT;
+                v
+            });
+            self.alloc[disk_idx] = next_alloc;
+            let mut at = 0usize;
+            for (doff, run) in runs {
+                let _ = self.cache.write(disk_idx, &disk, doff, &data[at..at + run as usize]);
+                at += run as usize;
+            }
+            shadow.local_len = shadow.local_len.max(local + data.len() as u64);
+            bytes += data.len() as u64;
+        }
+        bytes
+    }
+
+    /// Participant commit — the atomic point: swap the shadow in, bump
+    /// the layout epoch, then replay deferred client requests (they now
+    /// fragment under the new layout).
+    fn reorg_commit(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
+        let Some(st) = self.reorg_local.remove(&file) else {
+            self.ack(src, client, req_id, Response::ReorgCommitted);
+            return;
+        };
+        if let Some(e) = self.dir.get_mut(file) {
+            e.meta.distribution = st.target;
+            e.meta.epoch += 1;
+            e.frag = Some(st.shadow);
+        }
+        // sequential-scan tracking is meaningless under the new layout
+        self.seq.retain(|(_, f), _| *f != file);
+        self.ack(src, client, req_id, Response::ReorgCommitted);
+        for (dsrc, dclient, did, dreq) in st.deferred {
+            self.handle_req(dsrc, dclient, did, MsgClass::ER, dreq);
+        }
+    }
+
+    /// Tear down a coordination that can no longer complete (file
+    /// removed mid-reorg): the client gets an error instead of a hang.
+    fn reorg_abort(&mut self, file: FileId, msg: String) {
+        if let Some(co) = self.reorg_co.remove(&file) {
+            if co.req_id != 0 {
+                self.ack(co.client, co.client, co.req_id, Response::Error { msg });
+            }
+        }
+    }
+
+    /// Re-fragment stale-layout local runs under the current layout:
+    /// translate them back to logical space through the distribution the
+    /// message carried ([`Distribution::logical_extents`]), then split
+    /// them with the current one.
+    fn refragment_stale(
+        &self,
+        stale: &FileMeta,
+        parts: &[(u64, u64, u64)],
+    ) -> Option<(FileMeta, Vec<Vec<(u64, u64, u64)>>)> {
+        let e = self.dir.get(stale.id)?;
+        let meta = e.meta.clone();
+        let idx = stale.server_index(self.ep.rank)?;
+        let n = meta.servers.len() as u32;
+        let mut subs: Vec<Vec<(u64, u64, u64)>> = vec![Vec::new(); meta.servers.len()];
+        for &(local, len, dst) in parts {
+            let mut b = dst;
+            for (logical, run) in stale.distribution.logical_extents(n, idx, local, len) {
+                for (srv, nlocal, nrun) in meta.distribution.extents(n, logical, run) {
+                    subs[srv as usize].push((nlocal, nrun, b));
+                    b += nrun;
+                }
+            }
+        }
+        Some((meta, subs))
+    }
+
+    /// Serve a stale-layout read: our share locally, the rest as one DI
+    /// per involved server — the commit wave's bounded extra hop.
+    fn reroute_stale_read(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        stale: &FileMeta,
+        parts: &[(u64, u64, u64)],
+    ) {
+        let Some((meta, subs)) = self.refragment_stale(stale, parts) else {
+            // nothing known here: the bytes read as zeros (hole
+            // semantics, same as an unknown file)
+            for &(_, len, dst) in parts {
+                self.ack(
+                    client,
+                    client,
+                    req_id,
+                    Response::Data { dst_base: dst, data: vec![0; len as usize] },
+                );
+            }
+            return;
+        };
+        for (i, ps) in subs.into_iter().enumerate() {
+            if ps.is_empty() {
+                continue;
+            }
+            if meta.servers[i] == self.ep.rank {
+                self.serve_local_read(client, req_id, file, &ps);
+            } else {
+                self.di(
+                    meta.servers[i],
+                    client,
+                    req_id,
+                    Request::LocalRead { file, meta: meta.clone(), parts: ps },
+                );
+            }
+        }
+    }
+
+    /// Serve a stale-layout write the same way (split the payload along
+    /// the re-fragmented runs; every share ACKs `Written` directly, so
+    /// the client's byte count still adds up).
+    fn reroute_stale_write(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        stale: &FileMeta,
+        parts: Vec<(u64, Vec<u8>)>,
+    ) {
+        let mut flat: Vec<u8> = Vec::new();
+        let mut runs: Vec<(u64, u64, u64)> = Vec::new();
+        for (local, data) in &parts {
+            runs.push((*local, data.len() as u64, flat.len() as u64));
+            flat.extend_from_slice(data);
+        }
+        let Some((meta, subs)) = self.refragment_stale(stale, &runs) else {
+            self.ack(
+                client,
+                client,
+                req_id,
+                Response::Error { msg: format!("stale write to unknown file {file:?}") },
+            );
+            return;
+        };
+        for (i, ps) in subs.into_iter().enumerate() {
+            if ps.is_empty() {
+                continue;
+            }
+            let wparts: Vec<(u64, Vec<u8>)> = ps
+                .iter()
+                .map(|&(l, ln, b)| (l, flat[b as usize..(b + ln) as usize].to_vec()))
+                .collect();
+            if meta.servers[i] == self.ep.rank {
+                self.serve_local_write(client, req_id, file, wparts);
+            } else {
+                self.di(
+                    meta.servers[i],
+                    client,
+                    req_id,
+                    Request::LocalWrite { file, meta: meta.clone(), parts: wparts },
+                );
             }
         }
     }
@@ -1050,6 +1609,106 @@ impl Server {
                     self.pending.insert(
                         req_id,
                         Pending::SyncWait { client, req_id: orig, file, acks_left },
+                    );
+                }
+            }
+            (Pending::ReorgFreezeWait { file, mut acks_left }, Response::ReorgFrozen) => {
+                acks_left -= 1;
+                if acks_left > 0 {
+                    self.pending
+                        .insert(req_id, Pending::ReorgFreezeWait { file, acks_left });
+                    return;
+                }
+                // round 2: everyone is frozen, so our meta.size is now
+                // authoritative — every pre-freeze write's SizeUpdate
+                // reached us before its buddy's freeze ack did
+                let Some(e) = self.dir.get(file) else {
+                    self.reorg_abort(file, format!("{file:?} vanished before ship"));
+                    return;
+                };
+                let size = e.meta.size;
+                let servers = e.meta.servers.clone();
+                let client = self.reorg_co.get(&file).map_or(self.ep.rank, |c| c.client);
+                let iid = self.internal_id();
+                let mut sent = 0usize;
+                for &s in &servers {
+                    if self.di(s, client, iid, Request::ReorgShip { file, size }) {
+                        sent += 1;
+                    }
+                }
+                if let Some(co) = self.reorg_co.get_mut(&file) {
+                    co.control += sent as u64;
+                }
+                // we are in the list, so at least our own send landed
+                self.pending
+                    .insert(iid, Pending::ReorgShipWait { file, acks_left: sent });
+            }
+            (
+                Pending::ReorgShipWait { file, mut acks_left },
+                Response::ReorgShipped { bytes, msgs },
+            ) => {
+                if let Some(co) = self.reorg_co.get_mut(&file) {
+                    co.bytes_moved += bytes;
+                    co.messages += msgs;
+                }
+                acks_left -= 1;
+                if acks_left > 0 {
+                    self.pending
+                        .insert(req_id, Pending::ReorgShipWait { file, acks_left });
+                    return;
+                }
+                // round 3: every shadow holds its full new-layout share
+                // (ship reports only come after all data acks) — commit
+                let Some(e) = self.dir.get(file) else {
+                    self.reorg_abort(file, format!("{file:?} vanished before commit"));
+                    return;
+                };
+                let servers = e.meta.servers.clone();
+                let client = self.reorg_co.get(&file).map_or(self.ep.rank, |c| c.client);
+                let iid = self.internal_id();
+                let mut sent = 0usize;
+                for &s in &servers {
+                    if self.di(s, client, iid, Request::ReorgCommit { file }) {
+                        sent += 1;
+                    }
+                }
+                if let Some(co) = self.reorg_co.get_mut(&file) {
+                    co.control += sent as u64;
+                }
+                self.pending
+                    .insert(iid, Pending::ReorgCommitWait { file, acks_left: sent });
+            }
+            (Pending::ReorgCommitWait { file, mut acks_left }, Response::ReorgCommitted) => {
+                acks_left -= 1;
+                if acks_left > 0 {
+                    self.pending
+                        .insert(req_id, Pending::ReorgCommitWait { file, acks_left });
+                } else if let Some(co) = self.reorg_co.remove(&file) {
+                    // the control DIs that actually went out
+                    // (freeze/ship/commit waves) plus the reported data
+                    // messages
+                    let messages = co.messages + co.control;
+                    if co.req_id != 0 {
+                        self.ack(
+                            co.client,
+                            co.client,
+                            co.req_id,
+                            Response::Redistributed { bytes_moved: co.bytes_moved, messages },
+                        );
+                    }
+                }
+            }
+            (Pending::ReorgDataWait { file, mut acks_left }, Response::ReorgDataAck) => {
+                acks_left -= 1;
+                if acks_left > 0 {
+                    self.pending
+                        .insert(req_id, Pending::ReorgDataWait { file, acks_left });
+                } else if let Some(st) = self.reorg_local.get(&file) {
+                    self.ack(
+                        st.coordinator,
+                        st.client,
+                        st.co_req,
+                        Response::ReorgShipped { bytes: st.ship_bytes, msgs: st.ship_msgs },
                     );
                 }
             }

@@ -1,0 +1,313 @@
+//! Integration tests for the physical redistribution engine: the
+//! equivalence matrix over every `Distribution` pair, the reorg
+//! message-amplification bound, the hint-driven automatic path, and a
+//! concurrency stress battery (readers/writers racing an in-flight
+//! reorg). Protocol in DESIGN.md §4.1; planner in `vipios::reorg`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use vipios::client::Client;
+use vipios::hints::{FileAdminHint, Hint};
+use vipios::layout::Distribution;
+use vipios::modes::ServerPool;
+use vipios::msg::OpenMode;
+use vipios::reorg::{plan_stats, SHIP_BATCH};
+use vipios::server::ServerConfig;
+
+fn pool(n: usize) -> ServerPool {
+    ServerPool::start(n, ServerConfig::default()).unwrap()
+}
+
+/// Deterministic per-offset pattern byte (never 0, so holes stand out).
+fn pattern_byte(off: u64) -> u8 {
+    ((off.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 17) as u8) | 1
+}
+
+fn write_pattern(c: &mut Client, h: vipios::client::Vfh, size: u64) {
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut off = 0u64;
+    while off < size {
+        let n = (buf.len() as u64).min(size - off) as usize;
+        for (i, b) in buf[..n].iter_mut().enumerate() {
+            *b = pattern_byte(off + i as u64);
+        }
+        c.write_at(h, off, &buf[..n]).unwrap();
+        off += n as u64;
+    }
+}
+
+fn verify_pattern(c: &mut Client, h: vipios::client::Vfh, size: u64, ctx: &str) {
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut off = 0u64;
+    while off < size {
+        let n = (buf.len() as u64).min(size - off) as usize;
+        assert_eq!(c.read_at(h, off, &mut buf[..n]).unwrap(), n, "{ctx}: short read");
+        for (i, &b) in buf[..n].iter().enumerate() {
+            assert_eq!(
+                b,
+                pattern_byte(off + i as u64),
+                "{ctx}: byte {} corrupted",
+                off + i as u64
+            );
+        }
+        off += n as u64;
+    }
+}
+
+fn int_requests_sum(c: &mut Client, p: &ServerPool) -> u64 {
+    p.server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).unwrap().int_requests)
+        .sum()
+}
+
+/// Physically hop a pattern file across every ordered pair of
+/// Contiguous / Cyclic / Block layouts (non-divisible chunk/part sizes,
+/// Block tail included), byte-comparing the full read-back after each
+/// hop, checking the planner predicts the moved bytes exactly, and
+/// holding reorg traffic to the documented amplification bound.
+#[test]
+fn equivalence_matrix_all_distribution_pairs() {
+    let nservers = 3u32;
+    let size: u64 = 200_000;
+    let dists = [
+        Distribution::Contiguous { server: 1 },
+        // chunk does not divide the file size
+        Distribution::Cyclic { chunk: 1000 },
+        // part * n < size: the last server absorbs a large tail
+        Distribution::Block { part: 7001 },
+    ];
+    let p = pool(nservers as usize);
+    let mut c = p.client().unwrap();
+    let h = c.open("matrix", OpenMode::rdwr_create()).unwrap();
+    write_pattern(&mut c, h, size);
+    c.sync(h).unwrap();
+    for &from in &dists {
+        for &to in &dists {
+            // put the file into the `from` layout (may be a no-op)
+            c.redistribute(h, from).unwrap();
+            let before = int_requests_sum(&mut c, &p);
+            let rep = c.redistribute(h, to).unwrap();
+            let after = int_requests_sum(&mut c, &p);
+            let ctx = format!("{from:?} -> {to:?}");
+            let (cross, runs) = plan_stats(&from, &to, nservers, size);
+            assert_eq!(rep.bytes_moved, cross, "{ctx}: planner disagrees with shuffle");
+            if from == to {
+                assert_eq!(rep.messages, 0, "{ctx}: no-op hop sent messages");
+            } else {
+                // every reorg DI is accounted for: 3 control rounds per
+                // server + the batched data messages; nothing cascades
+                assert_eq!(after - before, rep.messages, "{ctx}: unaccounted DI traffic");
+                assert!(
+                    rep.messages <= 3 * nservers as u64 + runs + cross.div_ceil(SHIP_BATCH),
+                    "{ctx}: amplification {} over bound (runs={runs}, cross={cross})",
+                    rep.messages
+                );
+            }
+            verify_pattern(&mut c, h, size, &ctx);
+        }
+    }
+    p.shutdown().unwrap();
+}
+
+/// Nightly-scale matrix: bigger file, more servers, more layouts.
+#[test]
+#[ignore]
+fn equivalence_matrix_big() {
+    let nservers = 5u32;
+    let size: u64 = 16 << 20;
+    let dists = [
+        Distribution::Contiguous { server: 3 },
+        Distribution::Cyclic { chunk: 64 * 1024 },
+        Distribution::Cyclic { chunk: 4097 },
+        Distribution::Block { part: (size / 5) + 13 },
+        Distribution::Block { part: 100_003 },
+    ];
+    let p = pool(nservers as usize);
+    let mut c = p.client().unwrap();
+    let h = c.open("matrix-big", OpenMode::rdwr_create()).unwrap();
+    write_pattern(&mut c, h, size);
+    c.sync(h).unwrap();
+    for &from in &dists {
+        for &to in &dists {
+            c.redistribute(h, from).unwrap();
+            let rep = c.redistribute(h, to).unwrap();
+            let (cross, _) = plan_stats(&from, &to, nservers, size);
+            assert_eq!(rep.bytes_moved, cross, "{from:?} -> {to:?}");
+            verify_pattern(&mut c, h, size, &format!("{from:?} -> {to:?}"));
+        }
+    }
+    p.shutdown().unwrap();
+}
+
+/// A `FileAdminHint` for a file that already exists triggers the
+/// automatic physical path: the bytes end up on the hinted server, with
+/// no explicit `redistribute` call.
+#[test]
+fn file_admin_hint_triggers_physical_reorg() {
+    let size: u64 = 256 * 1024;
+    let p = pool(2);
+    let mut c = p.client().unwrap();
+    // default heuristic = CYCLIC(64K): both servers store data
+    let h = c.open("auto", OpenMode::rdwr_create()).unwrap();
+    write_pattern(&mut c, h, size);
+    c.sync(h).unwrap();
+    // now hint a different layout for the *existing* file
+    c.hint(Hint::FileAdmin(FileAdminHint {
+        name: "auto".into(),
+        distribution: Distribution::Contiguous { server: 0 },
+        nprocs: Some(1),
+    }))
+    .unwrap();
+    // the reorg runs in the background (nobody waits on a hint): poll
+    // until a full read is served by exactly one server
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let before: Vec<u64> = p
+            .server_ranks()
+            .iter()
+            .map(|&s| c.stats_of(s).unwrap().bytes_read)
+            .collect();
+        verify_pattern(&mut c, h, size, "hint-driven reorg");
+        let served: Vec<u64> = p
+            .server_ranks()
+            .iter()
+            .map(|&s| c.stats_of(s).unwrap().bytes_read)
+            .zip(&before)
+            .map(|(a, b)| a - b)
+            .collect();
+        if served.iter().filter(|&&d| d > 0).count() == 1 {
+            break; // committed: one server owns every byte now
+        }
+        assert!(
+            Instant::now() < deadline,
+            "hint never physically moved the file (read split {served:?})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    p.shutdown().unwrap();
+}
+
+fn stress_round(nservers: usize, size: u64, nwriters: usize, hops: &[Distribution]) {
+    let p = pool(nservers);
+    let mut c = p.client().unwrap();
+    let h = c.open("stress", OpenMode::rdwr_create()).unwrap();
+    write_pattern(&mut c, h, size);
+    c.sync(h).unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    // a byte at offset o is only ever pattern_byte(o) possibly XORed
+    // with one writer's tag — anything else is a torn/mis-mapped read
+    let tag = |w: usize| 0x80u8 | (1 << w);
+    let mut threads = Vec::new();
+    for w in 0..nwriters {
+        let world = p.world().clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&world).unwrap();
+            let h = c.open("stress", OpenMode::rdwr_create()).unwrap();
+            let mut rng = vipios::util::XorShift64::new(0xBEEF + w as u64);
+            let mut buf = vec![0u8; 4096];
+            while !stop.load(Ordering::Relaxed) {
+                let off = rng.below(size - buf.len() as u64);
+                for (i, b) in buf.iter_mut().enumerate() {
+                    *b = pattern_byte(off + i as u64) ^ tag(w);
+                }
+                c.write_at(h, off, &buf).unwrap();
+            }
+            c.disconnect().unwrap();
+        }));
+    }
+    for r in 0..2usize {
+        let world = p.world().clone();
+        let stop = stop.clone();
+        let nwriters = nwriters;
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&world).unwrap();
+            let h = c.open("stress", OpenMode::rdonly()).unwrap();
+            let mut rng = vipios::util::XorShift64::new(0xFEED + r as u64);
+            let mut buf = vec![0u8; 8192];
+            while !stop.load(Ordering::Relaxed) {
+                let off = rng.below(size - buf.len() as u64);
+                let n = c.read_at(h, off, &mut buf).unwrap();
+                for (i, &b) in buf[..n].iter().enumerate() {
+                    let base = pattern_byte(off + i as u64);
+                    let ok = b == base || (0..nwriters).any(|w| b == base ^ tag(w));
+                    assert!(
+                        ok,
+                        "torn read at {}: got {b:#x}, base {base:#x}",
+                        off + i as u64
+                    );
+                }
+            }
+            c.disconnect().unwrap();
+        }));
+    }
+    // drive redistributions while the load is running
+    for &target in hops {
+        let rep = c.redistribute(h, target).unwrap();
+        let _ = rep;
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().unwrap();
+    }
+    // quiesced: whatever the bytes are now, one more physical hop must
+    // preserve them exactly, and post-commit reads hit the new layout
+    c.sync(h).unwrap();
+    let mut before_hop = vec![0u8; size as usize];
+    assert_eq!(c.read_at(h, 0, &mut before_hop).unwrap(), size as usize);
+    c.redistribute(h, Distribution::Contiguous { server: 0 }).unwrap();
+    let srv_before: Vec<u64> = p
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).unwrap().bytes_read)
+        .collect();
+    let mut after_hop = vec![0u8; size as usize];
+    assert_eq!(c.read_at(h, 0, &mut after_hop).unwrap(), size as usize);
+    assert_eq!(before_hop, after_hop, "redistribution changed file contents");
+    let served = p
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).unwrap().bytes_read)
+        .zip(&srv_before)
+        .filter(|(a, b)| a > *b)
+        .count();
+    assert_eq!(served, 1, "post-commit reads must hit the new (contiguous) layout");
+    p.shutdown().unwrap();
+}
+
+/// Readers and writers race an in-flight redistribution: no torn reads,
+/// no lost writes (every byte is a legitimate value), and post-commit
+/// reads hit the new layout. MemDisk keeps this well under 10s.
+#[test]
+fn concurrent_io_during_redistribution() {
+    stress_round(
+        3,
+        1 << 20,
+        2,
+        &[
+            Distribution::Block { part: 350_001 },
+            Distribution::Cyclic { chunk: 4096 },
+            Distribution::Contiguous { server: 2 },
+            Distribution::Cyclic { chunk: 64 * 1024 },
+            Distribution::Block { part: 1 << 18 },
+        ],
+    );
+}
+
+/// Nightly-scale stress: bigger file, more writers, more hops.
+#[test]
+#[ignore]
+fn concurrent_io_during_redistribution_big() {
+    let hops: Vec<Distribution> = (0..12)
+        .map(|i| match i % 3 {
+            0 => Distribution::Cyclic { chunk: 1000 * (i as u64 + 1) },
+            1 => Distribution::Block { part: 500_000 + 77 * i as u64 },
+            _ => Distribution::Contiguous { server: (i % 4) as u32 },
+        })
+        .collect();
+    stress_round(4, 8 << 20, 4, &hops);
+}

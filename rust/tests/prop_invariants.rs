@@ -188,6 +188,7 @@ fn fragmenter_partitions_buffer_exactly() {
             distribution: rand_distribution(&mut r),
             servers: (0..nservers).map(Rank).collect(),
             size: u64::MAX,
+            epoch: 0,
         };
         let view = if r.chance(1, 2) {
             let d = rand_desc(&mut r, 0);

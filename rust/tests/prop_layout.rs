@@ -1,0 +1,253 @@
+//! Property tests for the layout <-> disk mapping (`Distribution`): the
+//! locate/logical round-trip, per-server injectivity, run/server-
+//! boundary invariants — including the `Block` tail case where the last
+//! server absorbs bytes beyond `part * n` — and the reorg planner built
+//! on that algebra. Deterministic xorshift PRNG in place of proptest
+//! (not in the vendored crate set); seeds are part of the assertion
+//! messages.
+
+use std::collections::HashMap;
+
+use vipios::layout::Distribution;
+use vipios::reorg::{plan_stats, ship_plan};
+use vipios::util::XorShift64;
+
+fn rand_distribution(r: &mut XorShift64) -> Distribution {
+    match r.below(3) {
+        0 => Distribution::Contiguous { server: r.below(4) as u32 },
+        1 => Distribution::Cyclic { chunk: r.range(1, 64) },
+        _ => Distribution::Block { part: r.range(1, 128) },
+    }
+}
+
+fn roundtrip_cases(cases: usize, seed: u64) {
+    let mut r = XorShift64::new(seed);
+    for case in 0..cases {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 8) as u32;
+        let off = r.below(1 << 20);
+        let (s, l) = d.locate(nservers, off);
+        assert!(s < nservers, "case {case}: {d:?}");
+        assert_eq!(
+            d.logical(nservers, s, l),
+            off,
+            "case {case}: {d:?} n={nservers} off={off}"
+        );
+    }
+}
+
+/// `logical(locate(off)) == off` everywhere.
+#[test]
+fn locate_logical_roundtrip() {
+    roundtrip_cases(3_000, 0x10CA7E);
+}
+
+/// Nightly-scale variant of the round-trip sweep.
+#[test]
+#[ignore]
+fn locate_logical_roundtrip_big() {
+    roundtrip_cases(300_000, 0x10CA7E5);
+}
+
+/// `locate` is injective per server: no two logical offsets may land on
+/// the same `(server, local)` slot, or two file bytes would share a
+/// disk byte.
+#[test]
+fn locate_injective_per_server() {
+    let mut r = XorShift64::new(0x1213);
+    for case in 0..120 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let mut slots: HashMap<(u32, u64), u64> = HashMap::new();
+        let base = r.below(10_000);
+        for off in base..base + 2_000 {
+            let slot = d.locate(nservers, off);
+            if let Some(prev) = slots.insert(slot, off) {
+                panic!(
+                    "case {case}: {d:?} n={nservers}: offsets {prev} and {off} \
+                     both land on {slot:?}"
+                );
+            }
+        }
+    }
+}
+
+/// A `run_len` run never crosses a server boundary, and within the run
+/// local offsets advance in lockstep with logical ones (that is what
+/// lets the fragmenter turn it into one contiguous sub-request).
+#[test]
+fn run_len_stays_on_one_server() {
+    let mut r = XorShift64::new(0x5EED5);
+    for case in 0..300 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let off = r.below(50_000);
+        let len = r.range(1, 5_000);
+        let run = d.run_len(nservers, off, len);
+        assert!(run > 0 && run <= len, "case {case}: {d:?}");
+        let (srv, local) = d.locate(nservers, off);
+        for i in [0, run / 2, run - 1] {
+            assert_eq!(
+                d.locate(nservers, off + i),
+                (srv, local + i),
+                "case {case}: {d:?} n={nservers} off={off} i={i}"
+            );
+        }
+    }
+}
+
+/// The `Block` tail: offsets beyond `part * n` belong to the last
+/// server, contiguously after its regular part (layout.rs's
+/// "last server absorbs the tail" branch, previously untested directly).
+#[test]
+fn block_tail_absorbed_by_last_server() {
+    let mut r = XorShift64::new(0x7A11);
+    for case in 0..300 {
+        let part = r.range(1, 1000);
+        let nservers = r.range(1, 6) as u32;
+        let d = Distribution::Block { part };
+        let n = nservers as u64;
+        let edge = part * n; // first tail byte
+        for extra in [0, 1, part / 2 + 1, 3 * part + 7] {
+            let off = edge + extra;
+            let (srv, local) = d.locate(nservers, off);
+            assert_eq!(srv, nservers - 1, "case {case}: part={part} n={n} off={off}");
+            assert_eq!(local, off - (n - 1) * part, "case {case}");
+            assert_eq!(d.logical(nservers, srv, local), off, "case {case}");
+            // the tail is one unbounded run on the last server
+            assert_eq!(d.run_len(nservers, off, 10_000), 10_000, "case {case}");
+        }
+        // a range straddling the edge splits exactly once at most
+        let ex = d.extents(nservers, edge.saturating_sub(1), part + 2);
+        let total: u64 = ex.iter().map(|e| e.2).sum();
+        assert_eq!(total, part + 2, "case {case}");
+        assert!(
+            ex.iter().all(|e| e.0 == nservers - 1 || e.2 <= 1),
+            "case {case}: tail bytes left the last server: {ex:?}"
+        );
+    }
+}
+
+/// `server_share` agrees with a full `extents` walk for random sizes —
+/// the closed form the reorg shadow sizing relies on.
+#[test]
+fn server_share_matches_extents_walk() {
+    let mut r = XorShift64::new(0x54A2E);
+    for case in 0..300 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let size = r.below(20_000);
+        let ex = d.extents(nservers, 0, size);
+        for srv in 0..nservers {
+            let want: u64 = ex.iter().filter(|e| e.0 == srv).map(|e| e.2).sum();
+            assert_eq!(
+                d.server_share(nservers, srv, size),
+                want,
+                "case {case}: {d:?} n={nservers} srv={srv} size={size}"
+            );
+        }
+        let total: u64 = (0..nservers)
+            .map(|s| d.server_share(nservers, s, size))
+            .sum();
+        assert_eq!(total, size, "case {case}: shares must partition the file");
+    }
+}
+
+/// `logical_extents` is the inverse of `extents`: walking a server's
+/// local space back to logical space and locating again is the identity.
+#[test]
+fn logical_extents_roundtrip() {
+    let mut r = XorShift64::new(0x10C4);
+    for case in 0..500 {
+        let d = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let size = r.range(1, 50_000);
+        let srv = r.below(nservers as u64) as u32;
+        // the local space is only meaningful within the server's share
+        let share = d.server_share(nservers, srv, size);
+        if share == 0 {
+            continue;
+        }
+        let local = r.below(share);
+        let len = r.range(1, share - local);
+        let ex = d.logical_extents(nservers, srv, local, len);
+        let total: u64 = ex.iter().map(|e| e.1).sum();
+        assert_eq!(total, len, "case {case}: {d:?}");
+        let mut l = local;
+        for &(logical, run) in &ex {
+            for i in [0, run - 1] {
+                assert_eq!(
+                    d.locate(nservers, logical + i),
+                    (srv, l + i),
+                    "case {case}: {d:?} n={nservers}"
+                );
+            }
+            l += run;
+        }
+    }
+}
+
+/// Randomized reorg plans move every byte exactly once to exactly where
+/// the new layout wants it (the planner-level equivalence check; the
+/// wire-level one lives in tests/integration_reorg.rs).
+#[test]
+fn ship_plans_partition_the_file() {
+    let mut r = XorShift64::new(0x5417);
+    for case in 0..150 {
+        let old = rand_distribution(&mut r);
+        let new = rand_distribution(&mut r);
+        let nservers = r.range(1, 6) as u32;
+        let size = r.range(1, 3_000);
+        let mut seen = vec![false; size as usize];
+        let mut cross = 0u64;
+        for me in 0..nservers {
+            for run in ship_plan(&old, &new, nservers, size, me) {
+                if run.dest != me {
+                    cross += run.len;
+                }
+                for i in 0..run.len {
+                    let logical = old.logical(nservers, me, run.src_local + i);
+                    assert!(
+                        !seen[logical as usize],
+                        "case {case}: byte {logical} planned twice ({old:?} -> {new:?})"
+                    );
+                    seen[logical as usize] = true;
+                    assert_eq!(
+                        new.locate(nservers, logical),
+                        (run.dest, run.dst_local + i),
+                        "case {case}: {old:?} -> {new:?}"
+                    );
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: plan lost bytes");
+        let (want_cross, _) = plan_stats(&old, &new, nservers, size);
+        assert_eq!(cross, want_cross, "case {case}: plan_stats disagrees");
+    }
+}
+
+/// Nightly-scale planner sweep with larger files and server pools.
+#[test]
+#[ignore]
+fn ship_plans_partition_the_file_big() {
+    let mut r = XorShift64::new(0x5417B16);
+    for case in 0..400 {
+        let old = rand_distribution(&mut r);
+        let new = rand_distribution(&mut r);
+        let nservers = r.range(1, 12) as u32;
+        let size = r.range(1, 100_000);
+        let mut seen = 0u64;
+        for me in 0..nservers {
+            for run in ship_plan(&old, &new, nservers, size, me) {
+                seen += run.len;
+                let logical = old.logical(nservers, me, run.src_local);
+                assert_eq!(
+                    new.locate(nservers, logical),
+                    (run.dest, run.dst_local),
+                    "case {case}"
+                );
+            }
+        }
+        assert_eq!(seen, size, "case {case}: {old:?} -> {new:?}");
+    }
+}
