@@ -27,8 +27,126 @@ use crate::vimpios::{get_view_pattern, Basic, Datatype};
 
 // ------------------------------------------------------------- reporting
 
-/// Print a paper-style table.
+/// Machine-readable results (`vipios bench --json`): every
+/// [`print_table`] call is also recorded here, and the CLI serialises
+/// the collected tables to `BENCH_<exp>.json` — the perf-trajectory
+/// artifact the human-readable tables could not provide.
+pub mod report {
+    use std::sync::Mutex;
+
+    /// One recorded result table.
+    #[derive(Debug, Clone)]
+    pub struct Table {
+        pub title: String,
+        pub headers: Vec<String>,
+        pub rows: Vec<Vec<String>>,
+    }
+
+    static TABLES: Mutex<Vec<Table>> = Mutex::new(Vec::new());
+
+    /// Clear the collector (call before a bench run).
+    pub fn reset() {
+        TABLES.lock().unwrap().clear();
+    }
+
+    pub(super) fn record(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+        TABLES.lock().unwrap().push(Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: rows.to_vec(),
+        });
+    }
+
+    /// Tables recorded since the last [`reset`].
+    pub fn tables() -> Vec<Table> {
+        TABLES.lock().unwrap().clone()
+    }
+
+    fn esc(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for ch in s.chars() {
+            match ch {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// A cell that is a plain finite number is emitted as a JSON number
+    /// (re-serialised through f64, so Rust-parseable-but-invalid-JSON
+    /// spellings like `.5` or `+1` come out canonical), everything else
+    /// as a string.
+    fn cell(s: &str) -> String {
+        let t = s.trim();
+        let numeric = !t.is_empty()
+            && t.chars().all(|c| c.is_ascii_digit() || "+-.eE".contains(c))
+            && t.parse::<f64>().is_ok_and(|v| v.is_finite());
+        match t.parse::<f64>() {
+            Ok(v) if numeric => format!("{v}"),
+            _ => format!("\"{}\"", esc(s)),
+        }
+    }
+
+    /// Serialise the collected tables (hand-rolled: no serde in the
+    /// vendored crate set).
+    pub fn to_json(experiment: &str, quick: bool) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"experiment\":\"{}\",\"quick\":{},\"tables\":[",
+            esc(experiment),
+            quick
+        ));
+        let tables = tables();
+        for (ti, t) in tables.iter().enumerate() {
+            if ti > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{{\"title\":\"{}\",\"headers\":[", esc(&t.title)));
+            for (i, h) in t.headers.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\"", esc(h)));
+            }
+            out.push_str("],\"rows\":[");
+            for (ri, row) in t.rows.iter().enumerate() {
+                if ri > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                for (ci, c) in row.iter().enumerate() {
+                    if ci > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&cell(c));
+                }
+                out.push(']');
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write `BENCH_<exp>.json`-style output to `path`.
+    pub fn write_json(
+        path: &std::path::Path,
+        experiment: &str,
+        quick: bool,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, to_json(experiment, quick))
+    }
+}
+
+/// Print a paper-style table (and record it for `--json`).
 pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    report::record(title, headers, rows);
     println!("\n== {title} ==");
     let widths: Vec<usize> = headers
         .iter()
@@ -70,6 +188,7 @@ pub fn bench_server_config(cache_bytes: u64, overhead_us: u64) -> ServerConfig {
         prefetch: true,
         readahead: 256 * 1024,
         request_overhead: std::time::Duration::from_micros(overhead_us),
+        queue_depth: 8,
     }
 }
 
@@ -551,6 +670,87 @@ pub fn redistribution_physical(nservers: usize, total_bytes: u64) -> Result<Vec<
     Ok(out)
 }
 
+/// E9 `overlap` workload: `nclients` clients each own a private file
+/// (file-per-process) striped CYCLIC(64K) over `nservers`, every server
+/// with `disks_per_server` SimDisks — consecutive file ids land on
+/// alternating spindles, so one server has work for all its disks as
+/// soon as two clients are active. Returns aggregate cold-read MB/s.
+///
+/// `queue_depth` is the async-kernel knob: 1 = the blocking baseline
+/// (every request serializes behind one disk op per server), > 1 = the
+/// dispatch/completion engine with that coalescing window. Prefetch is
+/// off so the measured win is scheduling/overlap, not readahead.
+pub fn overlap_bw(
+    nclients: usize,
+    nservers: usize,
+    disks_per_server: usize,
+    queue_depth: usize,
+    per_client_bytes: u64,
+    req_bytes: u64,
+) -> Result<f64> {
+    let cfg = ServerConfig {
+        disks: disks_per_server,
+        kind: DiskKind::Sim(SimCost::paper_1998()),
+        cache: CacheConfig { page: 64 * 1024, capacity: 2 << 20, write_back: true },
+        prefetch: false,
+        readahead: 0,
+        request_overhead: std::time::Duration::ZERO,
+        queue_depth,
+    };
+    let pool = ServerPool::start(nservers, cfg)?;
+    let ready = Arc::new(Barrier::new(nclients + 1));
+    let go = Arc::new(Barrier::new(nclients + 1));
+    let done = Arc::new(Barrier::new(nclients + 1));
+    let mut handles = Vec::new();
+    for cidx in 0..nclients {
+        let world = pool.world().clone();
+        let (ready, go, done) = (ready.clone(), go.clone(), done.clone());
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut c = Client::connect(&world)?;
+            let h = c.open(&format!("ov{cidx}"), OpenMode::rdwr_create())?;
+            let chunk = vec![0xC3u8; req_bytes as usize];
+            let mut off = 0u64;
+            while off < per_client_bytes {
+                let n = req_bytes.min(per_client_bytes - off);
+                c.write_at(h, off, &chunk[..n as usize])?;
+                off += n;
+            }
+            c.sync(h)?;
+            ready.wait();
+            // caches dropped by the coordinator between these barriers
+            go.wait();
+            let mut buf = vec![0u8; req_bytes as usize];
+            let mut off = 0u64;
+            while off < per_client_bytes {
+                let n = req_bytes.min(per_client_bytes - off);
+                c.read_at(h, off, &mut buf[..n as usize])?;
+                off += n;
+            }
+            done.wait();
+            c.close(h)?;
+            c.disconnect()?;
+            Ok(())
+        }));
+    }
+    ready.wait();
+    {
+        let mut admin = pool.client()?;
+        for &s in pool.server_ranks() {
+            admin.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+        }
+        admin.disconnect()?;
+    }
+    let t0 = Instant::now();
+    go.wait();
+    done.wait();
+    let elapsed = t0.elapsed();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    pool.shutdown()?;
+    Ok(mbps(per_client_bytes * nclients as u64, elapsed))
+}
+
 // ------------------------------------------------------- table runners
 
 /// Full Chapter-8 table regeneration, shared by `cargo bench`,
@@ -929,6 +1129,69 @@ pub mod tables {
         Ok(())
     }
 
+    /// E9 — async server kernel: aggregate cold-read bandwidth vs client
+    /// concurrency × scheduler queue depth at fixed 2 servers × 2 disks
+    /// (DESIGN.md §4.2). Queue depth 1 is the blocking baseline; the
+    /// async engine must win by overlapping both spindles per server
+    /// with message handling.
+    pub fn overlap(quick: bool) -> Result<()> {
+        let per_client = if quick { MB } else { 2 * MB };
+        let req = 64 * 1024;
+        let (nservers, ndisks) = (2, 2);
+        let clients: Vec<usize> = if quick { vec![2, 8] } else { vec![1, 2, 4, 8] };
+        let depths: Vec<usize> = if quick { vec![1, 8] } else { vec![1, 4, 16] };
+        let mut rows = Vec::new();
+        let mut at8: Vec<(usize, f64)> = Vec::new();
+        for &nc in &clients {
+            let mut row = vec![nc.to_string()];
+            for &qd in &depths {
+                let bw = overlap_bw(nc, nservers, ndisks, qd, per_client, req)?;
+                row.push(format!("{bw:.1}"));
+                if nc == 8 {
+                    at8.push((qd, bw));
+                }
+            }
+            rows.push(row);
+        }
+        let mut headers: Vec<String> = vec!["clients".into()];
+        for &qd in &depths {
+            headers.push(if qd <= 1 {
+                "qd=1 (blocking)".to_string()
+            } else {
+                format!("qd={qd}")
+            });
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        print_table(
+            &format!(
+                "E9 (§4.2) overlap — aggregate cold-read MB/s, {nservers} servers x {ndisks} disks"
+            ),
+            &hdr_refs,
+            &rows,
+        );
+        // headline ratio: best async depth vs blocking at 8 clients
+        let blocking = at8.iter().find(|(qd, _)| *qd <= 1).map(|&(_, bw)| bw);
+        let best = at8
+            .iter()
+            .filter(|(qd, _)| *qd > 1)
+            .map(|&(_, bw)| bw)
+            .fold(f64::NAN, f64::max);
+        if let Some(base) = blocking {
+            if best.is_finite() && base > 0.0 {
+                print_table(
+                    "E9 summary — async kernel vs blocking baseline (8 clients)",
+                    &["blocking MB/s", "async MB/s", "speedup"],
+                    &[vec![
+                        format!("{base:.1}"),
+                        format!("{best:.1}"),
+                        format!("{:.2}x", best / base),
+                    ]],
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Dispatch by experiment name.
     pub fn run(exp: &str, quick: bool) -> Result<()> {
         match exp {
@@ -939,6 +1202,7 @@ pub mod tables {
             "scalability" => scalability(quick),
             "buffer" => buffer(quick),
             "redistribution" => redistribution(quick),
+            "overlap" => overlap(quick),
             "ablation" => ablation(quick),
             "all" => {
                 dedicated(quick)?;
@@ -948,6 +1212,7 @@ pub mod tables {
                 scalability(quick)?;
                 buffer(quick)?;
                 redistribution(quick)?;
+                overlap(quick)?;
                 ablation(quick)
             }
             other => anyhow::bail!("unknown experiment '{other}'"),
@@ -1006,6 +1271,45 @@ mod tests {
     fn redistribution_smoke() {
         let bw = redistribution_vipios(2, 2 * MB, 2).unwrap();
         assert!(bw > 0.0);
+    }
+
+    #[test]
+    fn overlap_smoke() {
+        // tiny: exercises both the blocking baseline and the async
+        // engine end-to-end (ratio asserted in the nightly test below)
+        let blocking = overlap_bw(2, 2, 2, 1, 256 * 1024, 64 * 1024).unwrap();
+        let asynced = overlap_bw(2, 2, 2, 8, 256 * 1024, 64 * 1024).unwrap();
+        assert!(blocking > 0.0 && asynced > 0.0);
+    }
+
+    /// E9 acceptance shape (nightly: timing-sensitive): at 8 clients on
+    /// 2 servers x 2 disks, the async kernel must comfortably beat the
+    /// blocking baseline. The bench table reports >= 2x; the assertion
+    /// leaves margin for loaded CI machines.
+    #[test]
+    #[ignore]
+    fn overlap_async_beats_blocking() {
+        let blocking = overlap_bw(8, 2, 2, 1, 2 * MB, 64 * 1024).unwrap();
+        let asynced = overlap_bw(8, 2, 2, 16, 2 * MB, 64 * 1024).unwrap();
+        assert!(
+            asynced >= 1.5 * blocking,
+            "async {asynced:.1} MB/s vs blocking {blocking:.1} MB/s"
+        );
+    }
+
+    #[test]
+    fn json_report_records_tables() {
+        crate::bench::report::reset();
+        print_table(
+            "t1",
+            &["a", "b"],
+            &[vec!["1.5".into(), "x\"y".into()]],
+        );
+        let json = crate::bench::report::to_json("unit", true);
+        assert!(json.contains("\"experiment\":\"unit\""));
+        assert!(json.contains("\"title\":\"t1\""));
+        assert!(json.contains("[1.5,\"x\\\"y\"]"), "{json}");
+        assert_eq!(crate::bench::report::tables().len(), 1);
     }
 
     #[test]

@@ -13,16 +13,20 @@
 //!   (DESIGN.md §3). One in-flight op per disk models per-spindle
 //!   contention.
 
+use std::collections::BTreeMap;
 use std::fs::OpenOptions;
 use std::os::unix::fs::FileExt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-/// Per-disk counters (lock-free reads).
+/// Per-disk counters (lock-free reads). The `sched_*` / `queue_depth`
+/// fields are maintained by the [`IoScheduler`] wrapped around a disk;
+/// they stay zero on a disk driven directly.
 #[derive(Debug, Default)]
 pub struct DiskStats {
     pub reads: AtomicU64,
@@ -31,6 +35,17 @@ pub struct DiskStats {
     pub bytes_written: AtomicU64,
     pub seeks: AtomicU64,
     pub busy_us: AtomicU64,
+    /// Ops ever enqueued on the scheduler queue.
+    pub sched_queued: AtomicU64,
+    /// Disk ops the scheduler dispatched (each serves >= 1 queued op).
+    pub sched_batches: AtomicU64,
+    /// Queued ops that were merged into an adjacent neighbour's disk op
+    /// instead of paying their own seek.
+    pub sched_coalesced: AtomicU64,
+    /// Current queue length (gauge).
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub max_queue_depth: AtomicU64,
 }
 
 /// Snapshot of [`DiskStats`].
@@ -42,6 +57,11 @@ pub struct DiskStatsSnapshot {
     pub bytes_written: u64,
     pub seeks: u64,
     pub busy_us: u64,
+    pub sched_queued: u64,
+    pub sched_batches: u64,
+    pub sched_coalesced: u64,
+    pub queue_depth: u64,
+    pub max_queue_depth: u64,
 }
 
 impl DiskStats {
@@ -53,6 +73,11 @@ impl DiskStats {
             bytes_written: self.bytes_written.load(Ordering::Relaxed),
             seeks: self.seeks.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
+            sched_queued: self.sched_queued.load(Ordering::Relaxed),
+            sched_batches: self.sched_batches.load(Ordering::Relaxed),
+            sched_coalesced: self.sched_coalesced.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
         }
     }
 }
@@ -351,6 +376,295 @@ impl Disk for SimDisk {
     }
 }
 
+// ------------------------------------------------------------ IoScheduler
+
+/// Scheduling class of a queued op. `Demand` ops (client reads, RMW
+/// fills) always go before `Prefetch` ops, so background readahead can
+/// never starve a demand miss — the inversion the old per-server
+/// prefetch thread allowed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IoPrio {
+    Demand,
+    Prefetch,
+}
+
+/// What a queued op does.
+#[derive(Debug, Clone)]
+pub enum IoKind {
+    /// Read `len` bytes at `off`. Short reads (EOF/holes) leave the
+    /// tail of the completion buffer zeroed.
+    Read { off: u64, len: u64 },
+    /// Write `data` at `off`.
+    Write { off: u64, data: Vec<u8> },
+}
+
+impl IoKind {
+    fn off(&self) -> u64 {
+        match self {
+            IoKind::Read { off, .. } => *off,
+            IoKind::Write { off, .. } => *off,
+        }
+    }
+
+    fn len(&self) -> u64 {
+        match self {
+            IoKind::Read { len, .. } => *len,
+            IoKind::Write { data, .. } => data.len() as u64,
+        }
+    }
+}
+
+/// One op submitted to an [`IoScheduler`]. `token` is opaque to the
+/// scheduler and returned verbatim in the completion.
+#[derive(Debug)]
+pub struct IoJob {
+    pub token: u64,
+    pub prio: IoPrio,
+    pub kind: IoKind,
+}
+
+/// Completion record for one [`IoJob`], delivered exactly once per
+/// submitted job (the completion callback typically re-injects it into a
+/// server's event loop as a message — see `crate::msg::IoEvent`).
+#[derive(Debug)]
+pub struct IoDone {
+    pub token: u64,
+    /// Disk offset of the op (lets the receiver derive the cache page).
+    pub off: u64,
+    /// Read payload (always exactly the requested length, zero-padded at
+    /// EOF); empty for writes.
+    pub data: Vec<u8>,
+    pub error: Option<String>,
+}
+
+type CompletionFn = Box<dyn Fn(IoDone) + Send + Sync>;
+
+#[derive(Default)]
+struct SchedQueue {
+    /// (offset, submit-seq) -> job, per class. The seq disambiguates ops
+    /// at the same offset and preserves FIFO among them.
+    demand: BTreeMap<(u64, u64), IoJob>,
+    prefetch: BTreeMap<(u64, u64), IoJob>,
+    /// Elevator head: the disk offset right after the last dispatched op.
+    head: u64,
+    seq: u64,
+    shutdown: bool,
+}
+
+struct SchedInner {
+    disk: Arc<dyn Disk>,
+    q: Mutex<SchedQueue>,
+    cv: Condvar,
+    stats: DiskStats,
+    batch: usize,
+}
+
+/// Per-disk I/O scheduler: a worker thread drains a two-class queue in
+/// elevator (SCAN) order — ascending offsets from the current head,
+/// wrapping to the lowest waiting offset — and coalesces adjacent reads
+/// into one disk op (up to `batch` queued ops per dispatch). Writes are
+/// dispatched singly. Completions fire on the worker thread via the
+/// callback given at construction. Dropping the scheduler drains the
+/// remaining queue, then stops the worker.
+pub struct IoScheduler {
+    inner: Arc<SchedInner>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl IoScheduler {
+    /// Spawn the worker. `batch` is the coalescing window: the maximum
+    /// number of queued ops merged into one disk op (>= 1).
+    pub fn start(disk: Arc<dyn Disk>, batch: usize, completion: CompletionFn) -> Self {
+        let inner = Arc::new(SchedInner {
+            disk,
+            q: Mutex::new(SchedQueue::default()),
+            cv: Condvar::new(),
+            stats: DiskStats::default(),
+            batch: batch.max(1),
+        });
+        let inner2 = inner.clone();
+        let worker = std::thread::Builder::new()
+            .name("vipios-iosched".into())
+            .spawn(move || while inner2.run_one(&completion) {})
+            .expect("spawn io scheduler");
+        Self { inner, worker: Some(worker) }
+    }
+
+    /// Enqueue one op. Never blocks; the worker picks it up in elevator
+    /// order within its priority class.
+    pub fn submit(&self, job: IoJob) {
+        self.inner.submit(job);
+    }
+
+    /// Move a still-queued prefetch op into the demand class (a demand
+    /// waiter joined it). No-op if the op was already dispatched.
+    pub fn promote(&self, token: u64) {
+        self.inner.promote(token);
+    }
+
+    /// The scheduled disk.
+    pub fn disk(&self) -> &Arc<dyn Disk> {
+        &self.inner.disk
+    }
+
+    /// Scheduler-side counters (`sched_*`, `queue_depth`); the wrapped
+    /// disk's own transfer counters stay on [`Disk::stats`].
+    pub fn sched_stats(&self) -> DiskStatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+}
+
+impl Drop for IoScheduler {
+    fn drop(&mut self) {
+        self.inner.q.lock().unwrap().shutdown = true;
+        self.inner.cv.notify_all();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SchedInner {
+    /// One worker iteration: wait for work, dispatch one (possibly
+    /// coalesced) disk op, complete its jobs. Returns `false` on
+    /// shutdown with an empty queue.
+    fn run_one(&self, completion: &CompletionFn) -> bool {
+        let batch: Vec<IoJob> = {
+            let mut q = self.q.lock().unwrap();
+            loop {
+                if !q.demand.is_empty() || !q.prefetch.is_empty() {
+                    break;
+                }
+                if q.shutdown {
+                    return false;
+                }
+                q = self.cv.wait(q).unwrap();
+            }
+            let batch = self.pick_batch(&mut q);
+            // gauge updates under the queue lock, so submit/dispatch
+            // can never interleave into a transient underflow
+            let n = batch.len() as u64;
+            self.stats.queue_depth.fetch_sub(n, Ordering::Relaxed);
+            self.stats.sched_batches.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .sched_coalesced
+                .fetch_add(n.saturating_sub(1), Ordering::Relaxed);
+            batch
+        };
+        self.execute(batch, completion);
+        true
+    }
+
+    /// Pop the next op in SCAN order and greedily absorb queued ops that
+    /// are exactly adjacent on disk (same class, reads only), up to the
+    /// coalescing window.
+    fn pick_batch(&self, q: &mut SchedQueue) -> Vec<IoJob> {
+        let use_demand = !q.demand.is_empty();
+        let head = q.head;
+        let first_key = {
+            let map = if use_demand { &q.demand } else { &q.prefetch };
+            // SCAN: first waiting offset at/after the head, else wrap
+            map.range((head, 0)..)
+                .next()
+                .or_else(|| map.iter().next())
+                .map(|(k, _)| *k)
+                .expect("non-empty queue class")
+        };
+        let map = if use_demand { &mut q.demand } else { &mut q.prefetch };
+        let first = map.remove(&first_key).expect("picked key present");
+        let mut end = first.kind.off() + first.kind.len();
+        let only_read = matches!(first.kind, IoKind::Read { .. });
+        let mut batch = vec![first];
+        while only_read && batch.len() < self.batch {
+            // any queued read starting exactly at `end` joins the run
+            let next_key = map
+                .range((end, 0)..=(end, u64::MAX))
+                .find(|(_, j)| matches!(j.kind, IoKind::Read { .. }))
+                .map(|(k, _)| *k);
+            match next_key {
+                Some(k) => {
+                    let j = map.remove(&k).expect("adjacent key present");
+                    end = j.kind.off() + j.kind.len();
+                    batch.push(j);
+                }
+                None => break,
+            }
+        }
+        q.head = end;
+        batch
+    }
+
+    /// Run one dispatched batch against the disk and deliver per-job
+    /// completions.
+    fn execute(&self, batch: Vec<IoJob>, completion: &CompletionFn) {
+        debug_assert!(!batch.is_empty());
+        match &batch[0].kind {
+            IoKind::Write { .. } => {
+                debug_assert_eq!(batch.len(), 1, "writes dispatch singly");
+                for job in batch {
+                    let IoKind::Write { off, data } = job.kind else { unreachable!() };
+                    let err = self.disk.write_at(off, &data).err().map(|e| e.to_string());
+                    completion(IoDone { token: job.token, off, data: Vec::new(), error: err });
+                }
+            }
+            IoKind::Read { .. } => {
+                let base = batch[0].kind.off();
+                let total: u64 = batch.iter().map(|j| j.kind.len()).sum();
+                let mut buf = vec![0u8; total as usize];
+                // one disk op for the whole coalesced run; short reads
+                // (EOF) leave the zero tail in place
+                let err = self.disk.read_at(base, &mut buf).err().map(|e| e.to_string());
+                let mut at = 0usize;
+                for job in batch {
+                    let len = job.kind.len() as usize;
+                    let off = job.kind.off();
+                    let data = if err.is_some() {
+                        Vec::new()
+                    } else {
+                        buf[at..at + len].to_vec()
+                    };
+                    at += len;
+                    completion(IoDone { token: job.token, off, data, error: err.clone() });
+                }
+            }
+        }
+    }
+
+    /// Queue-side half of [`IoScheduler::submit`].
+    fn submit(&self, job: IoJob) {
+        {
+            let mut q = self.q.lock().unwrap();
+            q.seq += 1;
+            let key = (job.kind.off(), q.seq);
+            match job.prio {
+                IoPrio::Demand => q.demand.insert(key, job),
+                IoPrio::Prefetch => q.prefetch.insert(key, job),
+            };
+            // counters inside the lock (see run_one)
+            let depth = self.stats.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+            self.stats.sched_queued.fetch_add(1, Ordering::Relaxed);
+            self.stats.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+        }
+        self.cv.notify_one();
+    }
+
+    /// Queue-side half of [`IoScheduler::promote`].
+    fn promote(&self, token: u64) {
+        let mut q = self.q.lock().unwrap();
+        let key = q
+            .prefetch
+            .iter()
+            .find(|(_, j)| j.token == token)
+            .map(|(&k, _)| k);
+        if let Some(k) = key {
+            if let Some(mut job) = q.prefetch.remove(&k) {
+                job.prio = IoPrio::Demand;
+                q.demand.insert(k, job);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -447,5 +761,239 @@ mod tests {
         assert!(c.cost(true, 4096) < c.cost(false, 4096));
         // crossover: seek dominates small ops
         assert!(c.cost(false, 64).as_nanos() > 10 * c.cost(true, 64).as_nanos());
+    }
+
+    // ------------------------------------------------- IoScheduler
+
+    use std::sync::mpsc::channel;
+
+    fn collecting_sched(
+        disk: Arc<dyn Disk>,
+        batch: usize,
+    ) -> (IoScheduler, std::sync::mpsc::Receiver<IoDone>) {
+        let (tx, rx) = channel();
+        let sched = IoScheduler::start(
+            disk,
+            batch,
+            Box::new(move |done| {
+                let _ = tx.send(done);
+            }),
+        );
+        (sched, rx)
+    }
+
+    #[test]
+    fn scheduler_reads_return_data_and_tokens() {
+        let d = Arc::new(MemDisk::new());
+        let mut img = vec![0u8; 4096];
+        for (i, b) in img.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        d.write_at(0, &img).unwrap();
+        let (sched, rx) = collecting_sched(d, 4);
+        for t in 0..8u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Demand,
+                kind: IoKind::Read { off: t * 512, len: 512 },
+            });
+        }
+        let mut seen = vec![false; 8];
+        for _ in 0..8 {
+            let done = rx.recv().unwrap();
+            assert!(done.error.is_none());
+            assert_eq!(done.off, done.token * 512);
+            assert_eq!(done.data, &img[done.off as usize..done.off as usize + 512]);
+            assert!(!seen[done.token as usize], "token {} completed twice", done.token);
+            seen[done.token as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        drop(sched);
+    }
+
+    #[test]
+    fn scheduler_completes_every_job_exactly_once_random() {
+        // permutation property: completions = submissions, no loss, no
+        // duplication, regardless of offsets/classes/coalescing
+        let mut rng = crate::util::XorShift64::new(0x5C4ED);
+        for case in 0..20usize {
+            let d = Arc::new(MemDisk::new());
+            d.write_at(0, &vec![7u8; 64 * 1024]).unwrap();
+            let batch = (case % 5) + 1;
+            let (sched, rx) = collecting_sched(d, batch);
+            let njobs = 40 + (case * 7) % 50;
+            for t in 0..njobs as u64 {
+                let off = rng.below(64 * 1024 / 64) * 64; // dup offsets likely
+                let prio = if rng.chance(1, 3) { IoPrio::Prefetch } else { IoPrio::Demand };
+                let kind = if rng.chance(1, 4) {
+                    IoKind::Write { off, data: vec![t as u8; 64] }
+                } else {
+                    IoKind::Read { off, len: 64 }
+                };
+                sched.submit(IoJob { token: t, prio, kind });
+            }
+            let mut seen = vec![0u32; njobs];
+            for _ in 0..njobs {
+                let done = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("scheduler lost a job");
+                assert!(done.error.is_none(), "case {case}: {:?}", done.error);
+                seen[done.token as usize] += 1;
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "case {case}: completion multiset wrong: {seen:?}"
+            );
+            let s = sched.sched_stats();
+            assert_eq!(s.sched_queued, njobs as u64);
+            assert_eq!(s.sched_batches + s.sched_coalesced, njobs as u64);
+            assert_eq!(s.queue_depth, 0);
+            drop(sched);
+        }
+    }
+
+    #[test]
+    fn scheduler_coalesces_adjacent_reads() {
+        // block the worker with a slow first op so the adjacent reads
+        // are all queued when it looks again
+        let sim = Arc::new(SimDisk::new(SimCost {
+            seek_ns: 20_000_000,
+            bytes_per_s: u64::MAX,
+            op_ns: 0,
+        }));
+        sim.write_at(0, &vec![3u8; 8192]).unwrap();
+        let (sched, rx) = collecting_sched(sim, 8);
+        sched.submit(IoJob {
+            token: 0,
+            prio: IoPrio::Demand,
+            kind: IoKind::Read { off: 4096, len: 64 },
+        });
+        std::thread::sleep(Duration::from_millis(5)); // worker now busy
+        for t in 1..=4u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Demand,
+                kind: IoKind::Read { off: (t - 1) * 1024, len: 1024 },
+            });
+        }
+        for _ in 0..5 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let s = sched.sched_stats();
+        // jobs 1..=4 are one contiguous 4 KiB run -> at most 2 batches
+        // after the blocker, so at least 3 ops were coalesced
+        assert!(s.sched_coalesced >= 3, "coalesced={}", s.sched_coalesced);
+        assert!(s.max_queue_depth >= 4);
+        drop(sched);
+    }
+
+    #[test]
+    fn scheduler_serves_demand_before_prefetch() {
+        // slow disk: the blocker keeps the worker busy while both
+        // classes queue up behind it
+        let sim = Arc::new(SimDisk::new(SimCost {
+            seek_ns: 20_000_000,
+            bytes_per_s: u64::MAX,
+            op_ns: 0,
+        }));
+        sim.write_at(0, &vec![1u8; 64 * 1024]).unwrap();
+        let (sched, rx) = collecting_sched(sim, 1);
+        sched.submit(IoJob {
+            token: 99,
+            prio: IoPrio::Demand,
+            kind: IoKind::Read { off: 0, len: 64 },
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        for t in 0..6u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Prefetch,
+                kind: IoKind::Read { off: 8192 + t * 4096, len: 64 },
+            });
+        }
+        for t in 6..9u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Demand,
+                kind: IoKind::Read { off: 32768 + t * 4096, len: 64 },
+            });
+        }
+        let order: Vec<u64> = (0..10)
+            .map(|_| rx.recv_timeout(Duration::from_secs(20)).unwrap().token)
+            .collect();
+        assert_eq!(order[0], 99);
+        let demand_last = order.iter().rposition(|&t| (6..9).contains(&t)).unwrap();
+        let prefetch_first = order.iter().position(|&t| t < 6).unwrap();
+        assert!(
+            demand_last < prefetch_first,
+            "prefetch overtook demand: {order:?}"
+        );
+        drop(sched);
+    }
+
+    #[test]
+    fn scheduler_promote_overtakes_prefetch_class() {
+        let sim = Arc::new(SimDisk::new(SimCost {
+            seek_ns: 20_000_000,
+            bytes_per_s: u64::MAX,
+            op_ns: 0,
+        }));
+        sim.write_at(0, &vec![1u8; 64 * 1024]).unwrap();
+        let (sched, rx) = collecting_sched(sim, 1);
+        sched.submit(IoJob {
+            token: 99,
+            prio: IoPrio::Demand,
+            kind: IoKind::Read { off: 0, len: 64 },
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        for t in 1..=3u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Prefetch,
+                kind: IoKind::Read { off: t * 8192, len: 64 },
+            });
+        }
+        sched.promote(2);
+        let order: Vec<u64> = (0..4)
+            .map(|_| rx.recv_timeout(Duration::from_secs(20)).unwrap().token)
+            .collect();
+        assert_eq!(order[0], 99);
+        assert_eq!(order[1], 2, "promoted op must run before the prefetch class: {order:?}");
+        drop(sched);
+    }
+
+    #[test]
+    fn scheduler_write_then_read_roundtrip() {
+        let d = Arc::new(MemDisk::new());
+        let (sched, rx) = collecting_sched(d.clone(), 4);
+        sched.submit(IoJob {
+            token: 1,
+            prio: IoPrio::Demand,
+            kind: IoKind::Write { off: 100, data: b"abc".to_vec() },
+        });
+        let done = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(done.token, 1);
+        assert!(done.error.is_none());
+        let mut buf = [0u8; 3];
+        d.read_at(100, &mut buf).unwrap();
+        assert_eq!(&buf, b"abc");
+        drop(sched);
+    }
+
+    #[test]
+    fn scheduler_drains_queue_on_drop() {
+        let d = Arc::new(MemDisk::new());
+        d.write_at(0, &[5u8; 1024]).unwrap();
+        let (sched, rx) = collecting_sched(d, 2);
+        for t in 0..20u64 {
+            sched.submit(IoJob {
+                token: t,
+                prio: IoPrio::Demand,
+                kind: IoKind::Read { off: (t % 4) * 256, len: 16 },
+            });
+        }
+        drop(sched); // must complete everything first
+        let got = rx.iter().count();
+        assert_eq!(got, 20);
     }
 }

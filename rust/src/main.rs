@@ -4,9 +4,11 @@
 //!
 //! ```text
 //! vipios demo                          quickstart write/read through a pool
-//! vipios bench <exp> [--quick]         regenerate a Chapter-8 experiment
+//! vipios bench <exp> [--quick|--small] [--json]
+//!                                      regenerate a Chapter-8 experiment;
+//!                                      --json also writes BENCH_<exp>.json
 //!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
-//!          buffer | redistribution | ablation | all
+//!          buffer | redistribution | overlap | ablation | all
 //! vipios inspect [artifacts-dir]       load + describe the compute kernels
 //! ```
 
@@ -18,7 +20,9 @@ use vipios::server::ServerConfig;
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let quick = args.iter().any(|a| a == "--quick");
+    // --small is the CI-smoke alias for --quick
+    let quick = args.iter().any(|a| a == "--quick" || a == "--small");
+    let json = args.iter().any(|a| a == "--json");
     let result = match cmd {
         "demo" => demo(),
         "bench" => {
@@ -30,7 +34,19 @@ fn main() {
                 .find(|a| !a.starts_with("--"))
                 .map(String::as_str)
                 .unwrap_or("all");
-            tables::run(exp, quick)
+            vipios::bench::report::reset();
+            tables::run(exp, quick).and_then(|()| {
+                if json {
+                    let path = format!("BENCH_{exp}.json");
+                    vipios::bench::report::write_json(
+                        std::path::Path::new(&path),
+                        exp,
+                        quick,
+                    )?;
+                    println!("\nwrote {path}");
+                }
+                Ok(())
+            })
         }
         "inspect" => {
             // default: repo-root artifacts/, where `make artifacts` writes
@@ -43,9 +59,9 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: vipios demo | bench <exp> [--quick] | inspect [dir]\n\
+                "usage: vipios demo | bench <exp> [--quick|--small] [--json] | inspect [dir]\n\
                  exps: dedicated nondedicated vs_unix vs_romio scalability \
-                 buffer redistribution ablation all"
+                 buffer redistribution overlap ablation all"
             );
             Ok(())
         }

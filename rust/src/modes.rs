@@ -65,10 +65,12 @@ impl ServerPool {
     }
 
     /// *Library mode*: one server thread standing in for the linked-in
-    /// runtime, prefetch off, write-through cache (blocking I/O only).
+    /// runtime, prefetch off, write-through cache (blocking I/O only —
+    /// `queue_depth` 1 selects the inline data path, no async kernel).
     pub fn library(mut cfg: ServerConfig) -> Result<(Self, Client)> {
         cfg.prefetch = false;
         cfg.cache = CacheConfig { write_back: false, ..cfg.cache };
+        cfg.queue_depth = 1;
         let pool = Self::start_mode(1, cfg, OpMode::Library)?;
         let client = pool.client()?;
         Ok((pool, client))

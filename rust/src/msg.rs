@@ -224,6 +224,25 @@ pub struct ServerStats {
     pub reorg_bytes_shipped: u64,
     /// `ReorgData` DI messages this server sent.
     pub reorg_di_msgs: u64,
+    /// Requests parked as continuations waiting on disk completions
+    /// (async kernel; 0 under the blocking baseline).
+    pub io_parked: u64,
+    /// Parked requests resumed by an `IoDone` completion.
+    pub io_resumed: u64,
+    /// Disk ops the per-disk schedulers dispatched (sum over disks).
+    pub io_sched_batches: u64,
+    /// Queued ops coalesced into an adjacent neighbour's disk op.
+    pub io_sched_coalesced: u64,
+    /// High-water mark of any one disk's scheduler queue.
+    pub io_max_queue_depth: u64,
+    /// Disk-completion errors (failed fills or failed victim
+    /// write-backs during page install) — nonzero means acked data may
+    /// have been affected; the blocking fallbacks report per-request
+    /// errors to clients where possible.
+    pub io_errors: u64,
+    /// Total bytes currently allocated on this server's disks (extent
+    /// reclamation keeps this bounded across redistributions).
+    pub disk_bytes: u64,
 }
 
 /// Response bodies (ACK payloads).
@@ -265,10 +284,31 @@ pub enum Response {
     Error { msg: String },
 }
 
+/// Internal completion event: a finished disk op re-entering its own
+/// server's event loop as a message (the async kernel's `IoDone`). Never
+/// crosses servers — a server is both producer (its disk workers) and
+/// consumer. Carried with [`MsgClass::ACK`] so completions are invisible
+/// to the request/amplification counters.
+#[derive(Debug, Clone)]
+pub struct IoEvent {
+    /// Which of the server's disks completed the op.
+    pub disk_idx: usize,
+    /// Fill token the server handed to the scheduler.
+    pub token: u64,
+    /// Disk offset of the op (derives the cache page).
+    pub off: u64,
+    /// Read payload (exactly the requested length, zero-padded at EOF);
+    /// empty for writes.
+    pub data: Vec<u8>,
+    pub error: Option<String>,
+}
+
 #[derive(Debug, Clone)]
 pub enum Body {
     Req(Request),
     Resp(Response),
+    /// Disk-completion event (self-addressed; see [`IoEvent`]).
+    Io(IoEvent),
 }
 
 /// A message: the paper's header (sender, client, request id, class) plus

@@ -22,12 +22,17 @@ use crate::layout::Distribution;
 /// Max payload bytes of one `ReorgData` DI message. Batching bounds the
 /// per-message memory and pipelines the shuffle: the receiver applies
 /// batch *k* to its shadow fragment while the sender is still reading
-/// batch *k+1* from disk (the double-buffering of two-phase I/O). Note
-/// there is no end-to-end flow control yet — a sender enqueues its whole
-/// cross-server share before waiting for acks, so a receiver slower than
-/// the sender's disk reads buffers the difference in its mailbox
-/// (windowed shipping is future work; see DESIGN.md §4.1).
+/// batch *k+1* from disk (the double-buffering of two-phase I/O).
 pub const SHIP_BATCH: u64 = 1 << 20;
+
+/// End-to-end ship flow control: at most this many `ReorgData` messages
+/// in flight per receiver. An ack retires one message and releases the
+/// next queued batch (which is only then read from disk), so a slow
+/// shadow-writer backpressures the sender instead of buffering the whole
+/// share in its mailbox — per receiver, memory is bounded by
+/// `SHIP_WINDOW * SHIP_BATCH` bytes. Window 2 keeps the double-buffering
+/// overlap (the receiver applies batch *k* while *k+1* is on the wire).
+pub const SHIP_WINDOW: usize = 2;
 
 /// One contiguous run a server must move: `len` bytes sitting at
 /// `src_local` in its fragment under the old layout that belong at

@@ -19,22 +19,34 @@
 //! Controller services (§5.1.1): the first server of a [`crate::msg::World`] acts as
 //! system controller (SC) and connection controller (CC) in centralized
 //! mode — the configuration the paper implemented.
+//!
+//! **Asynchronous kernel** (DESIGN.md §4.2): the event loop never blocks
+//! on a disk. A data request whose pages are resident completes inline;
+//! otherwise it parks as a continuation, its page fills go to per-disk
+//! elevator queues ([`crate::disk::IoScheduler`]), and the completions
+//! re-enter the loop as [`Body::Io`] messages that resume it — the
+//! paper's §2 "pipelined parallelism": disk activity overlapped with
+//! message handling. Per-(client, file) FIFO gates preserve program
+//! order (read-your-writes); `queue_depth <= 1` selects the blocking
+//! baseline (E9 measures the difference).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::directory::{Directory, FileMeta, Fragment, EXTENT};
-use crate::disk::{Disk, MemDisk, SimCost, SimDisk, UnixDisk};
+use crate::disk::{
+    Disk, IoJob, IoKind, IoPrio, IoScheduler, MemDisk, SimCost, SimDisk, UnixDisk,
+};
 use crate::fragmenter::{choose_distribution, fragment};
 use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
 use crate::layout::Distribution;
 use crate::memory::{BufferCache, CacheConfig, Prefetcher};
-use crate::reorg::{ship_plan, SHIP_BATCH};
+use crate::reorg::{ship_plan, SHIP_BATCH, SHIP_WINDOW};
 use crate::msg::{
-    Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
-    ServerStats, View,
+    Body, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode, Rank, Request,
+    Response, ServerStats, View,
 };
 
 /// What backs a server's disks.
@@ -61,6 +73,13 @@ pub struct ServerConfig {
     /// Fixed CPU cost charged per data request — models a *non-dedicated*
     /// I/O node whose CPU is shared with an application process (E2).
     pub request_overhead: Duration,
+    /// Async kernel knob. `> 1`: requests that miss the cache park as
+    /// continuations and page fills go to per-disk elevator queues;
+    /// the value is the coalescing window (max adjacent page fills
+    /// merged into one disk op). `<= 1`: the blocking baseline — every
+    /// data request executes inline to completion (pre-async behaviour,
+    /// and what library mode uses).
+    pub queue_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +91,7 @@ impl Default for ServerConfig {
             prefetch: true,
             readahead: 256 * 1024,
             request_overhead: Duration::ZERO,
+            queue_depth: 8,
         }
     }
 }
@@ -100,15 +120,66 @@ enum Pending {
     ReorgShipWait { file: FileId, acks_left: usize },
     /// Reorg coordinator round 3: commit acks outstanding.
     ReorgCommitWait { file: FileId, acks_left: usize },
-    /// Reorg participant: `ReorgData` acks outstanding before reporting
-    /// `ReorgShipped` to the coordinator.
-    ReorgDataWait { file: FileId, acks_left: usize },
+    /// Reorg participant: `ReorgData` messages in flight (windowed; an
+    /// ack from a receiver both retires one message and releases the
+    /// next queued batch for that receiver — the ship flow control).
+    ReorgDataWait { file: FileId, inflight: usize },
 }
 
 enum MetaWaitKind {
     Open,
     GetSize,
     Sync,
+}
+
+/// One in-flight page fill on a disk scheduler queue.
+struct Fill {
+    disk_idx: usize,
+    page_no: u64,
+    /// Demand fills count cache misses; prefetch fills count
+    /// `prefetch_hits` on completion.
+    demand: bool,
+    /// Parked continuations to notify when the page lands.
+    waiters: Vec<u64>,
+    /// The payload was read before a cache drop / extent reclamation
+    /// invalidated it: resume the waiters but do NOT install the page
+    /// (they re-read through the blocking cache path instead).
+    stale: bool,
+}
+
+/// A data request parked as a continuation while its page fills are in
+/// flight (async kernel). The event loop keeps running; the completion
+/// events resume it.
+struct Parked {
+    fills_left: usize,
+    client: Rank,
+    req_id: u64,
+    file: FileId,
+    op: ParkedOp,
+}
+
+enum ParkedOp {
+    /// Resume = read the (now resident) runs and ACK `Data` to the VI.
+    Read { frag: Fragment, parts: Vec<(u64, u64, u64)> },
+    /// Resume = apply the pre-sliced `(disk_off, bytes)` pieces through
+    /// the cache and ACK `Written`.
+    Write { disk_idx: usize, pieces: Vec<(u64, Vec<u8>)>, bytes: u64 },
+}
+
+/// Per-(client, file) FIFO gate: while one op from the pair is parked,
+/// later data ops from the same pair queue here instead of dispatching —
+/// this is what preserves program order (read-your-writes) under the
+/// async engine. Ops from other clients/files flow past freely.
+#[derive(Default)]
+struct Gate {
+    inflight: bool,
+    queue: VecDeque<GateOp>,
+}
+
+enum GateOp {
+    Read { req_id: u64, parts: Vec<(u64, u64, u64)> },
+    Write { req_id: u64, parts: Vec<(u64, Vec<u8>)> },
+    Sync { req_id: u64 },
 }
 
 /// Coordinator-side state of one in-flight redistribution (the file's
@@ -143,6 +214,24 @@ struct ReorgLocal {
     deferred: Vec<(Rank, Rank, u64, Request)>,
     ship_bytes: u64,
     ship_msgs: u64,
+    /// Flow control (credit window): per-receiver batches not yet sent,
+    /// as `(dst_local, src_local, len)` run lists summing <= SHIP_BATCH.
+    /// The data is read from disk only when the batch is released by an
+    /// ack, so a slow receiver bounds the sender's memory and its own
+    /// mailbox at ~`SHIP_WINDOW * SHIP_BATCH` bytes.
+    ship_queue: HashMap<Rank, VecDeque<Vec<(u64, u64, u64)>>>,
+    /// Frozen source fragment the queued batches read from (immutable
+    /// for the whole window: client writes are deferred).
+    ship_frag: Fragment,
+    /// A `ReorgShip` that arrived while data ops were still parked on
+    /// the file; executed as soon as it quiesces. Without this a write
+    /// parked on an RMW fill could be read-before-applied by the ship
+    /// pass and silently lost at commit — a state the blocking kernel
+    /// could never enter. `(src, client, req_id, size)`.
+    pending_ship: Option<(Rank, Rank, u64, u64)>,
+    /// A `ReorgCommit` that arrived while ops were still parked on the
+    /// old fragment; executed as soon as the file quiesces.
+    pending_commit: Option<(Rank, Rank, u64)>,
 }
 
 /// One ViPIOS server. Construct with [`Server::new`], then either run
@@ -153,6 +242,35 @@ pub struct Server {
     cfg: ServerConfig,
     disks: Vec<Arc<dyn Disk>>,
     alloc: Vec<u64>,
+    /// Reclaimed extent offsets per disk (extent free list): fragments
+    /// replaced by a reorg commit or removed hand their extents back
+    /// here, and allocation prefers them over bumping `alloc`.
+    free_extents: Vec<Vec<u64>>,
+    /// Per-disk I/O schedulers (async kernel); empty under the blocking
+    /// baseline (`queue_depth <= 1`).
+    io: Vec<IoScheduler>,
+    /// In-flight page fills by token.
+    fills: HashMap<u64, Fill>,
+    /// Dedup index: (disk, page) -> fill token, so concurrent misses on
+    /// one page share a single disk op.
+    fill_by_page: HashMap<(usize, u64), u64>,
+    /// Parked request continuations by park id.
+    parked: HashMap<u64, Parked>,
+    /// Per-(client, file) FIFO gates (see [`Gate`]).
+    gate: HashMap<(Rank, FileId), Gate>,
+    /// `FlushInt` requests deferred because the requesting client still
+    /// has parked/queued data ops on this server: flushing before a
+    /// parked write applies would let a cross-server sync barrier
+    /// complete ahead of that write. `(client, src, req_id)`.
+    pending_flushes: Vec<(Rank, Rank, u64)>,
+    /// Token source for fills and parks.
+    next_token: u64,
+    /// Artificial cache hits produced by resumed demand reads touching
+    /// their just-installed fill pages; subtracted from reported
+    /// `cache_hits` so the ratio stays comparable to the blocking path.
+    fill_hit_skew: u64,
+    /// Master prefetch switch (`SystemHint::Prefetch`).
+    prefetch_on: bool,
     cache: Arc<BufferCache>,
     prefetcher: Option<Prefetcher>,
     dir: Directory,
@@ -196,17 +314,70 @@ impl Server {
             disks.push(d);
         }
         let cache = Arc::new(BufferCache::new(cfg.cache));
-        let prefetcher = if cfg.prefetch {
+        // Async kernel: one elevator queue + worker per disk; finished
+        // ops re-enter the event loop as `Body::Io` messages to our own
+        // mailbox (class ACK, so completions stay invisible to the
+        // request/amplification counters).
+        let io: Vec<IoScheduler> = if cfg.queue_depth > 1 {
+            disks
+                .iter()
+                .enumerate()
+                .map(|(i, d)| {
+                    let world = ep.world.clone();
+                    let me = ep.rank;
+                    IoScheduler::start(
+                        d.clone(),
+                        cfg.queue_depth,
+                        Box::new(move |done| {
+                            let _ = world.send(
+                                me,
+                                Msg {
+                                    src: me,
+                                    client: me,
+                                    req_id: done.token,
+                                    class: MsgClass::ACK,
+                                    body: Body::Io(IoEvent {
+                                        disk_idx: i,
+                                        token: done.token,
+                                        off: done.off,
+                                        data: done.data,
+                                        error: done.error,
+                                    }),
+                                },
+                            );
+                        }),
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // the legacy per-server prefetch worker only serves the blocking
+        // baseline; the async kernel routes prefetch through the per-disk
+        // queues at low priority instead
+        let prefetcher = if cfg.prefetch && io.is_empty() {
             Some(Prefetcher::start(cache.clone()))
         } else {
             None
         };
         let alloc = vec![0u64; disks.len()];
+        let free_extents = vec![Vec::new(); disks.len()];
+        let prefetch_on = cfg.prefetch;
         Ok(Self {
             ep,
             cfg,
             disks,
             alloc,
+            free_extents,
+            io,
+            fills: HashMap::new(),
+            fill_by_page: HashMap::new(),
+            parked: HashMap::new(),
+            gate: HashMap::new(),
+            pending_flushes: Vec::new(),
+            next_token: 0,
+            fill_hit_skew: 0,
+            prefetch_on,
             cache,
             prefetcher,
             dir: Directory::new(),
@@ -265,11 +436,90 @@ impl Server {
             .is_ok()
     }
 
-    #[allow(dead_code)]
-    fn alloc_extent(&mut self, disk_idx: usize) -> u64 {
-        let off = self.alloc[disk_idx];
-        self.alloc[disk_idx] += EXTENT;
-        off
+    /// Hand a dead fragment's disk extents back to the free list
+    /// (extent reclamation — replaced by a reorg commit or removed).
+    /// Cached pages of the extents are dropped *without* write-back (the
+    /// data is dead); the on-disk bytes are zeroed lazily when an extent
+    /// is popped for reuse ([`Server::zero_extent`]), keeping the commit
+    /// and remove paths O(1) in file size.
+    fn free_fragment(&mut self, frag: &Fragment) {
+        if frag.extents.is_empty() {
+            return;
+        }
+        let disk_idx = frag.disk_idx;
+        for &base in &frag.extents {
+            self.cache.purge_range(disk_idx, base, EXTENT);
+            // an in-flight (prefetch) fill of a dead page must not
+            // resurrect it after the purge
+            let (first, last) = self.cache.page_span(base, EXTENT);
+            for f in self.fills.values_mut() {
+                if f.disk_idx == disk_idx && (first..=last).contains(&f.page_no) {
+                    f.stale = true;
+                }
+            }
+            self.free_extents[disk_idx].push(base);
+        }
+    }
+
+    /// Map `[local, local+len)` of a caller-owned fragment onto disk
+    /// runs, allocating extents from the free list first (zeroed lazily
+    /// right here at reuse — the single place the "a reused extent never
+    /// leaks a previous file's bytes" invariant lives), then the bump
+    /// allocator. Newly mapped extent bases are appended to `fresh`
+    /// when given (they are all zero-content by construction).
+    fn map_alloc_extents(
+        &mut self,
+        frag: &mut Fragment,
+        local: u64,
+        len: u64,
+        fresh: Option<&mut Vec<u64>>,
+    ) -> Vec<(u64, u64)> {
+        let disk_idx = frag.disk_idx;
+        let mut free = std::mem::take(&mut self.free_extents[disk_idx]);
+        let mut next = self.alloc[disk_idx];
+        let mut reused: Vec<u64> = Vec::new();
+        let mut newly: Vec<u64> = Vec::new();
+        let runs = frag.map_alloc(local, len, || {
+            let v = match free.pop() {
+                Some(v) => {
+                    reused.push(v);
+                    v
+                }
+                None => {
+                    let v = next;
+                    next += EXTENT;
+                    v
+                }
+            };
+            newly.push(v);
+            v
+        });
+        self.alloc[disk_idx] = next;
+        self.free_extents[disk_idx] = free;
+        for base in reused {
+            self.zero_extent(disk_idx, base);
+        }
+        if let Some(f) = fresh {
+            f.extend(newly);
+        }
+        runs
+    }
+
+    /// Zero a reused free-list extent on disk (up to the current device
+    /// length — bytes beyond it already read as zeros), so the new owner
+    /// can never see the previous file's bytes through a sparse or
+    /// unwritten region. Paid only on actual reuse, by the reusing
+    /// write, never on the commit/remove path.
+    fn zero_extent(&mut self, disk_idx: usize, base: u64) {
+        let disk = self.disks[disk_idx].clone();
+        let zeros = vec![0u8; 64 * 1024];
+        let end = disk.len().min(base + EXTENT);
+        let mut o = base;
+        while o < end {
+            let n = (zeros.len() as u64).min(end - o) as usize;
+            let _ = disk.write_at(o, &zeros[..n]);
+            o += n as u64;
+        }
     }
 
     /// Make sure the directory knows this file (foe servers learn meta
@@ -284,6 +534,43 @@ impl Server {
     }
 
     // ------------------------------------------------------ data path
+    //
+    // Async kernel (DESIGN.md §4.2): `serve_local_read`/`serve_local_write`
+    // no longer block the event loop on the disk. A data op whose pages
+    // are all resident executes inline; otherwise it *parks* as a
+    // continuation, its missing pages are submitted to the per-disk
+    // elevator queues, and the completion events resume it. A per-
+    // (client, file) FIFO gate queues later ops from the same pair behind
+    // a parked one, preserving program order (read-your-writes); other
+    // clients' ops flow past — that overlap is the whole point.
+
+    fn gate_busy(&self, client: Rank, file: FileId) -> bool {
+        self.gate
+            .get(&(client, file))
+            .is_some_and(|g| g.inflight || !g.queue.is_empty())
+    }
+
+    /// Any in-flight or queued data op on `file`, from any client?
+    /// (A reorg commit defers on this: parked reads hold the old
+    /// fragment and its disk extents alive.)
+    fn file_busy(&self, file: FileId) -> bool {
+        self.gate
+            .iter()
+            .any(|((_, f), g)| *f == file && (g.inflight || !g.queue.is_empty()))
+    }
+
+    /// Any in-flight or queued data op from `client`, on any file?
+    /// (`FlushInt` defers on this.)
+    fn client_busy(&self, client: Rank) -> bool {
+        self.gate
+            .iter()
+            .any(|((c, _), g)| *c == client && (g.inflight || !g.queue.is_empty()))
+    }
+
+    fn token(&mut self) -> u64 {
+        self.next_token += 1;
+        self.next_token
+    }
 
     /// Read local fragment runs and ACK them directly to the client.
     fn serve_local_read(
@@ -294,6 +581,27 @@ impl Server {
         parts: &[(u64, u64, u64)],
     ) {
         crate::disk::precise_wait(self.cfg.request_overhead);
+        if self.gate_busy(client, file) {
+            self.gate
+                .entry((client, file))
+                .or_default()
+                .queue
+                .push_back(GateOp::Read { req_id, parts: parts.to_vec() });
+            return;
+        }
+        if self.dispatch_read(client, req_id, file, parts) {
+            self.gate.entry((client, file)).or_default().inflight = true;
+        }
+    }
+
+    /// Execute or park one local read; returns `true` if it parked.
+    fn dispatch_read(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        parts: &[(u64, u64, u64)],
+    ) -> bool {
         let entry = match self.dir.get(file) {
             Some(e) => e,
             None => {
@@ -306,13 +614,214 @@ impl Server {
                         Response::Data { dst_base: dst, data: vec![0; len as usize] },
                     );
                 }
-                return;
+                return false;
             }
         };
         let frag = entry.frag.clone().unwrap_or_default();
-        let total = self.read_frag_parts(&frag, client, req_id, parts);
-        self.stats.bytes_read += total;
-        self.readahead(client, file, parts);
+        let missing = if self.io.is_empty() {
+            Vec::new() // blocking baseline: read through the cache inline
+        } else {
+            self.missing_pages_of(&frag, parts)
+        };
+        if missing.is_empty() {
+            let total = self.read_frag_parts(&frag, client, req_id, parts);
+            self.stats.bytes_read += total;
+            self.readahead(client, file, parts);
+            return false;
+        }
+        let pid = self.token();
+        let n = missing.len();
+        for page_no in missing {
+            self.want_page(frag.disk_idx, page_no, Some(pid), IoPrio::Demand);
+        }
+        self.parked.insert(
+            pid,
+            Parked {
+                fills_left: n,
+                client,
+                req_id,
+                file,
+                op: ParkedOp::Read { frag, parts: parts.to_vec() },
+            },
+        );
+        self.stats.io_parked += 1;
+        true
+    }
+
+    /// Cache pages the runs of `parts` need that are not resident.
+    fn missing_pages_of(&self, frag: &Fragment, parts: &[(u64, u64, u64)]) -> Vec<u64> {
+        let mut pages = BTreeSet::new();
+        for &(local, len, _) in parts {
+            for (d, run) in frag.runs(local, len) {
+                if let Some(doff) = d {
+                    let (first, last) = self.cache.page_span(doff, run);
+                    for no in first..=last {
+                        if !self.cache.is_resident(frag.disk_idx, no) {
+                            pages.insert(no);
+                        }
+                    }
+                }
+            }
+        }
+        pages.into_iter().collect()
+    }
+
+    /// Make sure a page fill is in flight, creating one if needed and
+    /// registering `waiter` (a park id) on it.
+    fn want_page(&mut self, disk_idx: usize, page_no: u64, waiter: Option<u64>, prio: IoPrio) {
+        if let Some(&tok) = self.fill_by_page.get(&(disk_idx, page_no)) {
+            let fill = self.fills.get_mut(&tok).expect("fill for indexed page");
+            if let Some(w) = waiter {
+                fill.waiters.push(w);
+                // a demand waiter joining a prefetch fill makes it
+                // demand — including its still-queued scheduler op, so
+                // sustained demand load cannot starve the parked waiter
+                if !fill.demand {
+                    fill.demand = true;
+                    self.io[disk_idx].promote(tok);
+                }
+            }
+            return;
+        }
+        let tok = self.token();
+        let ps = self.cache.config().page as u64;
+        self.fills.insert(
+            tok,
+            Fill {
+                disk_idx,
+                page_no,
+                demand: prio == IoPrio::Demand,
+                waiters: waiter.into_iter().collect(),
+                stale: false,
+            },
+        );
+        self.fill_by_page.insert((disk_idx, page_no), tok);
+        self.io[disk_idx].submit(IoJob {
+            token: tok,
+            prio,
+            kind: IoKind::Read { off: page_no * ps, len: ps },
+        });
+    }
+
+    /// A disk completion re-entered the event loop: install the page and
+    /// resume every continuation that was waiting on it.
+    fn handle_io(&mut self, ev: IoEvent) {
+        let Some(fill) = self.fills.remove(&ev.token) else { return };
+        self.fill_by_page.remove(&(fill.disk_idx, fill.page_no));
+        if ev.error.is_some() {
+            // surfaced via the io_errors counter; the waiters resume and
+            // retry through the blocking cache path, which reports its
+            // own failure to the client
+            self.stats.io_errors += 1;
+        } else if !fill.stale {
+            let disk = self.disks[fill.disk_idx].clone();
+            match self.cache.install_page(
+                fill.disk_idx,
+                &disk,
+                fill.page_no,
+                ev.data,
+                fill.demand,
+            ) {
+                Ok(installed) => {
+                    if installed && fill.demand {
+                        // the resumed read will count one artificial hit
+                        // on this just-installed page; compensate so
+                        // hit/miss stay comparable to the blocking
+                        // baseline (one access = one miss)
+                        self.fill_hit_skew += 1;
+                    }
+                    if !fill.demand {
+                        self.stats.prefetch_hits += 1;
+                    }
+                }
+                // a dirty victim's write-back failed: acked data may be
+                // gone — make it visible instead of silent
+                Err(_) => self.stats.io_errors += 1,
+            }
+        }
+        for pid in fill.waiters {
+            self.fill_done(pid);
+        }
+    }
+
+    /// One of a parked op's fills landed; resume it when all have.
+    /// (On a fill error the page is simply not resident — the resumed op
+    /// falls back to the blocking cache path for it, mirroring the
+    /// best-effort error handling of the inline read path.)
+    fn fill_done(&mut self, pid: u64) {
+        let Some(p) = self.parked.get_mut(&pid) else { return };
+        p.fills_left -= 1;
+        if p.fills_left > 0 {
+            return;
+        }
+        let p = self.parked.remove(&pid).expect("parked op present");
+        self.stats.io_resumed += 1;
+        let key = (p.client, p.file);
+        match p.op {
+            ParkedOp::Read { frag, parts } => {
+                let total = self.read_frag_parts(&frag, p.client, p.req_id, &parts);
+                self.stats.bytes_read += total;
+                self.readahead(p.client, p.file, &parts);
+            }
+            ParkedOp::Write { disk_idx, pieces, bytes } => {
+                self.finish_write(p.client, p.req_id, disk_idx, &pieces, bytes);
+            }
+        }
+        self.gate_open(key);
+    }
+
+    /// Re-open a (client, file) gate after its parked op finished:
+    /// dispatch queued ops in FIFO order until one parks again or the
+    /// queue drains.
+    fn gate_open(&mut self, key: (Rank, FileId)) {
+        loop {
+            let Some(g) = self.gate.get_mut(&key) else { break };
+            g.inflight = false;
+            let Some(op) = g.queue.pop_front() else {
+                self.gate.remove(&key);
+                break;
+            };
+            let parked = match op {
+                GateOp::Read { req_id, parts } => {
+                    self.dispatch_read(key.0, req_id, key.1, &parts)
+                }
+                GateOp::Write { req_id, parts } => {
+                    self.dispatch_write(key.0, req_id, key.1, parts)
+                }
+                GateOp::Sync { req_id } => {
+                    self.sync(key.0, key.0, req_id, key.1);
+                    false
+                }
+            };
+            if parked {
+                self.gate.entry(key).or_default().inflight = true;
+                break;
+            }
+        }
+        // a reorg phase or a cross-server flush that waited for this
+        // file/client to quiesce may be runnable now
+        self.reorg_quiesced(key.1);
+        self.run_pending_flushes(key.0);
+    }
+
+    /// Run `FlushInt`s deferred on a client whose ops just drained.
+    fn run_pending_flushes(&mut self, client: Rank) {
+        if self.pending_flushes.is_empty() || self.client_busy(client) {
+            return;
+        }
+        let mut due = Vec::new();
+        self.pending_flushes.retain(|&(c, src, req_id)| {
+            if c == client {
+                due.push((src, req_id));
+                false
+            } else {
+                true
+            }
+        });
+        for (src, req_id) in due {
+            self.flush_all();
+            self.ack(src, client, req_id, Response::Synced);
+        }
     }
 
     /// Read `(local, len, dst)` runs of one fragment and ACK each as
@@ -354,7 +863,9 @@ impl Server {
 
     /// Per-server local sequential readahead (pipelined parallelism).
     fn readahead(&mut self, client: Rank, file: FileId, parts: &[(u64, u64, u64)]) {
-        let Some(pf) = &self.prefetcher else { return };
+        if !self.prefetch_on {
+            return;
+        }
         let Some((last_local, last_len, _)) = parts.last().copied() else { return };
         let end = last_local + last_len;
         let key = (client, file);
@@ -369,6 +880,7 @@ impl Server {
             .get(&file)
             .copied()
             .unwrap_or(self.cfg.readahead);
+        let mut runs: Vec<(usize, u64, u64)> = Vec::new();
         if let Some(e) = self.dir.get(file) {
             if let Some(frag) = &e.frag {
                 // only prefetch what exists
@@ -377,17 +889,39 @@ impl Server {
                 if len > 0 {
                     for (d, run) in frag.runs(end, len) {
                         if let Some(doff) = d {
-                            pf.submit(
-                                frag.disk_idx,
-                                self.disks[frag.disk_idx].clone(),
-                                doff,
-                                run,
-                            );
-                            self.stats.prefetch_issued += 1;
+                            runs.push((frag.disk_idx, doff, run));
                         }
                     }
                 }
             }
+        }
+        for (disk_idx, doff, run) in runs {
+            self.submit_prefetch(disk_idx, doff, run);
+        }
+    }
+
+    /// Route one prefetch run to the right backend: the per-disk queue
+    /// at low priority (async kernel — demand ops always overtake it),
+    /// or the legacy prefetch worker (blocking baseline).
+    fn submit_prefetch(&mut self, disk_idx: usize, doff: u64, run: u64) {
+        if self.io.is_empty() {
+            if let Some(pf) = &self.prefetcher {
+                pf.submit(disk_idx, self.disks[disk_idx].clone(), doff, run);
+                self.stats.prefetch_issued += 1;
+            }
+            return;
+        }
+        // counted per run (like the legacy worker), even when every page
+        // turns out resident — "issued" means the hint/readahead fired
+        self.stats.prefetch_issued += 1;
+        let (first, last) = self.cache.page_span(doff, run);
+        for no in first..=last {
+            if self.cache.is_resident(disk_idx, no)
+                || self.fill_by_page.contains_key(&(disk_idx, no))
+            {
+                continue;
+            }
+            self.want_page(disk_idx, no, None, IoPrio::Prefetch);
         }
     }
 
@@ -400,7 +934,35 @@ impl Server {
         parts: Vec<(u64, Vec<u8>)>,
     ) {
         crate::disk::precise_wait(self.cfg.request_overhead);
-        let mut bytes = 0u64;
+        if self.gate_busy(client, file) {
+            self.gate
+                .entry((client, file))
+                .or_default()
+                .queue
+                .push_back(GateOp::Write { req_id, parts });
+            return;
+        }
+        if self.dispatch_write(client, req_id, file, parts) {
+            self.gate.entry((client, file)).or_default().inflight = true;
+        }
+    }
+
+    /// Execute or park one local write; returns `true` if it parked.
+    ///
+    /// Extent allocation and fragment bookkeeping happen *here*, at
+    /// dispatch time on the event-loop thread — only the disk work
+    /// (read-modify-write fills of partially overwritten pages) is
+    /// asynchronous. Pages that lie entirely inside a freshly allocated
+    /// extent need no fill at all: the disk holds no data there (bump
+    /// extents are virgin, reclaimed extents are zeroed right here at
+    /// reuse), so an all-zero page is installed instead.
+    fn dispatch_write(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        parts: Vec<(u64, Vec<u8>)>,
+    ) -> bool {
         let Some(entry) = self.dir.get_mut(file) else {
             self.ack(
                 client,
@@ -408,43 +970,127 @@ impl Server {
                 req_id,
                 Response::Error { msg: format!("write to unknown file {file:?}") },
             );
-            return;
+            return false;
         };
         let mut frag = entry.frag.take().unwrap_or_else(|| {
             Fragment::new((file.0 as usize) % 1)
         });
         let disk_idx = frag.disk_idx;
-        let disk = self.disks[disk_idx].clone();
-        let mut failed: Option<String> = None;
+        // translate every part into (disk_off, bytes) pieces, allocating
+        // extents as needed (free list first; see map_alloc_extents)
+        let mut fresh: Vec<u64> = Vec::new();
+        let mut pieces: Vec<(u64, Vec<u8>)> = Vec::new();
+        let mut bytes = 0u64;
         for (local, data) in &parts {
-            let mut next_alloc = self.alloc[disk_idx];
-            let runs = frag.map_alloc(*local, data.len() as u64, || {
-                let v = next_alloc;
-                next_alloc += EXTENT;
-                v
-            });
-            self.alloc[disk_idx] = next_alloc;
+            let runs =
+                self.map_alloc_extents(&mut frag, *local, data.len() as u64, Some(&mut fresh));
             let mut at = 0usize;
             for (doff, run) in runs {
-                if let Err(e) =
-                    self.cache.write(disk_idx, &disk, doff, &data[at..at + run as usize])
-                {
-                    failed = Some(e.to_string());
-                    break;
-                }
+                pieces.push((doff, data[at..at + run as usize].to_vec()));
                 at += run as usize;
-            }
-            if failed.is_some() {
-                break;
             }
             frag.local_len = frag.local_len.max(local + data.len() as u64);
             bytes += data.len() as u64;
         }
-        // restore fragment
         if let Some(entry) = self.dir.get_mut(file) {
             entry.frag = Some(frag);
         }
-        self.stats.bytes_written += bytes;
+        if self.io.is_empty() {
+            // blocking baseline: the cache does RMW fills inline
+            self.finish_write(client, req_id, disk_idx, &pieces, bytes);
+            return false;
+        }
+        // pages only partially covered by a piece need their old content
+        // (read-modify-write) unless they are resident or zero-fresh
+        let ps = self.cache.config().page as u64;
+        let mut need: BTreeSet<u64> = BTreeSet::new();
+        for (doff, data) in &pieces {
+            let end = doff + data.len() as u64;
+            if doff % ps != 0 {
+                need.insert(doff / ps);
+            }
+            if end % ps != 0 {
+                need.insert((end - 1) / ps);
+            }
+        }
+        let mut missing: Vec<u64> = Vec::new();
+        for no in need {
+            if self.cache.is_resident(disk_idx, no) {
+                continue;
+            }
+            let pstart = no * ps;
+            let zero_fresh = ps <= EXTENT
+                && fresh
+                    .iter()
+                    .any(|&base| base <= pstart && pstart + ps <= base + EXTENT);
+            if zero_fresh {
+                let disk = self.disks[disk_idx].clone();
+                let _ = self.cache.install_zero_page(disk_idx, &disk, no);
+            } else {
+                missing.push(no);
+            }
+        }
+        if missing.is_empty() {
+            self.finish_write(client, req_id, disk_idx, &pieces, bytes);
+            return false;
+        }
+        let pid = self.token();
+        let n = missing.len();
+        for no in missing {
+            self.want_page(disk_idx, no, Some(pid), IoPrio::Demand);
+        }
+        self.parked.insert(
+            pid,
+            Parked {
+                fills_left: n,
+                client,
+                req_id,
+                file,
+                op: ParkedOp::Write { disk_idx, pieces, bytes },
+            },
+        );
+        self.stats.io_parked += 1;
+        true
+    }
+
+    /// Apply pre-sliced write pieces through the cache and ACK.
+    fn finish_write(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        disk_idx: usize,
+        pieces: &[(u64, Vec<u8>)],
+        bytes: u64,
+    ) {
+        // any page this write touches may have a fill in flight whose
+        // payload was read from disk before the write (including fills
+        // created while the write itself was parked): a late install of
+        // that payload must not resurrect pre-write bytes after the
+        // dirty page is evicted. RMW fills this write waited on are
+        // already retired by now, so they are never mis-marked.
+        for (doff, data) in pieces {
+            let (first, last) = self.cache.page_span(*doff, data.len() as u64);
+            for no in first..=last {
+                if let Some(&tok) = self.fill_by_page.get(&(disk_idx, no)) {
+                    if let Some(f) = self.fills.get_mut(&tok) {
+                        f.stale = true;
+                    }
+                }
+            }
+        }
+        let disk = self.disks[disk_idx].clone();
+        let mut failed: Option<String> = None;
+        let mut done = 0u64;
+        for (doff, data) in pieces {
+            match self.cache.write(disk_idx, &disk, *doff, data) {
+                Ok(()) => done += data.len() as u64,
+                Err(e) => {
+                    failed = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        self.stats.bytes_written += done;
         match failed {
             Some(msg) => self.ack(client, client, req_id, Response::Error { msg }),
             None => self.ack(client, client, req_id, Response::Written { bytes }),
@@ -452,15 +1098,19 @@ impl Server {
     }
 
     fn serve_local_prefetch(&mut self, file: FileId, parts: &[(u64, u64)]) {
+        if !self.prefetch_on {
+            return;
+        }
         let Some(entry) = self.dir.get(file) else { return };
         let Some(frag) = entry.frag.clone() else { return };
-        let Some(pf) = &self.prefetcher else { return };
+        if self.io.is_empty() && self.prefetcher.is_none() {
+            return;
+        }
         for &(local, len) in parts {
             let len = len.min(frag.local_len.saturating_sub(local));
             for (d, run) in frag.runs(local, len) {
                 if let Some(doff) = d {
-                    pf.submit(frag.disk_idx, self.disks[frag.disk_idx].clone(), doff, run);
-                    self.stats.prefetch_issued += 1;
+                    self.submit_prefetch(frag.disk_idx, doff, run);
                 }
             }
         }
@@ -480,7 +1130,11 @@ impl Server {
         match body {
             Body::Req(req) => self.handle_req(src, client, req_id, class, req),
             Body::Resp(resp) => {
-                self.handle_resp(req_id, resp);
+                self.handle_resp(src, req_id, resp);
+                true
+            }
+            Body::Io(ev) => {
+                self.handle_io(ev);
                 true
             }
         }
@@ -553,7 +1207,7 @@ impl Server {
                 self.sc_remove(client, client, req_id, &name);
             }
             Request::RemoveInt { file } => {
-                self.dir.remove(file);
+                let removed = self.dir.remove(file);
                 // fail deferred writers instead of dropping their
                 // requests (they are blocked waiting for Written acks)
                 if let Some(mut st) = self.reorg_local.remove(&file) {
@@ -567,8 +1221,33 @@ impl Server {
                             },
                         );
                     }
+                    // a ship/commit deferred on parked ops can never run
+                    // now; answer the coordinator so it does not hang
+                    if let Some((ssrc, sclient, sreq, _)) = st.pending_ship.take() {
+                        self.ack(
+                            ssrc,
+                            sclient,
+                            sreq,
+                            Response::ReorgShipped { bytes: 0, msgs: 0 },
+                        );
+                    }
+                    if let Some((csrc, cclient, creq)) = st.pending_commit.take() {
+                        self.ack(csrc, cclient, creq, Response::ReorgCommitted);
+                    }
+                    // the half-built shadow's extents are dead
+                    self.free_fragment(&st.shadow);
                 }
                 self.reorg_abort(file, format!("{file:?} removed during redistribution"));
+                // reclaim the fragment's disk extents — unless in-flight
+                // ops still read them (then the rare removal-under-load
+                // leaks the footprint rather than risking reuse)
+                if let Some(e) = removed {
+                    if let Some(frag) = e.frag {
+                        if !self.file_busy(file) {
+                            self.free_fragment(&frag);
+                        }
+                    }
+                }
             }
             Request::Read { file, offset, len, view, dst_base } => {
                 self.read(src, client, req_id, file, offset, len, view, dst_base)
@@ -634,11 +1313,31 @@ impl Server {
             }
             Request::SetSize { file, size } => self.set_size(src, client, req_id, file, size),
             Request::GetSize { file } => self.get_size(src, client, req_id, file),
-            Request::Sync { file } => self.sync(src, client, req_id, file),
+            Request::Sync { file } => {
+                // program order: a sync must not complete ahead of the
+                // same client's parked/queued data ops on the file
+                if self.gate_busy(client, file) {
+                    self.gate
+                        .entry((client, file))
+                        .or_default()
+                        .queue
+                        .push_back(GateOp::Sync { req_id });
+                } else {
+                    self.sync(src, client, req_id, file);
+                }
+            }
             Request::FlushInt => {
-                self.flush_all();
-                // ack to the requesting *server* with its internal id
-                self.ack(src, client, req_id, Response::Synced);
+                // the FIFO mailbox delivered every pre-sync LocalWrite of
+                // this client already, but one may still be *parked*; a
+                // flush now would let the sync barrier complete ahead of
+                // it. Defer until the client's ops here quiesce.
+                if self.client_busy(client) {
+                    self.pending_flushes.push((client, src, req_id));
+                } else {
+                    self.flush_all();
+                    // ack to the requesting *server* with its internal id
+                    self.ack(src, client, req_id, Response::Synced);
+                }
             }
             Request::Hint(h) => {
                 self.hint(client, h);
@@ -678,7 +1377,16 @@ impl Server {
                 self.reorg_freeze(src, client, req_id, meta, target)
             }
             Request::ReorgShip { file, size } => {
-                self.reorg_ship(src, client, req_id, file, size)
+                // a write parked on a disk completion has been acked
+                // into neither cache nor shadow yet: shipping now would
+                // lose it. Defer until the file quiesces.
+                if self.file_busy(file) && self.reorg_local.contains_key(&file) {
+                    if let Some(st) = self.reorg_local.get_mut(&file) {
+                        st.pending_ship = Some((src, client, req_id, size));
+                    }
+                } else {
+                    self.reorg_ship(src, client, req_id, file, size)
+                }
             }
             Request::ReorgData { file, parts } => {
                 self.shadow_apply(file, parts);
@@ -690,12 +1398,19 @@ impl Server {
             Request::Stat => {
                 let mut s = self.stats.clone();
                 let cs = self.cache.stats();
-                s.cache_hits = cs.hits;
+                s.cache_hits = cs.hits.saturating_sub(self.fill_hit_skew);
                 s.cache_misses = cs.misses;
                 s.disk_time_us = self.disks.iter().map(|d| d.stats().busy_us).sum();
                 if let Some(pf) = &self.prefetcher {
                     s.prefetch_hits = pf.issued();
                 }
+                for sched in &self.io {
+                    let ss = sched.sched_stats();
+                    s.io_sched_batches += ss.sched_batches;
+                    s.io_sched_coalesced += ss.sched_coalesced;
+                    s.io_max_queue_depth = s.io_max_queue_depth.max(ss.max_queue_depth);
+                }
+                s.disk_bytes = self.disks.iter().map(|d| d.len()).sum();
                 self.ack(src, client, req_id, Response::Stats(Box::new(s)));
             }
             Request::Shutdown => {
@@ -816,10 +1531,11 @@ impl Server {
     }
 
     /// SC-side remove: unregister the name, broadcast fragment removal,
-    /// ACK the client.
+    /// ACK the client. Foes reclaim their extents in the `RemoveInt`
+    /// handler; the SC reclaims its own share here.
     fn sc_remove(&mut self, vi: Rank, client: Rank, req_id: u64, name: &str) {
         if let Some(id) = self.dir.id_by_name(name) {
-            self.dir.remove(id);
+            let removed = self.dir.remove(id);
             let m = Msg {
                 src: self.ep.rank,
                 client,
@@ -828,6 +1544,13 @@ impl Server {
                 body: Body::Req(Request::RemoveInt { file: id }),
             };
             self.ep.world.broadcast_servers(self.ep.rank, &m);
+            if let Some(e) = removed {
+                if let Some(frag) = e.frag {
+                    if !self.file_busy(id) {
+                        self.free_fragment(&frag);
+                    }
+                }
+            }
         }
         self.ack(vi, client, req_id, Response::Removed);
     }
@@ -1155,9 +1878,12 @@ impl Server {
                 // write-back is the cache default; hint is a no-op here
             }
             Hint::System(SystemHint::Prefetch(on)) => {
+                self.prefetch_on = on;
+                // the legacy worker only exists under the blocking
+                // baseline; the async kernel just stops submitting
                 if !on {
                     self.prefetcher = None;
-                } else if self.prefetcher.is_none() {
+                } else if self.prefetcher.is_none() && self.io.is_empty() {
                     self.prefetcher = Some(Prefetcher::start(self.cache.clone()));
                 }
             }
@@ -1166,6 +1892,12 @@ impl Server {
                 // implementation; the bench varies it via ServerConfig.
             }
             Hint::System(SystemHint::DropCaches) => {
+                // fills in flight read the disk before this flush lands:
+                // their payloads must not repopulate the cache (a write
+                // applied in between would be shadowed)
+                for f in self.fills.values_mut() {
+                    f.stale = true;
+                }
                 let _ = self.cache.drop_all(&self.disks);
             }
         }
@@ -1277,16 +2009,24 @@ impl Server {
                 deferred: Vec::new(),
                 ship_bytes: 0,
                 ship_msgs: 0,
+                ship_queue: HashMap::new(),
+                ship_frag: Fragment::default(),
+                pending_ship: None,
+                pending_commit: None,
             },
         );
         self.ack(src, client, req_id, Response::ReorgFrozen);
     }
 
-    /// Participant ship phase: read every run the plan assigns us and
-    /// move it — peers get `ReorgData` batches (≤ SHIP_BATCH bytes), our
-    /// own share goes straight to the shadow. Batches pipeline the
-    /// shuffle: a receiver applies batch *k* while we read batch *k+1*
-    /// from disk (two-phase I/O's double buffering).
+    /// Participant ship phase: plan every run we must move; our own
+    /// share goes straight to the shadow, cross-server runs are packed
+    /// into `ReorgData` batches (≤ SHIP_BATCH payload bytes each) and
+    /// sent under a per-receiver credit window: at most [`SHIP_WINDOW`]
+    /// batches in flight per peer, the next one released (and only then
+    /// read from disk) by that peer's ack. The window still pipelines the
+    /// shuffle — a receiver applies batch *k* while we read batch *k+1*
+    /// — but a slow receiver now backpressures the sender instead of
+    /// buffering the whole share in its mailbox.
     fn reorg_ship(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId, size: u64) {
         let Some(mut st) = self.reorg_local.remove(&file) else {
             // never frozen: nothing to ship
@@ -1323,59 +2063,104 @@ impl Server {
         }
         let me = my_idx.unwrap_or(u32::MAX);
         let iid = self.internal_id();
-        let mut batch: Vec<Vec<(u64, Vec<u8>)>> = vec![Vec::new(); meta.servers.len()];
-        let mut batch_bytes = vec![0u64; meta.servers.len()];
-        let mut sent = 0usize;
-        let mut cross = 0u64;
+        // pack cross-server runs into per-destination batch queues of
+        // (dst_local, src_local, len) triples; the same greedy packing
+        // as the unwindowed shuffle, so the message count is unchanged
+        let mut queues: Vec<VecDeque<Vec<(u64, u64, u64)>>> =
+            vec![VecDeque::new(); meta.servers.len()];
+        let mut cur: Vec<Vec<(u64, u64, u64)>> = vec![Vec::new(); meta.servers.len()];
+        let mut cur_bytes = vec![0u64; meta.servers.len()];
         for run in plan {
             let mut o = 0u64;
             while o < run.len {
                 let piece = (run.len - o).min(SHIP_BATCH);
-                let data = self.read_frag_bytes(&frag, run.src_local + o, piece);
-                let dst_local = run.dst_local + o;
                 if run.dest == me {
-                    // local copy: straight to the shadow, one batch at a
-                    // time — only cross-server traffic needs buffering
-                    self.shadow_apply_frag(&mut st.shadow, &[(dst_local, data)]);
+                    // local copy: straight to the shadow, one piece at a
+                    // time — only cross-server traffic needs windowing
+                    let data = self.read_frag_bytes(&frag, run.src_local + o, piece);
+                    self.shadow_apply_frag(&mut st.shadow, &[(run.dst_local + o, data)]);
                 } else {
                     let d = run.dest as usize;
-                    // flush first if this piece would overflow, so one
-                    // ReorgData never exceeds SHIP_BATCH payload bytes
-                    if batch_bytes[d] + piece > SHIP_BATCH && !batch[d].is_empty() {
-                        let parts = std::mem::take(&mut batch[d]);
-                        cross += batch_bytes[d];
-                        batch_bytes[d] = 0;
-                        if self.di(meta.servers[d], client, iid, Request::ReorgData { file, parts })
-                        {
-                            sent += 1;
-                        }
+                    if cur_bytes[d] + piece > SHIP_BATCH && !cur[d].is_empty() {
+                        queues[d].push_back(std::mem::take(&mut cur[d]));
+                        cur_bytes[d] = 0;
                     }
-                    batch_bytes[d] += piece;
-                    batch[d].push((dst_local, data));
+                    cur[d].push((run.dst_local + o, run.src_local + o, piece));
+                    cur_bytes[d] += piece;
                 }
                 o += piece;
             }
         }
-        for (d, parts) in batch.into_iter().enumerate() {
-            if parts.is_empty() {
-                continue;
-            }
-            cross += batch_bytes[d];
-            // a dead peer drops its share — the same failure signal as
-            // the read path (DESIGN.md §4.1 failure behaviour)
-            if self.di(meta.servers[d], client, iid, Request::ReorgData { file, parts }) {
-                sent += 1;
+        for (d, parts) in cur.into_iter().enumerate() {
+            if !parts.is_empty() {
+                queues[d].push_back(parts);
             }
         }
-        st.ship_bytes = cross;
-        st.ship_msgs = sent as u64;
-        self.stats.reorg_bytes_shipped += cross;
-        self.stats.reorg_di_msgs += sent as u64;
+        // open the credit window per destination
+        st.ship_bytes = 0;
+        st.ship_msgs = 0;
+        let mut inflight = 0usize;
+        let mut ship_queue: HashMap<Rank, VecDeque<Vec<(u64, u64, u64)>>> = HashMap::new();
+        for (d, mut qd) in queues.into_iter().enumerate() {
+            if qd.is_empty() {
+                continue;
+            }
+            let dst = meta.servers[d];
+            let mut opened = 0usize;
+            while opened < SHIP_WINDOW {
+                let Some(batch) = qd.pop_front() else { break };
+                if self.send_reorg_batch(&frag, file, client, iid, dst, &batch, &mut st) {
+                    opened += 1;
+                } else {
+                    // a dead peer drops its share — the same failure
+                    // signal as the read path (DESIGN.md §4.1)
+                    qd.clear();
+                    break;
+                }
+            }
+            inflight += opened;
+            if opened > 0 && !qd.is_empty() {
+                ship_queue.insert(dst, qd);
+            }
+        }
+        st.ship_queue = ship_queue;
+        st.ship_frag = frag;
+        let (bytes, msgs) = (st.ship_bytes, st.ship_msgs);
         self.reorg_local.insert(file, st);
-        if sent == 0 {
-            self.ack(src, client, req_id, Response::ReorgShipped { bytes: cross, msgs: 0 });
+        if inflight == 0 {
+            self.ack(src, client, req_id, Response::ReorgShipped { bytes, msgs });
         } else {
-            self.pending.insert(iid, Pending::ReorgDataWait { file, acks_left: sent });
+            self.pending.insert(iid, Pending::ReorgDataWait { file, inflight });
+        }
+    }
+
+    /// Read one queued batch's runs from the frozen source fragment and
+    /// send it as a `ReorgData` DI. Returns `false` if the peer is dead.
+    #[allow(clippy::too_many_arguments)]
+    fn send_reorg_batch(
+        &mut self,
+        frag: &Fragment,
+        file: FileId,
+        client: Rank,
+        iid: u64,
+        dst: Rank,
+        batch: &[(u64, u64, u64)],
+        st: &mut ReorgLocal,
+    ) -> bool {
+        let mut parts: Vec<(u64, Vec<u8>)> = Vec::with_capacity(batch.len());
+        let mut bytes = 0u64;
+        for &(dst_local, src_local, len) in batch {
+            parts.push((dst_local, self.read_frag_bytes(frag, src_local, len)));
+            bytes += len;
+        }
+        if self.di(dst, client, iid, Request::ReorgData { file, parts }) {
+            st.ship_bytes += bytes;
+            st.ship_msgs += 1;
+            self.stats.reorg_bytes_shipped += bytes;
+            self.stats.reorg_di_msgs += 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -1396,13 +2181,7 @@ impl Server {
         let disk = self.disks[disk_idx].clone();
         let mut bytes = 0u64;
         for (local, data) in parts {
-            let mut next_alloc = self.alloc[disk_idx];
-            let runs = shadow.map_alloc(*local, data.len() as u64, || {
-                let v = next_alloc;
-                next_alloc += EXTENT;
-                v
-            });
-            self.alloc[disk_idx] = next_alloc;
+            let runs = self.map_alloc_extents(shadow, *local, data.len() as u64, None);
             let mut at = 0usize;
             for (doff, run) in runs {
                 let _ = self.cache.write(disk_idx, &disk, doff, &data[at..at + run as usize]);
@@ -1417,15 +2196,64 @@ impl Server {
     /// Participant commit — the atomic point: swap the shadow in, bump
     /// the layout epoch, then replay deferred client requests (they now
     /// fragment under the new layout).
+    ///
+    /// Async-kernel interlock: while any data op on the file is parked
+    /// on a disk completion (or queued behind one), the commit is
+    /// *deferred* — parked reads hold the old fragment, whose extents
+    /// the commit reclaims, so swapping under them could hand a reused
+    /// extent to their resume. The commit runs the moment the file
+    /// quiesces ([`Server::gate_open`] checks).
     fn reorg_commit(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
+        if self.file_busy(file) && self.reorg_local.contains_key(&file) {
+            if let Some(st) = self.reorg_local.get_mut(&file) {
+                st.pending_commit = Some((src, client, req_id));
+            }
+            return;
+        }
+        self.reorg_commit_now(src, client, req_id, file);
+    }
+
+    /// Run reorg phases deferred on in-flight data ops (`pending_ship`,
+    /// then `pending_commit`) once the file has no parked/queued ops
+    /// left. Ship always precedes commit, so the order here is safe.
+    fn reorg_quiesced(&mut self, file: FileId) {
+        if self.file_busy(file) {
+            return;
+        }
+        let ship = self
+            .reorg_local
+            .get_mut(&file)
+            .and_then(|st| st.pending_ship.take());
+        if let Some((src, client, req_id, size)) = ship {
+            self.reorg_ship(src, client, req_id, file, size);
+        }
+        if self.file_busy(file) {
+            return;
+        }
+        let pending = self
+            .reorg_local
+            .get_mut(&file)
+            .and_then(|st| st.pending_commit.take());
+        if let Some((src, client, req_id)) = pending {
+            self.reorg_commit_now(src, client, req_id, file);
+        }
+    }
+
+    fn reorg_commit_now(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
         let Some(st) = self.reorg_local.remove(&file) else {
             self.ack(src, client, req_id, Response::ReorgCommitted);
             return;
         };
+        let mut old_frag: Option<Fragment> = None;
         if let Some(e) = self.dir.get_mut(file) {
             e.meta.distribution = st.target;
             e.meta.epoch += 1;
-            e.frag = Some(st.shadow);
+            old_frag = e.frag.replace(st.shadow);
+        }
+        // reclaim the replaced fragment's disk extents (DESIGN.md §4.2:
+        // this is what used to leak after every physical redistribution)
+        if let Some(f) = old_frag {
+            self.free_fragment(&f);
         }
         // sequential-scan tracking is meaningless under the new layout
         self.seq.retain(|(_, f), _| *f != file);
@@ -1567,7 +2395,7 @@ impl Server {
         self.next_internal | (1 << 63)
     }
 
-    fn handle_resp(&mut self, req_id: u64, resp: Response) {
+    fn handle_resp(&mut self, src: Rank, req_id: u64, resp: Response) {
         let Some(p) = self.pending.remove(&req_id) else { return };
         match (p, resp) {
             (Pending::OpenViaSc { client, req_id: orig }, Response::MetaAck { meta }) => {
@@ -1698,18 +2526,47 @@ impl Server {
                     }
                 }
             }
-            (Pending::ReorgDataWait { file, mut acks_left }, Response::ReorgDataAck) => {
-                acks_left -= 1;
-                if acks_left > 0 {
+            (Pending::ReorgDataWait { file, mut inflight }, Response::ReorgDataAck) => {
+                inflight -= 1;
+                // flow control: the ack frees one credit of the receiver
+                // that sent it — release its next queued batch (reading
+                // the data from disk only now)
+                if let Some(mut st) = self.reorg_local.remove(&file) {
+                    let next = st
+                        .ship_queue
+                        .get_mut(&src)
+                        .and_then(|qd| qd.pop_front());
+                    if let Some(batch) = next {
+                        let frag = st.ship_frag.clone();
+                        if self.send_reorg_batch(&frag, file, st.client, req_id, src, &batch, &mut st)
+                        {
+                            inflight += 1;
+                        } else if let Some(qd) = st.ship_queue.get_mut(&src) {
+                            // receiver died mid-stream: its share drops
+                            qd.clear();
+                        }
+                    }
+                    if st.ship_queue.get(&src).is_some_and(|qd| qd.is_empty()) {
+                        st.ship_queue.remove(&src);
+                    }
+                    if inflight == 0 {
+                        self.ack(
+                            st.coordinator,
+                            st.client,
+                            st.co_req,
+                            Response::ReorgShipped {
+                                bytes: st.ship_bytes,
+                                msgs: st.ship_msgs,
+                            },
+                        );
+                    } else {
+                        self.pending
+                            .insert(req_id, Pending::ReorgDataWait { file, inflight });
+                    }
+                    self.reorg_local.insert(file, st);
+                } else if inflight > 0 {
                     self.pending
-                        .insert(req_id, Pending::ReorgDataWait { file, acks_left });
-                } else if let Some(st) = self.reorg_local.get(&file) {
-                    self.ack(
-                        st.coordinator,
-                        st.client,
-                        st.co_req,
-                        Response::ReorgShipped { bytes: st.ship_bytes, msgs: st.ship_msgs },
-                    );
+                        .insert(req_id, Pending::ReorgDataWait { file, inflight });
                 }
             }
             _ => {}
