@@ -189,6 +189,7 @@ pub fn bench_server_config(cache_bytes: u64, overhead_us: u64) -> ServerConfig {
         readahead: 256 * 1024,
         request_overhead: std::time::Duration::from_micros(overhead_us),
         queue_depth: 8,
+        write_behind: 2 * 1024 * 1024,
     }
 }
 
@@ -696,6 +697,7 @@ pub fn overlap_bw(
         readahead: 0,
         request_overhead: std::time::Duration::ZERO,
         queue_depth,
+        write_behind: 2 * 1024 * 1024,
     };
     let pool = ServerPool::start(nservers, cfg)?;
     let ready = Arc::new(Barrier::new(nclients + 1));
@@ -749,6 +751,172 @@ pub fn overlap_bw(
     }
     pool.shutdown()?;
     Ok(mbps(per_client_bytes * nclients as u64, elapsed))
+}
+
+/// E10 prefetch mode under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchMode {
+    /// `SystemHint::Prefetch(false)` on every server — the hint-less
+    /// async baseline.
+    Off,
+    /// Online detection only: the servers must extract the pattern from
+    /// the request stream ([`crate::pattern`]).
+    Pattern,
+    /// Compiler-style `AccessPlan` hint listing the whole stream.
+    Plan,
+}
+
+/// One E10 measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchRun {
+    pub mbps: f64,
+    /// Cache hit rate over the timed read phase.
+    pub hit_rate: f64,
+    /// `ServerStats::predicted_bytes` summed over servers.
+    pub predicted: u64,
+    /// `ServerStats::wasted_prefetch` summed over servers.
+    pub wasted: u64,
+}
+
+/// E10 strided cold-read workload: one client reads every `stride`-th
+/// `blk`-byte record of a `total`-byte file (BLOCK layout over
+/// `nservers` SimDisk servers), spending `think_us` of compute between
+/// records — the §2 pipelined-parallelism shape. With prediction or a
+/// plan, the disks read record *k+1..k+w* while the client computes on
+/// *k*; without, every record pays its full seek+transfer latency
+/// inline.
+pub fn prefetch_strided(
+    mode: PrefetchMode,
+    nservers: usize,
+    total: u64,
+    blk: u64,
+    stride: u64,
+    think_us: u64,
+) -> Result<PrefetchRun> {
+    let pool = ServerPool::start(nservers, bench_server_config(2 << 20, 0))?;
+    let mut c = pool.client()?;
+    c.hint(Hint::FileAdmin(FileAdminHint {
+        name: "e10".into(),
+        distribution: Distribution::block_for(total, nservers as u32),
+        nprocs: Some(1),
+    }))?;
+    let h = c.open("e10", OpenMode::rdwr_create())?;
+    let chunk = vec![0xE1u8; 1 << 20];
+    let mut off = 0u64;
+    while off < total {
+        let n = (chunk.len() as u64).min(total - off);
+        c.write_at(h, off, &chunk[..n as usize])?;
+        off += n;
+    }
+    c.sync(h)?;
+    for &s in pool.server_ranks() {
+        c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+    }
+    let hits0: u64 = pool
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).map(|st| st.cache_hits).unwrap_or(0))
+        .sum();
+    let miss0: u64 = pool
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).map(|st| st.cache_misses).unwrap_or(0))
+        .sum();
+    let records: Vec<u64> = (0..total / stride).map(|i| i * stride).collect();
+    match mode {
+        PrefetchMode::Off => {
+            for &s in pool.server_ranks() {
+                c.hint_to(s, Hint::System(crate::hints::SystemHint::Prefetch(false)))?;
+            }
+        }
+        PrefetchMode::Pattern => {}
+        PrefetchMode::Plan => {
+            c.access_plan(h, records.iter().map(|&o| (o, blk)).collect())?;
+        }
+    }
+    let think = std::time::Duration::from_micros(think_us);
+    let mut buf = vec![0u8; blk as usize];
+    let t0 = Instant::now();
+    for &o in &records {
+        c.read_at(h, o, &mut buf)?;
+        crate::disk::precise_wait(think);
+    }
+    let elapsed = t0.elapsed();
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let mut predicted = 0u64;
+    let mut wasted = 0u64;
+    for &s in pool.server_ranks() {
+        let st = c.stats_of(s)?;
+        hits += st.cache_hits;
+        misses += st.cache_misses;
+        predicted += st.predicted_bytes;
+        wasted += st.wasted_prefetch;
+    }
+    hits -= hits0.min(hits);
+    misses -= miss0.min(misses);
+    pool.shutdown()?;
+    Ok(PrefetchRun {
+        mbps: mbps(records.len() as u64 * blk, elapsed),
+        hit_rate: hits as f64 / (hits + misses).max(1) as f64,
+        predicted,
+        wasted,
+    })
+}
+
+/// E10 OOC half: one cold Jacobi sweep (nb×nb blocks of
+/// [`crate::runtime::BLOCK`]² f32) through the reference compute
+/// backend, with and without the plan-driven tile pipeline. Returns
+/// (aggregate I/O MB/s over the sweep, cache hit rate).
+pub fn prefetch_ooc(plan: bool, nb: usize) -> Result<(f64, f64)> {
+    use crate::runtime::{Runtime, Tensor, BLOCK};
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+    let mut rt = Runtime::new(artifacts)?;
+    let pool = ServerPool::start(2, bench_server_config(4 << 20, 0))?;
+    let mut c = pool.client()?;
+    let src = crate::ooc::BlockedArray::create(&mut c, "e10src", nb)?;
+    let dst = crate::ooc::BlockedArray::create(&mut c, "e10dst", nb)?;
+    let mut t = Tensor::zeros(vec![BLOCK, BLOCK]);
+    for (i, v) in t.data.iter_mut().enumerate() {
+        *v = (i % 17) as f32;
+    }
+    for bi in 0..nb {
+        for bj in 0..nb {
+            src.write_block(&mut c, bi, bj, &t)?;
+        }
+    }
+    let hsrc = c.open("e10src", OpenMode::rdwr_create())?;
+    c.sync(hsrc)?;
+    for &s in pool.server_ranks() {
+        c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+    }
+    let hits0: u64 = pool
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).map(|st| st.cache_hits).unwrap_or(0))
+        .sum();
+    let miss0: u64 = pool
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).map(|st| st.cache_misses).unwrap_or(0))
+        .sum();
+    let t0 = Instant::now();
+    let stats = crate::ooc::jacobi_sweep(&mut c, &mut rt, &src, &dst, plan)?;
+    let elapsed = t0.elapsed();
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for &s in pool.server_ranks() {
+        let st = c.stats_of(s)?;
+        hits += st.cache_hits;
+        misses += st.cache_misses;
+    }
+    hits -= hits0.min(hits);
+    misses -= miss0.min(misses);
+    pool.shutdown()?;
+    Ok((
+        mbps(stats.bytes_read + stats.bytes_written, elapsed),
+        hits as f64 / (hits + misses).max(1) as f64,
+    ))
 }
 
 // ------------------------------------------------------- table runners
@@ -1192,6 +1360,89 @@ pub mod tables {
         Ok(())
     }
 
+    /// E10 — §2/§3.2.2 access-pattern knowledge: strided cold reads with
+    /// think time, hint-less vs online pattern detection vs a
+    /// compiler-emitted access plan; plus the OOC Jacobi sweep with and
+    /// without the plan-driven tile pipeline (DESIGN.md §4.3).
+    pub fn prefetch(quick: bool) -> Result<()> {
+        let total = if quick { 8 * MB } else { 32 * MB };
+        let (blk, stride) = (64 * 1024u64, 256 * 1024u64);
+        let think_us = 2000;
+        let mut rows = Vec::new();
+        let mut by_mode: Vec<(PrefetchMode, PrefetchRun)> = Vec::new();
+        for (label, mode) in [
+            ("off (hint-less)", PrefetchMode::Off),
+            ("pattern (online detector)", PrefetchMode::Pattern),
+            ("plan (AccessPlan hint)", PrefetchMode::Plan),
+        ] {
+            let r = prefetch_strided(mode, 2, total, blk, stride, think_us)?;
+            rows.push(vec![
+                label.to_string(),
+                format!("{:.1}", r.mbps),
+                format!("{:.1}%", r.hit_rate * 100.0),
+                crate::util::fmt_bytes(r.predicted),
+                r.wasted.to_string(),
+            ]);
+            by_mode.push((mode, r));
+        }
+        print_table(
+            &format!(
+                "E10 (§3.2.2) strided cold read + think time ({}  blk/stride {}K/{}K, 2 servers)",
+                crate::util::fmt_bytes(total),
+                blk / 1024,
+                stride / 1024
+            ),
+            &["mode", "MB/s", "hit rate", "predicted", "wasted pages"],
+            &rows,
+        );
+        let base = by_mode
+            .iter()
+            .find(|(m, _)| *m == PrefetchMode::Off)
+            .map(|&(_, r)| r)
+            .expect("off mode present");
+        let mut urows = Vec::new();
+        for (label, mode) in
+            [("pattern", PrefetchMode::Pattern), ("plan", PrefetchMode::Plan)]
+        {
+            let r = by_mode
+                .iter()
+                .find(|(m, _)| *m == mode)
+                .map(|&(_, r)| r)
+                .expect("mode present");
+            urows.push(vec![
+                label.to_string(),
+                format!("{:.2}x", r.mbps / base.mbps.max(1e-9)),
+                format!("{:.1}", (r.hit_rate - base.hit_rate) * 100.0),
+            ]);
+        }
+        print_table(
+            "E10 summary — prefetch uplift vs hint-less async baseline",
+            &["mode", "bandwidth uplift", "hit-rate uplift (points)"],
+            &urows,
+        );
+        // OOC half: plan-driven tile pipeline through the compute backend
+        let nb = if quick { 2 } else { 3 };
+        let (bw_off, hit_off) = prefetch_ooc(false, nb)?;
+        let (bw_plan, hit_plan) = prefetch_ooc(true, nb)?;
+        print_table(
+            &format!("E10 OOC Jacobi sweep ({nb}x{nb} blocks, cold, 2 servers)"),
+            &["mode", "MB/s", "hit rate"],
+            &[
+                vec![
+                    "no hints".into(),
+                    format!("{bw_off:.1}"),
+                    format!("{:.1}%", hit_off * 100.0),
+                ],
+                vec![
+                    "plan-driven".into(),
+                    format!("{bw_plan:.1}"),
+                    format!("{:.1}%", hit_plan * 100.0),
+                ],
+            ],
+        );
+        Ok(())
+    }
+
     /// Dispatch by experiment name.
     pub fn run(exp: &str, quick: bool) -> Result<()> {
         match exp {
@@ -1203,6 +1454,7 @@ pub mod tables {
             "buffer" => buffer(quick),
             "redistribution" => redistribution(quick),
             "overlap" => overlap(quick),
+            "prefetch" => prefetch(quick),
             "ablation" => ablation(quick),
             "all" => {
                 dedicated(quick)?;
@@ -1213,6 +1465,7 @@ pub mod tables {
                 buffer(quick)?;
                 redistribution(quick)?;
                 overlap(quick)?;
+                prefetch(quick)?;
                 ablation(quick)
             }
             other => anyhow::bail!("unknown experiment '{other}'"),
@@ -1295,6 +1548,61 @@ mod tests {
             asynced >= 1.5 * blocking,
             "async {asynced:.1} MB/s vs blocking {blocking:.1} MB/s"
         );
+    }
+
+    #[test]
+    fn prefetch_modes_smoke() {
+        // tiny sizes: exercises all three modes end-to-end
+        let off =
+            prefetch_strided(PrefetchMode::Off, 2, MB, 64 * 1024, 128 * 1024, 100).unwrap();
+        let pat =
+            prefetch_strided(PrefetchMode::Pattern, 2, MB, 64 * 1024, 128 * 1024, 100).unwrap();
+        let plan =
+            prefetch_strided(PrefetchMode::Plan, 2, MB, 64 * 1024, 128 * 1024, 100).unwrap();
+        assert!(off.mbps > 0.0 && pat.mbps > 0.0 && plan.mbps > 0.0);
+        // kill-switch composition: the hint-less baseline predicts nothing
+        assert_eq!(off.predicted, 0, "prefetch off must silence predictions");
+        assert!(pat.predicted > 0, "detector never locked: {pat:?}");
+        assert!(plan.predicted > 0, "plan never prefetched: {plan:?}");
+    }
+
+    /// E10 acceptance shape (nightly: timing-sensitive): pattern- and
+    /// plan-driven prefetch must beat the hint-less async baseline by
+    /// >= 1.3x aggregate cold-read bandwidth on the strided workload.
+    #[test]
+    #[ignore]
+    fn prefetch_beats_hintless_baseline() {
+        let total = 8 * MB;
+        let off =
+            prefetch_strided(PrefetchMode::Off, 2, total, 64 * 1024, 256 * 1024, 2000).unwrap();
+        let pat = prefetch_strided(PrefetchMode::Pattern, 2, total, 64 * 1024, 256 * 1024, 2000)
+            .unwrap();
+        let plan =
+            prefetch_strided(PrefetchMode::Plan, 2, total, 64 * 1024, 256 * 1024, 2000).unwrap();
+        assert!(
+            pat.mbps >= 1.3 * off.mbps,
+            "pattern {:.1} MB/s vs off {:.1} MB/s",
+            pat.mbps,
+            off.mbps
+        );
+        assert!(
+            plan.mbps >= 1.3 * off.mbps,
+            "plan {:.1} MB/s vs off {:.1} MB/s",
+            plan.mbps,
+            off.mbps
+        );
+        assert!(
+            pat.hit_rate > off.hit_rate + 0.3,
+            "no hit-rate uplift: {:.2} vs {:.2}",
+            pat.hit_rate,
+            off.hit_rate
+        );
+    }
+
+    #[test]
+    fn prefetch_ooc_smoke() {
+        let (bw, _hit) = prefetch_ooc(true, 2).unwrap();
+        assert!(bw > 0.0);
     }
 
     #[test]

@@ -367,6 +367,17 @@ impl Client {
         }
     }
 
+    /// Install a compiler-style access plan for an open file: the
+    /// `(offset, len)` ranges the program will read, in access order
+    /// (the paper's "access pattern knowledge extracted from the program
+    /// by the compiler"). The buddy pipelines a bounded window of
+    /// entries through the prefetch path and advances it as this
+    /// client's reads consume entries (DESIGN.md §4.3).
+    pub fn access_plan(&mut self, h: Vfh, parts: Vec<(u64, u64)>) -> Result<()> {
+        let file = self.state(h)?.file;
+        self.hint(Hint::Prefetch(crate::hints::PrefetchHint::AccessPlan { file, parts }))
+    }
+
     /// Send a hint (static or dynamic, §3.2.2).
     pub fn hint(&mut self, h: Hint) -> Result<()> {
         let buddy = self.buddy;

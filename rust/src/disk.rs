@@ -42,6 +42,9 @@ pub struct DiskStats {
     /// Queued ops that were merged into an adjacent neighbour's disk op
     /// instead of paying their own seek.
     pub sched_coalesced: AtomicU64,
+    /// Still-queued prefetch ops moved to the demand class because a
+    /// demand waiter joined their fill ([`IoScheduler::promote`]).
+    pub sched_promoted: AtomicU64,
     /// Current queue length (gauge).
     pub queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
@@ -60,6 +63,7 @@ pub struct DiskStatsSnapshot {
     pub sched_queued: u64,
     pub sched_batches: u64,
     pub sched_coalesced: u64,
+    pub sched_promoted: u64,
     pub queue_depth: u64,
     pub max_queue_depth: u64,
 }
@@ -76,6 +80,7 @@ impl DiskStats {
             sched_queued: self.sched_queued.load(Ordering::Relaxed),
             sched_batches: self.sched_batches.load(Ordering::Relaxed),
             sched_coalesced: self.sched_coalesced.load(Ordering::Relaxed),
+            sched_promoted: self.sched_promoted.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
         }
@@ -660,6 +665,7 @@ impl SchedInner {
             if let Some(mut job) = q.prefetch.remove(&k) {
                 job.prio = IoPrio::Demand;
                 q.demand.insert(k, job);
+                self.stats.sched_promoted.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -959,6 +965,7 @@ mod tests {
             .collect();
         assert_eq!(order[0], 99);
         assert_eq!(order[1], 2, "promoted op must run before the prefetch class: {order:?}");
+        assert_eq!(sched.sched_stats().sched_promoted, 1);
         drop(sched);
     }
 

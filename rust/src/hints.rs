@@ -34,15 +34,25 @@ pub struct FileAdminHint {
 }
 
 /// Prefetching hint: pipelined parallelism (advance reads, delayed
-/// writes).
+/// writes, compiler-emitted access plans).
 #[derive(Debug, Clone, PartialEq)]
 pub enum PrefetchHint {
     /// The client will soon read `[offset, offset+len)` of `file`.
     AdvanceRead { file: FileId, offset: u64, len: u64 },
-    /// Writes to `file` may be buffered and flushed lazily.
+    /// Writes to `file` may be buffered and flushed lazily — the server
+    /// stages them in its bounded write-behind buffer
+    /// ([`crate::memory::WriteBehind`]) and aggregates them into
+    /// page-aligned runs before they hit the cache/disk.
     DelayedWrite { file: FileId, enable: bool },
     /// Sequential scan expected: enable readahead of `window` bytes.
     Sequential { file: FileId, window: u64 },
+    /// Compiler-side access-pattern knowledge (§2, §3.2.2): the `(offset,
+    /// len)` ranges of `file` the stream will read, in access order. The
+    /// buddy server pipelines a bounded window of entries through the
+    /// prefetch path and advances it as the stream's reads consume
+    /// entries (DESIGN.md §4.3). Emitted by [`crate::hpf::read_local`]
+    /// and the OOC block scheduler ([`crate::ooc`]).
+    AccessPlan { file: FileId, parts: Vec<(u64, u64)> },
 }
 
 /// System-administration hint: configuration of the server pool.

@@ -201,6 +201,12 @@ impl ArrayDesc {
     }
 }
 
+/// Byte/entry caps of the compiler-emitted access plan `read_local`
+/// sends ahead of the read (bounded — the plan is knowledge, not a
+/// prefetch of the whole file).
+const PLAN_BYTES: u64 = 8 << 20;
+const PLAN_ENTRIES: usize = 1024;
+
 /// FORTRAN `READ(A)` for this process: fills `buf` (local elements, in
 /// global row-major order) from the array's canonical file image at
 /// displacement `disp`.
@@ -213,11 +219,17 @@ pub fn read_local(
     buf: &mut [u8],
 ) -> Result<usize> {
     let view = array.local_view(rank)?;
-    client.set_view(h, disp, view)?;
     let need = (array.local_elems(rank) * array.elem as u64) as usize;
     if buf.len() < need {
         bail!("buffer too small: {} < {need}", buf.len());
     }
+    // §7.2 + §3.2.2: the compiler knows the exact physical extents this
+    // process will touch — emit them as an AccessPlan so the servers
+    // pipeline the strided tiles ahead of the read (DESIGN.md §4.3)
+    let mut plan = view.resolve(disp, 0, (need as u64).min(PLAN_BYTES));
+    plan.truncate(PLAN_ENTRIES);
+    client.set_view(h, disp, view)?;
+    client.access_plan(h, plan)?;
     let n = client.read_at(h, 0, &mut buf[..need])?;
     client.clear_view(h)?;
     Ok(n)

@@ -45,6 +45,7 @@ pub mod memory;
 pub mod modes;
 pub mod msg;
 pub mod ooc;
+pub mod pattern;
 pub mod reorg;
 pub mod runtime;
 pub mod server;

@@ -217,7 +217,19 @@ pub struct ServerStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub prefetch_issued: u64,
+    /// Prefetched pages a later read was actually served from.
     pub prefetch_hits: u64,
+    /// Pages installed by the prefetch path (readahead, hints, pattern
+    /// predictions, plan entries).
+    pub prefetch_installed: u64,
+    /// Prefetched pages evicted or dropped before any read touched them
+    /// (`prefetch_hits + wasted_prefetch <= prefetch_installed`, with
+    /// equality once the cache is empty).
+    pub wasted_prefetch: u64,
+    /// Bytes of future accesses predicted by the pattern detector or an
+    /// installed access plan and submitted to the prefetch path
+    /// (DESIGN.md §4.3).
+    pub predicted_bytes: u64,
     pub disk_time_us: u64,
     /// Bytes this server shipped to peers in reorg shuffles (kept out of
     /// `bytes_read`/`bytes_written`, which count client traffic only).
@@ -233,6 +245,9 @@ pub struct ServerStats {
     pub io_sched_batches: u64,
     /// Queued ops coalesced into an adjacent neighbour's disk op.
     pub io_sched_coalesced: u64,
+    /// Queued prefetch ops promoted to the demand class because a demand
+    /// waiter joined their fill.
+    pub io_promoted: u64,
     /// High-water mark of any one disk's scheduler queue.
     pub io_max_queue_depth: u64,
     /// Disk-completion errors (failed fills or failed victim
@@ -243,6 +258,13 @@ pub struct ServerStats {
     /// Total bytes currently allocated on this server's disks (extent
     /// reclamation keeps this bounded across redistributions).
     pub disk_bytes: u64,
+    /// Bytes staged in the write-behind buffer over the server's
+    /// lifetime (`PrefetchHint::DelayedWrite`; DESIGN.md §4.3).
+    pub wb_staged_bytes: u64,
+    /// Aggregated runs flushed from the write-behind buffer to the
+    /// cache/disk (sync, close, read-your-writes, budget overflow or
+    /// reorg freeze).
+    pub wb_flushed_runs: u64,
 }
 
 /// Response bodies (ACK payloads).

@@ -81,7 +81,11 @@ impl BlockedArray {
     }
 
     /// Advance-read hint for a block (two-phase administration: tell the
-    /// servers what's coming).
+    /// servers what's coming). The manual one-block-ahead alternative to
+    /// [`BlockedArray::plan_sweep`], for drivers whose iteration order
+    /// is decided on the fly (or whose schedule exceeds the server-side
+    /// plan cap — an exhausted plan falls back to online detection, but
+    /// an explicit hint is exact).
     pub fn hint_block(&self, client: &mut Client, bi: usize, bj: usize) -> Result<()> {
         let file = client.file_id(self.handle)?;
         client.hint(Hint::Prefetch(PrefetchHint::AdvanceRead {
@@ -89,6 +93,21 @@ impl BlockedArray {
             offset: self.block_off(bi, bj),
             len: Self::block_bytes(),
         }))
+    }
+
+    /// Emit the whole sweep's block schedule as a compiler-side
+    /// [`PrefetchHint::AccessPlan`] (the OOC block scheduler knows its
+    /// iteration order up front): the servers pipeline whole future
+    /// tiles — a bounded window at a time — while the current one
+    /// computes (DESIGN.md §4.3).
+    pub fn plan_sweep(&self, client: &mut Client) -> Result<()> {
+        let mut parts = Vec::with_capacity(self.nb * self.nb);
+        for bi in 0..self.nb {
+            for bj in 0..self.nb {
+                parts.push((self.block_off(bi, bj), Self::block_bytes()));
+            }
+        }
+        client.access_plan(self.handle, parts)
     }
 
     /// One row of a block (for halo assembly): `len` floats from row `r`
@@ -193,8 +212,12 @@ pub struct SweepStats {
 }
 
 /// One full Jacobi sweep over `src`, writing into `dst` (double
-/// buffering at array granularity, as OOC codes do). Hints the next
-/// block before computing the current one (pipelined prefetch).
+/// buffering at array granularity, as OOC codes do). With
+/// `prefetch_hints`, the sweep's block schedule is emitted up front as
+/// a [`PrefetchHint::AccessPlan`] — the servers then pipeline whole
+/// future tiles while the current one computes, advancing the plan
+/// window as the reads consume it (plan-driven pipelined prefetch,
+/// DESIGN.md §4.3).
 pub fn jacobi_sweep(
     client: &mut Client,
     rt: &mut Runtime,
@@ -207,15 +230,11 @@ pub fn jacobi_sweep(
     let mut residual = 0f64;
     let mut bytes_read = 0u64;
     let mut bytes_written = 0u64;
+    if prefetch_hints {
+        src.plan_sweep(client)?;
+    }
     for bi in 0..nb {
         for bj in 0..nb {
-            if prefetch_hints {
-                // hint the *next* block while we compute this one
-                let (ni, nj) = if bj + 1 < nb { (bi, bj + 1) } else { (bi + 1, 0) };
-                if ni < nb {
-                    src.hint_block(client, ni, nj)?;
-                }
-            }
             let x = src.read_halo_block(client, bi, bj)?;
             bytes_read += (x.data.len() * 4) as u64;
             let out = rt.run("jacobi_step", &[x])?;

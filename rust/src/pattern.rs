@@ -1,0 +1,371 @@
+//! Access-pattern knowledge engine (DESIGN.md §4.3) — the online half of
+//! the paper's headline capability: "data prefetching from disks based on
+//! the access pattern knowledge extracted from the program by the
+//! compiler or provided by a user specification" (§2, §3.2.2).
+//!
+//! The compiler-provided half travels as
+//! [`crate::hints::PrefetchHint::AccessPlan`] (emitted by
+//! [`crate::hpf::read_local`] and the OOC block scheduler in
+//! [`crate::ooc`]); this module is the *extracted-at-run-time* half: a
+//! per-(client, file) [`Detector`] watches the stream of view-less read
+//! requests at the buddy server, classifies it into the same regular
+//! shapes [`crate::access::AccessDesc`] describes — sequential, strided
+//! (vector), blocked-2D — and emits bounded prediction windows that the
+//! server feeds to the per-disk [`crate::disk::IoScheduler`] queues at
+//! [`crate::disk::IoPrio::Prefetch`].
+//!
+//! Guarantees (property-tested in `tests/prop_pattern.rs`):
+//!
+//! * predictions never reach past the EOF the caller passes;
+//! * one [`Detector::predict`] call emits at most `window` bytes of data,
+//!   in disjoint ascending ranges, and never re-predicts a range (an
+//!   internal cursor tracks how far ahead the stream is predicted);
+//! * a pattern break resets the cursor and the detector re-locks onto
+//!   the longest consistent suffix of the history, so it never keeps
+//!   extrapolating a dead pattern.
+
+use std::collections::VecDeque;
+
+/// Observations kept per stream — enough to cover one full row of a
+/// blocked-2D walk at typical tile counts.
+pub const HISTORY: usize = 8;
+
+/// What the detector currently believes about a stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Not enough evidence, or irregular.
+    Unknown,
+    /// Contiguous forward scan (`off_{i+1} = off_i + len`). Served by the
+    /// per-server sequential readahead already, so [`Detector::predict`]
+    /// stays silent for it — double prefetch would waste the cache.
+    Sequential { len: u64 },
+    /// Fixed-size records every `stride` bytes (`stride >= len`) — the
+    /// shape of a strided column read or an `MPI_Type_vector` walk.
+    Strided { len: u64, stride: u64 },
+    /// `cols` strided accesses, then a `jump` to the next row — the shape
+    /// of a blocked-2D tile walk (OOC block schedules, §2.2).
+    Blocked2D { len: u64, stride: u64, cols: u32, jump: u64 },
+}
+
+/// Online per-stream access-pattern detector. Feed it every request with
+/// [`Detector::observe`], harvest bounded prediction windows with
+/// [`Detector::predict`].
+#[derive(Debug, Default)]
+pub struct Detector {
+    /// Recent `(offset, len)` requests, oldest first.
+    recent: VecDeque<(u64, u64)>,
+    /// How many pattern steps beyond the last *observed* access have
+    /// already been handed out by `predict` (the no-re-predict cursor).
+    predicted_ahead: u64,
+}
+
+impl Detector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify the recent history. The stream may have switched patterns
+    /// mid-window, so the detector locks onto the longest suffix that
+    /// classifies — stale prefix entries do not block a re-lock. Needs at
+    /// least 3 consistent observations (two equal deltas).
+    pub fn pattern(&self) -> Pattern {
+        let v: Vec<(u64, u64)> = self.recent.iter().copied().collect();
+        for start in 0..v.len() {
+            if v.len() - start < 3 {
+                break;
+            }
+            let p = Self::classify(&v[start..]);
+            if p != Pattern::Unknown {
+                return p;
+            }
+        }
+        Pattern::Unknown
+    }
+
+    /// Classify one consistent window of accesses (see [`Pattern`]).
+    fn classify(v: &[(u64, u64)]) -> Pattern {
+        let len = v[0].1;
+        if len == 0 || v.iter().any(|&(_, l)| l != len) {
+            return Pattern::Unknown;
+        }
+        let mut deltas = Vec::with_capacity(v.len() - 1);
+        for w in v.windows(2) {
+            match w[1].0.checked_sub(w[0].0) {
+                // backwards or overlapping steps are not a record walk
+                Some(d) if d >= len => deltas.push(d),
+                _ => return Pattern::Unknown,
+            }
+        }
+        let stride = *deltas.iter().min().expect("non-empty deltas");
+        if deltas.iter().all(|&d| d == stride) {
+            return if stride == len {
+                Pattern::Sequential { len }
+            } else {
+                Pattern::Strided { len, stride }
+            };
+        }
+        // blocked-2D: exactly two delta values — the stride and a larger
+        // row jump recurring with a fixed period
+        let jump = *deltas.iter().max().expect("non-empty deltas");
+        if deltas.iter().any(|&d| d != stride && d != jump) {
+            return Pattern::Unknown;
+        }
+        let first = deltas.iter().position(|&d| d == jump).expect("jump present");
+        let second = deltas[first + 1..]
+            .iter()
+            .position(|&d| d == jump)
+            .map(|p| first + 1 + p);
+        // row length: spacing of two visible jumps; with a single jump,
+        // the leading stride run — but only once the walk has resumed
+        // after it (a lone trailing jump is just a discontinuity, and
+        // any two unequal deltas would otherwise "classify")
+        let cols = match second {
+            Some(s) => s - first,
+            None if first + 1 == deltas.len() => return Pattern::Unknown,
+            None => first + 1,
+        };
+        if cols < 2 {
+            return Pattern::Unknown;
+        }
+        for (i, &d) in deltas.iter().enumerate() {
+            let at_jump = i % cols == first % cols;
+            if at_jump != (d == jump) {
+                return Pattern::Unknown;
+            }
+        }
+        Pattern::Blocked2D { len, stride, cols: cols as u32, jump }
+    }
+
+    /// Column index (stride steps since the row started) of the last
+    /// observed access — the walk phase predictions continue from.
+    fn phase(&self, p: Pattern) -> u32 {
+        let Pattern::Blocked2D { cols, jump, .. } = p else {
+            return 0;
+        };
+        let offs: Vec<u64> = self.recent.iter().map(|&(o, _)| o).collect();
+        let trailing = offs
+            .windows(2)
+            .rev()
+            .take_while(|w| w[1].checked_sub(w[0]) != Some(jump))
+            .count() as u32;
+        trailing % cols
+    }
+
+    /// One pattern step from `(off, phase)`; `None` when the pattern
+    /// cannot be extrapolated.
+    fn step(p: Pattern, off: u64, phase: u32) -> Option<(u64, u32)> {
+        match p {
+            Pattern::Sequential { len } => Some((off + len, 0)),
+            Pattern::Strided { stride, .. } => Some((off + stride, 0)),
+            Pattern::Blocked2D { stride, cols, jump, .. } => {
+                if phase + 1 < cols {
+                    Some((off + stride, phase + 1))
+                } else {
+                    Some((off + jump, 0))
+                }
+            }
+            Pattern::Unknown => None,
+        }
+    }
+
+    /// Record one request. An access that matches the locked pattern's
+    /// continuation consumes one predicted-ahead step; anything else is a
+    /// pattern break and resets the prediction cursor.
+    pub fn observe(&mut self, off: u64, len: u64) {
+        let p = self.pattern();
+        let matched = match self.recent.back().copied() {
+            Some((po, pl)) => {
+                pl == len
+                    && Self::step(p, po, self.phase(p)).map(|(o, _)| o) == Some(off)
+            }
+            None => false,
+        };
+        if matched {
+            self.predicted_ahead = self.predicted_ahead.saturating_sub(1);
+        } else {
+            self.predicted_ahead = 0;
+        }
+        self.recent.push_back((off, len));
+        while self.recent.len() > HISTORY {
+            self.recent.pop_front();
+        }
+    }
+
+    /// Emit the next prediction window: up to `window` bytes of future
+    /// accesses, clamped to `eof`, continuing where the previous call
+    /// stopped. Empty for sequential (readahead owns it) and unknown
+    /// streams.
+    pub fn predict(&mut self, window: u64, eof: u64) -> Vec<(u64, u64)> {
+        let p = self.pattern();
+        let len = match p {
+            Pattern::Strided { len, .. } | Pattern::Blocked2D { len, .. } => len,
+            _ => return Vec::new(),
+        };
+        let Some(&(last_off, _)) = self.recent.back() else {
+            return Vec::new();
+        };
+        // walk past the steps previous calls already handed out
+        let (mut off, mut phase) = (last_off, self.phase(p));
+        for _ in 0..self.predicted_ahead {
+            match Self::step(p, off, phase) {
+                Some((o, ph)) => (off, phase) = (o, ph),
+                None => return Vec::new(),
+            }
+        }
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        loop {
+            // pipeline bound: keep at most `window` bytes predicted
+            // beyond the consumption point — observed accesses that
+            // match free slots, so the pipeline tracks the stream
+            // instead of running away from it
+            if self.predicted_ahead.saturating_mul(len) >= window {
+                break;
+            }
+            let Some((o, ph)) = Self::step(p, off, phase) else { break };
+            if o >= eof {
+                break;
+            }
+            let l = len.min(eof - o);
+            (off, phase) = (o, ph);
+            out.push((o, l));
+            self.predicted_ahead += 1;
+            if l < len {
+                break; // clamped at EOF: nothing regular follows
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(d: &mut Detector, accs: &[(u64, u64)]) {
+        for &(o, l) in accs {
+            d.observe(o, l);
+        }
+    }
+
+    #[test]
+    fn needs_three_observations() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64)]);
+        assert_eq!(d.pattern(), Pattern::Unknown);
+        assert!(d.predict(1 << 20, u64::MAX).is_empty());
+        d.observe(512, 64);
+        assert_eq!(d.pattern(), Pattern::Strided { len: 64, stride: 256 });
+    }
+
+    #[test]
+    fn sequential_is_silent() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 128), (128, 128), (256, 128), (384, 128)]);
+        assert_eq!(d.pattern(), Pattern::Sequential { len: 128 });
+        assert!(d.predict(1 << 20, u64::MAX).is_empty());
+    }
+
+    #[test]
+    fn strided_predicts_disjoint_windows() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64), (512, 64)]);
+        assert_eq!(d.predict(128, 1 << 20), vec![(768, 64), (1024, 64)]);
+        // pipeline full: no new predictions until the stream consumes
+        assert!(d.predict(128, 1 << 20).is_empty());
+        // a consumed prediction frees exactly one slot
+        d.observe(768, 64);
+        assert_eq!(d.predict(128, 1 << 20), vec![(1280, 64)]);
+    }
+
+    #[test]
+    fn observing_a_predicted_access_frees_window() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64), (512, 64)]);
+        assert_eq!(d.predict(64, 1 << 20), vec![(768, 64)]);
+        d.observe(768, 64); // the predicted access arrived
+        assert_eq!(d.predict(64, 1 << 20), vec![(1024, 64)]);
+    }
+
+    #[test]
+    fn never_past_eof_and_clamped() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64), (512, 64)]);
+        assert_eq!(d.predict(1 << 20, 800), vec![(768, 32)]);
+        // eof reached: later calls stay empty
+        assert!(d.predict(1 << 20, 800).is_empty());
+    }
+
+    #[test]
+    fn blocked_2d_with_two_jumps_visible() {
+        // rows of 3 accesses: stride 100, row jump 500 (len 50)
+        let mut d = Detector::new();
+        feed(
+            &mut d,
+            &[
+                (0, 50),
+                (100, 50),
+                (200, 50),
+                (700, 50),
+                (800, 50),
+                (900, 50),
+                (1400, 50),
+                (1500, 50),
+            ],
+        );
+        assert_eq!(
+            d.pattern(),
+            Pattern::Blocked2D { len: 50, stride: 100, cols: 3, jump: 500 }
+        );
+        // last access at 1500 is col 1 of its row
+        assert_eq!(
+            d.predict(200, u64::MAX),
+            vec![(1600, 50), (2100, 50), (2200, 50), (2300, 50)]
+        );
+    }
+
+    #[test]
+    fn blocked_2d_single_jump_uses_leading_run() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 50), (100, 50), (600, 50), (700, 50)]);
+        assert_eq!(
+            d.pattern(),
+            Pattern::Blocked2D { len: 50, stride: 100, cols: 2, jump: 500 }
+        );
+        assert_eq!(d.predict(100, u64::MAX), vec![(1200, 50), (1300, 50)]);
+    }
+
+    #[test]
+    fn pattern_break_relocks_on_suffix() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64), (512, 64)]);
+        assert!(!d.predict(256, u64::MAX).is_empty());
+        // stream switches to a new base + stride: the detector re-locks
+        // on the suffix and predictions resume on the new pattern
+        feed(&mut d, &[(10_000, 64), (10_128, 64), (10_256, 64)]);
+        assert_eq!(d.pattern(), Pattern::Strided { len: 64, stride: 128 });
+        assert_eq!(d.predict(64, u64::MAX), vec![(10_384, 64)]);
+    }
+
+    #[test]
+    fn irregular_and_backwards_are_unknown() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (1000, 64), (1100, 64), (4000, 64), (9000, 64)]);
+        assert_eq!(d.pattern(), Pattern::Unknown);
+        assert!(d.predict(1 << 20, u64::MAX).is_empty());
+        let mut d = Detector::new();
+        feed(&mut d, &[(1000, 64), (500, 64), (0, 64)]);
+        assert_eq!(d.pattern(), Pattern::Unknown);
+        // overlapping stride (< len) is not a record walk
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (32, 64), (64, 64)]);
+        assert_eq!(d.pattern(), Pattern::Unknown);
+    }
+
+    #[test]
+    fn len_change_is_a_break() {
+        let mut d = Detector::new();
+        feed(&mut d, &[(0, 64), (256, 64), (512, 64), (768, 32)]);
+        // the suffix with the new length is too short to lock
+        assert_eq!(d.pattern(), Pattern::Unknown);
+    }
+}

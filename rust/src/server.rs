@@ -30,7 +30,7 @@
 //! order (read-your-writes); `queue_depth <= 1` selects the blocking
 //! baseline (E9 measures the difference).
 
-use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Duration;
@@ -42,7 +42,8 @@ use crate::disk::{
 use crate::fragmenter::{choose_distribution, fragment};
 use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
 use crate::layout::Distribution;
-use crate::memory::{BufferCache, CacheConfig, Prefetcher};
+use crate::memory::{BufferCache, CacheConfig, Prefetcher, WriteBehind};
+use crate::pattern::Detector;
 use crate::reorg::{ship_plan, SHIP_BATCH, SHIP_WINDOW};
 use crate::msg::{
     Body, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode, Rank, Request,
@@ -80,6 +81,10 @@ pub struct ServerConfig {
     /// data request executes inline to completion (pre-async behaviour,
     /// and what library mode uses).
     pub queue_depth: usize,
+    /// Dirty budget of the write-behind buffer in bytes
+    /// (`PrefetchHint::DelayedWrite`; DESIGN.md §4.3). Staged writes
+    /// above the budget drain in aggregated ascending-offset order.
+    pub write_behind: u64,
 }
 
 impl Default for ServerConfig {
@@ -92,6 +97,7 @@ impl Default for ServerConfig {
             readahead: 256 * 1024,
             request_overhead: Duration::ZERO,
             queue_depth: 8,
+            write_behind: 2 * 1024 * 1024,
         }
     }
 }
@@ -164,6 +170,22 @@ enum ParkedOp {
     /// Resume = apply the pre-sliced `(disk_off, bytes)` pieces through
     /// the cache and ACK `Written`.
     Write { disk_idx: usize, pieces: Vec<(u64, Vec<u8>)>, bytes: u64 },
+}
+
+/// Entries an access plan may carry; plans are client-supplied, so the
+/// stored size must be bounded.
+const MAX_PLAN_ENTRIES: usize = 8192;
+
+/// Server-side state of one installed [`PrefetchHint::AccessPlan`]: a
+/// cursor pair over the plan's `(offset, len)` entries. Entries up to
+/// `next_prefetch` have been submitted to the prefetch path; entries up
+/// to `next_consume` have been covered by the stream's reads. The gap
+/// between the two is capped at the prefetch window, so a plan can
+/// never flood the cache (DESIGN.md §4.3).
+struct PlanState {
+    entries: Vec<(u64, u64)>,
+    next_prefetch: usize,
+    next_consume: usize,
 }
 
 /// Per-(client, file) FIFO gate: while one op from the pair is parked,
@@ -281,6 +303,15 @@ pub struct Server {
     seq: HashMap<(Rank, FileId), u64>,
     /// Files with an active Sequential prefetch hint window.
     seq_hint: HashMap<FileId, u64>,
+    /// Online access-pattern detectors per (client, file) stream of
+    /// view-less reads at this buddy ([`crate::pattern`]; DESIGN.md §4.3).
+    pattern: HashMap<(Rank, FileId), Detector>,
+    /// Installed access plans per (client, file) stream.
+    plans: HashMap<(Rank, FileId), PlanState>,
+    /// Files with write-behind enabled (`PrefetchHint::DelayedWrite`).
+    wb_files: HashSet<FileId>,
+    /// Bounded write-behind staging buffer (shared across files).
+    wb: WriteBehind,
     pending: HashMap<u64, Pending>,
     /// Reorg coordination state (we are the home server), by file.
     reorg_co: HashMap<FileId, ReorgCo>,
@@ -363,6 +394,7 @@ impl Server {
         let alloc = vec![0u64; disks.len()];
         let free_extents = vec![Vec::new(); disks.len()];
         let prefetch_on = cfg.prefetch;
+        let wb = WriteBehind::new(cfg.write_behind);
         Ok(Self {
             ep,
             cfg,
@@ -384,6 +416,10 @@ impl Server {
             admin_hints: HashMap::new(),
             seq: HashMap::new(),
             seq_hint: HashMap::new(),
+            pattern: HashMap::new(),
+            plans: HashMap::new(),
+            wb_files: HashSet::new(),
+            wb,
             pending: HashMap::new(),
             reorg_co: HashMap::new(),
             reorg_local: HashMap::new(),
@@ -402,7 +438,8 @@ impl Server {
                 break;
             }
         }
-        // final write-back
+        // final write-back (staged write-behind runs first)
+        self.wb_flush_all();
         for (i, d) in self.disks.clone().iter().enumerate() {
             let _ = self.cache.flush(i, d);
         }
@@ -449,6 +486,9 @@ impl Server {
         let disk_idx = frag.disk_idx;
         for &base in &frag.extents {
             self.cache.purge_range(disk_idx, base, EXTENT);
+            // staged write-behind runs on a dead extent are dead too —
+            // flushing them could resurrect bytes onto a reused extent
+            self.wb.purge_range(disk_idx, base, EXTENT);
             // an in-flight (prefetch) fill of a dead page must not
             // resurrect it after the purge
             let (first, last) = self.cache.page_span(base, EXTENT);
@@ -618,6 +658,22 @@ impl Server {
             }
         };
         let frag = entry.frag.clone().unwrap_or_default();
+        // read-your-writes under write-behind: staged runs the read can
+        // see must drain through the cache before the read translates —
+        // but only the overlapping ones, so an interleaved append/read
+        // workload keeps its aggregation instead of flushing the whole
+        // buffer on every read
+        if self.wb.has_file(file) {
+            let mut runs = Vec::new();
+            for &(local, len, _) in parts {
+                for (d, run) in frag.runs(local, len) {
+                    if let Some(doff) = d {
+                        runs.extend(self.wb.take_range(file, doff, run));
+                    }
+                }
+            }
+            self.wb_apply_runs(runs);
+        }
         let missing = if self.io.is_empty() {
             Vec::new() // blocking baseline: read through the cache inline
         } else {
@@ -721,6 +777,7 @@ impl Server {
                 fill.page_no,
                 ev.data,
                 fill.demand,
+                !fill.demand,
             ) {
                 Ok(installed) => {
                     if installed && fill.demand {
@@ -729,9 +786,6 @@ impl Server {
                         // hit/miss stay comparable to the blocking
                         // baseline (one access = one miss)
                         self.fill_hit_skew += 1;
-                    }
-                    if !fill.demand {
-                        self.stats.prefetch_hits += 1;
                     }
                 }
                 // a dirty victim's write-back failed: acked data may be
@@ -995,6 +1049,24 @@ impl Server {
         if let Some(entry) = self.dir.get_mut(file) {
             entry.frag = Some(frag);
         }
+        // write-behind (DelayedWrite hint, DESIGN.md §4.3): stage the
+        // pre-sliced pieces and ACK immediately — no RMW fill, no park.
+        // The bytes become visible through the flush-on-read path
+        // (read-your-writes), and durable at sync/close/budget/freeze.
+        // Never stage inside a reorg window: the freeze flush has
+        // already run, and the ship pass reads the fragment directly.
+        if self.wb_files.contains(&file) && !self.reorg_local.contains_key(&file) {
+            for (doff, data) in &pieces {
+                self.wb.stage(file, disk_idx, *doff, data);
+            }
+            self.stats.wb_staged_bytes += bytes;
+            self.stats.bytes_written += bytes;
+            if self.wb.over_budget() {
+                self.wb_flush_all();
+            }
+            self.ack(client, client, req_id, Response::Written { bytes });
+            return false;
+        }
         if self.io.is_empty() {
             // blocking baseline: the cache does RMW fills inline
             self.finish_write(client, req_id, disk_idx, &pieces, bytes);
@@ -1116,6 +1188,185 @@ impl Server {
         }
     }
 
+    // --------------------------------------- pattern/plan prefetch
+    //
+    // The access-pattern knowledge engine (DESIGN.md §4.3): the buddy
+    // watches each (client, file) stream of view-less reads with an
+    // online pattern::Detector and pipelines the predicted continuation;
+    // compiler-emitted AccessPlan hints carry the same knowledge exactly
+    // and bypass detection. Both paths funnel through advance_prefetch —
+    // fragment like a read, per-disk queues at IoPrio::Prefetch locally,
+    // LocalPrefetch DIs to foes — so demand promotion, staleness and the
+    // SystemHint::Prefetch kill-switch compose identically.
+
+    /// Bytes of future accesses kept in flight per stream: the readahead
+    /// knob, bounded by half the cache so predictions can never thrash
+    /// the demand working set.
+    fn prefetch_window(&self) -> u64 {
+        let page = self.cache.config().page as u64;
+        self.cfg
+            .readahead
+            .max(page)
+            .min((self.cfg.cache.capacity / 2).max(page))
+    }
+
+    /// Prefetch logical `[offset, offset+len)` of `file`: clamp to EOF,
+    /// fragment, pull the local share and DI the foes' shares
+    /// (`AdvanceRead` hints, pattern predictions and plan entries all
+    /// route through here). Returns the clamped byte count.
+    fn advance_prefetch(&mut self, client: Rank, file: FileId, offset: u64, len: u64) -> u64 {
+        if !self.prefetch_on {
+            return 0;
+        }
+        let Some(e) = self.dir.get(file) else { return 0 };
+        let meta = e.meta.clone();
+        let len = len.min(meta.size.saturating_sub(offset.min(meta.size)));
+        if len == 0 {
+            return 0;
+        }
+        for sub in fragment(&meta, None, offset, len) {
+            let parts: Vec<(u64, u64)> =
+                sub.parts.iter().map(|&(l, ln, _)| (l, ln)).collect();
+            if sub.server == self.ep.rank {
+                self.serve_local_prefetch(file, &parts);
+            } else {
+                self.di(
+                    sub.server,
+                    client,
+                    0,
+                    Request::LocalPrefetch { file, meta: meta.clone(), parts },
+                );
+            }
+        }
+        len
+    }
+
+    /// Feed one client read into the knowledge engine: advance the
+    /// stream's plan cursor when a plan is installed, otherwise let the
+    /// online detector observe and prefetch its predictions.
+    fn note_read(
+        &mut self,
+        client: Rank,
+        file: FileId,
+        offset: u64,
+        len: u64,
+        view: Option<&View>,
+    ) {
+        if !self.prefetch_on || len == 0 {
+            return;
+        }
+        let key = (client, file);
+        if self.plans.contains_key(&key) {
+            // plan entries are physical file offsets; a viewed read
+            // consumes up to the physical span its logical end maps to
+            let consumed_to = match view {
+                None => offset + len,
+                Some(v) => v.desc.physical_span(v.disp, offset + len),
+            };
+            if let Some(ps) = self.plans.get_mut(&key) {
+                while ps.next_consume < ps.next_prefetch
+                    && ps.entries[ps.next_consume].0 < consumed_to
+                {
+                    ps.next_consume += 1;
+                }
+            }
+            self.plan_topup(key);
+            // a fully consumed plan retires so the online detector takes
+            // over — a plan truncated at MAX_PLAN_ENTRIES must not leave
+            // the tail of the stream with no prefetch at all
+            if self
+                .plans
+                .get(&key)
+                .is_some_and(|ps| ps.next_consume >= ps.entries.len())
+            {
+                self.plans.remove(&key);
+            }
+            return;
+        }
+        if view.is_some() {
+            // a view is already full server-side pattern knowledge: the
+            // fragmenter resolves it, so there is nothing to detect
+            return;
+        }
+        let eof = self.dir.get(file).map_or(0, |e| e.meta.size);
+        let window = self.prefetch_window();
+        let preds = {
+            let det = self.pattern.entry(key).or_default();
+            det.observe(offset, len);
+            det.predict(window, eof)
+        };
+        for (o, l) in preds {
+            let n = self.advance_prefetch(client, file, o, l);
+            self.stats.predicted_bytes += n;
+        }
+    }
+
+    /// Keep a plan's prefetched-but-unconsumed window topped up.
+    fn plan_topup(&mut self, key: (Rank, FileId)) {
+        if !self.prefetch_on {
+            return;
+        }
+        let window = self.prefetch_window();
+        loop {
+            let next = {
+                let Some(ps) = self.plans.get_mut(&key) else { return };
+                let outstanding: u64 = ps.entries[ps.next_consume..ps.next_prefetch]
+                    .iter()
+                    .map(|e| e.1)
+                    .sum();
+                if ps.next_prefetch >= ps.entries.len() || outstanding >= window {
+                    return;
+                }
+                let e = ps.entries[ps.next_prefetch];
+                ps.next_prefetch += 1;
+                e
+            };
+            let n = self.advance_prefetch(key.0, key.1, next.0, next.1);
+            self.stats.predicted_bytes += n;
+        }
+    }
+
+    // --------------------------------------------------- write-behind
+
+    /// Apply drained write-behind runs through the cache. Mirrors
+    /// [`Server::finish_write`]'s fill staling: a fill in flight that
+    /// read the disk before these bytes land must not resurrect the
+    /// pre-write payload after the dirty page is evicted.
+    fn wb_apply_runs(&mut self, runs: Vec<(usize, u64, Vec<u8>)>) {
+        for (disk_idx, doff, data) in runs {
+            let (first, last) = self.cache.page_span(doff, data.len() as u64);
+            for no in first..=last {
+                if let Some(&tok) = self.fill_by_page.get(&(disk_idx, no)) {
+                    if let Some(f) = self.fills.get_mut(&tok) {
+                        f.stale = true;
+                    }
+                }
+            }
+            let disk = self.disks[disk_idx].clone();
+            // the write was acked at stage time: a failure here can only
+            // be surfaced as an I/O error counter, like a failed victim
+            // write-back
+            if self.cache.write(disk_idx, &disk, doff, &data).is_err() {
+                self.stats.io_errors += 1;
+            }
+            self.stats.wb_flushed_runs += 1;
+        }
+    }
+
+    /// Drain one file's staged write-behind runs through the cache.
+    fn wb_flush_file(&mut self, file: FileId) {
+        if self.wb.has_file(file) {
+            let runs = self.wb.take_file(file);
+            self.wb_apply_runs(runs);
+        }
+    }
+
+    /// Drain the whole write-behind buffer (sync, budget overflow).
+    fn wb_flush_all(&mut self) {
+        let runs = self.wb.take_all();
+        self.wb_apply_runs(runs);
+    }
+
     // ------------------------------------------------- request entry
 
     /// Handle one message; returns `false` on shutdown.
@@ -1145,7 +1396,7 @@ impl Server {
         src: Rank,
         client: Rank,
         req_id: u64,
-        _class: MsgClass,
+        class: MsgClass,
         req: Request,
     ) -> bool {
         // reorg window: client writes are deferred until the new layout
@@ -1180,11 +1431,15 @@ impl Server {
             }
             Request::Disconnect => {
                 self.seq.retain(|(c, _), _| *c != client);
+                self.pattern.retain(|(c, _), _| *c != client);
+                self.plans.retain(|(c, _), _| *c != client);
                 self.ack(src, client, req_id, Response::Disconnected);
             }
             Request::Open { name, mode } => self.open(src, client, req_id, name, mode),
             Request::Close { file } => {
-                // flush delayed writes of that file's disk
+                // flush delayed writes of that file's disk (staged
+                // write-behind runs first — they become dirty pages)
+                self.wb_flush_file(file);
                 if let Some(e) = self.dir.get(file) {
                     if let Some(frag) = &e.frag {
                         let idx = frag.disk_idx;
@@ -1207,6 +1462,11 @@ impl Server {
                 self.sc_remove(client, client, req_id, &name);
             }
             Request::RemoveInt { file } => {
+                // staged write-behind data of a removed file is dead
+                let _ = self.wb.take_file(file);
+                self.wb_files.remove(&file);
+                self.pattern.retain(|(_, f), _| *f != file);
+                self.plans.retain(|(_, f), _| *f != file);
                 let removed = self.dir.remove(file);
                 // fail deferred writers instead of dropping their
                 // requests (they are blocked waiting for Written acks)
@@ -1340,7 +1600,7 @@ impl Server {
                 }
             }
             Request::Hint(h) => {
-                self.hint(client, h);
+                self.hint(client, h, class);
                 self.ack(src, client, req_id, Response::HintAck);
             }
             Request::Lookup { name } => {
@@ -1401,13 +1661,16 @@ impl Server {
                 s.cache_hits = cs.hits.saturating_sub(self.fill_hit_skew);
                 s.cache_misses = cs.misses;
                 s.disk_time_us = self.disks.iter().map(|d| d.stats().busy_us).sum();
-                if let Some(pf) = &self.prefetcher {
-                    s.prefetch_hits = pf.issued();
-                }
+                // prefetch usefulness is tracked at the cache, uniformly
+                // for the async queues, the legacy worker and readahead
+                s.prefetch_hits = cs.prefetch_used;
+                s.prefetch_installed = cs.prefetch_installed;
+                s.wasted_prefetch = cs.prefetch_wasted;
                 for sched in &self.io {
                     let ss = sched.sched_stats();
                     s.io_sched_batches += ss.sched_batches;
                     s.io_sched_coalesced += ss.sched_coalesced;
+                    s.io_promoted += ss.sched_promoted;
                     s.io_max_queue_depth = s.io_max_queue_depth.max(ss.max_queue_depth);
                 }
                 s.disk_bytes = self.disks.iter().map(|d| d.len()).sum();
@@ -1535,6 +1798,10 @@ impl Server {
     /// handler; the SC reclaims its own share here.
     fn sc_remove(&mut self, vi: Rank, client: Rank, req_id: u64, name: &str) {
         if let Some(id) = self.dir.id_by_name(name) {
+            let _ = self.wb.take_file(id);
+            self.wb_files.remove(&id);
+            self.pattern.retain(|(_, f), _| *f != id);
+            self.plans.retain(|(_, f), _| *f != id);
             let removed = self.dir.remove(id);
             let m = Msg {
                 src: self.ep.rank,
@@ -1604,6 +1871,8 @@ impl Server {
         if len == 0 {
             return;
         }
+        // access-pattern knowledge engine: plan cursor / online detector
+        self.note_read(src, file, offset, len, view.as_ref());
         let subs = fragment(&meta, view.as_ref(), offset, len);
         for sub in subs {
             let parts: Vec<(u64, u64, u64)> = sub
@@ -1820,12 +2089,18 @@ impl Server {
     }
 
     fn flush_all(&mut self) {
+        // staged write-behind runs become dirty cache pages first, so
+        // one pass flushes both layers
+        self.wb_flush_all();
         for (i, d) in self.disks.clone().iter().enumerate() {
             let _ = self.cache.flush(i, d);
         }
     }
 
-    fn hint(&mut self, client: Rank, h: Hint) {
+    /// Apply one hint. `class` distinguishes the client-facing entry
+    /// (ER) from server-to-server forwards (DI), so fan-out hints like
+    /// `DelayedWrite` propagate exactly one hop.
+    fn hint(&mut self, client: Rank, h: Hint, class: MsgClass) {
         match h {
             Hint::FileAdmin(fa) => {
                 // the SC makes the layout decision at create time, so
@@ -1850,32 +2125,57 @@ impl Server {
             }
             Hint::Prefetch(PrefetchHint::AdvanceRead { file, offset, len }) => {
                 // fragment like a read, prefetch locally + DI to foes
-                let Some(e) = self.dir.get(file) else { return };
-                let meta = e.meta.clone();
-                let len = len.min(meta.size.saturating_sub(offset.min(meta.size)));
-                if len == 0 {
-                    return;
-                }
-                for sub in fragment(&meta, None, offset, len) {
-                    let parts: Vec<(u64, u64)> =
-                        sub.parts.iter().map(|&(l, ln, _)| (l, ln)).collect();
-                    if sub.server == self.ep.rank {
-                        self.serve_local_prefetch(file, &parts);
-                    } else {
-                        self.di(
-                            sub.server,
-                            client,
-                            0,
-                            Request::LocalPrefetch { file, meta: meta.clone(), parts },
-                        );
-                    }
-                }
+                self.advance_prefetch(client, file, offset, len);
             }
             Hint::Prefetch(PrefetchHint::Sequential { file, window }) => {
                 self.seq_hint.insert(file, window);
             }
-            Hint::Prefetch(PrefetchHint::DelayedWrite { .. }) => {
-                // write-back is the cache default; hint is a no-op here
+            Hint::Prefetch(PrefetchHint::AccessPlan { file, mut parts }) => {
+                // compiler-emitted access plan (DESIGN.md §4.3). The
+                // kill-switch composes: with prefetch off the plan is
+                // acked but not installed.
+                if !self.prefetch_on {
+                    return;
+                }
+                parts.truncate(MAX_PLAN_ENTRIES);
+                let key = (client, file);
+                // plan knowledge supersedes online detection
+                self.pattern.remove(&key);
+                self.plans.insert(
+                    key,
+                    PlanState { entries: parts, next_prefetch: 0, next_consume: 0 },
+                );
+                self.plan_topup(key);
+            }
+            Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable }) => {
+                // fan the hint out to the file's other servers once —
+                // writes land on foes, which must stage them too
+                if class == MsgClass::ER {
+                    if let Some(e) = self.dir.get(file) {
+                        let servers = e.meta.servers.clone();
+                        for s in servers {
+                            if s != self.ep.rank {
+                                self.di(
+                                    s,
+                                    client,
+                                    0,
+                                    Request::Hint(Hint::Prefetch(
+                                        PrefetchHint::DelayedWrite { file, enable },
+                                    )),
+                                );
+                            }
+                        }
+                    }
+                }
+                // library mode runs write-through — the paper's "no
+                // background optimisation" restriction — so the hint
+                // only takes effect on a write-back cache
+                if enable && self.cache.config().write_back {
+                    self.wb_files.insert(file);
+                } else {
+                    self.wb_files.remove(&file);
+                    self.wb_flush_file(file);
+                }
             }
             Hint::System(SystemHint::Prefetch(on)) => {
                 self.prefetch_on = on;
@@ -1883,6 +2183,11 @@ impl Server {
                 // baseline; the async kernel just stops submitting
                 if !on {
                     self.prefetcher = None;
+                    // the kill-switch also silences the knowledge
+                    // engine: installed plans and locked patterns must
+                    // not keep issuing predictions
+                    self.plans.clear();
+                    self.pattern.clear();
                 } else if self.prefetcher.is_none() && self.io.is_empty() {
                     self.prefetcher = Some(Prefetcher::start(self.cache.clone()));
                 }
@@ -1892,6 +2197,9 @@ impl Server {
                 // implementation; the bench varies it via ServerConfig.
             }
             Hint::System(SystemHint::DropCaches) => {
+                // staged write-behind data must reach the disk before
+                // the drop — cold-cache means cold, not lost
+                self.wb_flush_all();
                 // fills in flight read the disk before this flush lands:
                 // their payloads must not repopulate the cache (a write
                 // applied in between would be shadowed)
@@ -1993,6 +2301,11 @@ impl Server {
     ) {
         self.ensure_entry(&meta);
         let file = meta.id;
+        // write-behind interlock: every pre-freeze write must be applied
+        // before the freeze ack — the ship pass reads the fragment
+        // directly, and the freeze barrier is what guarantees it sees
+        // all acked pre-window writes
+        self.wb_flush_file(file);
         let disk_idx = self
             .dir
             .get(file)
@@ -2028,6 +2341,10 @@ impl Server {
     /// — but a slow receiver now backpressures the sender instead of
     /// buffering the whole share in its mailbox.
     fn reorg_ship(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId, size: u64) {
+        // belt-and-braces: nothing may stage during the window (the
+        // dispatch path refuses), but the ship pass reads the fragment
+        // directly, so drain any straggler first
+        self.wb_flush_file(file);
         let Some(mut st) = self.reorg_local.remove(&file) else {
             // never frozen: nothing to ship
             self.ack(src, client, req_id, Response::ReorgShipped { bytes: 0, msgs: 0 });

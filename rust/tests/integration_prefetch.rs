@@ -1,0 +1,265 @@
+//! Integration battery for the access-pattern knowledge engine and the
+//! write-behind buffer (DESIGN.md §4.3): the `DelayedWrite` hint must be
+//! real (regression: it used to be accepted, ACKed and silently
+//! dropped), `SystemHint::Prefetch(false)` must silence pattern- and
+//! plan-driven prefetch too, the prefetch usefulness counters must stay
+//! consistent, and write-behind must preserve read-your-writes and
+//! flush ordering — including under a concurrent physical
+//! redistribution's freeze window.
+
+use vipios::client::Client;
+use vipios::hints::{Hint, PrefetchHint, SystemHint};
+use vipios::layout::Distribution;
+use vipios::modes::ServerPool;
+use vipios::msg::{OpenMode, Rank, ServerStats};
+use vipios::server::ServerConfig;
+
+fn sum_stats(c: &mut Client, ranks: &[Rank]) -> ServerStats {
+    let mut total = ServerStats::default();
+    for &s in ranks {
+        let st = c.stats_of(s).unwrap();
+        total.predicted_bytes += st.predicted_bytes;
+        total.prefetch_issued += st.prefetch_issued;
+        total.prefetch_hits += st.prefetch_hits;
+        total.prefetch_installed += st.prefetch_installed;
+        total.wasted_prefetch += st.wasted_prefetch;
+        total.wb_staged_bytes += st.wb_staged_bytes;
+        total.wb_flushed_runs += st.wb_flushed_runs;
+        total.io_errors += st.io_errors;
+    }
+    total
+}
+
+fn drop_caches(c: &mut Client, p: &ServerPool) {
+    for &s in p.server_ranks() {
+        c.hint_to(s, Hint::System(SystemHint::DropCaches)).unwrap();
+    }
+}
+
+// ------------------------------------------------------- write-behind
+
+/// Regression: `PrefetchHint::DelayedWrite` used to be a silent no-op
+/// (server.rs accepted + ACKed it and did nothing). It must stage
+/// writes now, keep them readable (read-your-writes), and flush them
+/// durably at sync.
+#[test]
+fn delayed_write_stages_flushes_and_preserves_read_your_writes() {
+    let p = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("wb", OpenMode::rdwr_create()).unwrap();
+    let file = c.file_id(h).unwrap();
+    c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: true }))
+        .unwrap();
+    // strided sub-page writes — the RMW-heavy shape write-behind absorbs
+    for i in 0..32u64 {
+        c.write_at(h, i * 4096, &[i as u8 + 1; 100]).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(
+        st.wb_staged_bytes >= 32 * 100,
+        "DelayedWrite is still a no-op: staged {} bytes",
+        st.wb_staged_bytes
+    );
+    // read-your-writes before any sync: the staged bytes must be visible
+    let mut buf = [0u8; 100];
+    assert_eq!(c.read_at(h, 5 * 4096, &mut buf).unwrap(), 100);
+    assert_eq!(buf, [6u8; 100]);
+    // durability boundary: sync drains the buffer
+    c.sync(h).unwrap();
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.wb_flushed_runs > 0, "nothing was ever flushed");
+    assert_eq!(st.io_errors, 0);
+    drop_caches(&mut c, &p);
+    for i in 0..32u64 {
+        assert_eq!(c.read_at(h, i * 4096, &mut buf).unwrap(), 100);
+        assert_eq!(buf, [i as u8 + 1; 100], "write {i} lost");
+    }
+    p.shutdown().unwrap();
+}
+
+#[test]
+fn delayed_write_disable_flushes_the_staged_runs() {
+    let p = ServerPool::start(1, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("wbd", OpenMode::rdwr_create()).unwrap();
+    let file = c.file_id(h).unwrap();
+    c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: true }))
+        .unwrap();
+    c.write_at(h, 10, &[7u8; 50]).unwrap();
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.wb_staged_bytes >= 50);
+    c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: false }))
+        .unwrap();
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.wb_flushed_runs > 0, "disable must drain the buffer");
+    // subsequent writes go through the normal path again
+    c.write_at(h, 1000, &[8u8; 50]).unwrap();
+    let st2 = sum_stats(&mut c, p.server_ranks());
+    assert_eq!(st2.wb_staged_bytes, st.wb_staged_bytes, "still staging after disable");
+    let mut buf = [0u8; 50];
+    c.read_at(h, 10, &mut buf).unwrap();
+    assert_eq!(buf, [7u8; 50]);
+    p.shutdown().unwrap();
+}
+
+/// Write-behind + two-phase reorg: staged (acked but unflushed) writes
+/// must survive a physical redistribution — the freeze flush is the
+/// ordering point — and a writer hammering the file during the window
+/// must come out consistent through the deferred-write replay.
+#[test]
+fn write_behind_survives_concurrent_reorg_freeze() {
+    let p = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("wbr", OpenMode::rdwr_create()).unwrap();
+    let file = c.file_id(h).unwrap();
+    // base pattern, synced
+    let total: u64 = 1 << 20;
+    let base = vec![0x11u8; total as usize];
+    c.write_at(h, 0, &base).unwrap();
+    c.sync(h).unwrap();
+    c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: true }))
+        .unwrap();
+    // staged islands, never synced before the reorg
+    for i in 0..8u64 {
+        c.write_at(h, i * 65536 + 17, &[0xABu8; 1000]).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.wb_staged_bytes >= 8 * 1000, "islands were not staged");
+    // concurrent writer on a disjoint tail region during the reorg
+    let world = p.world().clone();
+    let writer = std::thread::spawn(move || {
+        let mut w = Client::connect(&world).unwrap();
+        let hw = w.open("wbr", OpenMode::rdwr_create()).unwrap();
+        for _ in 0..20 {
+            w.write_at(hw, total - 8192, &[0xCDu8; 4096]).unwrap();
+        }
+        w.disconnect().unwrap();
+    });
+    let rep = c.redistribute(h, Distribution::Cyclic { chunk: 4096 }).unwrap();
+    assert!(rep.bytes_moved > 0, "nothing moved: layouts were equal?");
+    writer.join().unwrap();
+    c.sync(h).unwrap();
+    // every pre-reorg byte — synced base AND staged islands — survived
+    let mut buf = vec![0u8; 65536];
+    for i in 0..8u64 {
+        let off = i * 65536;
+        assert_eq!(c.read_at(h, off, &mut buf).unwrap(), buf.len());
+        assert!(buf[..17].iter().all(|&b| b == 0x11), "chunk {i} head");
+        assert!(buf[17..1017].iter().all(|&b| b == 0xAB), "island {i} lost in reorg");
+        assert!(buf[1017..2000].iter().all(|&b| b == 0x11), "chunk {i} tail");
+    }
+    // the concurrent writer's region holds its (only) value
+    let mut tail = vec![0u8; 4096];
+    assert_eq!(c.read_at(h, total - 8192, &mut tail).unwrap(), 4096);
+    assert!(tail.iter().all(|&b| b == 0xCD), "deferred writes lost");
+    p.shutdown().unwrap();
+}
+
+// --------------------------------------------- kill switch / counters
+
+/// Regression: `SystemHint::Prefetch(false)` must silence *everything*
+/// that prefetches — readahead, the online pattern detector AND
+/// installed access plans — and re-enabling brings the detector back.
+#[test]
+fn prefetch_kill_switch_silences_pattern_and_plan() {
+    let p = ServerPool::start(1, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("ks", OpenMode::rdwr_create()).unwrap();
+    let chunk = vec![3u8; 1 << 20];
+    for off in [0u64, 1 << 20] {
+        c.write_at(h, off, &chunk).unwrap();
+    }
+    c.sync(h).unwrap();
+    drop_caches(&mut c, &p);
+    let server = p.server_ranks()[0];
+    c.hint_to(server, Hint::System(SystemHint::Prefetch(false))).unwrap();
+    // a plan AND a detectable strided stream, both under the kill switch
+    c.access_plan(h, (0..16).map(|i| (i * 65536, 65536)).collect()).unwrap();
+    let mut buf = vec![0u8; 4096];
+    for i in 0..10u64 {
+        c.read_at(h, i * 131072, &mut buf).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert_eq!(st.predicted_bytes, 0, "kill switch leaked predictions");
+    assert_eq!(st.prefetch_issued, 0, "kill switch leaked prefetch");
+    assert_eq!(st.prefetch_installed, 0);
+    // re-enable: the detector re-locks on the continuing stream
+    c.hint_to(server, Hint::System(SystemHint::Prefetch(true))).unwrap();
+    for i in 10..16u64 {
+        c.read_at(h, i * 131072, &mut buf).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.predicted_bytes > 0, "detector never came back after re-enable");
+    p.shutdown().unwrap();
+}
+
+/// The prefetch usefulness accounting must be closed: once the cache is
+/// emptied, every page the prefetch path installed is either a hit or
+/// wasted — nothing leaks, nothing double-counts (the detector's
+/// predictions route through the same scheduler queues as demand, so
+/// this also pins the fill/staleness bookkeeping).
+#[test]
+fn wasted_prefetch_accounting_is_consistent() {
+    let p = ServerPool::start(1, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("acct", OpenMode::rdwr_create()).unwrap();
+    let chunk = vec![9u8; 1 << 20];
+    for off in [0u64, 1 << 20, 2 << 20, 3 << 20] {
+        c.write_at(h, off, &chunk).unwrap();
+    }
+    c.sync(h).unwrap();
+    drop_caches(&mut c, &p);
+    // strided stream: 64K every 256K — the detector locks and predicts
+    let mut buf = vec![0u8; 65536];
+    for i in 0..12u64 {
+        c.read_at(h, i * 262144, &mut buf).unwrap();
+    }
+    // drop: in-flight fills are staled (never install), resident
+    // prefetched-but-unread pages count as wasted
+    drop_caches(&mut c, &p);
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.predicted_bytes > 0, "detector never predicted");
+    assert!(st.prefetch_installed > 0, "predictions never reached the cache");
+    assert_eq!(
+        st.prefetch_hits + st.wasted_prefetch,
+        st.prefetch_installed,
+        "prefetch accounting leaked: {st:?}"
+    );
+    p.shutdown().unwrap();
+}
+
+/// A plan-driven stream never predicts past EOF and never floods the
+/// cache: the outstanding window stays bounded by the server's prefetch
+/// window even when the plan lists the whole (larger) file.
+#[test]
+fn plan_window_stays_bounded_and_respects_eof() {
+    let p = ServerPool::start(1, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("planw", OpenMode::rdwr_create()).unwrap();
+    let data = vec![5u8; 512 * 1024];
+    c.write_at(h, 0, &data).unwrap();
+    c.sync(h).unwrap();
+    drop_caches(&mut c, &p);
+    // plan claims 4 MiB; the file only has 512 KiB — predictions clamp
+    c.access_plan(h, (0..64).map(|i| (i * 65536, 65536)).collect()).unwrap();
+    let st = sum_stats(&mut c, p.server_ranks());
+    // window default = 256 KiB readahead: the plan may not prefetch the
+    // whole file up front, let alone the post-EOF tail
+    assert!(
+        st.predicted_bytes <= 256 * 1024,
+        "plan flooded the window: {} bytes",
+        st.predicted_bytes
+    );
+    let mut buf = vec![0u8; 65536];
+    for i in 0..8u64 {
+        c.read_at(h, i * 65536, &mut buf).unwrap();
+        assert!(
+            buf.iter().all(|&b| b == 5),
+            "plan prefetch corrupted block {i}"
+        );
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    // consuming the plan advanced the window, but never past EOF
+    assert!(st.predicted_bytes <= 512 * 1024, "predicted past EOF: {st:?}");
+    p.shutdown().unwrap();
+}

@@ -1,0 +1,172 @@
+//! Property battery for the online access-pattern detector
+//! (`vipios::pattern`, DESIGN.md §4.3): random strided and blocked-2D
+//! request streams must lock, and predictions must (a) exactly match the
+//! stream's true continuation, (b) never reach past EOF, (c) never hand
+//! out more than the window per call (the cache-budget bound), and
+//! (d) never re-predict a range across calls.
+
+use vipios::pattern::{Detector, Pattern};
+use vipios::util::XorShift64;
+
+/// Oracle walk of a blocked-2D stream: `cols` accesses `stride` apart,
+/// then a `jump` to the next row.
+fn walk_2d(start: u64, stride: u64, jump: u64, cols: u64, n: usize) -> Vec<u64> {
+    let mut offs = Vec::with_capacity(n);
+    let mut o = start;
+    for i in 0..n {
+        offs.push(o);
+        o += if (i as u64 + 1) % cols == 0 { jump } else { stride };
+    }
+    offs
+}
+
+#[test]
+fn strided_streams_lock_and_predict_the_continuation() {
+    let mut rng = XorShift64::new(0xE10A);
+    for case in 0..60 {
+        let len = rng.range(1, 64 * 1024);
+        let stride = len + 1 + rng.below(256 * 1024);
+        let start = rng.below(1 << 30);
+        let fed = rng.range(3, 8) as usize;
+        let mut d = Detector::new();
+        for i in 0..fed {
+            d.observe(start + i as u64 * stride, len);
+        }
+        assert_eq!(d.pattern(), Pattern::Strided { len, stride }, "case {case}");
+        let window = rng.range(1, 8) * len;
+        let preds = d.predict(window, u64::MAX);
+        assert!(!preds.is_empty(), "case {case}: locked but silent");
+        let data: u64 = preds.iter().map(|p| p.1).sum();
+        assert!(data <= window.max(len), "case {case}: window exceeded");
+        for (i, &(o, l)) in preds.iter().enumerate() {
+            assert_eq!(l, len, "case {case}");
+            assert_eq!(
+                o,
+                start + (fed + i) as u64 * stride,
+                "case {case}: prediction {i} off the stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_2d_streams_predict_across_row_jumps() {
+    let mut rng = XorShift64::new(0xB10C);
+    for case in 0..60 {
+        let len = rng.range(1, 4096);
+        let stride = len + 1 + rng.below(8192);
+        let jump = stride + 1 + rng.below(1 << 20);
+        let cols = rng.range(2, 4);
+        let start = rng.below(1 << 28);
+        let oracle = walk_2d(start, stride, jump, cols, 40);
+        // feed enough to cover a full row plus the resumed walk
+        let fed = (2 * cols + 2) as usize;
+        let mut d = Detector::new();
+        for &o in &oracle[..fed] {
+            d.observe(o, len);
+        }
+        assert_eq!(
+            d.pattern(),
+            Pattern::Blocked2D { len, stride, cols: cols as u32, jump },
+            "case {case} (cols={cols})"
+        );
+        let preds = d.predict(rng.range(1, 6) * len, u64::MAX);
+        assert!(!preds.is_empty(), "case {case}: locked but silent");
+        for (i, &(o, l)) in preds.iter().enumerate() {
+            assert_eq!(l, len, "case {case}");
+            assert_eq!(o, oracle[fed + i], "case {case}: prediction {i} missed a jump");
+        }
+    }
+}
+
+#[test]
+fn predictions_never_pass_eof_and_clamp_the_boundary_record() {
+    let mut rng = XorShift64::new(0xE0F);
+    for case in 0..60 {
+        let len = rng.range(16, 4096);
+        let stride = len + rng.range(1, 4096);
+        let fed = 4usize;
+        let mut d = Detector::new();
+        for i in 0..fed {
+            d.observe(i as u64 * stride, len);
+        }
+        // eof somewhere in the continuation (possibly mid-record)
+        let eof = fed as u64 * stride + rng.below(6 * stride);
+        let mut total = Vec::new();
+        for _ in 0..8 {
+            total.extend(d.predict(rng.range(1, 4) * len, eof));
+        }
+        for &(o, l) in &total {
+            assert!(o < eof, "case {case}: predicted at/after eof");
+            assert!(o + l <= eof, "case {case}: prediction crosses eof");
+            assert!(l <= len, "case {case}: record grew");
+        }
+        // disjoint, ascending, never re-predicted across calls
+        for w in total.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "case {case}: overlap {w:?}");
+        }
+    }
+}
+
+#[test]
+fn consuming_predictions_sustains_a_bounded_pipeline() {
+    // drive a long strided stream the way the server does: observe,
+    // predict, repeat — outstanding predictions stay within one window
+    // of the consumption point and every access was predicted before it
+    // arrived (the prefetch-hit property)
+    let mut rng = XorShift64::new(0x51DE);
+    for case in 0..20 {
+        let len = rng.range(1, 8192);
+        let stride = len + 1 + rng.below(16384);
+        let window = rng.range(2, 6) * len;
+        let mut d = Detector::new();
+        let mut predicted: Vec<(u64, u64)> = Vec::new();
+        for i in 0..40u64 {
+            let off = i * stride;
+            d.observe(off, len);
+            if i >= 3 {
+                // once locked, the access must already be predicted
+                assert!(
+                    predicted.iter().any(|&(o, _)| o == off),
+                    "case {case}: access {i} at {off} was never predicted"
+                );
+            }
+            let preds = d.predict(window, u64::MAX);
+            let fresh: u64 = preds.iter().map(|p| p.1).sum();
+            assert!(fresh <= window.max(len), "case {case}: window burst");
+            predicted.extend(preds);
+        }
+        // nothing was ever predicted twice
+        let mut offs: Vec<u64> = predicted.iter().map(|p| p.0).collect();
+        let n = offs.len();
+        offs.sort_unstable();
+        offs.dedup();
+        assert_eq!(offs.len(), n, "case {case}: re-predicted a range");
+    }
+}
+
+#[test]
+fn pattern_switch_relocks_and_resumes() {
+    let mut rng = XorShift64::new(0x5117);
+    for case in 0..30 {
+        let mut d = Detector::new();
+        let len = rng.range(1, 4096);
+        let s1 = len + 1 + rng.below(8192);
+        for i in 0..5u64 {
+            d.observe(i * s1, len);
+        }
+        let _ = d.predict(4 * len, u64::MAX);
+        // switch: new base far away, new stride
+        let base = 1 << 30;
+        let s2 = len + 1 + rng.below(8192);
+        if s2 == s1 {
+            continue;
+        }
+        for i in 0..6u64 {
+            d.observe(base + i * s2, len);
+        }
+        assert_eq!(d.pattern(), Pattern::Strided { len, stride: s2 }, "case {case}");
+        let preds = d.predict(len, u64::MAX);
+        assert_eq!(preds, vec![(base + 6 * s2, len)], "case {case}");
+    }
+}

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over `vipios bench <exp> --small --json` output.
+
+Compares the MB/s-, hit-rate- and speedup-shaped cells of a fresh
+`BENCH_<exp>.json` against a checked-in baseline under
+`bench/baselines/`. Baselines are *floors*: a cell fails only when it
+drops below `baseline * (1 - tol)` — SimDisk timing is deterministic in
+shape, but CI machines vary in absolute speed, so the committed floors
+are conservative and the tolerance band stays tight on top of them.
+
+Matching is structural: tables by exact title, rows by index, columns by
+header. A baseline table/row/cell missing from the current output is a
+failure (a silently dropped bench must not pass the gate).
+
+Usage:
+    perf_gate.py --baseline bench/baselines/BENCH_buffer.json \
+                 --current rust/BENCH_buffer.json [--tol 0.2]
+    perf_gate.py --self-test
+
+Regenerating a baseline after an intentional change:
+    cargo run --release --bin vipios -- bench <exp> --small --json
+    cp rust/BENCH_<exp>.json bench/baselines/   # then lower the floors
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# Only performance-shaped columns are gated; counts, labels and byte
+# totals are informational. `qd=` covers the E9 overlap matrix, whose
+# MB/s unit lives in the table title.
+GATED_HEADER = re.compile(r"MB/s|hit|speedup|uplift|rate|^qd=", re.IGNORECASE)
+
+
+def as_number(cell):
+    """Parse a bench cell: JSON numbers pass through; strings like
+    '93.3%' or '2.10x' are unwrapped. Returns None for non-numeric."""
+    if isinstance(cell, (int, float)):
+        return float(cell)
+    if isinstance(cell, str):
+        t = cell.strip().rstrip("%x")
+        try:
+            return float(t)
+        except ValueError:
+            return None
+    return None
+
+
+def compare(baseline, current, tol):
+    """Return a list of failure strings (empty = gate passes)."""
+    failures = []
+    cur_tables = {t["title"]: t for t in current.get("tables", [])}
+    for bt in baseline.get("tables", []):
+        title = bt["title"]
+        ct = cur_tables.get(title)
+        if ct is None:
+            failures.append(f"table missing from current output: {title!r}")
+            continue
+        headers = bt.get("headers", [])
+        gated_cols = [i for i, h in enumerate(headers) if GATED_HEADER.search(h)]
+        for ri, brow in enumerate(bt.get("rows", [])):
+            if ri >= len(ct.get("rows", [])):
+                failures.append(f"{title!r}: row {ri} missing from current output")
+                continue
+            crow = ct["rows"][ri]
+            for ci in gated_cols:
+                if ci >= len(brow):
+                    continue
+                floor = as_number(brow[ci])
+                if floor is None:
+                    continue  # non-numeric baseline cell: informational
+                raw = crow[ci] if ci < len(crow) else "<missing>"
+                got = as_number(raw)
+                if got is None:
+                    failures.append(
+                        f"{title!r} row {ri} col {headers[ci]!r}: "
+                        f"non-numeric current cell {raw!r}"
+                    )
+                    continue
+                limit = floor * (1.0 - tol)
+                if got < limit:
+                    failures.append(
+                        f"{title!r} row {ri} col {headers[ci]!r}: "
+                        f"{got:.3g} < floor {floor:.3g} * (1 - {tol}) = {limit:.3g}"
+                    )
+                else:
+                    print(
+                        f"  ok: {title!r} row {ri} {headers[ci]!r}: "
+                        f"{got:.3g} >= {limit:.3g}"
+                    )
+    return failures
+
+
+def self_test():
+    base = {
+        "tables": [
+            {
+                "title": "t",
+                "headers": ["mode", "MB/s", "hit rate", "msgs"],
+                "rows": [["a", 100, "80.0%", 7], ["b", 50, "10.0%", 9]],
+            }
+        ]
+    }
+    ok = {
+        "tables": [
+            {
+                "title": "t",
+                "headers": ["mode", "MB/s", "hit rate", "msgs"],
+                # faster + msgs column regressed (not gated) -> pass
+                "rows": [["a", 120, "85.0%", 900], ["b", 45, "9.5%", 1]],
+            }
+        ]
+    }
+    assert compare(base, ok, 0.2) == [], "clean run must pass"
+    bad = json.loads(json.dumps(ok))
+    bad["tables"][0]["rows"][0][1] = 10  # MB/s collapsed
+    fails = compare(base, bad, 0.2)
+    assert len(fails) == 1 and "MB/s" in fails[0], f"regression not caught: {fails}"
+    missing = {"tables": []}
+    assert compare(base, missing, 0.2), "missing table must fail"
+    nonnum = json.loads(json.dumps(ok))
+    nonnum["tables"][0]["rows"][0][1] = "n/a"
+    assert compare(base, nonnum, 0.2), "non-numeric current cell must fail"
+    print("self-test ok")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline")
+    ap.add_argument("--current")
+    ap.add_argument("--tol", type=float, default=0.2)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.baseline or not args.current:
+        ap.error("--baseline and --current are required (or --self-test)")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    print(f"perf gate: {args.current} vs floor {args.baseline} (tol {args.tol})")
+    failures = compare(baseline, current, args.tol)
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} cell(s)):", file=sys.stderr)
+        for f_ in failures:
+            print(f"  FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()
