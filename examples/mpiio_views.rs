@@ -1,7 +1,11 @@
 //! ViMPIOS demo — the paper's Chapter-6 MPI-IO examples, runnable:
 //! derived datatypes, file views (Fig 6.4/6.5), explicit offsets,
-//! non-blocking ops, and a 3-process collective partition of a matrix by
-//! complementary views.
+//! non-blocking ops, a 3-process collective partition of a matrix by
+//! complementary views, and the scatter-gather list API (DESIGN.md
+//! §4.4) the viewed and collective paths now ride on: a viewed access
+//! resolves client-side and crosses the wire as one `ReadList`/
+//! `WriteList` per request, and `read_all` aggregates the group's
+//! sub-requests server-side before any disk is touched.
 //!
 //! Run: `cargo run --release --example mpiio_views`
 
@@ -99,6 +103,25 @@ fn main() -> anyhow::Result<()> {
         }
         all.sort_unstable();
         assert_eq!(all, (0..30).collect::<Vec<u32>>());
+    }
+
+    // --- DESIGN.md §4.4: the scatter-gather list API, directly ---
+    {
+        let mut c = pool.client()?;
+        let h = c.open("listio", vipios::msg::OpenMode::rdwr_create())?;
+        // one message writes two runs with a hole between them ...
+        let head = ints(&(0..8).collect::<Vec<_>>());
+        let tail = ints(&(100..108).collect::<Vec<_>>());
+        c.write_list(h, &[(0, head.as_slice()), (256, tail.as_slice())])?;
+        // ... and one message gathers them back, out of order
+        let mut buf = vec![0u8; 64];
+        let n = c.read_list(h, &[(256, 32), (0, 32)], &mut buf)?;
+        assert_eq!(n, 64);
+        let got = from_ints(&buf);
+        println!("list gather (tail first): {got:?}");
+        assert_eq!(&got[..8], &(100..108).collect::<Vec<u32>>()[..]);
+        assert_eq!(&got[8..], &(0..8).collect::<Vec<u32>>()[..]);
+        c.close(h)?;
     }
 
     // --- §6.3.6: subarray — read a 3x4 tile out of an 8x8 matrix ---

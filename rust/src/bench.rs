@@ -23,7 +23,7 @@ use crate::modes::ServerPool;
 use crate::msg::OpenMode;
 use crate::server::{DiskKind, ServerConfig};
 use crate::util::mbps;
-use crate::vimpios::{get_view_pattern, Basic, Datatype};
+use crate::vimpios::{get_view_pattern, Amode, Basic, ClientGroup, Datatype, MpiFile};
 
 // ------------------------------------------------------------- reporting
 
@@ -189,7 +189,7 @@ pub fn bench_server_config(cache_bytes: u64, overhead_us: u64) -> ServerConfig {
         readahead: 256 * 1024,
         request_overhead: std::time::Duration::from_micros(overhead_us),
         queue_depth: 8,
-        write_behind: 2 * 1024 * 1024,
+        ..ServerConfig::default()
     }
 }
 
@@ -697,7 +697,7 @@ pub fn overlap_bw(
         readahead: 0,
         request_overhead: std::time::Duration::ZERO,
         queue_depth,
-        write_behind: 2 * 1024 * 1024,
+        ..ServerConfig::default()
     };
     let pool = ServerPool::start(nservers, cfg)?;
     let ready = Arc::new(Barrier::new(nclients + 1));
@@ -751,6 +751,130 @@ pub fn overlap_bw(
     }
     pool.shutdown()?;
     Ok(mbps(per_client_bytes * nclients as u64, elapsed))
+}
+
+/// One E11 measurement (read phase only).
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveRun {
+    pub mbps: f64,
+    /// ER + DI messages the read phase took, summed over servers
+    /// (stat-sweep corrected).
+    pub msgs: u64,
+    /// `ServerStats::list_extents` delta over the phase.
+    pub list_extents: u64,
+    /// `ServerStats::coalesced_runs` delta over the phase.
+    pub coalesced_runs: u64,
+    /// `ServerStats::collective_windows` delta over the phase.
+    pub windows: u64,
+}
+
+fn coll_stat_sweep(c: &mut Client, pool: &ServerPool) -> Result<(u64, u64, u64, u64)> {
+    let (mut msgs, mut ext, mut runs, mut win) = (0u64, 0u64, 0u64, 0u64);
+    for &s in pool.server_ranks() {
+        let st = c.stats_of(s)?;
+        msgs += st.ext_requests + st.int_requests;
+        ext += st.list_extents;
+        runs += st.coalesced_runs;
+        win += st.collective_windows;
+    }
+    Ok((msgs, ext, runs, win))
+}
+
+/// E11 workload — the E4c interleaved shape: `nprocs` SPMD clients
+/// cold-read interleaved contiguous blocks of one shared file, either
+/// *independent* (the paper's §6.3.4 mapping of `MPI_File_read_at_all`:
+/// per-process request + barrier) or *collective* (tagged list requests
+/// aggregated at the home server into merged runs — two-phase I/O
+/// inside VS, DESIGN.md §4.4). Returns read-phase bandwidth plus the
+/// message-amplification counters.
+pub fn collective_read(
+    nprocs: usize,
+    nservers: usize,
+    total: u64,
+    collective: bool,
+) -> Result<CollectiveRun> {
+    let mut cfg = bench_server_config(2 << 20, 0);
+    // neither the byte budget nor the straggler deadline may split the
+    // window mid-bench (both escape paths have their own tests) — the
+    // group always completes here, so the deadline never fires
+    cfg.collective_bytes = cfg.collective_bytes.max(total);
+    cfg.collective_wait = std::time::Duration::from_secs(2);
+    let pool = ServerPool::start(nservers, cfg)?;
+    {
+        let mut c = pool.client()?;
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: "e11".into(),
+            distribution: Distribution::block_for(total, nservers as u32),
+            nprocs: Some(nprocs as u32),
+        }))?;
+        let h = c.open("e11", OpenMode::rdwr_create())?;
+        let chunk = vec![0xE4u8; 1 << 20];
+        let mut off = 0u64;
+        while off < total {
+            let n = (chunk.len() as u64).min(total - off);
+            c.write_at(h, off, &chunk[..n as usize])?;
+            off += n;
+        }
+        c.sync(h)?;
+        for &s in pool.server_ranks() {
+            c.hint_to(s, Hint::System(crate::hints::SystemHint::DropCaches))?;
+        }
+        c.disconnect()?;
+    }
+    let per = total / nprocs as u64;
+    let group = ClientGroup::new(nprocs);
+    let ready = Arc::new(Barrier::new(nprocs + 1));
+    let start = Arc::new(Barrier::new(nprocs + 1));
+    let done = Arc::new(Barrier::new(nprocs + 1));
+    let exit = Arc::new(Barrier::new(nprocs + 1));
+    let mut handles = Vec::new();
+    for p in 0..nprocs {
+        let world = pool.world().clone();
+        let member = group.member(p);
+        let (ready, start, done, exit) =
+            (ready.clone(), start.clone(), done.clone(), exit.clone());
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let byte = Datatype::Basic(Basic::Byte);
+            let mut c = Client::connect(&world)?;
+            let mut f = MpiFile::open(&mut c, "e11", Amode::rdonly())?;
+            let mut buf = vec![0u8; per as usize];
+            ready.wait();
+            start.wait();
+            if collective {
+                member.read_at_all(&mut f, &mut c, p as u64 * per, &mut buf, per, &byte)?;
+            } else {
+                f.read_at(&mut c, p as u64 * per, &mut buf, per, &byte)?;
+                member.barrier();
+            }
+            done.wait();
+            exit.wait();
+            c.disconnect()?;
+            Ok(())
+        }));
+    }
+    let mut admin = pool.client()?;
+    ready.wait();
+    let before = coll_stat_sweep(&mut admin, &pool)?;
+    let t0 = Instant::now();
+    start.wait();
+    done.wait();
+    let elapsed = t0.elapsed();
+    let after = coll_stat_sweep(&mut admin, &pool)?;
+    exit.wait();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    admin.disconnect()?;
+    pool.shutdown()?;
+    Ok(CollectiveRun {
+        mbps: mbps(total, elapsed),
+        // the closing sweep's own Stat ERs are the only non-read
+        // traffic between the sweeps
+        msgs: (after.0 - before.0).saturating_sub(nservers as u64),
+        list_extents: after.1 - before.1,
+        coalesced_runs: after.2 - before.2,
+        windows: after.3 - before.3,
+    })
 }
 
 /// E10 prefetch mode under test.
@@ -1443,6 +1567,67 @@ pub mod tables {
         Ok(())
     }
 
+    /// E11 — §6.3.4 collective I/O: the E4c interleaved shape through
+    /// ViMPIOS `read_at_all`, independent vs server-side aggregation
+    /// (DESIGN.md §4.4), against ROMIO's client-side two-phase exchange
+    /// on the same disk count. The amplification table shows the wire
+    /// cost the list protocol saves.
+    pub fn collective(quick: bool) -> Result<()> {
+        let total = if quick { 4 * MB } else { 16 * MB };
+        let (nprocs, nservers) = (4, 2);
+        let ind = collective_read(nprocs, nservers, total, false)?;
+        let coll = collective_read(nprocs, nservers, total, true)?;
+        let tp = two_phase_romio(nservers, nprocs, total)?;
+        print_table(
+            &format!(
+                "E11 (§6.3.4) collective interleaved read — {} file, {nprocs} procs, {nservers} servers (E4c shape)",
+                crate::util::fmt_bytes(total)
+            ),
+            &["system", "MB/s"],
+            &[
+                vec![
+                    "ViMPIOS independent (per-process + barrier)".into(),
+                    format!("{:.1}", ind.mbps),
+                ],
+                vec![
+                    "ViMPIOS collective (server-side aggregation)".into(),
+                    format!("{:.1}", coll.mbps),
+                ],
+                vec!["ROMIO two-phase (client exchange)".into(), format!("{tp:.1}")],
+            ],
+        );
+        print_table(
+            "E11 message amplification — read phase (ER+DI over all servers)",
+            &["mode", "msgs", "list extents", "coalesced runs", "windows"],
+            &[
+                vec![
+                    "independent".into(),
+                    ind.msgs.to_string(),
+                    ind.list_extents.to_string(),
+                    ind.coalesced_runs.to_string(),
+                    ind.windows.to_string(),
+                ],
+                vec![
+                    "collective".into(),
+                    coll.msgs.to_string(),
+                    coll.list_extents.to_string(),
+                    coll.coalesced_runs.to_string(),
+                    coll.windows.to_string(),
+                ],
+            ],
+        );
+        print_table(
+            "E11 summary — server-side aggregation vs two-phase baseline",
+            &["two-phase MB/s", "collective MB/s", "speedup"],
+            &[vec![
+                format!("{tp:.1}"),
+                format!("{:.1}", coll.mbps),
+                format!("{:.2}x", coll.mbps / tp.max(1e-9)),
+            ]],
+        );
+        Ok(())
+    }
+
     /// Dispatch by experiment name.
     pub fn run(exp: &str, quick: bool) -> Result<()> {
         match exp {
@@ -1455,6 +1640,7 @@ pub mod tables {
             "redistribution" => redistribution(quick),
             "overlap" => overlap(quick),
             "prefetch" => prefetch(quick),
+            "collective" => collective(quick),
             "ablation" => ablation(quick),
             "all" => {
                 dedicated(quick)?;
@@ -1466,6 +1652,7 @@ pub mod tables {
                 redistribution(quick)?;
                 overlap(quick)?;
                 prefetch(quick)?;
+                collective(quick)?;
                 ablation(quick)
             }
             other => anyhow::bail!("unknown experiment '{other}'"),
@@ -1631,5 +1818,37 @@ mod tests {
             assert!(h.di_msgs > 0, "{}: no DI traffic", h.label);
             assert!(h.shuffle_mbps > 0.0);
         }
+    }
+
+    #[test]
+    fn collective_smoke() {
+        // tiny: both modes end-to-end; the collective one must actually
+        // aggregate (a window flushed, extents merged into fewer runs)
+        let ind = collective_read(2, 2, MB, false).unwrap();
+        let coll = collective_read(2, 2, MB, true).unwrap();
+        assert!(ind.mbps > 0.0 && coll.mbps > 0.0);
+        assert!(coll.windows >= 1, "no aggregation window flushed: {coll:?}");
+        assert!(coll.list_extents >= 2, "{coll:?}");
+        assert!(
+            coll.coalesced_runs < coll.list_extents,
+            "interleaved blocks must merge: {coll:?}"
+        );
+    }
+
+    /// E11 acceptance shape (nightly: timing-sensitive): server-side
+    /// aggregated `read_all` must beat the client-side two-phase
+    /// baseline by >= 1.2x on the E4c interleaved shape.
+    #[test]
+    #[ignore]
+    fn collective_beats_two_phase() {
+        let total = 16 * MB;
+        let coll = collective_read(4, 2, total, true).unwrap();
+        let tp = two_phase_romio(2, 4, total).unwrap();
+        assert!(
+            coll.mbps >= 1.2 * tp,
+            "collective {:.1} MB/s vs two-phase {:.1} MB/s",
+            coll.mbps,
+            tp
+        );
     }
 }

@@ -16,12 +16,33 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::access::AccessDesc;
+use crate::fragmenter::with_bases;
 use crate::hints::Hint;
 use crate::layout::Distribution;
 use crate::msg::{
-    Body, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request, Response,
-    Role, ServerStats, View, World,
+    Body, Collective, Endpoint, FileId, Msg, MsgClass, OpenMode, Rank, Request,
+    Response, Role, ServerStats, View, World,
 };
+
+/// Above this many resolved extents a viewed access falls back to the
+/// compact descriptor-carrying wire form (`Request::Read`/`Write` with
+/// the view attached — the server resolves it instead). Collective
+/// requests never fall back: the aggregation window needs the list.
+const LIST_MAX: usize = 1 << 16;
+
+/// Cheap upper-bound check before resolving a view client-side: a
+/// non-contiguous descriptor yields roughly one extent per pass, so a
+/// pass count beyond the wire bound means the resolved list would be
+/// outsized — take the compact descriptor form without materializing
+/// it. Conservative (cross-pass coalescing could shrink the real list),
+/// which only means the always-correct descriptor path is used.
+fn outsized_view(v: &View, len: u64) -> bool {
+    if v.desc.is_contiguous() {
+        return false;
+    }
+    let per = v.desc.data_len().max(1);
+    len.div_ceil(per) > LIST_MAX as u64
+}
 
 /// Client-side file handle (index into the VI's handle table).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -227,25 +248,49 @@ impl Client {
     }
 
     /// Immediate read at an explicit offset (no file-pointer update).
+    ///
+    /// With a view installed the access goes out as one scatter-gather
+    /// [`Request::ReadList`] — the view is resolved *client-side* into
+    /// physical extents so the storage side sees the whole noncontiguous
+    /// shape in a single message per involved server (DESIGN.md §4.4).
     pub fn iread_at(&mut self, h: Vfh, offset: u64, len: u64) -> Result<Op> {
+        self.iread_at_inner(h, offset, len, None)
+    }
+
+    fn iread_at_inner(
+        &mut self,
+        h: Vfh,
+        offset: u64,
+        len: u64,
+        coll: Option<Collective>,
+    ) -> Result<Op> {
         let st = self.state(h)?;
         let (file, view) = (st.file, st.view.clone());
+        // cheap pre-check before materializing anything: a non-collective
+        // viewed access whose pass count alone exceeds the wire bound
+        // takes the descriptor form without resolving client-side at all
+        let outsized = coll.is_none() && view.as_ref().is_some_and(|v| outsized_view(v, len));
+        let resolved: Vec<(u64, u64)> = match &view {
+            Some(v) if len > 0 && !outsized => v.desc.resolve(v.disp, offset, len),
+            Some(_) => Vec::new(),
+            None if len > 0 => vec![(offset, len)],
+            None => Vec::new(),
+        };
+        // Non-viewed, non-collective reads keep the compact scalar form
+        // (they feed the server's online pattern detector); collective
+        // requests always go as lists (the aggregation window needs
+        // them), viewed ones unless the list would be outsized.
+        let use_list = coll.is_some()
+            || (view.is_some() && !outsized && resolved.len() <= LIST_MAX);
+        if use_list {
+            return self.send_read_list(file, with_bases(resolved), coll);
+        }
         let id = self.send(
             self.buddy,
             MsgClass::ER,
             Request::Read { file, offset, len, view, dst_base: 0 },
         )?;
-        self.ops.insert(
-            id,
-            OpState {
-                kind: OpKind::Read,
-                expected: None,
-                received: 0,
-                staged: Vec::new(),
-                done: None,
-                error: None,
-            },
-        );
+        self.new_read_op(id);
         Ok(Op(id))
     }
 
@@ -257,26 +302,230 @@ impl Client {
         Ok(op)
     }
 
+    /// Immediate write at an explicit offset. Viewed writes resolve the
+    /// view client-side and go out as one [`Request::WriteList`], like
+    /// [`Client::iread_at`] (DESIGN.md §4.4).
     pub fn iwrite_at(&mut self, h: Vfh, offset: u64, data: &[u8]) -> Result<Op> {
+        self.iwrite_at_inner(h, offset, data, None)
+    }
+
+    fn iwrite_at_inner(
+        &mut self,
+        h: Vfh,
+        offset: u64,
+        data: &[u8],
+        coll: Option<Collective>,
+    ) -> Result<Op> {
         let st = self.state(h)?;
         let (file, view) = (st.file, st.view.clone());
+        let parts: Option<Vec<(u64, Vec<u8>)>> = match &view {
+            Some(v) => {
+                if data.is_empty() {
+                    Some(Vec::new())
+                } else if coll.is_none() && outsized_view(v, data.len() as u64) {
+                    None // outsized: descriptor form below, unresolved
+                } else {
+                    let resolved = v.desc.resolve(v.disp, offset, data.len() as u64);
+                    if coll.is_none() && resolved.len() > LIST_MAX {
+                        None // outsized: descriptor form below
+                    } else {
+                        let mut at = 0usize;
+                        Some(
+                            resolved
+                                .into_iter()
+                                .map(|(o, l)| {
+                                    let d = data[at..at + l as usize].to_vec();
+                                    at += l as usize;
+                                    (o, d)
+                                })
+                                .collect(),
+                        )
+                    }
+                }
+            }
+            None if coll.is_some() => Some(if data.is_empty() {
+                Vec::new()
+            } else {
+                vec![(offset, data.to_vec())]
+            }),
+            None => None,
+        };
+        if let Some(parts) = parts {
+            let id = self.send(
+                self.buddy,
+                MsgClass::ER,
+                Request::WriteList { file, parts, collective: coll },
+            )?;
+            self.new_write_op(id, data.len() as u64);
+            return Ok(Op(id));
+        }
         let id = self.send(
             self.buddy,
             MsgClass::ER,
             Request::Write { file, offset, data: data.to_vec(), view },
         )?;
+        self.new_write_op(id, data.len() as u64);
+        Ok(Op(id))
+    }
+
+    // -------------------------------------------- scatter-gather lists
+
+    /// `Vipios_IReadList` (DESIGN.md §4.4): immediate scatter-gather
+    /// read of `(file_offset, len)` extents in *physical file space*
+    /// (any installed view is bypassed). The result concatenates the
+    /// extents in list order; EOF cuts the list in list order exactly
+    /// like a viewed read. The whole list crosses the wire in one
+    /// message, and at most one message per involved server behind it.
+    pub fn iread_list(&mut self, h: Vfh, extents: &[(u64, u64)]) -> Result<Op> {
+        let file = self.state(h)?.file;
+        self.send_read_list(file, with_bases(extents.to_vec()), None)
+    }
+
+    /// Blocking [`Client::iread_list`]: fills `buf` (which must hold
+    /// `Σ len`) and returns the bytes read (short at EOF). Lists longer
+    /// than the wire bound are chunked transparently.
+    pub fn read_list(
+        &mut self,
+        h: Vfh,
+        extents: &[(u64, u64)],
+        buf: &mut [u8],
+    ) -> Result<usize> {
+        let mut done = 0usize;
+        let mut idx = 0usize;
+        while idx < extents.len() {
+            let chunk = &extents[idx..(idx + LIST_MAX).min(extents.len())];
+            let want: u64 = chunk.iter().map(|e| e.1).sum();
+            let op = self.iread_list(h, chunk)?;
+            match self.wait(op)? {
+                OpResult::Read(data) => {
+                    buf[done..done + data.len()].copy_from_slice(&data);
+                    done += data.len();
+                    if (data.len() as u64) < want {
+                        break; // EOF cut the list
+                    }
+                }
+                other => bail!("read_list failed: {other:?}"),
+            }
+            idx += chunk.len();
+        }
+        Ok(done)
+    }
+
+    /// `Vipios_IWriteList`: immediate scatter-gather write of
+    /// `(file_offset, bytes)` runs in physical file space, applied in
+    /// list order (later runs win on overlap, like a loop of
+    /// `write_at`).
+    pub fn iwrite_list(&mut self, h: Vfh, parts: &[(u64, &[u8])]) -> Result<Op> {
+        let file = self.state(h)?.file;
+        let total: u64 = parts.iter().map(|(_, d)| d.len() as u64).sum();
+        let wire: Vec<(u64, Vec<u8>)> = parts.iter().map(|&(o, d)| (o, d.to_vec())).collect();
+        let id = self.send(
+            self.buddy,
+            MsgClass::ER,
+            Request::WriteList { file, parts: wire, collective: None },
+        )?;
+        self.new_write_op(id, total);
+        Ok(Op(id))
+    }
+
+    /// Blocking [`Client::iwrite_list`]; returns bytes written.
+    pub fn write_list(&mut self, h: Vfh, parts: &[(u64, &[u8])]) -> Result<u64> {
+        let op = self.iwrite_list(h, parts)?;
+        match self.wait(op)? {
+            OpResult::Written(n) => Ok(n),
+            other => bail!("write_list failed: {other:?}"),
+        }
+    }
+
+    // ------------------------------------------------ collective entry
+
+    /// Collective immediate read at the file pointer (`MPI_File_read_all`
+    /// through ViMPIOS): like [`Client::iread`] but tagged so the file's
+    /// home server aggregates the group's sub-requests before touching a
+    /// disk (DESIGN.md §4.4).
+    pub fn iread_collective(&mut self, h: Vfh, len: u64, coll: Collective) -> Result<Op> {
+        let pos = self.state(h)?.pos;
+        let op = self.iread_at_inner(h, pos, len, Some(coll))?;
+        self.state_mut(h)?.pos += len;
+        Ok(op)
+    }
+
+    /// Collective immediate read at an explicit offset.
+    pub fn iread_at_collective(
+        &mut self,
+        h: Vfh,
+        offset: u64,
+        len: u64,
+        coll: Collective,
+    ) -> Result<Op> {
+        self.iread_at_inner(h, offset, len, Some(coll))
+    }
+
+    /// Collective immediate write at the file pointer.
+    pub fn iwrite_collective(
+        &mut self,
+        h: Vfh,
+        data: &[u8],
+        coll: Collective,
+    ) -> Result<Op> {
+        let pos = self.state(h)?.pos;
+        let op = self.iwrite_at_inner(h, pos, data, Some(coll))?;
+        self.state_mut(h)?.pos += data.len() as u64;
+        Ok(op)
+    }
+
+    /// Collective immediate write at an explicit offset.
+    pub fn iwrite_at_collective(
+        &mut self,
+        h: Vfh,
+        offset: u64,
+        data: &[u8],
+        coll: Collective,
+    ) -> Result<Op> {
+        self.iwrite_at_inner(h, offset, data, Some(coll))
+    }
+
+    fn send_read_list(
+        &mut self,
+        file: FileId,
+        extents: Vec<(u64, u64, u64)>,
+        collective: Option<Collective>,
+    ) -> Result<Op> {
+        let id = self.send(
+            self.buddy,
+            MsgClass::ER,
+            Request::ReadList { file, extents, collective },
+        )?;
+        self.new_read_op(id);
+        Ok(Op(id))
+    }
+
+    fn new_read_op(&mut self, id: u64) {
         self.ops.insert(
             id,
             OpState {
-                kind: OpKind::Write,
-                expected: Some(data.len() as u64),
+                kind: OpKind::Read,
+                expected: None,
                 received: 0,
                 staged: Vec::new(),
                 done: None,
                 error: None,
             },
         );
-        Ok(Op(id))
+    }
+
+    fn new_write_op(&mut self, id: u64, expected: u64) {
+        self.ops.insert(
+            id,
+            OpState {
+                kind: OpKind::Write,
+                expected: Some(expected),
+                received: 0,
+                staged: Vec::new(),
+                done: None,
+                error: None,
+            },
+        );
     }
 
     /// `Vipios_Read` (blocking): returns bytes read (short at EOF).

@@ -13,7 +13,7 @@
 //!   (DESIGN.md §3). One in-flight op per disk models per-spindle
 //!   contention.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::fs::OpenOptions;
 use std::os::unix::fs::FileExt;
 use std::path::Path;
@@ -462,6 +462,10 @@ struct SchedInner {
     cv: Condvar,
     stats: DiskStats,
     batch: usize,
+    /// Tokens submitted but not yet completed (queued or executing) —
+    /// what [`IoScheduler::fence`] waits on.
+    pending: Mutex<HashSet<u64>>,
+    pending_cv: Condvar,
 }
 
 /// Per-disk I/O scheduler: a worker thread drains a two-class queue in
@@ -486,6 +490,8 @@ impl IoScheduler {
             cv: Condvar::new(),
             stats: DiskStats::default(),
             batch: batch.max(1),
+            pending: Mutex::new(HashSet::new()),
+            pending_cv: Condvar::new(),
         });
         let inner2 = inner.clone();
         let worker = std::thread::Builder::new()
@@ -505,6 +511,19 @@ impl IoScheduler {
     /// waiter joined it). No-op if the op was already dispatched.
     pub fn promote(&self, token: u64) {
         self.inner.promote(token);
+    }
+
+    /// Block until `token`'s op has executed on the disk (its completion
+    /// callback has returned). Returns immediately for unknown/finished
+    /// tokens. This is the ordering fence the write-behind → scheduler
+    /// path uses before a *synchronous* cache operation touches bytes a
+    /// queued write targets (DESIGN.md §4.4); the worker thread makes
+    /// progress independently, so waiting here cannot deadlock.
+    pub fn fence(&self, token: u64) {
+        let mut p = self.inner.pending.lock().unwrap();
+        while p.contains(&token) {
+            p = self.inner.pending_cv.wait(p).unwrap();
+        }
     }
 
     /// The scheduled disk.
@@ -603,6 +622,7 @@ impl SchedInner {
     /// completions.
     fn execute(&self, batch: Vec<IoJob>, completion: &CompletionFn) {
         debug_assert!(!batch.is_empty());
+        let tokens: Vec<u64> = batch.iter().map(|j| j.token).collect();
         match &batch[0].kind {
             IoKind::Write { .. } => {
                 debug_assert_eq!(batch.len(), 1, "writes dispatch singly");
@@ -633,10 +653,20 @@ impl SchedInner {
                 }
             }
         }
+        // only after the completion callbacks: a fence() waking here may
+        // rely on the op's effect being fully published
+        {
+            let mut p = self.pending.lock().unwrap();
+            for t in tokens {
+                p.remove(&t);
+            }
+        }
+        self.pending_cv.notify_all();
     }
 
     /// Queue-side half of [`IoScheduler::submit`].
     fn submit(&self, job: IoJob) {
+        self.pending.lock().unwrap().insert(job.token);
         {
             let mut q = self.q.lock().unwrap();
             q.seq += 1;

@@ -37,6 +37,23 @@ impl SubRequest {
     }
 }
 
+/// Assign dense cumulative buffer bases to an `(offset, len)` extent
+/// list in list order — the wire contract of
+/// [`crate::msg::Request::ReadList`] (`buf_base`s partition `[0, Σ len)`
+/// exactly). The single definition of the dense-base invariant: the VI
+/// and the fragmenter both build lists through here.
+pub fn with_bases(extents: Vec<(u64, u64)>) -> Vec<(u64, u64, u64)> {
+    let mut base = 0u64;
+    extents
+        .into_iter()
+        .map(|(o, l)| {
+            let b = base;
+            base += l;
+            (o, l, b)
+        })
+        .collect()
+}
+
 /// Decompose `[offset, offset+len)` (view-logical when `view` is given,
 /// raw file bytes otherwise) into per-server sub-requests.
 pub fn fragment(
@@ -45,27 +62,41 @@ pub fn fragment(
     offset: u64,
     len: u64,
 ) -> Vec<SubRequest> {
-    let nservers = meta.servers.len() as u32;
-    // file-space extents in buffer order
-    let extents: Vec<(u64, u64)> = match view {
-        Some(v) => v.desc.resolve(v.disp, offset, len),
+    // file-space extents in buffer order, with cumulative buffer bases
+    let extents: Vec<(u64, u64, u64)> = match view {
+        Some(v) => with_bases(v.desc.resolve(v.disp, offset, len)),
         None => {
             if len == 0 {
                 Vec::new()
             } else {
-                vec![(offset, len)]
+                vec![(offset, len, 0)]
             }
         }
     };
+    let subs = fragment_list(meta, &extents);
+    debug_assert_eq!(
+        subs.iter().map(SubRequest::bytes).sum::<u64>(),
+        len,
+        "fragment must partition the request"
+    );
+    subs
+}
 
+/// Decompose a scatter-gather extent list `(file_offset, len, buf_base)`
+/// (view already resolved — the [`crate::msg::Request::ReadList`] wire
+/// shape) into per-server sub-requests, in list order. Runs adjacent in
+/// both local and buffer space coalesce, so an extent list that a view
+/// or a collective merge produced costs the minimum number of runs.
+pub fn fragment_list(meta: &FileMeta, extents: &[(u64, u64, u64)]) -> Vec<SubRequest> {
+    let nservers = meta.servers.len() as u32;
     let mut subs: Vec<SubRequest> = meta
         .servers
         .iter()
         .map(|&server| SubRequest { server, parts: Vec::new() })
         .collect();
 
-    let mut buf_off = 0u64;
-    for (file_off, elen) in extents {
+    for &(file_off, elen, base) in extents {
+        let mut buf_off = base;
         for (srv, local, run) in meta.distribution.extents(nservers, file_off, elen) {
             let sub = &mut subs[srv as usize];
             // coalesce runs that are adjacent in both spaces
@@ -78,7 +109,6 @@ pub fn fragment(
             buf_off += run;
         }
     }
-    debug_assert_eq!(buf_off, len);
     subs.retain(|s| !s.parts.is_empty());
     subs
 }
@@ -203,6 +233,34 @@ mod tests {
         let subs = fragment(&m, None, 0, 64);
         assert_eq!(subs.len(), 1);
         assert_eq!(subs[0].parts, vec![(0, 64, 0)]);
+    }
+
+    #[test]
+    fn fragment_list_matches_per_extent_fragment() {
+        // a list request must produce exactly the union of the per-extent
+        // decompositions, with buffer bases carried through
+        let m = meta(Distribution::Cyclic { chunk: 8 }, 2);
+        let extents = vec![(0u64, 12u64, 0u64), (20, 6, 12), (4, 4, 18)];
+        let subs = fragment_list(&m, &extents);
+        check_partition(&subs, 22);
+        let mut total = 0u64;
+        for s in &subs {
+            total += s.bytes();
+        }
+        assert_eq!(total, 22);
+        // out-of-order extents keep their own bases: byte 18..22 of the
+        // buffer comes from file [4, 8) on server 0
+        let s0 = subs.iter().find(|s| s.server == Rank(0)).unwrap();
+        assert!(s0.parts.iter().any(|&(l, ln, b)| l == 4 && ln == 4 && b == 18));
+    }
+
+    #[test]
+    fn fragment_list_coalesces_adjacent_extents() {
+        let m = meta(Distribution::Contiguous { server: 0 }, 1);
+        // extents adjacent in file AND buffer space merge into one run
+        let subs = fragment_list(&m, &[(10, 6, 0), (16, 4, 6)]);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].parts, vec![(10, 10, 0)]);
     }
 
     #[test]

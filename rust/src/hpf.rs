@@ -11,9 +11,11 @@
 //! [`ArrayDesc::local_view`], which composes the per-dimension
 //! distributions into one nested [`AccessDesc`].
 //!
-//! With the view installed, a FORTRAN `READ(A)` is a single contiguous
-//! ViPIOS read of the process's local element count: the strided global
-//! pattern is resolved server-side ([`read_local`], [`write_local`]).
+//! A FORTRAN `READ(A)` is then a single scatter-gather list request
+//! ([`read_local`], [`write_local`]): the ownership pattern is resolved
+//! *here* — the compiler side, which holds the descriptor — into the
+//! physical extent list and shipped whole, so each involved server sees
+//! one message for the entire strided access (DESIGN.md §4.4).
 
 use anyhow::{bail, Result};
 
@@ -210,6 +212,11 @@ const PLAN_ENTRIES: usize = 1024;
 /// FORTRAN `READ(A)` for this process: fills `buf` (local elements, in
 /// global row-major order) from the array's canonical file image at
 /// displacement `disp`.
+///
+/// The ownership pattern is resolved *here* (the compiler side) into the
+/// physical extent list and shipped as one scatter-gather
+/// [`Client::read_list`] — one message per involved server instead of
+/// one per strided tile (DESIGN.md §4.4).
 pub fn read_local(
     client: &mut Client,
     h: Vfh,
@@ -223,19 +230,25 @@ pub fn read_local(
     if buf.len() < need {
         bail!("buffer too small: {} < {need}", buf.len());
     }
+    let extents = view.resolve(disp, 0, need as u64);
     // §7.2 + §3.2.2: the compiler knows the exact physical extents this
     // process will touch — emit them as an AccessPlan so the servers
     // pipeline the strided tiles ahead of the read (DESIGN.md §4.3)
-    let mut plan = view.resolve(disp, 0, (need as u64).min(PLAN_BYTES));
-    plan.truncate(PLAN_ENTRIES);
-    client.set_view(h, disp, view)?;
+    let mut plan: Vec<(u64, u64)> = Vec::new();
+    let mut planned = 0u64;
+    for &(o, l) in extents.iter().take(PLAN_ENTRIES) {
+        if planned >= PLAN_BYTES {
+            break;
+        }
+        plan.push((o, l));
+        planned += l;
+    }
     client.access_plan(h, plan)?;
-    let n = client.read_at(h, 0, &mut buf[..need])?;
-    client.clear_view(h)?;
-    Ok(n)
+    client.read_list(h, &extents, &mut buf[..need])
 }
 
-/// FORTRAN `WRITE(A)` for this process.
+/// FORTRAN `WRITE(A)` for this process (one scatter-gather
+/// [`Client::write_list`], like [`read_local`]).
 pub fn write_local(
     client: &mut Client,
     h: Vfh,
@@ -245,14 +258,21 @@ pub fn write_local(
     data: &[u8],
 ) -> Result<u64> {
     let view = array.local_view(rank)?;
-    client.set_view(h, disp, view)?;
     let need = (array.local_elems(rank) * array.elem as u64) as usize;
     if data.len() != need {
         bail!("data must be exactly the local size {need}, got {}", data.len());
     }
-    let n = client.write_at(h, 0, data)?;
-    client.clear_view(h)?;
-    Ok(n)
+    let extents = view.resolve(disp, 0, need as u64);
+    let mut at = 0usize;
+    let parts: Vec<(u64, &[u8])> = extents
+        .iter()
+        .map(|&(o, l)| {
+            let d = &data[at..at + l as usize];
+            at += l as usize;
+            (o, d)
+        })
+        .collect();
+    client.write_list(h, &parts)
 }
 
 #[cfg(test)]

@@ -8,7 +8,8 @@
 //!                                      regenerate a Chapter-8 experiment;
 //!                                      --json also writes BENCH_<exp>.json
 //!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
-//!          buffer | redistribution | overlap | prefetch | ablation | all
+//!          buffer | redistribution | overlap | prefetch | collective |
+//!          ablation | all
 //! vipios inspect [artifacts-dir]       load + describe the compute kernels
 //! ```
 
@@ -61,7 +62,7 @@ fn main() {
             eprintln!(
                 "usage: vipios demo | bench <exp> [--quick|--small] [--json] | inspect [dir]\n\
                  exps: dedicated nondedicated vs_unix vs_romio scalability \
-                 buffer redistribution overlap prefetch ablation all"
+                 buffer redistribution overlap prefetch collective ablation all"
             );
             Ok(())
         }

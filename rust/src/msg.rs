@@ -76,6 +76,24 @@ pub struct View {
     pub desc: AccessDesc,
 }
 
+/// Collective tag on a list request (`MPI_File_*_all` through ViMPIOS):
+/// the file's home server holds the group's sub-requests in an
+/// aggregation window per `(file, group, epoch)` until all `nprocs`
+/// arrive (or a byte/time budget trips), merges the interleaved extents
+/// across processes into maximal runs, services them once, and scatters
+/// the replies — two-phase I/O inside VS, no client-side exchange
+/// (DESIGN.md §4.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Collective {
+    /// Communicator identity (one per [`crate::vimpios::ClientGroup`]).
+    pub group: u64,
+    /// Per-group collective-call sequence number. SPMD processes call
+    /// collectives in the same order, so equal epochs identify one call.
+    pub epoch: u64,
+    /// Group size: the window closes when this many sub-requests arrive.
+    pub nprocs: u32,
+}
+
 /// Request bodies (the paper's basic message types of §5.1.1 plus the
 /// administrative ones).
 #[derive(Debug, Clone)]
@@ -110,6 +128,27 @@ pub enum Request {
         offset: u64,
         data: Vec<u8>,
         view: Option<View>,
+    },
+    /// Scatter-gather list read (one message for a whole noncontiguous
+    /// access; DESIGN.md §4.4). `extents` are `(file_offset, len,
+    /// buf_base)` runs in *physical file space* — a view is resolved
+    /// client-side before the request is built, so the storage side sees
+    /// the complete shape and can aggregate. `buf_base`s must densely
+    /// partition `[0, Σ len)` in list order (the VI assigns them
+    /// cumulatively); EOF clamps the list in list order, exactly like a
+    /// viewed read. With a `collective` tag the request is routed to the
+    /// file's home server and parked in that call's aggregation window.
+    ReadList {
+        file: FileId,
+        extents: Vec<(u64, u64, u64)>,
+        collective: Option<Collective>,
+    },
+    /// Scatter-gather list write: `(file_offset, data)` runs in physical
+    /// file space (view resolved client-side), applied in list order.
+    WriteList {
+        file: FileId,
+        parts: Vec<(u64, Vec<u8>)>,
+        collective: Option<Collective>,
     },
     SetSize {
         file: FileId,
@@ -164,6 +203,18 @@ pub enum Request {
         meta: crate::directory::FileMeta,
         /// `(local_offset, data)` runs.
         parts: Vec<(u64, Vec<u8>)>,
+    },
+    /// DI: the aggregated share of one collective window (DESIGN.md
+    /// §4.4): read each distinct page once (one parked continuation,
+    /// coalesced through the per-disk elevator) and scatter the
+    /// per-client `(local_offset, len, dst_base)` runs as `Data` ACKs
+    /// *directly to each client's VI* — the reply half of server-side
+    /// two-phase I/O.
+    LocalReadScatter {
+        file: FileId,
+        meta: crate::directory::FileMeta,
+        /// `(client, client_req_id, parts)` — one entry per process.
+        out: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
     },
     /// DI: pull these local runs into the cache (pipelined prefetch).
     LocalPrefetch {
@@ -265,6 +316,24 @@ pub struct ServerStats {
     /// cache/disk (sync, close, read-your-writes, budget overflow or
     /// reorg freeze).
     pub wb_flushed_runs: u64,
+    /// Write-behind runs drained as `IoKind::Write` jobs through the
+    /// per-disk elevator below demand priority (DESIGN.md §4.4) instead
+    /// of through the blocking cache write.
+    pub wb_sched_jobs: u64,
+    /// `ReadList`/`WriteList` requests handled (buddy or aggregator) —
+    /// the message-amplification denominator (DESIGN.md §4.4).
+    pub list_requests: u64,
+    /// Extents those list requests carried — what the per-extent wire
+    /// protocol would have cost in messages.
+    pub list_extents: u64,
+    /// Maximal contiguous runs actually dispatched after sorting and
+    /// merging list extents (per request at the buddy, per flushed
+    /// window for collectives): `coalesced_runs <= list_extents`, and
+    /// the gap is the aggregation win.
+    pub coalesced_runs: u64,
+    /// Collective aggregation windows flushed (complete, byte-budget
+    /// trip or deadline — each flush services the arrivals it held).
+    pub collective_windows: u64,
 }
 
 /// Response bodies (ACK payloads).

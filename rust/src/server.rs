@@ -32,22 +32,23 @@
 
 use std::collections::{BTreeSet, HashMap, HashSet, VecDeque};
 use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::directory::{Directory, FileMeta, Fragment, EXTENT};
 use crate::disk::{
     Disk, IoJob, IoKind, IoPrio, IoScheduler, MemDisk, SimCost, SimDisk, UnixDisk,
 };
-use crate::fragmenter::{choose_distribution, fragment};
+use crate::fragmenter::{choose_distribution, fragment, fragment_list};
 use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
 use crate::layout::Distribution;
 use crate::memory::{BufferCache, CacheConfig, Prefetcher, WriteBehind};
 use crate::pattern::Detector;
 use crate::reorg::{ship_plan, SHIP_BATCH, SHIP_WINDOW};
 use crate::msg::{
-    Body, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode, Rank, Request,
-    Response, ServerStats, View,
+    Body, Collective, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode, Rank,
+    Request, Response, ServerStats, View,
 };
 
 /// What backs a server's disks.
@@ -85,6 +86,14 @@ pub struct ServerConfig {
     /// (`PrefetchHint::DelayedWrite`; DESIGN.md §4.3). Staged writes
     /// above the budget drain in aggregated ascending-offset order.
     pub write_behind: u64,
+    /// Collective aggregation window (DESIGN.md §4.4): wall-clock bound
+    /// a partially-filled window waits for stragglers before flushing
+    /// whatever arrived.
+    pub collective_wait: Duration,
+    /// Collective aggregation window: pending byte budget (requested
+    /// read bytes plus buffered write payload) that trips an early
+    /// flush, so a huge collective cannot hold the server's memory.
+    pub collective_bytes: u64,
 }
 
 impl Default for ServerConfig {
@@ -98,6 +107,8 @@ impl Default for ServerConfig {
             request_overhead: Duration::ZERO,
             queue_depth: 8,
             write_behind: 2 * 1024 * 1024,
+            collective_wait: Duration::from_millis(20),
+            collective_bytes: 8 * 1024 * 1024,
         }
     }
 }
@@ -130,6 +141,16 @@ enum Pending {
     /// ack from a receiver both retires one message and releases the
     /// next queued batch for that receiver — the ship flow control).
     ReorgDataWait { file: FileId, inflight: usize },
+    /// Collective write aggregation (DESIGN.md §4.4): the home server
+    /// dispatched the merged runs (one share per involved server, itself
+    /// included) and acks every participant `Written` once all shares
+    /// acknowledge — or an `Error` if any share failed.
+    CollWriteWait {
+        acks_left: usize,
+        error: Option<String>,
+        /// `(client, client_req_id, bytes)` per participant.
+        participants: Vec<(Rank, u64, u64)>,
+    },
 }
 
 enum MetaWaitKind {
@@ -170,6 +191,15 @@ enum ParkedOp {
     /// Resume = apply the pre-sliced `(disk_off, bytes)` pieces through
     /// the cache and ACK `Written`.
     Write { disk_idx: usize, pieces: Vec<(u64, Vec<u8>)>, bytes: u64 },
+    /// Resume = scatter the (now resident) union of a collective
+    /// window's runs as per-client `Data` ACKs (DESIGN.md §4.4). Every
+    /// distinct page fills once even when processes' extents overlap —
+    /// the server-side two-phase read. Parked under the gate key
+    /// `(own rank, file)` so reorg phases see the file as busy.
+    ReadScatter {
+        frag: Fragment,
+        out: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
+    },
 }
 
 /// Entries an access plan may carry; plans are client-supplied, so the
@@ -202,6 +232,43 @@ enum GateOp {
     Read { req_id: u64, parts: Vec<(u64, u64, u64)> },
     Write { req_id: u64, parts: Vec<(u64, Vec<u8>)> },
     Sync { req_id: u64 },
+    /// A queued collective scatter read (gate key = `(own rank, file)`).
+    Scatter { out: Vec<(Rank, u64, Vec<(u64, u64, u64)>)> },
+}
+
+/// One collective call's aggregation window at the file's home server
+/// (DESIGN.md §4.4), keyed by `(file, group, epoch)`. Arrivals park here
+/// until the whole group is in, a byte budget trips, or the straggler
+/// deadline passes; each flush merges the pending sub-requests across
+/// processes and services them once.
+struct CollWindow {
+    nprocs: u32,
+    /// Sub-requests already serviced by earlier flushes of this window
+    /// (a byte-budget trip splits a window; the remainder still counts
+    /// toward `nprocs`).
+    served: u32,
+    /// Straggler bound: past this, whatever arrived flushes.
+    deadline: Instant,
+    /// Pending read arrivals: `(client, req_id, clamped extents)`.
+    reads: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
+    /// Pending write arrivals: `(client, req_id, parts)`.
+    writes: Vec<(Rank, u64, Vec<(u64, Vec<u8>)>)>,
+    /// Pending bytes (read totals + write payloads) against the budget.
+    bytes: u64,
+}
+
+/// A barrier operation deferred while write-behind elevator jobs are in
+/// flight: their payloads must reach the disk before a sync completes or
+/// a reorg ship pass reads the fragment (DESIGN.md §4.4).
+enum WbWaiter {
+    Sync { src: Rank, client: Rank, req_id: u64, file: FileId },
+    Freeze {
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        meta: FileMeta,
+        target: Distribution,
+    },
 }
 
 /// Coordinator-side state of one in-flight redistribution (the file's
@@ -312,6 +379,21 @@ pub struct Server {
     wb_files: HashSet<FileId>,
     /// Bounded write-behind staging buffer (shared across files).
     wb: WriteBehind,
+    /// Staged runs in flight as `IoKind::Write` elevator jobs, by token:
+    /// `(disk_idx, disk_off, len)` (write-behind → scheduler path,
+    /// DESIGN.md §4.4).
+    wb_inflight: HashMap<u64, (usize, u64, u64)>,
+    /// Page refcounts under in-flight write-behind disk writes: a fill
+    /// of such a page must not read the disk until the write lands.
+    wb_pages: HashMap<(usize, u64), u32>,
+    /// Fill jobs deferred behind [`Self::wb_pages`], submitted when the
+    /// covering write completes.
+    wb_deferred: HashMap<(usize, u64), Vec<IoJob>>,
+    /// Syncs / reorg freezes deferred until `wb_inflight` drains.
+    wb_waiters: Vec<WbWaiter>,
+    /// Open collective aggregation windows (we are the home server),
+    /// keyed by `(file, group, epoch)` (DESIGN.md §4.4).
+    coll: HashMap<(FileId, u64, u64), CollWindow>,
     pending: HashMap<u64, Pending>,
     /// Reorg coordination state (we are the home server), by file.
     reorg_co: HashMap<FileId, ReorgCo>,
@@ -420,6 +502,11 @@ impl Server {
             plans: HashMap::new(),
             wb_files: HashSet::new(),
             wb,
+            wb_inflight: HashMap::new(),
+            wb_pages: HashMap::new(),
+            wb_deferred: HashMap::new(),
+            wb_waiters: Vec::new(),
+            coll: HashMap::new(),
             pending: HashMap::new(),
             reorg_co: HashMap::new(),
             reorg_local: HashMap::new(),
@@ -431,11 +518,44 @@ impl Server {
         })
     }
 
-    /// Event loop: serve until `Shutdown`.
+    /// Event loop: serve until `Shutdown`. When collective aggregation
+    /// windows are open the loop waits with a timeout so a straggler
+    /// past [`ServerConfig::collective_wait`] cannot stall the group
+    /// forever (DESIGN.md §4.4).
     pub fn run(mut self) {
-        while let Some(msg) = self.ep.recv() {
+        loop {
+            let msg = match self.next_window_deadline() {
+                None => self.ep.recv(),
+                Some(at) => {
+                    let now = Instant::now();
+                    if at <= now {
+                        self.flush_due_windows();
+                        continue;
+                    }
+                    match self.ep.recv_timeout(at - now) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => {
+                            self.flush_due_windows();
+                            continue;
+                        }
+                        Err(RecvTimeoutError::Disconnected) => None,
+                    }
+                }
+            };
+            let Some(msg) = msg else { break };
             if !self.handle(msg) {
                 break;
+            }
+        }
+        // in-flight write-behind elevator jobs must land before the
+        // final write-back pass, or a stale queued write could overwrite
+        // a newer flushed page
+        while !self.wb_inflight.is_empty() {
+            match self.ep.recv_timeout(Duration::from_millis(200)) {
+                Ok(msg) => {
+                    self.handle(msg);
+                }
+                Err(_) => break,
             }
         }
         // final write-back (staged write-behind runs first)
@@ -496,6 +616,17 @@ impl Server {
                 if f.disk_idx == disk_idx && (first..=last).contains(&f.page_no) {
                     f.stale = true;
                 }
+            }
+            // an in-flight write-behind elevator job cannot be recalled:
+            // if one targets this extent, leak the extent instead of
+            // risking the late write landing on a reused one (same
+            // trade-off as removal-under-load)
+            if self
+                .wb_inflight
+                .values()
+                .any(|&(d, o, l)| d == disk_idx && o < base + EXTENT && o + l > base)
+            {
+                continue;
             }
             self.free_extents[disk_idx].push(base);
         }
@@ -735,6 +866,12 @@ impl Server {
                 if !fill.demand {
                     fill.demand = true;
                     self.io[disk_idx].promote(tok);
+                    // a deferred fill's covering write-behind job must
+                    // come along too
+                    let ps = self.cache.config().page as u64;
+                    if self.wb_pages.contains_key(&(disk_idx, page_no)) {
+                        self.wb_promote_range(disk_idx, page_no * ps, ps);
+                    }
                 }
             }
             return;
@@ -752,16 +889,65 @@ impl Server {
             },
         );
         self.fill_by_page.insert((disk_idx, page_no), tok);
-        self.io[disk_idx].submit(IoJob {
+        let job = IoJob {
             token: tok,
             prio,
             kind: IoKind::Read { off: page_no * ps, len: ps },
-        });
+        };
+        // a write-behind elevator job targets this page: reading the
+        // disk now would resurrect pre-write bytes — defer the fill
+        // until the write lands (DESIGN.md §4.4). A demand fill also
+        // promotes the covering write so demand load cannot starve it.
+        if self.wb_pages.contains_key(&(disk_idx, page_no)) {
+            if prio == IoPrio::Demand {
+                self.wb_promote_range(disk_idx, page_no * ps, ps);
+            }
+            self.wb_deferred.entry((disk_idx, page_no)).or_default().push(job);
+        } else {
+            self.io[disk_idx].submit(job);
+        }
     }
 
     /// A disk completion re-entered the event loop: install the page and
-    /// resume every continuation that was waiting on it.
+    /// resume every continuation that was waiting on it. Write-behind
+    /// elevator jobs complete here too: they release the page holds that
+    /// deferred overlapping fills, and — once the last one lands — the
+    /// barrier operations (`sync`, reorg freeze) that waited on them.
     fn handle_io(&mut self, ev: IoEvent) {
+        if let Some((disk_idx, off, len)) = self.wb_inflight.remove(&ev.token) {
+            if ev.error.is_some() {
+                // acked at stage time: only surfaceable as an I/O error
+                self.stats.io_errors += 1;
+            }
+            let (first, last) = self.cache.page_span(off, len);
+            for no in first..=last {
+                let key = (disk_idx, no);
+                let done = match self.wb_pages.get_mut(&key) {
+                    Some(c) => {
+                        *c -= 1;
+                        *c == 0
+                    }
+                    None => false,
+                };
+                if done {
+                    self.wb_pages.remove(&key);
+                    if let Some(jobs) = self.wb_deferred.remove(&key) {
+                        for mut job in jobs {
+                            // a demand waiter may have joined while the
+                            // fill was deferred
+                            if self.fills.get(&job.token).is_some_and(|f| f.demand) {
+                                job.prio = IoPrio::Demand;
+                            }
+                            self.io[disk_idx].submit(job);
+                        }
+                    }
+                }
+            }
+            if self.wb_inflight.is_empty() {
+                self.wb_quiesced();
+            }
+            return;
+        }
         let Some(fill) = self.fills.remove(&ev.token) else { return };
         self.fill_by_page.remove(&(fill.disk_idx, fill.page_no));
         if ev.error.is_some() {
@@ -820,6 +1006,9 @@ impl Server {
             ParkedOp::Write { disk_idx, pieces, bytes } => {
                 self.finish_write(p.client, p.req_id, disk_idx, &pieces, bytes);
             }
+            ParkedOp::ReadScatter { frag, out } => {
+                self.finish_scatter(&frag, &out);
+            }
         }
         self.gate_open(key);
     }
@@ -846,6 +1035,7 @@ impl Server {
                     self.sync(key.0, key.0, req_id, key.1);
                     false
                 }
+                GateOp::Scatter { out } => self.dispatch_scatter(key.1, out),
             };
             if parked {
                 self.gate.entry(key).or_default().inflight = true;
@@ -860,7 +1050,10 @@ impl Server {
 
     /// Run `FlushInt`s deferred on a client whose ops just drained.
     fn run_pending_flushes(&mut self, client: Rank) {
-        if self.pending_flushes.is_empty() || self.client_busy(client) {
+        if self.pending_flushes.is_empty()
+            || self.client_busy(client)
+            || !self.wb_inflight.is_empty()
+        {
             return;
         }
         let mut due = Vec::new();
@@ -903,6 +1096,9 @@ impl Server {
         let mut at = 0usize;
         for (d, run) in frag.runs(local, len) {
             if let Some(doff) = d {
+                // a rare inline fill (page evicted while this op was
+                // parked) must not race a queued write-behind job
+                self.wb_fence_range(frag.disk_idx, doff, run);
                 let _ = self.cache.read(
                     frag.disk_idx,
                     &disk,
@@ -1062,7 +1258,10 @@ impl Server {
             self.stats.wb_staged_bytes += bytes;
             self.stats.bytes_written += bytes;
             if self.wb.over_budget() {
-                self.wb_flush_all();
+                // budget overflow drains through the per-disk elevator
+                // below demand priority — the flush overlaps request
+                // handling instead of blocking the loop (DESIGN.md §4.4)
+                self.wb_drain_async();
             }
             self.ack(client, client, req_id, Response::Written { bytes });
             return false;
@@ -1134,6 +1333,14 @@ impl Server {
         pieces: &[(u64, Vec<u8>)],
         bytes: u64,
     ) {
+        // an in-flight write-behind elevator job targeting these bytes
+        // must land first: a full-page write needs no fill (so the
+        // wb_pages fill deferral never sees it), and the page it
+        // installs could be evicted to disk before the queued stale
+        // payload lands on top of it
+        for (doff, data) in pieces {
+            self.wb_fence_range(disk_idx, *doff, data.len() as u64);
+        }
         // any page this write touches may have a fill in flight whose
         // payload was read from disk before the write (including fills
         // created while the write itself was parked): a late install of
@@ -1166,6 +1373,110 @@ impl Server {
         match failed {
             Some(msg) => self.ack(client, client, req_id, Response::Error { msg }),
             None => self.ack(client, client, req_id, Response::Written { bytes }),
+        }
+    }
+
+    /// Serve one collective window share (DESIGN.md §4.4): the union of
+    /// the group's runs on this server, read once — every distinct page
+    /// fills a single time even where processes' extents overlap — and
+    /// scattered as per-client `Data` ACKs straight to each VI. Gated
+    /// under `(own rank, file)` so program-order machinery and the reorg
+    /// interlocks (`file_busy`) see the scatter like any other data op.
+    fn serve_scatter_read(
+        &mut self,
+        file: FileId,
+        out: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let me = self.ep.rank;
+        if self.gate_busy(me, file) {
+            self.gate
+                .entry((me, file))
+                .or_default()
+                .queue
+                .push_back(GateOp::Scatter { out });
+            return;
+        }
+        if self.dispatch_scatter(file, out) {
+            self.gate.entry((me, file)).or_default().inflight = true;
+        }
+    }
+
+    /// Execute or park one scatter read; returns `true` if it parked.
+    fn dispatch_scatter(
+        &mut self,
+        file: FileId,
+        out: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
+    ) -> bool {
+        let entry = match self.dir.get(file) {
+            Some(e) => e,
+            None => {
+                // file unknown here: hole semantics, zeros for everyone
+                for (client, req_id, parts) in out {
+                    for &(_, len, dst) in &parts {
+                        self.ack(
+                            client,
+                            client,
+                            req_id,
+                            Response::Data { dst_base: dst, data: vec![0; len as usize] },
+                        );
+                    }
+                }
+                return false;
+            }
+        };
+        let frag = entry.frag.clone().unwrap_or_default();
+        // read-your-writes under write-behind: overlapping staged runs
+        // drain through the cache before the union is read
+        if self.wb.has_file(file) {
+            let mut runs = Vec::new();
+            for (_, _, parts) in &out {
+                for &(local, len, _) in parts {
+                    for (d, run) in frag.runs(local, len) {
+                        if let Some(doff) = d {
+                            runs.extend(self.wb.take_range(file, doff, run));
+                        }
+                    }
+                }
+            }
+            self.wb_apply_runs(runs);
+        }
+        let all: Vec<(u64, u64, u64)> =
+            out.iter().flat_map(|(_, _, ps)| ps.iter().copied()).collect();
+        let missing = if self.io.is_empty() {
+            Vec::new() // blocking baseline: read through the cache inline
+        } else {
+            self.missing_pages_of(&frag, &all)
+        };
+        if missing.is_empty() {
+            self.finish_scatter(&frag, &out);
+            return false;
+        }
+        let pid = self.token();
+        let n = missing.len();
+        for page_no in missing {
+            self.want_page(frag.disk_idx, page_no, Some(pid), IoPrio::Demand);
+        }
+        self.parked.insert(
+            pid,
+            Parked {
+                fills_left: n,
+                client: self.ep.rank,
+                req_id: 0,
+                file,
+                op: ParkedOp::ReadScatter { frag, out },
+            },
+        );
+        self.stats.io_parked += 1;
+        true
+    }
+
+    /// The reply half of a scatter read: slice each client's runs out of
+    /// the (now resident) cache and ACK them directly.
+    fn finish_scatter(&mut self, frag: &Fragment, out: &[(Rank, u64, Vec<(u64, u64, u64)>)]) {
+        for (client, req_id, parts) in out {
+            let total = self.read_frag_parts(frag, *client, *req_id, parts);
+            self.stats.bytes_read += total;
         }
     }
 
@@ -1328,12 +1639,61 @@ impl Server {
 
     // --------------------------------------------------- write-behind
 
+    /// Block until every in-flight write-behind elevator job overlapping
+    /// `[off, off+len)` of `disk_idx` has hit the disk. This is the
+    /// guard that lets a *synchronous* cache path (an inline RMW fill, a
+    /// read-your-writes flush) touch bytes a queued write targets
+    /// without racing it; almost always a no-op (`wb_inflight` empty).
+    fn wb_fence_range(&mut self, disk_idx: usize, off: u64, len: u64) {
+        if self.wb_inflight.is_empty() || len == 0 || self.io.is_empty() {
+            return;
+        }
+        let toks: Vec<u64> = self
+            .wb_inflight
+            .iter()
+            .filter(|(_, &(d, o, l))| d == disk_idx && o < off + len && o + l > off)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in toks {
+            // still queued at Prefetch, a sustained demand stream could
+            // starve the job while we block on it — reprioritise first
+            self.io[disk_idx].promote(t);
+            self.io[disk_idx].fence(t);
+        }
+    }
+
+    /// Promote in-flight write-behind jobs overlapping `[off, off+len)`
+    /// to the demand class: a demand fill (or a barrier op) now waits on
+    /// them, and the strict-priority scheduler would otherwise let
+    /// sustained demand load starve the Prefetch-class write forever.
+    fn wb_promote_range(&self, disk_idx: usize, off: u64, len: u64) {
+        if self.wb_inflight.is_empty() || self.io.is_empty() {
+            return;
+        }
+        for (&t, &(d, o, l)) in &self.wb_inflight {
+            if d == disk_idx && o < off + len && o + l > off {
+                self.io[d].promote(t);
+            }
+        }
+    }
+
+    /// Promote every in-flight write-behind job (a barrier op is now
+    /// deferred on the whole set draining).
+    fn wb_promote_all(&self) {
+        for (&t, &(d, _, _)) in &self.wb_inflight {
+            self.io[d].promote(t);
+        }
+    }
+
     /// Apply drained write-behind runs through the cache. Mirrors
     /// [`Server::finish_write`]'s fill staling: a fill in flight that
     /// read the disk before these bytes land must not resurrect the
     /// pre-write payload after the dirty page is evicted.
     fn wb_apply_runs(&mut self, runs: Vec<(usize, u64, Vec<u8>)>) {
         for (disk_idx, doff, data) in runs {
+            // an earlier elevator drain of these bytes' pages must land
+            // first — the cache write's RMW fill reads the disk inline
+            self.wb_fence_range(disk_idx, doff, data.len() as u64);
             let (first, last) = self.cache.page_span(doff, data.len() as u64);
             for no in first..=last {
                 if let Some(&tok) = self.fill_by_page.get(&(disk_idx, no)) {
@@ -1361,10 +1721,109 @@ impl Server {
         }
     }
 
-    /// Drain the whole write-behind buffer (sync, budget overflow).
+    /// Drain the whole write-behind buffer synchronously (sync, close,
+    /// shutdown — the barrier paths).
     fn wb_flush_all(&mut self) {
         let runs = self.wb.take_all();
         self.wb_apply_runs(runs);
+    }
+
+    /// Drain the write-behind buffer through the per-disk elevator
+    /// (ROADMAP "write-behind → scheduler path"; DESIGN.md §4.4): runs
+    /// whose pages are resident apply through the cache — a pure memory
+    /// operation — and everything else is submitted as `IoKind::Write`
+    /// jobs below demand priority, so a budget overflow no longer stalls
+    /// the event loop on a blocking flush; the writes overlap request
+    /// handling exactly like fills do. Fills (and RMW write fills) that
+    /// would race an in-flight write are deferred in [`Self::want_page`],
+    /// and barrier operations wait in [`Self::wb_quiesced`].
+    fn wb_drain_async(&mut self) {
+        if self.io.is_empty() {
+            // blocking baseline keeps the inline drain
+            self.wb_flush_all();
+            return;
+        }
+        let runs = self.wb.take_all();
+        let ps = self.cache.config().page as u64;
+        for (disk_idx, doff, data) in runs {
+            self.stats.wb_flushed_runs += 1;
+            // two elevator writes over the same bytes could reorder on
+            // the SCAN path — the earlier generation must land first
+            self.wb_fence_range(disk_idx, doff, data.len() as u64);
+            // fills in flight read the disk before these bytes land:
+            // their payloads must not repopulate the cache over them
+            let (first, last) = self.cache.page_span(doff, data.len() as u64);
+            for no in first..=last {
+                if let Some(&tok) = self.fill_by_page.get(&(disk_idx, no)) {
+                    if let Some(f) = self.fills.get_mut(&tok) {
+                        f.stale = true;
+                    }
+                }
+            }
+            // split at page boundaries into maximal resident /
+            // non-resident segments: resident pages must go through the
+            // cache (a direct disk write underneath them would be
+            // shadowed), and that path never touches the disk here
+            let end = doff + data.len() as u64;
+            let mut segs: Vec<(u64, u64, bool)> = Vec::new();
+            let mut cursor = doff;
+            while cursor < end {
+                let stop = ((cursor / ps) + 1).saturating_mul(ps).min(end);
+                let resident = self.cache.is_resident(disk_idx, cursor / ps);
+                match segs.last_mut() {
+                    Some((_, slen, sres)) if *sres == resident => *slen += stop - cursor,
+                    _ => segs.push((cursor, stop - cursor, resident)),
+                }
+                cursor = stop;
+            }
+            for (off, len, resident) in segs {
+                let s = (off - doff) as usize;
+                let bytes = &data[s..s + len as usize];
+                if resident {
+                    let disk = self.disks[disk_idx].clone();
+                    if self.cache.write(disk_idx, &disk, off, bytes).is_err() {
+                        self.stats.io_errors += 1;
+                    }
+                } else {
+                    let tok = self.token();
+                    self.wb_inflight.insert(tok, (disk_idx, off, len));
+                    let (pf, pl) = self.cache.page_span(off, len);
+                    for no in pf..=pl {
+                        *self.wb_pages.entry((disk_idx, no)).or_insert(0) += 1;
+                    }
+                    self.io[disk_idx].submit(IoJob {
+                        token: tok,
+                        prio: IoPrio::Prefetch,
+                        kind: IoKind::Write { off, data: bytes.to_vec() },
+                    });
+                    self.stats.wb_sched_jobs += 1;
+                }
+            }
+        }
+    }
+
+    /// The last in-flight write-behind elevator job landed: run the
+    /// barrier operations that deferred on it.
+    fn wb_quiesced(&mut self) {
+        if !self.wb_inflight.is_empty() {
+            return;
+        }
+        let waiters = std::mem::take(&mut self.wb_waiters);
+        for w in waiters {
+            match w {
+                WbWaiter::Sync { src, client, req_id, file } => {
+                    self.sync(src, client, req_id, file)
+                }
+                WbWaiter::Freeze { src, client, req_id, meta, target } => {
+                    self.reorg_freeze(src, client, req_id, meta, target)
+                }
+            }
+        }
+        // deferred cross-server flushes whose clients are idle can run
+        let clients: Vec<Rank> = self.pending_flushes.iter().map(|&(c, _, _)| c).collect();
+        for c in clients {
+            self.run_pending_flushes(c);
+        }
     }
 
     // ------------------------------------------------- request entry
@@ -1404,7 +1863,9 @@ impl Server {
         // from the old layout. A sync is deferred only when this window
         // already deferred writes — it must not complete ahead of them.
         let defer = match &req {
-            Request::Write { file, .. } | Request::SetSize { file, .. } => {
+            Request::Write { file, .. }
+            | Request::WriteList { file, .. }
+            | Request::SetSize { file, .. } => {
                 self.reorg_local.contains_key(file).then_some(*file)
             }
             Request::Sync { file } => self
@@ -1467,6 +1928,8 @@ impl Server {
                 self.wb_files.remove(&file);
                 self.pattern.retain(|(_, f), _| *f != file);
                 self.plans.retain(|(_, f), _| *f != file);
+                // pending collective participants must not hang
+                self.abort_windows(file, &format!("{file:?} removed"));
                 let removed = self.dir.remove(file);
                 // fail deferred writers instead of dropping their
                 // requests (they are blocked waiting for Written acks)
@@ -1514,6 +1977,34 @@ impl Server {
             }
             Request::Write { file, offset, data, view } => {
                 self.write(src, client, req_id, file, offset, data, view)
+            }
+            Request::ReadList { file, extents, collective } => {
+                self.read_list(src, client, req_id, file, extents, collective)
+            }
+            Request::WriteList { file, parts, collective } => {
+                self.write_list(src, client, req_id, file, parts, collective)
+            }
+            Request::LocalReadScatter { file, meta, out } => {
+                self.ensure_entry(&meta);
+                let my_epoch = self.dir.get(file).map_or(meta.epoch, |e| e.meta.epoch);
+                if meta.epoch < my_epoch {
+                    // a commit raced the window flush: re-fragment each
+                    // process's share under the current layout (the
+                    // bounded extra hop, per client)
+                    for (cl, creq, parts) in out {
+                        self.reroute_stale_read(cl, creq, file, &meta, &parts);
+                    }
+                } else if meta.epoch > my_epoch && self.reorg_local.contains_key(&file) {
+                    // sender committed first: serve from the shadow
+                    let frag = self
+                        .reorg_local
+                        .get(&file)
+                        .map(|st| st.shadow.clone())
+                        .unwrap_or_default();
+                    self.finish_scatter(&frag, &out);
+                } else {
+                    self.serve_scatter_read(file, out);
+                }
             }
             Request::LocalRead { file, meta, parts } => {
                 self.ensure_entry(&meta);
@@ -1590,8 +2081,11 @@ impl Server {
                 // the FIFO mailbox delivered every pre-sync LocalWrite of
                 // this client already, but one may still be *parked*; a
                 // flush now would let the sync barrier complete ahead of
-                // it. Defer until the client's ops here quiesce.
-                if self.client_busy(client) {
+                // it. Defer until the client's ops here quiesce — and
+                // until in-flight write-behind elevator jobs land, for
+                // the same reason (DESIGN.md §4.4).
+                if self.client_busy(client) || !self.wb_inflight.is_empty() {
+                    self.wb_promote_all();
                     self.pending_flushes.push((client, src, req_id));
                 } else {
                     self.flush_all();
@@ -1802,6 +2296,7 @@ impl Server {
             self.wb_files.remove(&id);
             self.pattern.retain(|(_, f), _| *f != id);
             self.plans.retain(|(_, f), _| *f != id);
+            self.abort_windows(id, &format!("{id:?} removed"));
             let removed = self.dir.remove(id);
             let m = Msg {
                 src: self.ep.rank,
@@ -1968,6 +2463,599 @@ impl Server {
         }
     }
 
+    // ------------------------------------- scatter-gather list I/O
+    //
+    // The list-I/O wire protocol (DESIGN.md §4.4): one ReadList/WriteList
+    // message carries a whole noncontiguous access (view resolved
+    // client-side), the buddy fragments the *list* so each involved
+    // server sees at most one message, and collective-tagged requests
+    // detour to the file's home server, which aggregates the group's
+    // sub-requests per (file, group, epoch) before touching a disk.
+
+    fn read_list(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        extents: Vec<(u64, u64, u64)>,
+        collective: Option<Collective>,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let Some(entry) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        let meta = entry.meta.clone();
+        if let Some(coll) = collective {
+            if meta.home() != self.ep.rank {
+                // aggregation happens at the home server — forward whole
+                let home = meta.home();
+                if !self.di(
+                    home,
+                    client,
+                    req_id,
+                    Request::ReadList { file, extents, collective: Some(coll) },
+                ) {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error { msg: format!("home server {home:?} unreachable") },
+                    );
+                }
+                return;
+            }
+            self.coll_read_arrive(client, req_id, file, coll, extents);
+            return;
+        }
+        self.stats.list_requests += 1;
+        self.stats.list_extents += extents.len() as u64;
+        let (clamped, total) = clamp_extent_list(&extents, meta.size);
+        self.ack(src, client, req_id, Response::ReadPlanned { total });
+        if total == 0 {
+            return;
+        }
+        // plan cursor (compiler knowledge); lists bypass the detector
+        self.note_read_list(src, file, &clamped);
+        let subs = fragment_list(&meta, &clamped);
+        self.stats.coalesced_runs += subs.iter().map(|s| s.parts.len() as u64).sum::<u64>();
+        for sub in subs {
+            if sub.server == self.ep.rank {
+                self.serve_local_read(src, req_id, file, &sub.parts);
+            } else {
+                let ok = self.di(
+                    sub.server,
+                    src,
+                    req_id,
+                    Request::LocalRead { file, meta: meta.clone(), parts: sub.parts },
+                );
+                if !ok {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error {
+                            msg: format!("server {:?} unreachable", sub.server),
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    fn write_list(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        parts: Vec<(u64, Vec<u8>)>,
+        collective: Option<Collective>,
+    ) {
+        crate::disk::precise_wait(self.cfg.request_overhead);
+        let Some(entry) = self.dir.get(file) else {
+            self.ack(src, client, req_id, Response::Error { msg: format!("bad file {file:?}") });
+            return;
+        };
+        let meta = entry.meta.clone();
+        if let Some(coll) = collective {
+            if meta.home() != self.ep.rank {
+                let home = meta.home();
+                if !self.di(
+                    home,
+                    client,
+                    req_id,
+                    Request::WriteList { file, parts, collective: Some(coll) },
+                ) {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error { msg: format!("home server {home:?} unreachable") },
+                    );
+                }
+                return;
+            }
+            self.coll_write_arrive(client, req_id, file, coll, parts);
+            return;
+        }
+        self.stats.list_requests += 1;
+        self.stats.list_extents += parts.len() as u64;
+        // flatten in list order: on overlap, later parts win — exactly a
+        // loop of write_at (same byte, same server, applied in order)
+        let mut extents: Vec<(u64, u64, u64)> = Vec::with_capacity(parts.len());
+        let mut blob: Vec<u8> = Vec::new();
+        let mut new_end = 0u64;
+        for (off, data) in &parts {
+            if data.is_empty() {
+                continue;
+            }
+            extents.push((*off, data.len() as u64, blob.len() as u64));
+            new_end = new_end.max(off + data.len() as u64);
+            blob.extend_from_slice(data);
+        }
+        if extents.is_empty() {
+            self.ack(src, client, req_id, Response::Written { bytes: 0 });
+            return;
+        }
+        let subs = fragment_list(&meta, &extents);
+        self.stats.coalesced_runs += subs.iter().map(|s| s.parts.len() as u64).sum::<u64>();
+        for sub in subs {
+            let wparts: Vec<(u64, Vec<u8>)> = sub
+                .parts
+                .iter()
+                .map(|&(l, ln, b)| (l, blob[b as usize..(b + ln) as usize].to_vec()))
+                .collect();
+            if sub.server == self.ep.rank {
+                self.serve_local_write(src, req_id, file, wparts);
+            } else {
+                let ok = self.di(
+                    sub.server,
+                    src,
+                    req_id,
+                    Request::LocalWrite { file, meta: meta.clone(), parts: wparts },
+                );
+                if !ok {
+                    self.ack(
+                        src,
+                        client,
+                        req_id,
+                        Response::Error {
+                            msg: format!("server {:?} unreachable", sub.server),
+                        },
+                    );
+                }
+            }
+        }
+        // size bookkeeping: locally + at home (fire-and-forget DI)
+        if let Some(e) = self.dir.get_mut(file) {
+            e.meta.size = e.meta.size.max(new_end);
+        }
+        if meta.home() != self.ep.rank {
+            self.di(
+                meta.home(),
+                client,
+                req_id,
+                Request::SizeUpdate { file, size: new_end, exact: false },
+            );
+        }
+    }
+
+    /// Plan-cursor advance for list reads (the compiler path): a list is
+    /// already complete knowledge, so the online detector is bypassed,
+    /// but an installed AccessPlan still consumes up to the maximal
+    /// physical offset the list reaches.
+    fn note_read_list(&mut self, client: Rank, file: FileId, extents: &[(u64, u64, u64)]) {
+        if !self.prefetch_on || extents.is_empty() {
+            return;
+        }
+        let key = (client, file);
+        if !self.plans.contains_key(&key) {
+            return;
+        }
+        let consumed_to = extents.iter().map(|&(o, l, _)| o + l).max().unwrap_or(0);
+        if let Some(ps) = self.plans.get_mut(&key) {
+            while ps.next_consume < ps.next_prefetch
+                && ps.entries[ps.next_consume].0 < consumed_to
+            {
+                ps.next_consume += 1;
+            }
+        }
+        self.plan_topup(key);
+        if self
+            .plans
+            .get(&key)
+            .is_some_and(|ps| ps.next_consume >= ps.entries.len())
+        {
+            self.plans.remove(&key);
+        }
+    }
+
+    // -------------------------------- collective aggregation windows
+
+    /// One process's collective read sub-request arrived at the home
+    /// server: ack its plan, park it in the call's window, flush when
+    /// the group is complete or the byte budget trips (DESIGN.md §4.4).
+    fn coll_read_arrive(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        coll: Collective,
+        extents: Vec<(u64, u64, u64)>,
+    ) {
+        self.stats.list_requests += 1;
+        self.stats.list_extents += extents.len() as u64;
+        let size = self.dir.get(file).map_or(0, |e| e.meta.size);
+        let (clamped, total) = clamp_extent_list(&extents, size);
+        self.ack(client, client, req_id, Response::ReadPlanned { total });
+        let key = (file, coll.group, coll.epoch);
+        let w = self.coll_window(key, coll.nprocs);
+        w.bytes += total;
+        // zero-byte arrivals (EOF) still count toward the group
+        w.reads.push((client, req_id, clamped));
+        self.maybe_flush_window(key);
+    }
+
+    /// One process's collective write sub-request arrived: park the
+    /// payload; the `Written` ack comes after the window services it.
+    fn coll_write_arrive(
+        &mut self,
+        client: Rank,
+        req_id: u64,
+        file: FileId,
+        coll: Collective,
+        parts: Vec<(u64, Vec<u8>)>,
+    ) {
+        self.stats.list_requests += 1;
+        self.stats.list_extents += parts.len() as u64;
+        let bytes: u64 = parts.iter().map(|(_, d)| d.len() as u64).sum();
+        let key = (file, coll.group, coll.epoch);
+        let w = self.coll_window(key, coll.nprocs);
+        w.bytes += bytes;
+        w.writes.push((client, req_id, parts));
+        self.maybe_flush_window(key);
+    }
+
+    /// The aggregation window for `key`, opened with a fresh straggler
+    /// deadline on first arrival.
+    fn coll_window(&mut self, key: (FileId, u64, u64), nprocs: u32) -> &mut CollWindow {
+        let wait = self.cfg.collective_wait;
+        self.coll.entry(key).or_insert_with(|| CollWindow {
+            nprocs: nprocs.max(1),
+            served: 0,
+            deadline: Instant::now() + wait,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            bytes: 0,
+        })
+    }
+
+    /// Flush a window if the group is complete or the byte budget
+    /// tripped; the deadline path goes through [`Self::flush_due_windows`].
+    fn maybe_flush_window(&mut self, key: (FileId, u64, u64)) {
+        let due = self.coll.get(&key).is_some_and(|w| {
+            let full = w.served as usize + w.reads.len() + w.writes.len() >= w.nprocs as usize;
+            full || w.bytes > self.cfg.collective_bytes
+        });
+        if due {
+            self.flush_window(key);
+        }
+    }
+
+    /// Earliest deadline among windows holding pending arrivals (drives
+    /// the event loop's receive timeout).
+    fn next_window_deadline(&self) -> Option<Instant> {
+        self.coll
+            .values()
+            .filter(|w| !w.reads.is_empty() || !w.writes.is_empty())
+            .map(|w| w.deadline)
+            .min()
+    }
+
+    /// Flush windows whose straggler deadline passed and retire windows
+    /// that went quiet. Public so harnesses driving [`Server::handle`]
+    /// directly (library mode, tests) can pump the clock.
+    pub fn flush_due_windows(&mut self) {
+        let now = Instant::now();
+        let due: Vec<(FileId, u64, u64)> = self
+            .coll
+            .iter()
+            .filter(|(_, w)| {
+                w.deadline <= now && (!w.reads.is_empty() || !w.writes.is_empty())
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        for k in due {
+            self.flush_window(k);
+        }
+        // a window whose flush an open reorg parked is still "due":
+        // re-arm its deadline so the event loop goes back to receiving
+        // (the reorg needs our mailbox to make progress) — the commit
+        // retries it through flush_unblocked_windows
+        let wait = self.cfg.collective_wait;
+        for w in self.coll.values_mut() {
+            if (!w.reads.is_empty() || !w.writes.is_empty()) && w.deadline <= now {
+                w.deadline = now + wait;
+            }
+        }
+        // windows past their deadline with nothing pending retire: a
+        // late arrival then opens a fresh window that waits at most one
+        // more collective_wait (the group identity is gone with the old
+        // window, so it cannot be told apart from a first arrival)
+        // rather than waiting forever on a group that never completes
+        self.coll
+            .retain(|_, w| !w.reads.is_empty() || !w.writes.is_empty() || w.deadline > now);
+    }
+
+    /// Service one window's pending arrivals. Writes inside an open
+    /// reorg window stay parked (the freeze barrier would be bypassed);
+    /// [`Self::flush_unblocked_windows`] retries them at commit.
+    fn flush_window(&mut self, key: (FileId, u64, u64)) {
+        let file = key.0;
+        let reorg_busy =
+            self.reorg_local.contains_key(&file) || self.reorg_co.contains_key(&file);
+        let Some(w) = self.coll.get(&key) else { return };
+        if !w.writes.is_empty() && reorg_busy {
+            return;
+        }
+        let Some(mut w) = self.coll.remove(&key) else { return };
+        let reads = std::mem::take(&mut w.reads);
+        let writes = std::mem::take(&mut w.writes);
+        w.served += (reads.len() + writes.len()) as u32;
+        w.bytes = 0;
+        if !reads.is_empty() {
+            self.stats.collective_windows += 1;
+            self.flush_coll_reads(file, reads);
+        }
+        if !writes.is_empty() {
+            self.stats.collective_windows += 1;
+            self.flush_coll_writes(file, writes);
+        }
+        if w.served < w.nprocs {
+            // budget trip split the window: the remainder gets a fresh
+            // straggler deadline
+            w.deadline = Instant::now() + self.cfg.collective_wait;
+            self.coll.insert(key, w);
+        }
+    }
+
+    /// Retry window flushes that a now-finished reorg had parked.
+    fn flush_unblocked_windows(&mut self, file: FileId) {
+        let now = Instant::now();
+        let keys: Vec<(FileId, u64, u64)> = self
+            .coll
+            .iter()
+            .filter(|(k, w)| {
+                k.0 == file
+                    && (!w.reads.is_empty() || !w.writes.is_empty())
+                    && (w.served as usize + w.reads.len() + w.writes.len()
+                        >= w.nprocs as usize
+                        || w.bytes > self.cfg.collective_bytes
+                        || w.deadline <= now)
+            })
+            .map(|(&k, _)| k)
+            .collect();
+        for k in keys {
+            self.flush_window(k);
+        }
+    }
+
+    /// A removed file's windows can never complete: error the pending
+    /// participants out instead of hanging them.
+    fn abort_windows(&mut self, file: FileId, msg: &str) {
+        let keys: Vec<(FileId, u64, u64)> =
+            self.coll.keys().filter(|k| k.0 == file).copied().collect();
+        for k in keys {
+            if let Some(w) = self.coll.remove(&k) {
+                for (client, req_id, _) in w.reads {
+                    self.ack(client, client, req_id, Response::Error { msg: msg.into() });
+                }
+                for (client, req_id, _) in w.writes {
+                    self.ack(client, client, req_id, Response::Error { msg: msg.into() });
+                }
+            }
+        }
+    }
+
+    /// Service a flushed window's reads: merge the group's extents, then
+    /// one `LocalReadScatter` per involved server (ourselves inline) —
+    /// the server-side two-phase read. Data ACKs go straight to each VI.
+    fn flush_coll_reads(
+        &mut self,
+        file: FileId,
+        reads: Vec<(Rank, u64, Vec<(u64, u64, u64)>)>,
+    ) {
+        let Some(e) = self.dir.get(file) else {
+            for (client, req_id, parts) in reads {
+                for &(_, len, dst) in &parts {
+                    self.ack(
+                        client,
+                        client,
+                        req_id,
+                        Response::Data { dst_base: dst, data: vec![0; len as usize] },
+                    );
+                }
+            }
+            return;
+        };
+        let meta = e.meta.clone();
+        // stats: maximal merged file-space runs across the whole group
+        let mut all: Vec<(u64, u64)> = reads
+            .iter()
+            .flat_map(|(_, _, ps)| ps.iter().map(|&(o, l, _)| (o, l)))
+            .collect();
+        all.sort_unstable();
+        let mut runs = 0u64;
+        let mut end = 0u64;
+        for (i, &(o, l)) in all.iter().enumerate() {
+            if i == 0 || o > end {
+                runs += 1;
+                end = o + l;
+            } else {
+                end = end.max(o + l);
+            }
+        }
+        self.stats.coalesced_runs += runs;
+        // group every process's per-server share into one scatter DI per
+        // involved server
+        let mut per: HashMap<Rank, Vec<(Rank, u64, Vec<(u64, u64, u64)>)>> = HashMap::new();
+        let mut order: Vec<Rank> = Vec::new();
+        for (client, req_id, extents) in reads {
+            if extents.is_empty() {
+                continue;
+            }
+            for sub in fragment_list(&meta, &extents) {
+                if !per.contains_key(&sub.server) {
+                    order.push(sub.server);
+                }
+                per.entry(sub.server)
+                    .or_default()
+                    .push((client, req_id, sub.parts));
+            }
+        }
+        for srv in order {
+            let Some(out) = per.remove(&srv) else { continue };
+            if srv == self.ep.rank {
+                self.serve_scatter_read(file, out);
+            } else {
+                // keep only the ack recipients, not a deep copy of the
+                // whole scatter payload, for the dead-server branch
+                let recipients: Vec<(Rank, u64)> =
+                    out.iter().map(|&(c, r, _)| (c, r)).collect();
+                let ok = self.di(
+                    srv,
+                    self.ep.rank,
+                    0,
+                    Request::LocalReadScatter { file, meta: meta.clone(), out },
+                );
+                if !ok {
+                    // dead server: its share fails over like the
+                    // independent read path
+                    for (client, req_id) in recipients {
+                        self.ack(
+                            client,
+                            client,
+                            req_id,
+                            Response::Error { msg: format!("server {srv:?} unreachable") },
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Service a flushed window's writes: merge the group's parts into
+    /// maximal runs, dispatch one share per involved server with
+    /// ourselves as the requester, and ack every participant once all
+    /// shares acknowledge ([`Pending::CollWriteWait`]).
+    fn flush_coll_writes(
+        &mut self,
+        file: FileId,
+        writes: Vec<(Rank, u64, Vec<(u64, Vec<u8>)>)>,
+    ) {
+        let Some(e) = self.dir.get(file) else {
+            for (client, req_id, _) in writes {
+                self.ack(
+                    client,
+                    client,
+                    req_id,
+                    Response::Error { msg: format!("bad file {file:?}") },
+                );
+            }
+            return;
+        };
+        let meta = e.meta.clone();
+        let mut participants: Vec<(Rank, u64, u64)> = Vec::new();
+        let mut flat: Vec<(u64, Vec<u8>)> = Vec::new();
+        for (client, req_id, parts) in writes {
+            let bytes: u64 = parts.iter().map(|(_, d)| d.len() as u64).sum();
+            participants.push((client, req_id, bytes));
+            flat.extend(parts.into_iter().filter(|(_, d)| !d.is_empty()));
+        }
+        // merge into maximal runs. Overlapping collective writes are
+        // erroneous in MPI; here the higher-offset-sorted bytes win
+        // deterministically.
+        flat.sort_by_key(|&(o, _)| o);
+        let mut merged: Vec<(u64, Vec<u8>)> = Vec::new();
+        for (o, d) in flat {
+            match merged.last_mut() {
+                Some((mo, md)) if *mo + md.len() as u64 == o => md.extend_from_slice(&d),
+                Some((mo, md)) if o < *mo + md.len() as u64 => {
+                    let at = (o - *mo) as usize;
+                    let ov = (md.len() - at).min(d.len());
+                    md[at..at + ov].copy_from_slice(&d[..ov]);
+                    if ov < d.len() {
+                        md.extend_from_slice(&d[ov..]);
+                    }
+                }
+                _ => merged.push((o, d)),
+            }
+        }
+        self.stats.coalesced_runs += merged.len() as u64;
+        if merged.is_empty() {
+            for (client, req_id, bytes) in participants {
+                self.ack(client, client, req_id, Response::Written { bytes });
+            }
+            return;
+        }
+        let mut extents: Vec<(u64, u64, u64)> = Vec::with_capacity(merged.len());
+        let mut blob: Vec<u8> = Vec::new();
+        let mut new_end = 0u64;
+        for (o, d) in &merged {
+            extents.push((*o, d.len() as u64, blob.len() as u64));
+            new_end = new_end.max(o + d.len() as u64);
+            blob.extend_from_slice(d);
+        }
+        // One Written/Error ack per share: the stale-epoch reroute (which
+        // would split a share into several acks) is unreachable here —
+        // every reorg is coordinated by this home server, the flush only
+        // runs with no reorg open, and a later freeze wave leaves this
+        // server *after* these LocalWrites, so per-channel FIFO delivers
+        // them at the epoch this meta snapshot carries.
+        let subs = fragment_list(&meta, &extents);
+        let iid = self.internal_id();
+        let me = self.ep.rank;
+        let mut sent = 0usize;
+        let mut error: Option<String> = None;
+        for sub in subs {
+            let wparts: Vec<(u64, Vec<u8>)> = sub
+                .parts
+                .iter()
+                .map(|&(l, ln, b)| (l, blob[b as usize..(b + ln) as usize].to_vec()))
+                .collect();
+            if sub.server == me {
+                self.serve_local_write(me, iid, file, wparts);
+                sent += 1;
+            } else if self.di(
+                sub.server,
+                me,
+                iid,
+                Request::LocalWrite { file, meta: meta.clone(), parts: wparts },
+            ) {
+                sent += 1;
+            } else {
+                error = Some(format!("server {:?} unreachable", sub.server));
+            }
+        }
+        // size bookkeeping: we are the home server
+        if let Some(e) = self.dir.get_mut(file) {
+            e.meta.size = e.meta.size.max(new_end);
+        }
+        if sent == 0 {
+            let msg = error.unwrap_or_else(|| "no reachable servers".into());
+            for (client, req_id, _) in participants {
+                self.ack(client, client, req_id, Response::Error { msg: msg.clone() });
+            }
+            return;
+        }
+        self.pending.insert(
+            iid,
+            Pending::CollWriteWait { acks_left: sent, error, participants },
+        );
+    }
+
     // ------------------------------------------------ size/sync/hint
 
     fn trunc_local(&mut self, file: FileId, size: u64) {
@@ -2033,6 +3121,13 @@ impl Server {
     }
 
     fn sync(&mut self, src: Rank, client: Rank, req_id: u64, file: FileId) {
+        // a sync must not complete ahead of write-behind elevator jobs
+        // still in flight — defer until they land (DESIGN.md §4.4)
+        if !self.wb_inflight.is_empty() {
+            self.wb_promote_all();
+            self.wb_waiters.push(WbWaiter::Sync { src, client, req_id, file });
+            return;
+        }
         // flush own disks (delayed writes)
         self.flush_all();
         let Some(e) = self.dir.get(file) else {
@@ -2299,6 +3394,14 @@ impl Server {
         meta: FileMeta,
         target: Distribution,
     ) {
+        // the ship pass reads the fragment directly from cache/disk, so
+        // write-behind elevator jobs still in flight must land before
+        // the freeze ack (the freeze barrier's guarantee)
+        if !self.wb_inflight.is_empty() {
+            self.wb_promote_all();
+            self.wb_waiters.push(WbWaiter::Freeze { src, client, req_id, meta, target });
+            return;
+        }
         self.ensure_entry(&meta);
         let file = meta.id;
         // write-behind interlock: every pre-freeze write must be applied
@@ -2578,6 +3681,8 @@ impl Server {
         for (dsrc, dclient, did, dreq) in st.deferred {
             self.handle_req(dsrc, dclient, did, MsgClass::ER, dreq);
         }
+        // a collective window flush this reorg parked can run now
+        self.flush_unblocked_windows(file);
     }
 
     /// Tear down a coordination that can no longer complete (file
@@ -2828,18 +3933,59 @@ impl Server {
                 if acks_left > 0 {
                     self.pending
                         .insert(req_id, Pending::ReorgCommitWait { file, acks_left });
-                } else if let Some(co) = self.reorg_co.remove(&file) {
-                    // the control DIs that actually went out
-                    // (freeze/ship/commit waves) plus the reported data
-                    // messages
-                    let messages = co.messages + co.control;
-                    if co.req_id != 0 {
-                        self.ack(
-                            co.client,
-                            co.client,
-                            co.req_id,
-                            Response::Redistributed { bytes_moved: co.bytes_moved, messages },
-                        );
+                } else {
+                    if let Some(co) = self.reorg_co.remove(&file) {
+                        // the control DIs that actually went out
+                        // (freeze/ship/commit waves) plus the reported
+                        // data messages
+                        let messages = co.messages + co.control;
+                        if co.req_id != 0 {
+                            self.ack(
+                                co.client,
+                                co.client,
+                                co.req_id,
+                                Response::Redistributed { bytes_moved: co.bytes_moved, messages },
+                            );
+                        }
+                    }
+                    // collective write windows parked on the
+                    // coordination can flush now
+                    self.flush_unblocked_windows(file);
+                }
+            }
+            (
+                Pending::CollWriteWait { mut acks_left, mut error, participants },
+                resp,
+            ) => {
+                match resp {
+                    Response::Written { .. } => {}
+                    Response::Error { msg } => {
+                        error.get_or_insert(msg);
+                    }
+                    _ => {}
+                }
+                acks_left -= 1;
+                if acks_left > 0 {
+                    self.pending.insert(
+                        req_id,
+                        Pending::CollWriteWait { acks_left, error, participants },
+                    );
+                } else {
+                    for (client, creq, bytes) in participants {
+                        match &error {
+                            None => self.ack(
+                                client,
+                                client,
+                                creq,
+                                Response::Written { bytes },
+                            ),
+                            Some(msg) => self.ack(
+                                client,
+                                client,
+                                creq,
+                                Response::Error { msg: msg.clone() },
+                            ),
+                        }
                     }
                 }
             }
@@ -2889,6 +4035,34 @@ impl Server {
             _ => {}
         }
     }
+}
+
+/// EOF-clamp a `(file_offset, len, buf_base)` extent list in list order
+/// (viewed-read semantics, §6.3.3): the list is cut at the first extent
+/// that starts at or crosses EOF, and the total is what `ReadPlanned`
+/// promises. The wire contract requires dense cumulative `buf_base`s, so
+/// cutting the tail keeps every served base inside `[0, total)`.
+fn clamp_extent_list(
+    extents: &[(u64, u64, u64)],
+    size: u64,
+) -> (Vec<(u64, u64, u64)>, u64) {
+    let mut out = Vec::with_capacity(extents.len());
+    let mut total = 0u64;
+    for &(off, len, base) in extents {
+        if len == 0 {
+            continue;
+        }
+        if off >= size {
+            break;
+        }
+        let take = len.min(size - off);
+        out.push((off, take, base));
+        total += take;
+        if take < len {
+            break;
+        }
+    }
+    (out, total)
 }
 
 #[cfg(test)]
@@ -3000,6 +4174,86 @@ mod tests {
             Body::Resp(Response::ReadPlanned { total }) => assert_eq!(total, 0),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn clamp_extent_list_cuts_in_list_order() {
+        // full prefix, clamped tail
+        let (out, total) = clamp_extent_list(&[(0, 10, 0), (20, 10, 10), (40, 10, 20)], 25);
+        assert_eq!(out, vec![(0, 10, 0), (20, 5, 10)]);
+        assert_eq!(total, 15);
+        // extent starting at EOF cuts the list
+        let (out, total) = clamp_extent_list(&[(30, 4, 0), (0, 4, 4)], 30);
+        assert!(out.is_empty());
+        assert_eq!(total, 0);
+        // zero-length extents are skipped, not cutting
+        let (out, total) = clamp_extent_list(&[(0, 0, 0), (5, 5, 0)], 100);
+        assert_eq!(out, vec![(5, 5, 0)]);
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn list_read_write_single_server() {
+        let (w, mut s) = one_server();
+        let c = w.join(Role::Client);
+        let er = |req: Request, id: u64| Msg {
+            src: c.rank,
+            client: c.rank,
+            req_id: id,
+            class: MsgClass::ER,
+            body: Body::Req(req),
+        };
+        s.handle(er(
+            Request::Open { name: "lst".into(), mode: OpenMode::rdwr_create() },
+            1,
+        ));
+        let file = match c.recv().unwrap().body {
+            Body::Resp(Response::Opened { file, .. }) => file,
+            other => panic!("{other:?}"),
+        };
+        // scatter write: two runs with a hole between them
+        s.handle(er(
+            Request::WriteList {
+                file,
+                parts: vec![(0, vec![1u8; 10]), (20, vec![2u8; 10])],
+                collective: None,
+            },
+            2,
+        ));
+        match c.recv().unwrap().body {
+            Body::Resp(Response::Written { bytes }) => assert_eq!(bytes, 20),
+            other => panic!("{other:?}"),
+        }
+        // gather read, out of order: [20,25) then [5,10)
+        s.handle(er(
+            Request::ReadList {
+                file,
+                extents: vec![(20, 5, 0), (5, 5, 5)],
+                collective: None,
+            },
+            3,
+        ));
+        match c.recv().unwrap().body {
+            Body::Resp(Response::ReadPlanned { total }) => assert_eq!(total, 10),
+            other => panic!("{other:?}"),
+        }
+        let mut buf = vec![0u8; 10];
+        let mut got = 0;
+        while got < 10 {
+            match c.recv().unwrap().body {
+                Body::Resp(Response::Data { dst_base, data }) => {
+                    got += data.len();
+                    buf[dst_base as usize..dst_base as usize + data.len()]
+                        .copy_from_slice(&data);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(&buf[..5], &[2u8; 5]);
+        assert_eq!(&buf[5..], &[1u8; 5]);
+        assert_eq!(s.stats.list_requests, 2);
+        assert_eq!(s.stats.list_extents, 4);
+        assert!((1..=4).contains(&s.stats.coalesced_runs));
     }
 
     #[test]

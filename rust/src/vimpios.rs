@@ -15,13 +15,15 @@
 //! arrays stored in files") are provided. Collective calls
 //! (`*_all`) synchronise a [`ClientGroup`] (the communicator).
 
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 
 use anyhow::{bail, Result};
 
 use crate::access::{AccessDesc, BasicBlock};
 use crate::client::{Client, Op, OpResult, Vfh};
-use crate::msg::OpenMode;
+use crate::msg::{Collective, OpenMode};
 
 // ------------------------------------------------------------- datatypes
 
@@ -710,17 +712,33 @@ pub enum Whence {
 // ----------------------------------------------------------- collectives
 
 /// A communicator of SPMD client processes for collective I/O. Each
-/// participant holds one [`GroupMember`]; collective calls rendezvous on
-/// a barrier after the access (the paper implements `*_all` as the
-/// non-collective call plus a closing barrier, §6.3.4).
+/// participant holds one [`GroupMember`].
+///
+/// The paper's ViMPIOS implemented `*_all` as the non-collective call
+/// plus a closing barrier (§6.3.4) — every process still hit the
+/// servers independently. Here a collective call instead emits a
+/// [`Collective`]-tagged scatter-gather list request: the file's home
+/// server parks the group's sub-requests in an aggregation window,
+/// merges the interleaved extents into maximal runs, services them once
+/// and scatters the replies — two-phase I/O inside VS, no client-side
+/// exchange (DESIGN.md §4.4). The closing barrier is kept for MPI
+/// semantics.
 pub struct ClientGroup {
     size: usize,
+    id: u64,
     barrier: Arc<Barrier>,
 }
 
+/// Distinguishes communicators server-side (window key component).
+static GROUP_SEQ: AtomicU64 = AtomicU64::new(1);
+
 impl ClientGroup {
     pub fn new(size: usize) -> Self {
-        Self { size, barrier: Arc::new(Barrier::new(size)) }
+        Self {
+            size,
+            id: GROUP_SEQ.fetch_add(1, Ordering::Relaxed),
+            barrier: Arc::new(Barrier::new(size)),
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -729,16 +747,41 @@ impl ClientGroup {
 
     pub fn member(&self, rank: usize) -> GroupMember {
         assert!(rank < self.size);
-        GroupMember { rank, size: self.size, barrier: self.barrier.clone() }
+        GroupMember {
+            rank,
+            size: self.size,
+            group: self.id,
+            ops: Cell::new(0),
+            barrier: self.barrier.clone(),
+        }
     }
 }
 
 /// One process's membership in a [`ClientGroup`].
-#[derive(Clone)]
+///
+/// `ops` counts this member's collective data accesses: SPMD processes
+/// call collectives in the same order (an MPI requirement), so the
+/// per-member counters stay in lockstep and identify one call's
+/// aggregation window across the group. Cloning a member copies the
+/// current count — use each member from a single process.
 pub struct GroupMember {
     pub rank: usize,
     pub size: usize,
+    group: u64,
+    ops: Cell<u64>,
     barrier: Arc<Barrier>,
+}
+
+impl Clone for GroupMember {
+    fn clone(&self) -> Self {
+        Self {
+            rank: self.rank,
+            size: self.size,
+            group: self.group,
+            ops: Cell::new(self.ops.get()),
+            barrier: self.barrier.clone(),
+        }
+    }
 }
 
 impl GroupMember {
@@ -746,7 +789,15 @@ impl GroupMember {
         self.barrier.wait();
     }
 
-    /// `MPI_File_read_all`.
+    /// The tag for this member's next collective data access.
+    fn next_coll(&self) -> Collective {
+        let epoch = self.ops.get();
+        self.ops.set(epoch + 1);
+        Collective { group: self.group, epoch, nprocs: self.size as u32 }
+    }
+
+    /// `MPI_File_read_all`: collective read at the individual file
+    /// pointer — aggregated server-side (DESIGN.md §4.4).
     pub fn read_all(
         &self,
         file: &mut MpiFile,
@@ -755,7 +806,19 @@ impl GroupMember {
         count: u64,
         dt: &Datatype,
     ) -> Result<Status> {
-        let st = file.read(client, buf, count, dt)?;
+        let bytes = count * dt.size();
+        let need = bytes.min(buf.len() as u64);
+        let op = client.iread_collective(file.vfh, need, self.next_coll())?;
+        let before = client.tell(file.vfh)? - need;
+        let st = match client.wait(op)? {
+            OpResult::Read(data) => {
+                buf[..data.len()].copy_from_slice(&data);
+                // correct the optimistic pointer advance on short reads
+                client.seek(file.vfh, before + data.len() as u64)?;
+                Status { bytes: data.len() as u64 }
+            }
+            other => bail!("read_all failed: {other:?}"),
+        };
         self.barrier();
         Ok(st)
     }
@@ -769,12 +832,21 @@ impl GroupMember {
         count: u64,
         dt: &Datatype,
     ) -> Result<Status> {
-        let st = file.write(client, buf, count, dt)?;
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let op = client.iwrite_collective(file.vfh, &buf[..bytes], self.next_coll())?;
+        let st = match client.wait(op)? {
+            OpResult::Written(n) => Status { bytes: n },
+            other => bail!("write_all failed: {other:?}"),
+        };
+        if file.atomic {
+            client.sync(file.vfh)?;
+        }
         self.barrier();
         Ok(st)
     }
 
-    /// `MPI_File_read_at_all`.
+    /// `MPI_File_read_at_all` (explicit offset in etype units; no
+    /// file-pointer update).
     pub fn read_at_all(
         &self,
         file: &mut MpiFile,
@@ -784,7 +856,21 @@ impl GroupMember {
         count: u64,
         dt: &Datatype,
     ) -> Result<Status> {
-        let st = file.read_at(client, offset, buf, count, dt)?;
+        let bytes = count * dt.size();
+        let need = bytes.min(buf.len() as u64);
+        let op = client.iread_at_collective(
+            file.vfh,
+            offset * file.unit(),
+            need,
+            self.next_coll(),
+        )?;
+        let st = match client.wait(op)? {
+            OpResult::Read(data) => {
+                buf[..data.len()].copy_from_slice(&data);
+                Status { bytes: data.len() as u64 }
+            }
+            other => bail!("read_at_all failed: {other:?}"),
+        };
         self.barrier();
         Ok(st)
     }
@@ -799,7 +885,20 @@ impl GroupMember {
         count: u64,
         dt: &Datatype,
     ) -> Result<Status> {
-        let st = file.write_at(client, offset, buf, count, dt)?;
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let op = client.iwrite_at_collective(
+            file.vfh,
+            offset * file.unit(),
+            &buf[..bytes],
+            self.next_coll(),
+        )?;
+        let st = match client.wait(op)? {
+            OpResult::Written(n) => Status { bytes: n },
+            other => bail!("write_at_all failed: {other:?}"),
+        };
+        if file.atomic {
+            client.sync(file.vfh)?;
+        }
         self.barrier();
         Ok(st)
     }
@@ -815,7 +914,8 @@ pub struct SplitColl {
 }
 
 impl GroupMember {
-    /// `MPI_File_read_all_begin`.
+    /// `MPI_File_read_all_begin`: issues the collective-tagged immediate
+    /// read; the aggregation window fills while the caller computes.
     pub fn read_all_begin(
         &self,
         file: &mut MpiFile,
@@ -826,7 +926,8 @@ impl GroupMember {
         if file.split_active {
             bail!("a split collective is already active on this handle");
         }
-        let req = file.iread(client, count, dt)?;
+        let op = client.iread_collective(file.vfh, count * dt.size(), self.next_coll())?;
+        let req = MpiRequest { op };
         file.split_active = true;
         Ok(SplitColl { req })
     }
@@ -857,7 +958,9 @@ impl GroupMember {
         if file.split_active {
             bail!("a split collective is already active on this handle");
         }
-        let req = file.iwrite(client, buf, count, dt)?;
+        let bytes = (count * dt.size()).min(buf.len() as u64) as usize;
+        let op = client.iwrite_collective(file.vfh, &buf[..bytes], self.next_coll())?;
+        let req = MpiRequest { op };
         file.split_active = true;
         Ok(SplitColl { req })
     }

@@ -1,0 +1,403 @@
+//! Integration battery for the scatter-gather list-I/O wire protocol
+//! and server-side collective aggregation (DESIGN.md §4.4):
+//!
+//! * message-amplification: a viewed strided read of N extents crosses
+//!   the wire as at most (involved servers) messages, with
+//!   `list_extents == N` on the buddy;
+//! * collective windows: a full group aggregates into one window whose
+//!   interleaved extents merge into maximal runs;
+//! * the byte-budget trip path (early flush + straggler completion) and
+//!   the straggler deadline;
+//! * a mid-collective `Redistribute` (the reorg interlock).
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use vipios::access::AccessDesc;
+use vipios::client::Client;
+use vipios::hints::{FileAdminHint, Hint};
+use vipios::layout::Distribution;
+use vipios::modes::ServerPool;
+use vipios::msg::{Collective, OpenMode};
+use vipios::server::ServerConfig;
+use vipios::vimpios::{Amode, Basic, ClientGroup, Datatype, MpiFile};
+
+/// One stat sweep over the pool: `(er+di msgs, list_requests,
+/// list_extents, coalesced_runs, collective_windows)`. Each sweep
+/// self-counts its own Stat ERs (one per server, counted before the
+/// server answers), so the message delta between two sweeps equals the
+/// traffic in between plus one per server for the *closing* sweep.
+#[derive(Debug, Clone, Copy, Default)]
+struct Sweep {
+    msgs: u64,
+    reqs: u64,
+    extents: u64,
+    runs: u64,
+    windows: u64,
+}
+
+fn sweep(c: &mut Client, p: &ServerPool) -> Sweep {
+    let mut out = Sweep::default();
+    for &s in p.server_ranks() {
+        let st = c.stats_of(s).unwrap();
+        out.msgs += st.ext_requests + st.int_requests;
+        out.reqs += st.list_requests;
+        out.extents += st.list_extents;
+        out.runs += st.coalesced_runs;
+        out.windows += st.collective_windows;
+    }
+    out
+}
+
+// ------------------------------------------- message amplification
+
+/// The acceptance shape: a viewed strided read of N extents spanning
+/// every server must cost at most (involved servers) messages — one ER
+/// to the buddy plus one `LocalRead` DI per other involved server — and
+/// the buddy must account all N extents in `list_extents`.
+#[test]
+fn viewed_strided_read_is_one_message_per_involved_server() {
+    let nservers = 3usize;
+    let p = ServerPool::start(nservers, ServerConfig::default()).unwrap();
+    let mut c = p.client().unwrap();
+    c.hint(Hint::FileAdmin(FileAdminHint {
+        name: "amp".into(),
+        distribution: Distribution::Cyclic { chunk: 4096 },
+        nprocs: Some(1),
+    }))
+    .unwrap();
+    let h = c.open("amp", OpenMode::rdwr_create()).unwrap();
+    let img: Vec<u8> = (0..256 * 1024u32).map(|i| (i % 251) as u8).collect();
+    c.write_at(h, 0, &img).unwrap();
+    c.sync(h).unwrap();
+
+    // view: 1 KiB of data every 8 KiB — 32 extents over 256 KiB, whose
+    // 4 KiB-cyclic chunks hit all three servers
+    let n_extents = 32u64;
+    c.set_view(h, 0, AccessDesc::vector(1, 1024, 7 * 1024)).unwrap();
+    let before = sweep(&mut c, &p);
+    let mut buf = vec![0u8; (n_extents * 1024) as usize];
+    let n = c.read_at(h, 0, &mut buf).unwrap();
+    assert_eq!(n as u64, n_extents * 1024);
+    let after = sweep(&mut c, &p);
+
+    // data correctness against the raw image
+    for i in 0..n_extents as usize {
+        assert_eq!(
+            &buf[i * 1024..(i + 1) * 1024],
+            &img[i * 8192..i * 8192 + 1024],
+            "extent {i}"
+        );
+    }
+    // the closing sweep's own Stat ERs are the only non-read traffic
+    let wire = after.msgs - before.msgs - nservers as u64;
+    assert!(
+        wire <= nservers as u64,
+        "strided read of {n_extents} extents took {wire} messages (> {nservers})"
+    );
+    assert_eq!(after.reqs - before.reqs, 1, "one list request");
+    assert_eq!(
+        after.extents - before.extents,
+        n_extents,
+        "list_extents must count every extent"
+    );
+    let runs = after.runs - before.runs;
+    assert!((1..=n_extents).contains(&runs), "coalesced runs {runs}");
+    p.shutdown().unwrap();
+}
+
+// ------------------------------------------- collective aggregation
+
+/// Four processes `read_at_all` interleaved contiguous blocks: the home
+/// server must aggregate them in one window, merge the four extents
+/// into a single maximal run, and scatter correct bytes to every VI.
+#[test]
+fn collective_read_aggregates_one_window() {
+    let (nprocs, nservers) = (4usize, 2usize);
+    let total: u64 = 512 * 1024;
+    let per = total / nprocs as u64;
+    let cfg = ServerConfig {
+        // the group always completes: a slow CI box must not let the
+        // straggler deadline split the window and break determinism
+        collective_wait: Duration::from_secs(5),
+        ..ServerConfig::default()
+    };
+    let p = ServerPool::start(nservers, cfg).unwrap();
+    {
+        let mut c = p.client().unwrap();
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: "coll".into(),
+            distribution: Distribution::block_for(total, nservers as u32),
+            nprocs: Some(nprocs as u32),
+        }))
+        .unwrap();
+        let h = c.open("coll", OpenMode::rdwr_create()).unwrap();
+        let img: Vec<u8> = (0..total).map(|i| (i % 249) as u8).collect();
+        c.write_at(h, 0, &img).unwrap();
+        c.sync(h).unwrap();
+        c.disconnect().unwrap();
+    }
+    let group = ClientGroup::new(nprocs);
+    let ready = Arc::new(Barrier::new(nprocs + 1));
+    let go = Arc::new(Barrier::new(nprocs + 1));
+    let done = Arc::new(Barrier::new(nprocs + 1));
+    let exit = Arc::new(Barrier::new(nprocs + 1));
+    let mut handles = Vec::new();
+    for rank in 0..nprocs {
+        let world = p.world().clone();
+        let member = group.member(rank);
+        let (ready, go, done, exit) =
+            (ready.clone(), go.clone(), done.clone(), exit.clone());
+        handles.push(std::thread::spawn(move || {
+            let byte = Datatype::Basic(Basic::Byte);
+            let mut c = Client::connect(&world).unwrap();
+            let mut f = MpiFile::open(&mut c, "coll", Amode::rdonly()).unwrap();
+            let mut buf = vec![0u8; per as usize];
+            ready.wait();
+            go.wait();
+            let st = member
+                .read_at_all(&mut f, &mut c, rank as u64 * per, &mut buf, per, &byte)
+                .unwrap();
+            assert_eq!(st.bytes, per);
+            for (i, &b) in buf.iter().enumerate() {
+                let g = rank as u64 * per + i as u64;
+                assert_eq!(b, (g % 249) as u8, "rank {rank} byte {i}");
+            }
+            done.wait();
+            exit.wait();
+            c.disconnect().unwrap();
+        }));
+    }
+    let mut admin = p.client().unwrap();
+    ready.wait();
+    let before = sweep(&mut admin, &p);
+    go.wait();
+    done.wait();
+    let after = sweep(&mut admin, &p);
+    exit.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(after.windows - before.windows, 1, "exactly one aggregation window");
+    assert_eq!(after.extents - before.extents, nprocs as u64);
+    assert_eq!(
+        after.runs - before.runs,
+        1,
+        "interleaved blocks must merge into one run"
+    );
+    // wire cost: nprocs ERs + at most nprocs forward DIs to the home +
+    // at most nservers scatter DIs (minus the closing sweep)
+    let wire = after.msgs - before.msgs - nservers as u64;
+    assert!(
+        wire <= (2 * nprocs + nservers) as u64,
+        "collective read took {wire} messages"
+    );
+    p.shutdown().unwrap();
+}
+
+/// The byte-budget trip: two early arrivals exceed the window budget
+/// and flush before the group is complete; the straggler's late arrival
+/// closes the window in a second flush. Every byte stays correct.
+#[test]
+fn collective_budget_trip_then_straggler_completes() {
+    let nprocs = 3usize;
+    let per: u64 = 64 * 1024;
+    let total = per * nprocs as u64;
+    let cfg = ServerConfig {
+        collective_bytes: 64 * 1024, // trips at the 2nd arrival
+        collective_wait: Duration::from_secs(5), // budget path, not deadline
+        ..ServerConfig::default()
+    };
+    let p = ServerPool::start(2, cfg).unwrap();
+    {
+        let mut c = p.client().unwrap();
+        let h = c.open("trip", OpenMode::rdwr_create()).unwrap();
+        let img: Vec<u8> = (0..total).map(|i| (i % 241) as u8).collect();
+        c.write_at(h, 0, &img).unwrap();
+        c.sync(h).unwrap();
+        c.disconnect().unwrap();
+    }
+    let group = ClientGroup::new(nprocs);
+    let mut handles = Vec::new();
+    for rank in 0..nprocs {
+        let world = p.world().clone();
+        let member = group.member(rank);
+        handles.push(std::thread::spawn(move || {
+            let byte = Datatype::Basic(Basic::Byte);
+            let mut c = Client::connect(&world).unwrap();
+            let mut f = MpiFile::open(&mut c, "trip", Amode::rdonly()).unwrap();
+            if rank == nprocs - 1 {
+                // the straggler arrives well after the budget tripped
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            let mut buf = vec![0u8; per as usize];
+            let st = member
+                .read_at_all(&mut f, &mut c, rank as u64 * per, &mut buf, per, &byte)
+                .unwrap();
+            assert_eq!(st.bytes, per);
+            for (i, &b) in buf.iter().enumerate() {
+                let g = rank as u64 * per + i as u64;
+                assert_eq!(b, (g % 241) as u8, "rank {rank} byte {i}");
+            }
+            c.disconnect().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut admin = p.client().unwrap();
+    let windows = sweep(&mut admin, &p).windows;
+    assert_eq!(windows, 2, "budget trip must split the window into two flushes");
+    p.shutdown().unwrap();
+}
+
+/// The straggler deadline: a collective tagged for a group of two where
+/// the partner never arrives must still complete once
+/// `collective_wait` expires (degenerate pass-through flush), not hang.
+#[test]
+fn collective_deadline_rescues_incomplete_group() {
+    let cfg = ServerConfig {
+        collective_wait: Duration::from_millis(50),
+        ..ServerConfig::default()
+    };
+    let p = ServerPool::start(2, cfg).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("late", OpenMode::rdwr_create()).unwrap();
+    c.write_at(h, 0, &[0x5Au8; 32 * 1024]).unwrap();
+    c.sync(h).unwrap();
+    let coll = Collective { group: 0xDEAD, epoch: 0, nprocs: 2 };
+    let op = c.iread_at_collective(h, 0, 32 * 1024, coll).unwrap();
+    match c.wait(op).unwrap() {
+        vipios::client::OpResult::Read(data) => {
+            assert_eq!(data.len(), 32 * 1024);
+            assert!(data.iter().all(|&b| b == 0x5A));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // writes take the deadline path too
+    let op = c.iwrite_at_collective(h, 0, &[0x6Bu8; 4096], Collective {
+        group: 0xDEAD,
+        epoch: 1,
+        nprocs: 2,
+    });
+    match c.wait(op.unwrap()).unwrap() {
+        vipios::client::OpResult::Written(n) => assert_eq!(n, 4096),
+        other => panic!("unexpected {other:?}"),
+    }
+    let mut buf = vec![0u8; 4096];
+    c.read_at(h, 0, &mut buf).unwrap();
+    assert!(buf.iter().all(|&b| b == 0x6B));
+    p.shutdown().unwrap();
+}
+
+/// Mid-collective `Redistribute` interlock: collective writes racing a
+/// physical redistribution must neither hang nor tear — the window
+/// flush defers across the reorg freeze/commit and replays cleanly.
+#[test]
+fn collective_writes_survive_concurrent_redistribute() {
+    let (nprocs, nservers) = (3usize, 2usize);
+    let per: u64 = 32 * 1024;
+    let total = per * nprocs as u64;
+    let p = ServerPool::start(nservers, ServerConfig::default()).unwrap();
+    {
+        let mut c = p.client().unwrap();
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: "rx".into(),
+            distribution: Distribution::block_for(total, nservers as u32),
+            nprocs: Some(nprocs as u32),
+        }))
+        .unwrap();
+        let h = c.open("rx", OpenMode::rdwr_create()).unwrap();
+        c.write_at(h, 0, &vec![0u8; total as usize]).unwrap();
+        c.sync(h).unwrap();
+        c.disconnect().unwrap();
+    }
+    let rounds = 6usize;
+    let group = ClientGroup::new(nprocs);
+    let mut handles = Vec::new();
+    for rank in 0..nprocs {
+        let world = p.world().clone();
+        let member = group.member(rank);
+        handles.push(std::thread::spawn(move || {
+            let byte = Datatype::Basic(Basic::Byte);
+            let mut c = Client::connect(&world).unwrap();
+            let mut f = MpiFile::open(&mut c, "rx", Amode::rdwr_create()).unwrap();
+            for round in 1..=rounds {
+                let fill = (16 * round + rank) as u8;
+                let data = vec![fill; per as usize];
+                let st = member
+                    .write_at_all(&mut f, &mut c, rank as u64 * per, &data, per, &byte)
+                    .unwrap();
+                assert_eq!(st.bytes, per, "rank {rank} round {round}");
+            }
+            c.disconnect().unwrap();
+        }));
+    }
+    // concurrently flip the physical layout back and forth
+    let world = p.world().clone();
+    let reorg = std::thread::spawn(move || {
+        let mut c = Client::connect(&world).unwrap();
+        let h = c.open("rx", OpenMode::rdwr_create()).unwrap();
+        for i in 0..3 {
+            let target = if i % 2 == 0 {
+                Distribution::Cyclic { chunk: 8 * 1024 }
+            } else {
+                Distribution::block_for(total, 2)
+            };
+            c.redistribute(h, target).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        c.disconnect().unwrap();
+    });
+    for h in handles {
+        h.join().unwrap();
+    }
+    reorg.join().unwrap();
+    // final image: every rank's block holds its last-round fill
+    let mut c = p.client().unwrap();
+    let h = c.open("rx", OpenMode::rdonly()).unwrap();
+    let mut buf = vec![0u8; total as usize];
+    assert_eq!(c.read_at(h, 0, &mut buf).unwrap(), total as usize);
+    for rank in 0..nprocs {
+        let want = (16 * rounds + rank) as u8;
+        let blk = &buf[rank * per as usize..(rank + 1) * per as usize];
+        assert!(
+            blk.iter().all(|&b| b == want),
+            "rank {rank} block torn (want {want}, got {:?}...)",
+            &blk[..8]
+        );
+    }
+    p.shutdown().unwrap();
+}
+
+// -------------------------------------------------- hpf list reads
+
+/// `hpf::read_local` now ships the whole ownership pattern as one list
+/// request: message count stays at (involved servers), not per-tile.
+#[test]
+fn hpf_read_local_is_list_shaped() {
+    use vipios::hpf::{self, ArrayDesc, Dist};
+    let p = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let a = ArrayDesc::new(&[32, 32], &[Dist::Block, Dist::Block], &[2, 2], 4).unwrap();
+    // write the canonical image
+    {
+        let mut c = p.client().unwrap();
+        let h = c.open("hpfl", OpenMode::rdwr_create()).unwrap();
+        let img: Vec<u8> = (0..32 * 32u32).flat_map(|i| i.to_le_bytes()).collect();
+        c.write_at(h, 0, &img).unwrap();
+        c.sync(h).unwrap();
+        c.disconnect().unwrap();
+    }
+    let mut c = p.client().unwrap();
+    let h = c.open("hpfl", OpenMode::rdonly()).unwrap();
+    let before = sweep(&mut c, &p);
+    let need = (a.local_elems(1) * 4) as usize;
+    let mut buf = vec![0u8; need];
+    assert_eq!(hpf::read_local(&mut c, h, &a, 1, 0, &mut buf).unwrap(), need);
+    let after = sweep(&mut c, &p);
+    assert_eq!(after.reqs - before.reqs, 1, "one list request for the local view");
+    // rank 1 of a 2x2 grid on a 32x32 BLOCK,BLOCK array owns 16 rows of
+    // 16 elements: 16 strided tiles
+    assert_eq!(after.extents - before.extents, 16);
+    p.shutdown().unwrap();
+}

@@ -263,3 +263,49 @@ fn plan_window_stays_bounded_and_respects_eof() {
     assert!(st.predicted_bytes <= 512 * 1024, "predicted past EOF: {st:?}");
     p.shutdown().unwrap();
 }
+
+// --------------------------------- write-behind -> scheduler path
+
+/// ROADMAP "write-behind → scheduler path" (DESIGN.md §4.4): a budget
+/// overflow must drain staged runs as `IoKind::Write` elevator jobs
+/// below demand priority (`wb_sched_jobs > 0`) instead of through the
+/// blocking cache write — while read-your-writes, sync durability and
+/// cold re-reads stay byte-exact.
+#[test]
+fn write_behind_budget_drain_rides_the_elevator() {
+    let cfg = ServerConfig {
+        write_behind: 64 * 1024, // overflow quickly
+        ..ServerConfig::default()
+    };
+    let p = ServerPool::start(2, cfg).unwrap();
+    let mut c = p.client().unwrap();
+    let h = c.open("wbe", OpenMode::rdwr_create()).unwrap();
+    let file = c.file_id(h).unwrap();
+    c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: true }))
+        .unwrap();
+    let mut r = vipios::util::XorShift64::new(0x77EB);
+    let img = r.bytes(512 * 1024);
+    for (i, chunk) in img.chunks(16 * 1024).enumerate() {
+        c.write_at(h, (i * 16 * 1024) as u64, chunk).unwrap();
+    }
+    // read-your-writes while elevator drains may still be in flight:
+    // overlapping fills defer until the write-behind jobs land
+    let mut buf = vec![0u8; img.len()];
+    assert_eq!(c.read_at(h, 0, &mut buf).unwrap(), img.len());
+    assert_eq!(buf, img, "read-your-writes violated");
+    let jobs: u64 = p
+        .server_ranks()
+        .iter()
+        .map(|&s| c.stats_of(s).unwrap().wb_sched_jobs)
+        .sum();
+    assert!(jobs > 0, "budget drain never used the per-disk elevator");
+    // sync must not complete ahead of in-flight elevator writes
+    c.sync(h).unwrap();
+    drop_caches(&mut c, &p);
+    let mut cold = vec![0u8; img.len()];
+    assert_eq!(c.read_at(h, 0, &mut cold).unwrap(), img.len());
+    assert_eq!(cold, img, "cold re-read lost elevator-drained bytes");
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert_eq!(st.io_errors, 0, "elevator drain surfaced I/O errors");
+    p.shutdown().unwrap();
+}

@@ -1,0 +1,146 @@
+//! Property battery for the scatter-gather list-I/O protocol
+//! (DESIGN.md §4.4): `iread_list`/`iwrite_list` must be byte-identical
+//! to the equivalent loop of `read_at`/`write_at` for random extent
+//! lists — overlapping and out-of-order included — and EOF must cut a
+//! list in list order exactly like a viewed read. Deterministic
+//! XorShift64 seeds; a failing seed reproduces the case.
+
+use vipios::hints::{FileAdminHint, Hint};
+use vipios::layout::Distribution;
+use vipios::modes::ServerPool;
+use vipios::msg::OpenMode;
+use vipios::server::ServerConfig;
+use vipios::util::XorShift64;
+
+const FILE: u64 = 256 * 1024;
+
+fn pool_with_file(
+    seed: u64,
+    nservers: usize,
+    chunk: u64,
+) -> (ServerPool, vipios::client::Client, vipios::client::Vfh, Vec<u8>) {
+    let pool = ServerPool::start(nservers, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    c.hint(Hint::FileAdmin(FileAdminHint {
+        name: "prop".into(),
+        distribution: Distribution::Cyclic { chunk },
+        nprocs: Some(1),
+    }))
+    .unwrap();
+    let h = c.open("prop", OpenMode::rdwr_create()).unwrap();
+    let mut r = XorShift64::new(seed);
+    let img = r.bytes(FILE as usize);
+    c.write_at(h, 0, &img).unwrap();
+    c.sync(h).unwrap();
+    (pool, c, h, img)
+}
+
+#[test]
+fn read_list_matches_read_at_loop() {
+    for seed in [1u64, 7, 99] {
+        let (pool, mut c, h, _img) = pool_with_file(seed, 3, 4096 + seed * 512);
+        let mut r = XorShift64::new(seed ^ 0xD00D);
+        for case in 0..20 {
+            // random extent lists: out-of-order, overlapping, within EOF
+            let n = r.range(1, 12) as usize;
+            let extents: Vec<(u64, u64)> = (0..n)
+                .map(|_| {
+                    let off = r.below(FILE - 1);
+                    let len = r.range(1, 16 * 1024).min(FILE - off);
+                    (off, len)
+                })
+                .collect();
+            let total: usize = extents.iter().map(|e| e.1 as usize).sum();
+            let mut got = vec![0u8; total];
+            let nread = c.read_list(h, &extents, &mut got).unwrap();
+            assert_eq!(nread, total, "seed {seed} case {case}");
+            // the oracle: the equivalent loop of read_at
+            let mut want = vec![0u8; total];
+            let mut at = 0usize;
+            for &(off, len) in &extents {
+                let n = c.read_at(h, off, &mut want[at..at + len as usize]).unwrap();
+                assert_eq!(n, len as usize, "oracle short read, seed {seed}");
+                at += len as usize;
+            }
+            assert_eq!(got, want, "seed {seed} case {case} extents {extents:?}");
+        }
+        pool.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn write_list_matches_write_at_loop() {
+    for seed in [3u64, 21, 1234] {
+        // identical twin pools: one written with write_list, the other
+        // with the equivalent loop of write_at — final images must match
+        let (pool_a, mut ca, ha, _) = pool_with_file(seed, 3, 8192);
+        let (pool_b, mut cb, hb, _) = pool_with_file(seed, 3, 8192);
+        let mut r = XorShift64::new(seed ^ 0xBEEF);
+        for _case in 0..10 {
+            let n = r.range(1, 8) as usize;
+            let parts: Vec<(u64, Vec<u8>)> = (0..n)
+                .map(|_| {
+                    let off = r.below(FILE - 1);
+                    let len = r.range(1, 8 * 1024).min(FILE - off);
+                    (off, r.bytes(len as usize))
+                })
+                .collect();
+            let refs: Vec<(u64, &[u8])> =
+                parts.iter().map(|(o, d)| (*o, d.as_slice())).collect();
+            let wrote = ca.write_list(ha, &refs).unwrap();
+            let total: u64 = parts.iter().map(|(_, d)| d.len() as u64).sum();
+            assert_eq!(wrote, total, "seed {seed}");
+            for (off, d) in &parts {
+                cb.write_at(hb, *off, d).unwrap();
+            }
+        }
+        let mut ia = vec![0u8; FILE as usize];
+        let mut ib = vec![0u8; FILE as usize];
+        assert_eq!(ca.read_at(ha, 0, &mut ia).unwrap(), FILE as usize);
+        assert_eq!(cb.read_at(hb, 0, &mut ib).unwrap(), FILE as usize);
+        assert_eq!(ia, ib, "seed {seed}");
+        pool_a.shutdown().unwrap();
+        pool_b.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn read_list_clamps_at_eof_in_list_order() {
+    let (pool, mut c, h, img) = pool_with_file(5, 2, 4096);
+    // an extent crossing EOF cuts the list — later extents are dropped,
+    // exactly like a viewed read reaching EOF
+    let extents = vec![(FILE - 100, 200u64), (0u64, 50u64)];
+    let mut buf = vec![0u8; 250];
+    let n = c.read_list(h, &extents, &mut buf).unwrap();
+    assert_eq!(n, 100);
+    assert_eq!(&buf[..100], &img[(FILE - 100) as usize..]);
+    // an extent starting past EOF yields nothing
+    let n = c.read_list(h, &[(FILE + 10, 10)], &mut buf).unwrap();
+    assert_eq!(n, 0);
+    // zero-length extents are skipped without cutting
+    let n = c.read_list(h, &[(0, 0), (10, 20)], &mut buf).unwrap();
+    assert_eq!(n, 20);
+    assert_eq!(&buf[..20], &img[10..30]);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn write_list_then_read_list_roundtrip_with_holes() {
+    // scattered writes leaving holes; the holes read back as zeros
+    let pool = ServerPool::start(2, ServerConfig::default()).unwrap();
+    let mut c = pool.client().unwrap();
+    let h = c.open("holes", OpenMode::rdwr_create()).unwrap();
+    let a = vec![0xAAu8; 1000];
+    let b = vec![0xBBu8; 1000];
+    c.write_list(h, &[(0, a.as_slice()), (10_000, b.as_slice())]).unwrap();
+    let mut buf = vec![0xFFu8; 3000];
+    let n = c
+        .read_list(h, &[(0, 1000), (9_500, 1500), (500, 500)], &mut buf)
+        .unwrap();
+    assert_eq!(n, 3000);
+    assert_eq!(&buf[..1000], &a[..]);
+    assert_eq!(&buf[1000..1500], &[0u8; 500]); // hole
+    assert_eq!(&buf[1500..2500], &b[..]);
+    assert_eq!(&buf[2500..], &a[500..]);
+    pool.shutdown().unwrap();
+}

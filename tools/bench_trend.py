@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Aggregate `vipios bench --json` artifacts across runs into a per-cell
+trend table (the ROADMAP "bench trajectory dashboards" item).
+
+The CI perf-gate job uploads `BENCH_<exp>.json` per run. Download a set
+of those artifacts (e.g. with `gh run download`) into one directory per
+run, then:
+
+    bench_trend.py runs/pr-101 runs/pr-102 runs/main-nightly
+    bench_trend.py --glob 'runs/*' --out trend.md
+
+Each positional argument is a *run*: a directory scanned recursively
+for `BENCH_*.json`, or a single JSON file. Runs are labelled by their
+basename and ordered as given (use shell sorting / --glob for
+chronology). The output is a Markdown table per experiment table, one
+row per gated-ish cell (same column heuristic as tools/perf_gate.py),
+one column per run, so a drifting cell is visible before it trips the
+gate floors.
+
+Stdlib only; `--self-test` exercises the pipeline on synthetic data.
+"""
+
+import argparse
+import glob as globlib
+import json
+import os
+import re
+import sys
+
+# Same performance-shaped column heuristic as tools/perf_gate.py.
+TRACKED_HEADER = re.compile(r"MB/s|hit|speedup|uplift|rate|^qd=", re.IGNORECASE)
+
+
+def as_number(cell):
+    if isinstance(cell, (int, float)):
+        return float(cell)
+    if isinstance(cell, str):
+        t = cell.strip().rstrip("%x")
+        try:
+            return float(t)
+        except ValueError:
+            return None
+    return None
+
+
+def load_run(path):
+    """Return {experiment: parsed-json} for one run (dir or file)."""
+    files = []
+    if os.path.isdir(path):
+        for root, _dirs, names in os.walk(path):
+            files.extend(
+                os.path.join(root, n)
+                for n in names
+                if n.startswith("BENCH_") and n.endswith(".json")
+            )
+    elif os.path.isfile(path):
+        files = [path]
+    out = {}
+    for f in sorted(files):
+        try:
+            with open(f, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping {f}: {e}", file=sys.stderr)
+            continue
+        out[doc.get("experiment", os.path.basename(f))] = doc
+    return out
+
+
+def cell_key(table_title, row_idx, header):
+    return (table_title, row_idx, header)
+
+
+def collect(runs):
+    """runs: [(label, {exp: doc})] -> (ordered cell keys, {key: {label: value}})."""
+    order = []
+    values = {}
+    for label, docs in runs:
+        for exp in sorted(docs):
+            for t in docs[exp].get("tables", []):
+                headers = t.get("headers", [])
+                cols = [i for i, h in enumerate(headers) if TRACKED_HEADER.search(h)]
+                for ri, row in enumerate(t.get("rows", [])):
+                    # first non-tracked cell labels the row, if any
+                    for ci in cols:
+                        if ci >= len(row):
+                            continue
+                        v = as_number(row[ci])
+                        if v is None:
+                            continue
+                        key = cell_key(t["title"], ri, headers[ci])
+                        if key not in values:
+                            values[key] = {}
+                            order.append(key)
+                        values[key][label] = v
+    return order, values
+
+
+def row_label(docs_by_label, key):
+    """Best-effort row label: the row's first cell (by convention the
+    label column) in any run that has it."""
+    title, ri, _ = key
+    for docs in docs_by_label.values():
+        for doc in docs.values():
+            for t in doc.get("tables", []):
+                if t["title"] != title:
+                    continue
+                rows = t.get("rows", [])
+                if ri < len(rows) and rows[ri]:
+                    return str(rows[ri][0])
+    return f"row {ri}"
+
+
+def render(labels, order, values, docs_by_label):
+    lines = []
+    by_table = {}
+    for key in order:
+        by_table.setdefault(key[0], []).append(key)
+    for title, keys in by_table.items():
+        lines.append(f"### {title}\n")
+        lines.append("| cell | " + " | ".join(labels) + " |")
+        lines.append("|---|" + "---|" * len(labels))
+        for key in keys:
+            rl = row_label(docs_by_label, key)
+            name = f"{rl} · {key[2]}"
+            cells = []
+            for lb in labels:
+                v = values[key].get(lb)
+                cells.append("—" if v is None else f"{v:g}")
+            lines.append(f"| {name} | " + " | ".join(cells) + " |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def self_test():
+    mk = lambda bw: {
+        "experiment": "overlap",
+        "quick": True,
+        "tables": [
+            {
+                "title": "t",
+                "headers": ["clients", "MB/s", "note"],
+                "rows": [[8, bw, "x"]],
+            }
+        ],
+    }
+    runs = [("r1", {"overlap": mk(10.0)}), ("r2", {"overlap": mk(12.5)})]
+    order, values = collect(runs)
+    assert len(order) == 1, order
+    key = order[0]
+    assert values[key] == {"r1": 10.0, "r2": 12.5}, values
+    docs_by_label = {lb: {"overlap": d["overlap"]} for lb, d in runs}
+    md = render(["r1", "r2"], order, values, docs_by_label)
+    assert "| 8 · MB/s | 10 | 12.5 |" in md, md
+    # a run missing the cell renders a dash
+    md2 = render(["r1", "r2", "r3"], order, values, docs_by_label)
+    assert "| 10 | 12.5 | — |" in md2, md2
+    print("self-test OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("runs", nargs="*", help="run directories or BENCH_*.json files")
+    ap.add_argument("--glob", help="shell glob adding runs (sorted)", default=None)
+    ap.add_argument("--out", help="write Markdown here instead of stdout")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    paths = list(args.runs)
+    if args.glob:
+        paths.extend(sorted(globlib.glob(args.glob)))
+    if not paths:
+        ap.error("no runs given (positional paths or --glob)")
+    runs = []
+    for p in paths:
+        label = os.path.basename(os.path.normpath(p)) or p
+        docs = load_run(p)
+        if not docs:
+            print(f"warning: no BENCH_*.json under {p}", file=sys.stderr)
+        runs.append((label, docs))
+    labels = [lb for lb, _ in runs]
+    order, values = collect(runs)
+    docs_by_label = {lb: docs for lb, docs in runs}
+    md = render(labels, order, values, docs_by_label)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(md)
+        print(f"wrote {args.out}")
+    else:
+        print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
