@@ -132,6 +132,14 @@ impl Client {
     /// (first server) for a buddy assignment.
     pub fn connect(world: &World) -> Result<Self> {
         let ep = world.join(Role::Client);
+        Self::connect_with(world, ep)
+    }
+
+    /// `Vipios_Connect` from a pre-joined endpoint. The model checker
+    /// joins every client endpoint on the main thread in a fixed order —
+    /// rank assignment must be identical across replays of a seed — and
+    /// hands each endpoint to its client thread through here.
+    pub fn connect_with(world: &World, ep: Endpoint) -> Result<Self> {
         let servers = world.servers();
         let cc = *servers.first().ok_or_else(|| anyhow!("no ViPIOS servers running"))?;
         let mut c = Self {

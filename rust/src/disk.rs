@@ -478,6 +478,12 @@ struct SchedInner {
 pub struct IoScheduler {
     inner: Arc<SchedInner>,
     worker: Option<JoinHandle<()>>,
+    /// Deterministic mode ([`IoScheduler::start_inline`]): no worker —
+    /// `submit` executes the op synchronously and fires this callback
+    /// before returning. Disk serialization becomes submit order; the
+    /// *delivery* of completions (messages the callback emits) is what a
+    /// model-checking scheduler reorders.
+    inline: Option<CompletionFn>,
 }
 
 impl IoScheduler {
@@ -498,12 +504,43 @@ impl IoScheduler {
             .name("vipios-iosched".into())
             .spawn(move || while inner2.run_one(&completion) {})
             .expect("spawn io scheduler");
-        Self { inner, worker: Some(worker) }
+        Self { inner, worker: Some(worker), inline: None }
+    }
+
+    /// Deterministic single-threaded mode (model checking; DESIGN.md
+    /// §4.5): no worker thread, every submitted op executes on the
+    /// calling thread in submit order and its completion callback runs
+    /// before `submit` returns. Elevator reordering and coalescing are
+    /// bypassed — the schedule space a model run explores is the
+    /// *completion-delivery* order, not the disk order (the real worker
+    /// path is covered separately by the ThreadSanitizer CI job).
+    pub fn start_inline(disk: Arc<dyn Disk>, completion: CompletionFn) -> Self {
+        let inner = Arc::new(SchedInner {
+            disk,
+            q: Mutex::new(SchedQueue::default()),
+            cv: Condvar::new(),
+            stats: DiskStats::default(),
+            batch: 1,
+            pending: Mutex::new(HashSet::new()),
+            pending_cv: Condvar::new(),
+        });
+        Self { inner, worker: None, inline: Some(completion) }
     }
 
     /// Enqueue one op. Never blocks; the worker picks it up in elevator
-    /// order within its priority class.
+    /// order within its priority class. In inline mode the op runs (and
+    /// completes) synchronously instead.
     pub fn submit(&self, job: IoJob) {
+        if let Some(completion) = &self.inline {
+            // keep the sched_* counter balance of the worker path:
+            // batches + coalesced == queued, gauge stays zero
+            self.inner.pending.lock().unwrap().insert(job.token);
+            self.inner.stats.sched_queued.fetch_add(1, Ordering::Relaxed);
+            self.inner.stats.sched_batches.fetch_add(1, Ordering::Relaxed);
+            self.inner.stats.max_queue_depth.fetch_max(1, Ordering::Relaxed);
+            self.inner.execute(vec![job], completion);
+            return;
+        }
         self.inner.submit(job);
     }
 
@@ -1032,5 +1069,49 @@ mod tests {
         drop(sched); // must complete everything first
         let got = rx.iter().count();
         assert_eq!(got, 20);
+    }
+
+    #[test]
+    fn inline_scheduler_completes_synchronously_in_submit_order() {
+        let d = Arc::new(MemDisk::new());
+        d.write_at(0, &[9u8; 2048]).unwrap();
+        let (tx, rx) = channel();
+        let sched = IoScheduler::start_inline(
+            d.clone(),
+            Box::new(move |done| {
+                let _ = tx.send(done);
+            }),
+        );
+        sched.submit(IoJob {
+            token: 1,
+            prio: IoPrio::Demand,
+            kind: IoKind::Write { off: 0, data: b"xy".to_vec() },
+        });
+        // the write already landed — no thread, no wait
+        let mut buf = [0u8; 2];
+        d.read_at(0, &mut buf).unwrap();
+        assert_eq!(&buf, b"xy");
+        sched.submit(IoJob {
+            token: 2,
+            prio: IoPrio::Prefetch,
+            kind: IoKind::Read { off: 1024, len: 16 },
+        });
+        sched.submit(IoJob {
+            token: 3,
+            prio: IoPrio::Demand,
+            kind: IoKind::Read { off: 0, len: 2 },
+        });
+        // completions arrived in submit order, priorities notwithstanding
+        let order: Vec<u64> = rx.try_iter().map(|done| done.token).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        // fence/promote are no-ops on an empty pending set
+        sched.fence(2);
+        sched.promote(2);
+        // counter balance matches the worker path's at-rest shape
+        let s = sched.sched_stats();
+        assert_eq!(s.sched_queued, 3);
+        assert_eq!(s.sched_batches + s.sched_coalesced, 3);
+        assert_eq!(s.queue_depth, 0);
+        drop(sched);
     }
 }

@@ -10,7 +10,8 @@
 //!   [`directory`], [`memory`], [`disk`]), the two-phase data
 //!   administration ([`layout`], [`hints`]), the client interface
 //!   ([`client`]), the ViMPIOS MPI-IO layer ([`vimpios`]), operation modes
-//!   ([`modes`]) and the paper's baselines ([`baselines`]).
+//!   ([`modes`]), the paper's baselines ([`baselines`]) and the
+//!   deterministic protocol model checker ([`check`]).
 //! * **L2/L1 (python/compile)** — JAX graphs + Pallas kernels for the
 //!   out-of-core compute workloads, AOT-lowered to HLO text once at build
 //!   time and executed from Rust through a pluggable [`runtime::Backend`]
@@ -33,6 +34,7 @@
 pub mod access;
 pub mod baselines;
 pub mod bench;
+pub mod check;
 pub mod client;
 pub mod directory;
 pub mod disk;

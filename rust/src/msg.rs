@@ -172,6 +172,12 @@ pub enum Request {
     },
     /// Directory/stat inquiry (admin interface).
     Stat,
+    /// Introspection: snapshot the server's in-flight protocol state
+    /// (park table, gates, windows, pending coordinations) as a
+    /// [`ProtoDump`], answered with `Response::DumpAck`. The model
+    /// checker's deadlock oracle injects this at quiescence; a parked
+    /// server still answers it from inside its blocking receive.
+    Dump,
     Shutdown,
 
     // ---- internal protocol (VS <-> VS), never sent by a VI ----
@@ -336,6 +342,120 @@ pub struct ServerStats {
     pub collective_windows: u64,
 }
 
+impl ServerStats {
+    /// Counter-balance invariants that hold at every instant, not just
+    /// at rest — the model checker asserts them after every delivery
+    /// and the integration tests after every scenario. Returns the
+    /// first violated relation as a message.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.prefetch_hits + self.wasted_prefetch > self.prefetch_installed {
+            return Err(format!(
+                "prefetch balance: hits {} + wasted {} > installed {}",
+                self.prefetch_hits, self.wasted_prefetch, self.prefetch_installed
+            ));
+        }
+        if self.coalesced_runs > self.list_extents {
+            return Err(format!(
+                "list aggregation: coalesced_runs {} > list_extents {} \
+                 (merging must never amplify)",
+                self.coalesced_runs, self.list_extents
+            ));
+        }
+        if self.io_resumed > self.io_parked {
+            return Err(format!(
+                "continuation balance: io_resumed {} > io_parked {}",
+                self.io_resumed, self.io_parked
+            ));
+        }
+        Ok(())
+    }
+
+    /// The equality variant of the prefetch balance, valid once no
+    /// prefetched page is resident (caches dropped/empty): every
+    /// installed page has been either used or wasted.
+    pub fn check_settled(&self) -> Result<(), String> {
+        self.check_invariants()?;
+        if self.prefetch_hits + self.wasted_prefetch != self.prefetch_installed {
+            return Err(format!(
+                "settled prefetch balance: hits {} + wasted {} != installed {}",
+                self.prefetch_hits, self.wasted_prefetch, self.prefetch_installed
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot of one server's in-flight protocol state, the payload of
+/// `Response::DumpAck` (see [`Request::Dump`]). The entries are
+/// human-readable one-liners; [`ProtoDump::is_quiet`] is the deadlock
+/// oracle's "nothing here can make progress on its own" test — a
+/// quiescent world where some dump is *not* quiet is a protocol hang.
+#[derive(Debug, Clone, Default)]
+pub struct ProtoDump {
+    pub rank: u32,
+    /// Ops parked on disk completions (the continuation park table).
+    pub parked: Vec<String>,
+    /// Per-(client, file) FIFO gates with an op in flight or queued.
+    pub gates: Vec<String>,
+    /// Collective aggregation windows holding pending arrivals.
+    pub windows: Vec<String>,
+    /// Pending internal coordinations (sync barriers, reorg waves,
+    /// collective write fan-outs).
+    pub pending: Vec<String>,
+    /// Open reorg windows (participant state + coordinated files).
+    pub reorg: Vec<String>,
+    /// In-flight write-behind elevator jobs.
+    pub wb_inflight: usize,
+    /// Barrier ops deferred on write-behind quiescence.
+    pub wb_waiters: usize,
+    /// Page fills in flight.
+    pub fills: usize,
+    /// Cross-server flushes deferred on busy clients.
+    pub pending_flushes: usize,
+}
+
+impl ProtoDump {
+    /// True when this server holds no parked/deferred work at all.
+    pub fn is_quiet(&self) -> bool {
+        self.parked.is_empty()
+            && self.gates.is_empty()
+            && self.windows.is_empty()
+            && self.pending.is_empty()
+            && self.reorg.is_empty()
+            && self.wb_inflight == 0
+            && self.wb_waiters == 0
+            && self.fills == 0
+            && self.pending_flushes == 0
+    }
+}
+
+impl std::fmt::Display for ProtoDump {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "server rank {} ({}):",
+            self.rank,
+            if self.is_quiet() { "quiet" } else { "BLOCKED WORK" }
+        )?;
+        for (label, items) in [
+            ("parked", &self.parked),
+            ("gates", &self.gates),
+            ("windows", &self.windows),
+            ("pending", &self.pending),
+            ("reorg", &self.reorg),
+        ] {
+            for it in items {
+                writeln!(f, "  {label}: {it}")?;
+            }
+        }
+        writeln!(
+            f,
+            "  wb_inflight={} wb_waiters={} fills={} pending_flushes={}",
+            self.wb_inflight, self.wb_waiters, self.fills, self.pending_flushes
+        )
+    }
+}
+
 /// Response bodies (ACK payloads).
 #[derive(Debug, Clone)]
 pub enum Response {
@@ -371,6 +491,8 @@ pub enum Response {
     /// crossed servers and reorg DI messages (control + data) it took.
     Redistributed { bytes_moved: u64, messages: u64 },
     Stats(Box<ServerStats>),
+    /// `Request::Dump` answer: the server's protocol-state snapshot.
+    DumpAck(Box<ProtoDump>),
     /// Request failed; `Vipios_IOState` surfaces this.
     Error { msg: String },
 }
@@ -400,6 +522,11 @@ pub enum Body {
     Resp(Response),
     /// Disk-completion event (self-addressed; see [`IoEvent`]).
     Io(IoEvent),
+    /// Virtual-time sentinel: a [`SchedHook`] scheduler pushes this to
+    /// complete a parked [`Endpoint::recv_timeout`] as if the wall-clock
+    /// wait expired. Hooked receives consume it (mapped to a timeout
+    /// error, never surfaced as a message); unhooked code never sees it.
+    Timeout,
 }
 
 /// A message: the paper's header (sender, client, request id, class) plus
@@ -437,11 +564,32 @@ pub enum Role {
     Client,
 }
 
+/// Scheduler interposition seam (the model checker; DESIGN.md §4.5).
+/// Installed on a [`World`], a hook sees every send before the mpsc push
+/// and every blocking receive's park/wake transition, which lets a
+/// deterministic scheduler capture in-flight messages and deliver them in
+/// a seed-chosen order via [`World::deliver`]. Worlds without a hook take
+/// the direct path unchanged.
+pub trait SchedHook: Send + Sync {
+    /// `msg` is about to be pushed into `dst`'s mailbox (the destination
+    /// is known to be alive). Return `None` to capture the message — the
+    /// hook owns its delivery from here — or `Some(msg)` to pass it
+    /// through unchanged.
+    fn on_send(&self, dst: Rank, msg: Msg) -> Option<Msg>;
+    /// `rank` is about to block on its mailbox. `can_timeout` marks a
+    /// bounded wait ([`Endpoint::recv_timeout`]), which the hook may
+    /// complete with a [`Body::Timeout`] sentinel instead of a message.
+    fn on_park(&self, rank: Rank, can_timeout: bool);
+    /// `rank` returned from a blocking receive.
+    fn on_wake(&self, rank: Rank);
+}
+
 struct WorldInner {
     next_rank: u32,
     mailboxes: HashMap<Rank, Sender<Msg>>,
     roles: HashMap<Rank, Role>,
     servers: Vec<Rank>,
+    hook: Option<Arc<dyn SchedHook>>,
 }
 
 /// The process universe: rank allocation + mailbox registry. Cheap to
@@ -466,6 +614,7 @@ impl World {
                 mailboxes: HashMap::new(),
                 roles: HashMap::new(),
                 servers: Vec::new(),
+                hook: None,
             })),
         }
     }
@@ -494,6 +643,43 @@ impl World {
     }
 
     pub fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
+        let (tx, hook) = {
+            let w = self.inner.lock().unwrap();
+            (w.mailboxes.get(&dst).cloned(), w.hook.clone())
+        };
+        // dead-rank detection stays ahead of capture, so failure
+        // injection (`leave`) keeps its error semantics under a hook
+        let Some(tx) = tx else { return Err(SendError::NoSuchRank(dst)) };
+        let msg = match hook {
+            Some(h) => match h.on_send(dst, msg) {
+                None => return Ok(()),
+                Some(m) => m,
+            },
+            None => msg,
+        };
+        tx.send(msg).map_err(|_| SendError::NoSuchRank(dst))
+    }
+
+    /// Install a scheduler hook (model checking); every endpoint of this
+    /// world is affected from its next send/receive on.
+    pub fn install_hook(&self, hook: Arc<dyn SchedHook>) {
+        self.inner.lock().unwrap().hook = Some(hook);
+    }
+
+    /// Remove the hook: sends and receives take the direct path again
+    /// (checker teardown — anything still captured is the hook's to
+    /// deliver or drop).
+    pub fn clear_hook(&self) {
+        self.inner.lock().unwrap().hook = None;
+    }
+
+    fn hook(&self) -> Option<Arc<dyn SchedHook>> {
+        self.inner.lock().unwrap().hook.clone()
+    }
+
+    /// Push a message straight into `dst`'s mailbox, bypassing any hook —
+    /// the delivery half of a capturing scheduler.
+    pub fn deliver(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
         let tx = {
             let w = self.inner.lock().unwrap();
             w.mailboxes.get(&dst).cloned()
@@ -537,15 +723,48 @@ pub struct Endpoint {
 impl Endpoint {
     /// Blocking receive.
     pub fn recv(&self) -> Option<Msg> {
-        self.rx.recv().ok()
+        match self.world.hook() {
+            None => self.rx.recv().ok(),
+            Some(h) => loop {
+                h.on_park(self.rank, false);
+                let r = self.rx.recv();
+                h.on_wake(self.rank);
+                match r {
+                    // a stray virtual-timeout sentinel is not a message
+                    Ok(Msg { body: Body::Timeout, .. }) => continue,
+                    Ok(m) => return Some(m),
+                    Err(_) => return None,
+                }
+            },
+        }
     }
 
     pub fn recv_timeout(&self, d: Duration) -> Result<Msg, RecvTimeoutError> {
-        self.rx.recv_timeout(d)
+        match self.world.hook() {
+            None => self.rx.recv_timeout(d),
+            Some(h) => {
+                // virtual time: the hook decides when the wait expires
+                // (a Timeout sentinel); the wall-clock duration is
+                // ignored so schedules replay independent of host speed
+                h.on_park(self.rank, true);
+                let r = self.rx.recv();
+                h.on_wake(self.rank);
+                match r {
+                    Ok(Msg { body: Body::Timeout, .. }) => Err(RecvTimeoutError::Timeout),
+                    Ok(m) => Ok(m),
+                    Err(_) => Err(RecvTimeoutError::Disconnected),
+                }
+            }
+        }
     }
 
     pub fn try_recv(&self) -> Option<Msg> {
-        self.rx.try_recv().ok()
+        loop {
+            match self.rx.try_recv().ok() {
+                Some(Msg { body: Body::Timeout, .. }) => continue,
+                other => return other,
+            }
+        }
     }
 
     pub fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
@@ -650,5 +869,138 @@ mod tests {
         let s = w.join(Role::Server);
         let r = s.recv_timeout(Duration::from_millis(10));
         assert!(r.is_err());
+    }
+
+    /// Captures everything addressed to tracked ranks; no park tracking.
+    struct CaptureHook {
+        tracked: Vec<Rank>,
+        captured: Mutex<Vec<(Rank, Msg)>>,
+    }
+
+    impl SchedHook for CaptureHook {
+        fn on_send(&self, dst: Rank, msg: Msg) -> Option<Msg> {
+            if self.tracked.contains(&dst) {
+                self.captured.lock().unwrap().push((dst, msg));
+                None
+            } else {
+                Some(msg)
+            }
+        }
+        fn on_park(&self, _rank: Rank, _can_timeout: bool) {}
+        fn on_wake(&self, _rank: Rank) {}
+    }
+
+    #[test]
+    fn hook_captures_and_deliver_bypasses() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c = w.join(Role::Client);
+        let hook = Arc::new(CaptureHook {
+            tracked: vec![s.rank],
+            captured: Mutex::new(Vec::new()),
+        });
+        w.install_hook(hook.clone());
+        // send to a tracked rank is captured, not delivered
+        c.send(s.rank, req_msg(c.rank, MsgClass::ER, Request::Stat)).unwrap();
+        assert!(s.try_recv().is_none());
+        // send to an untracked rank passes straight through
+        w.send(c.rank, req_msg(s.rank, MsgClass::ACK, Request::Stat)).unwrap();
+        assert!(c.try_recv().is_some());
+        // the captured message replays through deliver()
+        let (dst, msg) = hook.captured.lock().unwrap().pop().unwrap();
+        w.deliver(dst, msg).unwrap();
+        let got = s.try_recv().unwrap();
+        assert_eq!(got.src, c.rank);
+        // dead-rank errors come before capture
+        let dead = {
+            let tmp = w.join(Role::Client);
+            tmp.rank
+        };
+        assert!(matches!(
+            c.send(dead, req_msg(c.rank, MsgClass::ER, Request::Stat)),
+            Err(SendError::NoSuchRank(_))
+        ));
+        assert!(hook.captured.lock().unwrap().is_empty());
+        // after clearing the hook, sends go direct again
+        w.clear_hook();
+        c.send(s.rank, req_msg(c.rank, MsgClass::ER, Request::Stat)).unwrap();
+        assert!(s.try_recv().is_some());
+    }
+
+    #[test]
+    fn hooked_recv_timeout_completes_on_sentinel() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let hook = Arc::new(CaptureHook { tracked: vec![], captured: Mutex::new(Vec::new()) });
+        w.install_hook(hook);
+        w.deliver(
+            s.rank,
+            Msg {
+                src: s.rank,
+                client: s.rank,
+                req_id: 0,
+                class: MsgClass::ACK,
+                body: Body::Timeout,
+            },
+        )
+        .unwrap();
+        // the sentinel resolves the bounded wait as a timeout, and the
+        // wall-clock duration is irrelevant (hour-long bound, instant
+        // return)
+        let r = s.recv_timeout(Duration::from_secs(3600));
+        assert!(matches!(r, Err(RecvTimeoutError::Timeout)));
+    }
+
+    #[test]
+    fn plain_recv_skips_sentinels() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c = w.join(Role::Client);
+        let hook = Arc::new(CaptureHook { tracked: vec![], captured: Mutex::new(Vec::new()) });
+        w.install_hook(hook);
+        let sentinel = Msg {
+            src: s.rank,
+            client: s.rank,
+            req_id: 0,
+            class: MsgClass::ACK,
+            body: Body::Timeout,
+        };
+        w.deliver(s.rank, sentinel.clone()).unwrap();
+        w.deliver(s.rank, req_msg(c.rank, MsgClass::ER, Request::Stat)).unwrap();
+        let m = s.recv().unwrap();
+        assert!(matches!(m.body, Body::Req(Request::Stat)));
+        // try_recv also skips sentinels
+        w.deliver(s.rank, sentinel).unwrap();
+        assert!(s.try_recv().is_none());
+    }
+
+    #[test]
+    fn stats_invariants_catch_imbalance() {
+        let mut st = ServerStats::default();
+        assert!(st.check_invariants().is_ok());
+        st.prefetch_installed = 5;
+        st.prefetch_hits = 3;
+        st.wasted_prefetch = 1;
+        assert!(st.check_invariants().is_ok());
+        assert!(st.check_settled().is_err()); // one page still resident
+        st.wasted_prefetch = 2;
+        assert!(st.check_settled().is_ok());
+        st.prefetch_hits = 4;
+        assert!(st.check_invariants().is_err());
+        let mut st = ServerStats { list_extents: 2, coalesced_runs: 3, ..Default::default() };
+        assert!(st.check_invariants().is_err());
+        st.coalesced_runs = 2;
+        assert!(st.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn proto_dump_quiet_logic() {
+        let mut d = ProtoDump { rank: 3, ..Default::default() };
+        assert!(d.is_quiet());
+        d.parked.push("req=1".into());
+        assert!(!d.is_quiet());
+        let text = format!("{d}");
+        assert!(text.contains("BLOCKED WORK"));
+        assert!(text.contains("parked: req=1"));
     }
 }

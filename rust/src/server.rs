@@ -47,8 +47,8 @@ use crate::memory::{BufferCache, CacheConfig, Prefetcher, WriteBehind};
 use crate::pattern::Detector;
 use crate::reorg::{ship_plan, SHIP_BATCH, SHIP_WINDOW};
 use crate::msg::{
-    Body, Collective, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode, Rank,
-    Request, Response, ServerStats, View,
+    Body, Collective, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode,
+    ProtoDump, Rank, Request, Response, ServerStats, View,
 };
 
 /// What backs a server's disks.
@@ -94,6 +94,17 @@ pub struct ServerConfig {
     /// read bytes plus buffered write payload) that trips an early
     /// flush, so a huge collective cannot hold the server's memory.
     pub collective_bytes: u64,
+    /// Model-checker mode ([`crate::check`]): disk completions execute
+    /// inline at submit (deterministic [`IoScheduler`] mode), protocol
+    /// invariants self-check after every message, and window straggler
+    /// deadlines are driven by the checker's virtual-time sentinel
+    /// instead of the wall clock.
+    pub model: bool,
+    /// Fault injection for the checker's own regression test: drop the
+    /// write-behind quiesce resumption, so a sync or reorg freeze that
+    /// deferred on in-flight write-behind jobs never resumes — the
+    /// deadlock detector must flag it.
+    pub fault_drop_wb_resume: bool,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +120,8 @@ impl Default for ServerConfig {
             write_behind: 2 * 1024 * 1024,
             collective_wait: Duration::from_millis(20),
             collective_bytes: 8 * 1024 * 1024,
+            model: false,
+            fault_drop_wb_resume: false,
         }
     }
 }
@@ -403,6 +416,9 @@ pub struct Server {
     next_file: u64,
     /// Round-robin buddy assignment state (only used on the CC).
     next_buddy: usize,
+    /// Highest layout epoch observed per file — the model-mode
+    /// monotonicity oracle ([`Self::self_check`]).
+    epoch_seen: HashMap<FileId, u64>,
     stats: ServerStats,
     /// Shared shutdown flag for pools.
     pub running: Arc<AtomicU64>,
@@ -438,9 +454,7 @@ impl Server {
                 .map(|(i, d)| {
                     let world = ep.world.clone();
                     let me = ep.rank;
-                    IoScheduler::start(
-                        d.clone(),
-                        cfg.queue_depth,
+                    let completion: Box<dyn Fn(crate::disk::IoDone) + Send + Sync> =
                         Box::new(move |done| {
                             let _ = world.send(
                                 me,
@@ -458,8 +472,15 @@ impl Server {
                                     }),
                                 },
                             );
-                        }),
-                    )
+                        });
+                    if cfg.model {
+                        // deterministic mode: the disk op executes inline
+                        // at submit and only the completion *delivery*
+                        // order is explored by the checker
+                        IoScheduler::start_inline(d.clone(), completion)
+                    } else {
+                        IoScheduler::start(d.clone(), cfg.queue_depth, completion)
+                    }
                 })
                 .collect()
         } else {
@@ -513,6 +534,7 @@ impl Server {
             next_internal: 0,
             next_file: 0,
             next_buddy: 0,
+            epoch_seen: HashMap::new(),
             stats: ServerStats::default(),
             running: Arc::new(AtomicU64::new(1)),
         })
@@ -524,21 +546,41 @@ impl Server {
     /// forever (DESIGN.md §4.4).
     pub fn run(mut self) {
         loop {
-            let msg = match self.next_window_deadline() {
-                None => self.ep.recv(),
-                Some(at) => {
-                    let now = Instant::now();
-                    if at <= now {
-                        self.flush_due_windows();
-                        continue;
-                    }
-                    match self.ep.recv_timeout(at - now) {
+            let msg = if self.cfg.model {
+                // Model mode: never consult the wall clock — schedules
+                // must replay identically regardless of host speed. With
+                // windows pending we arm a timeout-capable receive; the
+                // checker completes it with a virtual-time sentinel only
+                // at quiescence, which stands in for "the straggler
+                // deadline passed" and force-flushes whatever arrived.
+                match self.next_window_deadline() {
+                    None => self.ep.recv(),
+                    Some(_) => match self.ep.recv_timeout(Duration::from_millis(1)) {
                         Ok(m) => Some(m),
                         Err(RecvTimeoutError::Timeout) => {
-                            self.flush_due_windows();
+                            self.flush_windows_now();
                             continue;
                         }
                         Err(RecvTimeoutError::Disconnected) => None,
+                    },
+                }
+            } else {
+                match self.next_window_deadline() {
+                    None => self.ep.recv(),
+                    Some(at) => {
+                        let now = Instant::now();
+                        if at <= now {
+                            self.flush_due_windows();
+                            continue;
+                        }
+                        match self.ep.recv_timeout(at - now) {
+                            Ok(m) => Some(m),
+                            Err(RecvTimeoutError::Timeout) => {
+                                self.flush_due_windows();
+                                continue;
+                            }
+                            Err(RecvTimeoutError::Disconnected) => None,
+                        }
                     }
                 }
             };
@@ -1808,6 +1850,12 @@ impl Server {
         if !self.wb_inflight.is_empty() {
             return;
         }
+        if self.cfg.fault_drop_wb_resume {
+            // injected fault ([`ServerConfig::fault_drop_wb_resume`]):
+            // the deferred barriers stay parked forever, and the model
+            // checker's deadlock oracle must flag the hang
+            return;
+        }
         let waiters = std::mem::take(&mut self.wb_waiters);
         for w in waiters {
             match w {
@@ -1826,6 +1874,187 @@ impl Server {
         }
     }
 
+    // ----------------------------------------- model-checker support
+
+    /// Snapshot of in-flight protocol state ([`Request::Dump`]): what the
+    /// model checker's deadlock oracle prints when the world goes quiet
+    /// with clients still waiting. Every list is sorted so dumps are
+    /// stable across replays of a seed.
+    fn proto_dump(&self) -> ProtoDump {
+        let mut d = ProtoDump { rank: self.ep.rank.0, ..ProtoDump::default() };
+        d.parked = self
+            .parked
+            .iter()
+            .map(|(tok, p)| {
+                let op = match &p.op {
+                    ParkedOp::Read { .. } => "read",
+                    ParkedOp::Write { .. } => "write",
+                    ParkedOp::ReadScatter { .. } => "scatter",
+                };
+                format!(
+                    "park {tok}: {op} client {} req {} file {} ({} fills left)",
+                    p.client.0, p.req_id, p.file.0, p.fills_left
+                )
+            })
+            .collect();
+        d.gates = self
+            .gate
+            .iter()
+            .filter(|(_, g)| g.inflight || !g.queue.is_empty())
+            .map(|(&(c, f), g)| {
+                format!(
+                    "gate (client {}, file {}): inflight={} queued={}",
+                    c.0,
+                    f.0,
+                    g.inflight,
+                    g.queue.len()
+                )
+            })
+            .collect();
+        d.windows = self
+            .coll
+            .iter()
+            .map(|(&(f, g, e), w)| {
+                format!(
+                    "window (file {}, group {g}, epoch {e}): {} reads, {} writes, served {}/{}",
+                    f.0,
+                    w.reads.len(),
+                    w.writes.len(),
+                    w.served,
+                    w.nprocs
+                )
+            })
+            .collect();
+        d.pending = self
+            .pending
+            .iter()
+            .map(|(id, p)| {
+                let what = match p {
+                    Pending::OpenViaSc { .. } => "open-via-sc".to_string(),
+                    Pending::MetaWait { .. } => "meta-wait".to_string(),
+                    Pending::SyncWait { acks_left, .. } => {
+                        format!("sync-wait ({acks_left} acks left)")
+                    }
+                    Pending::ReorgFreezeWait { file, acks_left } => {
+                        format!("reorg-freeze-wait file {} ({acks_left} acks left)", file.0)
+                    }
+                    Pending::ReorgShipWait { file, acks_left } => {
+                        format!("reorg-ship-wait file {} ({acks_left} acks left)", file.0)
+                    }
+                    Pending::ReorgCommitWait { file, acks_left } => {
+                        format!("reorg-commit-wait file {} ({acks_left} acks left)", file.0)
+                    }
+                    Pending::ReorgDataWait { file, inflight } => {
+                        format!("reorg-data-wait file {} ({inflight} in flight)", file.0)
+                    }
+                    Pending::CollWriteWait { acks_left, .. } => {
+                        format!("coll-write-wait ({acks_left} acks left)")
+                    }
+                };
+                format!("pending {id}: {what}")
+            })
+            .collect();
+        d.reorg = self
+            .reorg_co
+            .keys()
+            .map(|f| format!("coordinator file {}", f.0))
+            .chain(self.reorg_local.iter().map(|(f, st)| {
+                format!(
+                    "participant file {}: {} deferred, pending_ship={}, pending_commit={}",
+                    f.0,
+                    st.deferred.len(),
+                    st.pending_ship.is_some(),
+                    st.pending_commit.is_some()
+                )
+            }))
+            .collect();
+        for v in [&mut d.parked, &mut d.gates, &mut d.windows, &mut d.pending, &mut d.reorg] {
+            v.sort_unstable();
+        }
+        d.wb_inflight = self.wb_inflight.len();
+        d.wb_waiters = self.wb_waiters.len();
+        d.fills = self.fills.len();
+        d.pending_flushes = self.pending_flushes.len();
+        d
+    }
+
+    /// Model-mode invariant sweep, run after every message delivery.
+    /// Violations panic: the checker's server-thread wrapper catches the
+    /// panic and reports it together with the schedule seed.
+    fn self_check(&mut self) {
+        let me = self.ep.rank.0;
+        if let Err(e) = self.stats.check_invariants() {
+            panic!("server {me}: {e}");
+        }
+        let resident = self.cache.prefetched_resident();
+        if let Err(e) = self.cache.stats().check_invariants(resident) {
+            panic!("server {me}: {e}");
+        }
+        // fill index and fill_by_page must describe the same set
+        for (&(disk, page), tok) in &self.fill_by_page {
+            match self.fills.get(tok) {
+                Some(f) if f.disk_idx == disk && f.page_no == page => {}
+                _ => panic!(
+                    "server {me}: fill_by_page ({disk},{page}) -> token {tok} dangles"
+                ),
+            }
+        }
+        // every parked continuation's fills_left must equal the number of
+        // live fills naming it — more means a double resume is coming,
+        // fewer is a lost wakeup (the park would sleep forever)
+        let mut waits: HashMap<u64, usize> = HashMap::new();
+        for f in self.fills.values() {
+            for w in &f.waiters {
+                *waits.entry(*w).or_insert(0) += 1;
+            }
+        }
+        for (tok, p) in &self.parked {
+            let n = waits.get(tok).copied().unwrap_or(0);
+            if n != p.fills_left {
+                panic!(
+                    "server {me}: park {tok} has {n} fills naming it but fills_left={}",
+                    p.fills_left
+                );
+            }
+        }
+        // write-behind bookkeeping: page holds exist iff covering jobs do
+        if self.wb_inflight.is_empty() && !self.wb_pages.is_empty() {
+            panic!("server {me}: wb_pages holds without in-flight wb jobs");
+        }
+        if self.wb_pages.values().any(|&c| c == 0) {
+            panic!("server {me}: zero-count wb page hold");
+        }
+        if !self.wb_deferred.is_empty()
+            && self.wb_deferred.keys().any(|k| !self.wb_pages.contains_key(k))
+        {
+            panic!("server {me}: deferred fill without a covering wb page hold");
+        }
+        // scheduler gauges: u64 counters gone "negative" wrap huge
+        for sched in &self.io {
+            let ss = sched.sched_stats();
+            if ss.sched_batches + ss.sched_coalesced > ss.sched_queued {
+                panic!(
+                    "server {me}: sched dispatched {} + coalesced {} > queued {}",
+                    ss.sched_batches, ss.sched_coalesced, ss.sched_queued
+                );
+            }
+            if ss.max_queue_depth > 1 << 60 {
+                panic!("server {me}: sched queue-depth gauge wrapped");
+            }
+        }
+        // directory epochs only ever move forward
+        for (&id, e) in self.dir.iter() {
+            let seen = self.epoch_seen.entry(id).or_insert(0);
+            if e.meta.epoch < *seen {
+                panic!(
+                    "server {me}: file {} epoch moved backwards {} -> {}",
+                    id.0, *seen, e.meta.epoch
+                );
+            }
+            *seen = e.meta.epoch;
+        }
+    }
+
     // ------------------------------------------------- request entry
 
     /// Handle one message; returns `false` on shutdown.
@@ -1837,7 +2066,7 @@ impl Server {
             MsgClass::BI => self.stats.broadcasts_rx += 1,
             MsgClass::ACK => {}
         }
-        match body {
+        let cont = match body {
             Body::Req(req) => self.handle_req(src, client, req_id, class, req),
             Body::Resp(resp) => {
                 self.handle_resp(src, req_id, resp);
@@ -1847,7 +2076,18 @@ impl Server {
                 self.handle_io(ev);
                 true
             }
+            // virtual-time sentinel: the event loop's receive paths
+            // normally consume these; one reaching handle() (a harness
+            // driving it directly) means "straggler deadline passed"
+            Body::Timeout => {
+                self.flush_windows_now();
+                true
+            }
+        };
+        if self.cfg.model {
+            self.self_check();
         }
+        cont
     }
 
     fn handle_req(
@@ -2169,6 +2409,10 @@ impl Server {
                 }
                 s.disk_bytes = self.disks.iter().map(|d| d.len()).sum();
                 self.ack(src, client, req_id, Response::Stats(Box::new(s)));
+            }
+            Request::Dump => {
+                let dump = self.proto_dump();
+                self.ack(src, client, req_id, Response::DumpAck(Box::new(dump)));
             }
             Request::Shutdown => {
                 self.ack(src, client, req_id, Response::Synced);
@@ -2759,7 +3003,7 @@ impl Server {
     /// directly (library mode, tests) can pump the clock.
     pub fn flush_due_windows(&mut self) {
         let now = Instant::now();
-        let due: Vec<(FileId, u64, u64)> = self
+        let mut due: Vec<(FileId, u64, u64)> = self
             .coll
             .iter()
             .filter(|(_, w)| {
@@ -2767,6 +3011,9 @@ impl Server {
             })
             .map(|(&k, _)| k)
             .collect();
+        // HashMap iteration order is nondeterministic; flush order decides
+        // message order, so model-mode replays need a fixed order
+        due.sort_unstable();
         for k in due {
             self.flush_window(k);
         }
@@ -2787,6 +3034,25 @@ impl Server {
         // rather than waiting forever on a group that never completes
         self.coll
             .retain(|_, w| !w.reads.is_empty() || !w.writes.is_empty() || w.deadline > now);
+    }
+
+    /// Model mode: the checker's virtual-time sentinel stands in for the
+    /// straggler deadline — flush every window holding pending arrivals
+    /// regardless of its wall-clock deadline (virtual time only advances
+    /// at quiescence, when every straggler that will ever arrive has),
+    /// then retire quiet windows.
+    fn flush_windows_now(&mut self) {
+        let mut due: Vec<(FileId, u64, u64)> = self
+            .coll
+            .iter()
+            .filter(|(_, w)| !w.reads.is_empty() || !w.writes.is_empty())
+            .map(|(&k, _)| k)
+            .collect();
+        due.sort_unstable();
+        for k in due {
+            self.flush_window(k);
+        }
+        self.coll.retain(|_, w| !w.reads.is_empty() || !w.writes.is_empty());
     }
 
     /// Service one window's pending arrivals. Writes inside an open
@@ -2824,7 +3090,7 @@ impl Server {
     /// Retry window flushes that a now-finished reorg had parked.
     fn flush_unblocked_windows(&mut self, file: FileId) {
         let now = Instant::now();
-        let keys: Vec<(FileId, u64, u64)> = self
+        let mut keys: Vec<(FileId, u64, u64)> = self
             .coll
             .iter()
             .filter(|(k, w)| {
@@ -2837,6 +3103,7 @@ impl Server {
             })
             .map(|(&k, _)| k)
             .collect();
+        keys.sort_unstable();
         for k in keys {
             self.flush_window(k);
         }
@@ -2845,8 +3112,9 @@ impl Server {
     /// A removed file's windows can never complete: error the pending
     /// participants out instead of hanging them.
     fn abort_windows(&mut self, file: FileId, msg: &str) {
-        let keys: Vec<(FileId, u64, u64)> =
+        let mut keys: Vec<(FileId, u64, u64)> =
             self.coll.keys().filter(|k| k.0 == file).copied().collect();
+        keys.sort_unstable();
         for k in keys {
             if let Some(w) = self.coll.remove(&k) {
                 for (client, req_id, _) in w.reads {

@@ -40,6 +40,9 @@ fn sweep(c: &mut Client, p: &ServerPool) -> Sweep {
     let mut out = Sweep::default();
     for &s in p.server_ranks() {
         let st = c.stats_of(s).unwrap();
+        // centralized balance relations (coalesced_runs <= list_extents
+        // among them) must hold on every snapshot this suite takes
+        st.check_invariants().unwrap();
         out.msgs += st.ext_requests + st.int_requests;
         out.reqs += st.list_requests;
         out.extents += st.list_extents;

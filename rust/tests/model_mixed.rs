@@ -1,0 +1,114 @@
+//! The acceptance battery (DESIGN.md §4.5): ≥500 seeded interleavings of
+//! the full protocol mix — two clients, write-behind staging over
+//! budget, a collective aggregation window, and a concurrent
+//! `Redistribute` — on two servers with a cache small enough that
+//! requests park as continuations. Every schedule must terminate
+//! (deadlock oracle), keep every per-message invariant (model-mode
+//! server self-checks), and preserve each client's read-your-writes
+//! (the sequential oracle each scenario asserts against its own bytes).
+
+use vipios::check::{explore, ModelCfg, Scenario};
+use vipios::client::Client;
+use vipios::hints::{Hint, PrefetchHint};
+use vipios::layout::Distribution;
+use vipios::msg::{Collective, OpenMode};
+
+const HALF: u64 = 8 * 1024;
+
+/// One client's share of the mixed scenario. Client 0 additionally
+/// drives a physical redistribution right after the collective — racing
+/// the reorg freeze/ship/commit interlock against client 1's traffic.
+fn mixed_client(i: u64) -> Scenario {
+    Box::new(move |c: &mut Client| {
+        let h = c.open("mix.dat", OpenMode::rdwr_create())?;
+        let file = c.file_id(h)?;
+        c.hint(Hint::Prefetch(PrefetchHint::DelayedWrite { file, enable: true }))?;
+        let base = i * HALF;
+        let pat = (0x21 * (i + 1)) as u8;
+        // staged write-behind runs; the budget is below HALF, so the
+        // async drain (elevator write jobs + quiesce barrier) triggers
+        for k in 0..4u64 {
+            c.write_at(h, base + k * (HALF / 4), &[pat; (HALF / 4) as usize])?;
+        }
+        // collective read window: both clients tag the same
+        // (group, epoch), the home server merges and scatters; if one
+        // client is still busy the virtual-time straggler rescue flushes
+        let coll = Collective { group: 3, epoch: 0, nprocs: 2 };
+        let op = c.iread_at_collective(h, base, HALF, coll)?;
+        let vipios::client::OpResult::Read(_) = c.wait(op)? else {
+            anyhow::bail!("collective read: unexpected op result");
+        };
+        if i == 0 {
+            // race the redistribution against the partner's traffic
+            c.redistribute(h, Distribution::Cyclic { chunk: 2048 })?;
+        }
+        // read-your-writes through gates, write-behind, the collective
+        // window and (for schedules where the reorg won) the new layout
+        let mut buf = vec![0u8; HALF as usize];
+        let n = c.read_at(h, base, &mut buf)?;
+        anyhow::ensure!(
+            n == HALF as usize && buf.iter().all(|&b| b == pat),
+            "client {i}: read-your-writes violated after the mix"
+        );
+        c.sync(h)?;
+        c.close(h)
+    })
+}
+
+/// ≥500 seeds of the full mix. Runs in well under the 5-minute CI
+/// budget: the world is tiny (2 servers, 2 clients, 16 KiB of data) and
+/// each schedule is a few hundred deliveries.
+#[test]
+fn model_mixed_battery_500_seeds() {
+    let mk = || vec![mixed_client(0), mixed_client(1)];
+    let sum = explore(&ModelCfg::small(0), 1..=500, mk);
+    assert_eq!(sum.runs, 500);
+    sum.assert_clean();
+    // the battery must actually deliver real traffic — a harness bug
+    // that short-circuits runs would pass vacuously otherwise
+    assert!(sum.total_steps > 25_000, "suspiciously few deliveries: {}", sum.total_steps);
+}
+
+/// The same mix with both clients also issuing a *write* collective
+/// (server-side two-phase write fan-out racing the reorg interlock —
+/// the PR-5 "window flush during open reorg" regression surface).
+#[test]
+fn model_mixed_collective_writes_vs_reorg() {
+    let mk = || -> Vec<Scenario> {
+        (0..2u64)
+            .map(|i| -> Scenario {
+                Box::new(move |c: &mut Client| {
+                    let h = c.open("cwr.dat", OpenMode::rdwr_create())?;
+                    let base = i * HALF;
+                    let pat = (0x31 * (i + 1)) as u8;
+                    c.write_at(h, base, &[0u8; HALF as usize])?;
+                    let coll = Collective { group: 5, epoch: 0, nprocs: 2 };
+                    let op = c.iwrite_at_collective(
+                        h,
+                        base,
+                        &vec![pat; HALF as usize],
+                        coll,
+                    )?;
+                    if i == 1 {
+                        // fire the redistribution while the collective
+                        // write window may still be open at the home
+                        c.redistribute(h, Distribution::Cyclic { chunk: 2048 })?;
+                    }
+                    let vipios::client::OpResult::Written(n) = c.wait(op)? else {
+                        anyhow::bail!("collective write: unexpected op result");
+                    };
+                    anyhow::ensure!(n == HALF, "collective write came up short: {n}");
+                    let mut buf = vec![0u8; HALF as usize];
+                    c.read_at(h, base, &mut buf)?;
+                    anyhow::ensure!(
+                        buf.iter().all(|&b| b == pat),
+                        "client {i}: collective write bytes lost in the reorg race"
+                    );
+                    c.sync(h)?;
+                    c.close(h)
+                })
+            })
+            .collect()
+    };
+    explore(&ModelCfg::small(0), 1000..=1100, mk).assert_clean();
+}
