@@ -1043,6 +1043,331 @@ pub fn prefetch_ooc(plan: bool, nb: usize) -> Result<(f64, f64)> {
     ))
 }
 
+// ------------------------------------------------------ deployment rig
+
+/// E12 — real-process deployment bench (DESIGN.md §4.6): spawns
+/// `vipios-server` / `vipios-client` release binaries, one OS process
+/// each, meshed over unix-domain (or TCP) sockets, and merges the
+/// clients' one-line JSON reports into aggregate bandwidth + latency
+/// percentiles. Every read is byte-verified inside the client binary
+/// against a pure function of file offset, so a misrouted frame or a
+/// stale cache page fails the run, not just slows it. Unlike the other
+/// experiments this one needs the deployment binaries built first, so
+/// it runs as `vipios bench deploy` and is not part of `bench all`.
+pub mod deploy {
+    use std::io::{BufRead, BufReader};
+    use std::path::PathBuf;
+    use std::process::{Child, Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    use anyhow::Result;
+
+    use super::print_table;
+    use crate::util::mbps;
+
+    /// Log2-µs histogram shape — must match `vipios-client`.
+    const HIST_BUCKETS: usize = 32;
+
+    /// One client process's parsed report line.
+    struct ClientReport {
+        wrote: u64,
+        read: u64,
+        verify_errors: u64,
+        write_us: Vec<u64>,
+        read_us: Vec<u64>,
+    }
+
+    /// Aggregated outcome of one workload run.
+    pub struct DeployRun {
+        /// `(written + read bytes) / wall clock` across all clients.
+        pub mbps: f64,
+        /// Latency percentiles over every blocking client op (writes
+        /// and reads), from the merged log2 histograms.
+        pub p50_us: u64,
+        pub p95_us: u64,
+        pub p99_us: u64,
+        pub verify_errors: u64,
+    }
+
+    // ---- hand-rolled scanners for the client's one-line JSON --------
+
+    fn num_field(line: &str, key: &str) -> Option<u64> {
+        let pat = format!("\"{key}\":");
+        let at = line.find(&pat)? + pat.len();
+        let rest = &line[at..];
+        let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    }
+
+    fn arr_field(line: &str, key: &str) -> Option<Vec<u64>> {
+        let pat = format!("\"{key}\":[");
+        let at = line.find(&pat)? + pat.len();
+        let rest = &line[at..];
+        let end = rest.find(']')?;
+        rest[..end].split(',').map(|c| c.trim().parse().ok()).collect()
+    }
+
+    fn parse_report(line: &str) -> Result<ClientReport> {
+        let num = |k: &str| {
+            num_field(line, k)
+                .ok_or_else(|| anyhow::anyhow!("field {k:?} missing in client report: {line}"))
+        };
+        let arr = |k: &str| {
+            arr_field(line, k)
+                .ok_or_else(|| anyhow::anyhow!("array {k:?} missing in client report: {line}"))
+        };
+        Ok(ClientReport {
+            wrote: num("wrote")?,
+            read: num("read")?,
+            verify_errors: num("verify_errors")?,
+            write_us: arr("write_us")?,
+            read_us: arr("read_us")?,
+        })
+    }
+
+    /// q-th percentile of a merged log2 histogram, reported as the
+    /// matched bucket's geometric midpoint (`1.5 * 2^i` µs).
+    fn percentile(hist: &[u64], q: f64) -> u64 {
+        let total: u64 = hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in hist.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return (1u64 << i) * 3 / 2;
+            }
+        }
+        (1u64 << (hist.len() - 1)) * 3 / 2
+    }
+
+    /// The deployment binaries live next to whatever binary is running
+    /// (`target/<profile>/`, or one level up from `deps/` for tests).
+    fn bin_path(name: &str) -> Result<PathBuf> {
+        let mut p = std::env::current_exe()?;
+        p.pop();
+        if p.ends_with("deps") {
+            p.pop();
+        }
+        p.push(name);
+        anyhow::ensure!(
+            p.exists(),
+            "{} not found — build the deployment binaries first (`cargo build --release`)",
+            p.display()
+        );
+        Ok(p)
+    }
+
+    /// Which socket flavour this platform's rig uses.
+    pub fn transport_kind() -> &'static str {
+        if cfg!(unix) {
+            "uds"
+        } else {
+            "tcp"
+        }
+    }
+
+    fn wait_or_kill(mut child: Child, what: &str, limit: Duration) -> Result<()> {
+        let start = Instant::now();
+        loop {
+            if let Some(st) = child.try_wait()? {
+                anyhow::ensure!(st.success(), "{what} exited with {st}");
+                return Ok(());
+            }
+            if start.elapsed() >= limit {
+                let _ = child.kill();
+                let _ = child.wait();
+                anyhow::bail!("{what} hung past {limit:?} and was killed");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// One deployment: binary paths, socket addresses, workload sizing.
+    struct Rig {
+        server_bin: PathBuf,
+        client_bin: PathBuf,
+        scratch: PathBuf,
+        /// Comma-joined `--servers` value.
+        addrs: String,
+        nservers: usize,
+        nclients: usize,
+        bytes: u64,
+        req: u64,
+    }
+
+    impl Rig {
+        fn new(nservers: usize, nclients: usize, bytes: u64, req: u64, tag: &str) -> Result<Rig> {
+            let scratch =
+                std::env::temp_dir().join(format!("vipios-deploy-{}-{tag}", std::process::id()));
+            std::fs::create_dir_all(&scratch)?;
+            let addrs: Vec<String> = if cfg!(unix) {
+                (0..nservers).map(|r| format!("uds:{}/vs{r}.sock", scratch.display())).collect()
+            } else {
+                // no ephemeral-port handshake across processes: spread a
+                // pid-derived base to keep parallel runs apart
+                let base = 20000 + (std::process::id() % 20000) as usize;
+                (0..nservers).map(|r| format!("tcp:127.0.0.1:{}", base + r)).collect()
+            };
+            Ok(Rig {
+                server_bin: bin_path("vipios-server")?,
+                client_bin: bin_path("vipios-client")?,
+                scratch,
+                addrs: addrs.join(","),
+                nservers,
+                nclients,
+                bytes,
+                req,
+            })
+        }
+
+        fn spawn_servers(&self) -> Result<Vec<Child>> {
+            let mut servers = Vec::new();
+            for r in 0..self.nservers {
+                let child = Command::new(&self.server_bin)
+                    .args(["--rank", &r.to_string(), "--servers", &self.addrs])
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .map_err(|e| anyhow::anyhow!("spawning server {r}: {e}"))?;
+                servers.push(child);
+            }
+            // startup barrier: every server prints READY once its event
+            // loop is about to serve
+            for (r, child) in servers.iter_mut().enumerate() {
+                let out = child.stdout.take().ok_or_else(|| anyhow::anyhow!("no stdout"))?;
+                let mut line = String::new();
+                BufReader::new(out).read_line(&mut line)?;
+                anyhow::ensure!(
+                    line.starts_with("READY"),
+                    "server {r} failed before READY (got {line:?})"
+                );
+            }
+            Ok(servers)
+        }
+
+        fn client_cmd(&self, id: usize, workload: &str) -> Command {
+            let mut cmd = Command::new(&self.client_bin);
+            cmd.args(["--servers", &self.addrs, "--id", &id.to_string()])
+                .args(["--workload", workload])
+                .args(["--bytes", &self.bytes.to_string(), "--req", &self.req.to_string()]);
+            if workload == "collective" {
+                cmd.args(["--nprocs", &self.nclients.to_string(), "--group", "1"]);
+            }
+            cmd
+        }
+
+        fn run(&self, workload: &str) -> Result<DeployRun> {
+            let mut servers = self.spawn_servers()?;
+            let t0 = Instant::now();
+            let mut clients = Vec::new();
+            for id in 0..self.nclients {
+                let child = self
+                    .client_cmd(id, workload)
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .map_err(|e| anyhow::anyhow!("spawning client {id}: {e}"))?;
+                clients.push(child);
+            }
+            let mut reports = Vec::new();
+            for (id, child) in clients.into_iter().enumerate() {
+                let out = child.wait_with_output()?;
+                anyhow::ensure!(out.status.success(), "client {id} failed ({})", out.status);
+                let text = String::from_utf8_lossy(&out.stdout);
+                let line = text
+                    .lines()
+                    .rev()
+                    .find(|l| l.trim_start().starts_with('{'))
+                    .ok_or_else(|| anyhow::anyhow!("client {id} printed no report"))?;
+                reports.push(parse_report(line)?);
+            }
+            let elapsed = t0.elapsed();
+            // orderly teardown: a bare client asks every server to exit
+            let stopper = self
+                .client_cmd(self.nclients, "none")
+                .arg("--shutdown")
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()?;
+            wait_or_kill(stopper, "shutdown client", Duration::from_secs(30))?;
+            for (r, s) in servers.drain(..).enumerate() {
+                wait_or_kill(s, &format!("server {r}"), Duration::from_secs(30))?;
+            }
+            let mut hist = vec![0u64; HIST_BUCKETS];
+            let mut moved = 0u64;
+            let mut verify = 0u64;
+            for rep in &reports {
+                moved += rep.wrote + rep.read;
+                verify += rep.verify_errors;
+                for (i, &n) in rep.write_us.iter().enumerate().take(HIST_BUCKETS) {
+                    hist[i] += n;
+                }
+                for (i, &n) in rep.read_us.iter().enumerate().take(HIST_BUCKETS) {
+                    hist[i] += n;
+                }
+            }
+            Ok(DeployRun {
+                mbps: mbps(moved, elapsed),
+                p50_us: percentile(&hist, 0.50),
+                p95_us: percentile(&hist, 0.95),
+                p99_us: percentile(&hist, 0.99),
+                verify_errors: verify,
+            })
+        }
+    }
+
+    impl Drop for Rig {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.scratch);
+        }
+    }
+
+    /// Run one workload end to end: N server + M client OS processes.
+    pub fn run_one(
+        workload: &str,
+        nservers: usize,
+        nclients: usize,
+        bytes: u64,
+        req: u64,
+    ) -> Result<DeployRun> {
+        Rig::new(nservers, nclients, bytes, req, workload)?.run(workload)
+    }
+
+    /// E12 table: one row per workload mix, 2 servers x 4 clients.
+    pub fn table(quick: bool) -> Result<()> {
+        let (nservers, nclients) = (2, 4);
+        let mb = 1u64 << 20;
+        let (bytes, req) = if quick { (mb, 64 * 1024) } else { (8 * mb, 64 * 1024) };
+        let mut rows = Vec::new();
+        for wl in ["seq", "strided", "collective"] {
+            let r = run_one(wl, nservers, nclients, bytes, req)?;
+            anyhow::ensure!(
+                r.verify_errors == 0,
+                "E12 {wl}: {} corrupted byte(s) survived the read-back",
+                r.verify_errors
+            );
+            rows.push(vec![
+                wl.to_string(),
+                transport_kind().to_string(),
+                format!("{:.1}", r.mbps),
+                r.p50_us.to_string(),
+                r.p95_us.to_string(),
+                r.p99_us.to_string(),
+                r.verify_errors.to_string(),
+            ]);
+        }
+        print_table(
+            "E12 (§4.6) real-process deployment — 2 servers x 4 clients, socket transport",
+            &["workload", "transport", "MB/s", "p50(us)", "p95(us)", "p99(us)", "verify errors"],
+            &rows,
+        );
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------- table runners
 
 /// Full Chapter-8 table regeneration, shared by `cargo bench`,
@@ -1642,6 +1967,8 @@ pub mod tables {
             "prefetch" => prefetch(quick),
             "collective" => collective(quick),
             "ablation" => ablation(quick),
+            // needs the deployment binaries built, so not part of "all"
+            "deploy" => super::deploy::table(quick),
             "all" => {
                 dedicated(quick)?;
                 nondedicated(quick)?;

@@ -1,0 +1,282 @@
+//! `vipios-client` — one VI (application) process of a socket
+//! deployment.
+//!
+//! ```text
+//! vipios-client --servers ADDR0,ADDR1,... [--id N]
+//!               [--workload seq|strided|collective|none]
+//!               [--bytes N] [--req N] [--nprocs N] [--group N]
+//!               [--shutdown]
+//! ```
+//!
+//! Leases a rank from server 0, runs the workload (write, sync, then a
+//! byte-verified read-back of every written region — the pattern is a
+//! pure function of file offset and seed, so any misrouted or stale
+//! byte is caught), and prints exactly one JSON line to stdout with
+//! byte counts, verify errors and per-op log2-µs latency histograms.
+//! The deployment rig merges those lines into the `BENCH_deploy.json`
+//! percentiles. `--shutdown` asks every server to exit afterwards.
+
+use std::time::{Duration, Instant};
+
+use vipios::client::Client;
+use vipios::msg::{Body, Collective, Msg, MsgClass, OpenMode, Request, Role, Transport, World};
+use vipios::transport::{Addr, SocketTransport};
+
+/// Buckets of `floor(log2(µs))`, clamped to 31 — merged across
+/// processes by the rig, so the shape must stay fixed.
+const HIST_BUCKETS: usize = 32;
+
+struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl Hist {
+    fn new() -> Self {
+        Hist { buckets: [0; HIST_BUCKETS] }
+    }
+
+    fn record(&mut self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let idx = (63 - us.leading_zeros()) as usize;
+        self.buckets[idx.min(HIST_BUCKETS - 1)] += 1;
+    }
+
+    fn json(&self) -> String {
+        let cells: Vec<String> = self.buckets.iter().map(u64::to_string).collect();
+        format!("[{}]", cells.join(","))
+    }
+}
+
+/// The verification pattern: a pure function of (seed, file offset).
+fn pat(seed: u64, off: u64) -> u8 {
+    let x = off
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(seed.wrapping_mul(0xd134_2543_de82_ef95));
+    (x ^ (x >> 29) ^ (x >> 53)) as u8
+}
+
+fn fill(buf: &mut [u8], seed: u64, base: u64) {
+    for (i, b) in buf.iter_mut().enumerate() {
+        *b = pat(seed, base + i as u64);
+    }
+}
+
+fn count_mismatches(buf: &[u8], seed: u64, base: u64) -> u64 {
+    let mut bad = 0;
+    for (i, &b) in buf.iter().enumerate() {
+        if b != pat(seed, base + i as u64) {
+            bad += 1;
+        }
+    }
+    bad
+}
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn flag_u64(args: &[String], name: &str, default: u64) -> vipios::Result<u64> {
+    match flag(args, name) {
+        Some(v) => Ok(v.parse()?),
+        None => Ok(default),
+    }
+}
+
+struct Tally {
+    wrote: u64,
+    read: u64,
+    verify_errors: u64,
+    write_us: Hist,
+    read_us: Hist,
+}
+
+impl Tally {
+    fn new() -> Self {
+        Tally { wrote: 0, read: 0, verify_errors: 0, write_us: Hist::new(), read_us: Hist::new() }
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("vipios-client: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> vipios::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let servers = flag(&args, "--servers")
+        .ok_or_else(|| anyhow::anyhow!("--servers is required (comma-separated addresses)"))?;
+    let addrs = servers.split(',').map(Addr::parse).collect::<vipios::Result<Vec<_>>>()?;
+    let id = flag_u64(&args, "--id", 0)?;
+    let workload = flag(&args, "--workload").unwrap_or("seq");
+    let bytes = flag_u64(&args, "--bytes", 8 << 20)?;
+    let req = flag_u64(&args, "--req", 64 << 10)?.max(1);
+    let nprocs = flag_u64(&args, "--nprocs", 1)?.max(1) as u32;
+    let group = flag_u64(&args, "--group", 1)?;
+    let shutdown = args.iter().any(|a| a == "--shutdown");
+
+    let world = World::new();
+    let (transport, my_rank) = SocketTransport::client(&addrs, world.clone())?;
+    world.set_remote(transport.clone());
+    let ep = world.join_as(my_rank, Role::Client)?;
+    let mut c = Client::connect_with(&world, ep)?;
+
+    let t0 = Instant::now();
+    let mut tally = Tally::new();
+    match workload {
+        "seq" => seq(&mut c, id, bytes, req, &mut tally)?,
+        "strided" => strided(&mut c, id, bytes, req, &mut tally)?,
+        "collective" => collective(&mut c, id, bytes, req, nprocs, group, &mut tally)?,
+        "none" => {}
+        other => anyhow::bail!("unknown workload {other:?} (seq|strided|collective|none)"),
+    }
+    let elapsed_us = t0.elapsed().as_micros();
+    c.disconnect()?;
+
+    if shutdown {
+        for s in world.servers() {
+            let _ = world.send(
+                s,
+                Msg {
+                    src: my_rank,
+                    client: my_rank,
+                    req_id: 0,
+                    class: MsgClass::ER,
+                    body: Body::Req(Request::Shutdown),
+                },
+            );
+        }
+    }
+    transport.shutdown();
+
+    println!(
+        "{{\"id\":{id},\"rank\":{},\"workload\":\"{workload}\",\"wrote\":{},\"read\":{},\
+         \"verify_errors\":{},\"elapsed_us\":{elapsed_us},\"write_us\":{},\"read_us\":{}}}",
+        my_rank.0,
+        tally.wrote,
+        tally.read,
+        tally.verify_errors,
+        tally.write_us.json(),
+        tally.read_us.json(),
+    );
+    Ok(())
+}
+
+/// Sequential: contiguous chunks through a private file.
+fn seq(c: &mut Client, id: u64, bytes: u64, req: u64, t: &mut Tally) -> vipios::Result<()> {
+    let h = c.open(&format!("deploy-c{id}"), OpenMode::rdwr_create())?;
+    let mut chunk = vec![0u8; req as usize];
+    let mut off = 0u64;
+    while off < bytes {
+        let n = req.min(bytes - off) as usize;
+        fill(&mut chunk[..n], id, off);
+        let t0 = Instant::now();
+        t.wrote += c.write_at(h, off, &chunk[..n])?;
+        t.write_us.record(t0.elapsed());
+        off += n as u64;
+    }
+    c.sync(h)?;
+    off = 0;
+    while off < bytes {
+        let n = req.min(bytes - off) as usize;
+        let t0 = Instant::now();
+        let got = c.read_at(h, off, &mut chunk[..n])?;
+        t.read_us.record(t0.elapsed());
+        t.read += got as u64;
+        t.verify_errors += (n - got) as u64 + count_mismatches(&chunk[..got], id, off);
+        off += n as u64;
+    }
+    c.close(h)?;
+    Ok(())
+}
+
+/// Strided: `req`-sized runs every `4*req` bytes, written one at a time
+/// and read back as one scatter-gather list per batch.
+fn strided(c: &mut Client, id: u64, bytes: u64, req: u64, t: &mut Tally) -> vipios::Result<()> {
+    const BATCH: usize = 64;
+    let h = c.open(&format!("deploy-c{id}"), OpenMode::rdwr_create())?;
+    let stride = req * 4;
+    let nreq = bytes.div_ceil(req);
+    let mut chunk = vec![0u8; req as usize];
+    for k in 0..nreq {
+        let off = k * stride;
+        let n = req.min(bytes - k * req) as usize;
+        fill(&mut chunk[..n], id, off);
+        let t0 = Instant::now();
+        t.wrote += c.write_at(h, off, &chunk[..n])?;
+        t.write_us.record(t0.elapsed());
+    }
+    c.sync(h)?;
+    let mut k = 0u64;
+    while k < nreq {
+        let batch: Vec<(u64, u64)> = (k..nreq.min(k + BATCH as u64))
+            .map(|i| (i * stride, req.min(bytes - i * req)))
+            .collect();
+        let want: u64 = batch.iter().map(|e| e.1).sum();
+        let mut buf = vec![0u8; want as usize];
+        let t0 = Instant::now();
+        let got = c.read_list(h, &batch, &mut buf)?;
+        t.read_us.record(t0.elapsed());
+        t.read += got as u64;
+        t.verify_errors += want - got as u64;
+        let mut at = 0usize;
+        for &(off, len) in &batch {
+            let n = (len as usize).min(got.saturating_sub(at));
+            t.verify_errors += count_mismatches(&buf[at..at + n], id, off);
+            at += n;
+        }
+        k += batch.len() as u64;
+    }
+    c.close(h)?;
+    Ok(())
+}
+
+/// Collective: every process writes its own slice of one shared file,
+/// then reads it back with group-tagged requests — each `(group,
+/// epoch)` chunk rendezvouses in the home server's aggregation window.
+fn collective(
+    c: &mut Client,
+    id: u64,
+    bytes: u64,
+    req: u64,
+    nprocs: u32,
+    group: u64,
+    t: &mut Tally,
+) -> vipios::Result<()> {
+    let h = c.open(&format!("deploy-coll-g{group}"), OpenMode::rdwr_create())?;
+    let base = id * bytes;
+    let mut chunk = vec![0u8; req as usize];
+    let mut off = 0u64;
+    while off < bytes {
+        let n = req.min(bytes - off) as usize;
+        // seed by group, not id: the shared file must verify no matter
+        // which process reads a region back
+        fill(&mut chunk[..n], group, base + off);
+        let t0 = Instant::now();
+        t.wrote += c.write_at(h, base + off, &chunk[..n])?;
+        t.write_us.record(t0.elapsed());
+        off += n as u64;
+    }
+    c.sync(h)?;
+    let mut epoch = 0u64;
+    off = 0;
+    while off < bytes {
+        let n = req.min(bytes - off);
+        let coll = Collective { group, epoch, nprocs };
+        let t0 = Instant::now();
+        let op = c.iread_at_collective(h, base + off, n, coll)?;
+        let data = match c.wait(op)? {
+            vipios::client::OpResult::Read(data) => data,
+            other => anyhow::bail!("collective read failed: {other:?}"),
+        };
+        t.read_us.record(t0.elapsed());
+        t.read += data.len() as u64;
+        t.verify_errors += n - data.len() as u64;
+        t.verify_errors += count_mismatches(&data, group, base + off);
+        off += n;
+        epoch += 1;
+    }
+    c.close(h)?;
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! `vipios-server` — one ViPIOS server (VS) process of a socket
+//! deployment.
+//!
+//! ```text
+//! vipios-server --rank N --servers ADDR0,ADDR1,...
+//!               [--disks N] [--disk-dir PATH] [--queue-depth N]
+//! ```
+//!
+//! Addresses are `tcp:host:port` or `uds:/path`, one per server rank in
+//! rank order; this process binds `ADDR[rank]` and meshes with every
+//! lower rank. Once the event loop is ready to serve, the line
+//! `READY rank=N` is printed to stdout (the deployment rig waits for
+//! it). The process exits when a client sends `Request::Shutdown`.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use vipios::msg::{Rank, Role, Transport, World};
+use vipios::server::{DiskKind, Server, ServerConfig};
+use vipios::transport::{Addr, SocketTransport};
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("vipios-server: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> vipios::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rank: u32 = flag(&args, "--rank")
+        .ok_or_else(|| anyhow::anyhow!("--rank is required"))?
+        .parse()?;
+    let servers = flag(&args, "--servers")
+        .ok_or_else(|| anyhow::anyhow!("--servers is required (comma-separated addresses)"))?;
+    let addrs = servers.split(',').map(Addr::parse).collect::<vipios::Result<Vec<_>>>()?;
+
+    let mut cfg = ServerConfig::default();
+    if let Some(n) = flag(&args, "--disks") {
+        cfg.disks = n.parse()?;
+    }
+    if let Some(n) = flag(&args, "--queue-depth") {
+        cfg.queue_depth = n.parse()?;
+    }
+    if let Some(dir) = flag(&args, "--disk-dir") {
+        cfg.kind = DiskKind::Unix(PathBuf::from(dir));
+    }
+
+    let world = World::new();
+    // local mailbox must exist before the transport can deliver into it
+    let ep = world.join_as(Rank(rank), Role::Server)?;
+    let transport = SocketTransport::server(Rank(rank), &addrs, world.clone())?;
+    world.set_remote(transport.clone());
+    let server = Server::new(ep, cfg)?;
+
+    println!("READY rank={rank}");
+    std::io::stdout().flush()?;
+
+    server.run(); // returns on Request::Shutdown
+    transport.shutdown();
+    Ok(())
+}

@@ -340,7 +340,14 @@ impl ModelHook {
                 Ok(()) => return Step::Delivered { edge: (src, dst), dropped },
                 Err(_) => {
                     // rank left the world between the state check and the
-                    // push; its thread is about to mark itself finished
+                    // push; its thread is about to mark itself finished.
+                    // A failed delivery must always be explained by a
+                    // departure — anything else is a silent message loss
+                    // to a live rank, which the checker flags loudly.
+                    assert!(
+                        world.is_departed(dst),
+                        "delivery to {dst:?} failed but the rank never departed"
+                    );
                     dropped += 1;
                     continue;
                 }
@@ -684,6 +691,50 @@ mod tests {
         assert_eq!(a.timeouts, b.timeouts);
         let c = run_scenario(&ModelCfg::small(8), mk());
         assert!(c.failure.is_none(), "{:?}", c.failure);
+    }
+
+    /// A captured message whose receiver departs before delivery must be
+    /// counted as dropped — and the scheduler must be able to prove the
+    /// departure (`World::is_departed`), never lose a message to a live
+    /// rank silently.
+    #[test]
+    fn departed_rank_delivery_is_flagged() {
+        let world = World::new();
+        let server = world.join(Role::Server);
+        let client = world.join(Role::Client);
+        let dead = client.rank;
+        let hook = Arc::new(ModelHook::new(&[server.rank, dead]));
+        world.install_hook(hook.clone());
+        // two in-flight messages to the client, captured by the hook
+        for req_id in 0..2 {
+            server
+                .send(
+                    dead,
+                    Msg {
+                        src: server.rank,
+                        client: dead,
+                        req_id,
+                        class: MsgClass::ACK,
+                        body: Body::Resp(Response::Synced),
+                    },
+                )
+                .unwrap();
+        }
+        // the client exits: thread finishes, endpoint leaves the world
+        hook.finish(dead);
+        drop(client);
+        assert!(world.is_departed(dead));
+        // park the server so the step sees a stable world
+        let park = RunState::Parked { can_timeout: false };
+        hook.st.lock().unwrap().ranks.insert(server.rank, park);
+        let mut rng = XorShift64::new(42);
+        match hook.step(&mut rng, &world) {
+            Step::Quiescent { dropped } => {
+                assert_eq!(dropped, 2, "both undeliverable messages must be flagged")
+            }
+            _ => panic!("nothing deliverable was left"),
+        }
+        world.clear_hook();
     }
 
     /// Different seeds must actually explore different interleavings.

@@ -696,7 +696,12 @@ impl Client {
         while !self.op_done(op.0) {
             self.pump(true)?;
         }
-        let st = self.ops.remove(&op.0).expect("op state");
+        // bugfix sweep: both of these were `expect`s — a double-collected
+        // op or a short-circuited admin op (dead peer) must error, not
+        // panic the VI
+        let Some(st) = self.ops.remove(&op.0) else {
+            bail!("operation already collected");
+        };
         if let Some(msg) = st.error {
             bail!("{msg}");
         }
@@ -711,7 +716,10 @@ impl Client {
                 OpResult::Read(data)
             }
             OpKind::Write => OpResult::Written(st.received),
-            OpKind::Admin => OpResult::Admin(st.done.expect("admin response")),
+            OpKind::Admin => match st.done {
+                Some(resp) => OpResult::Admin(resp),
+                None => bail!("admin operation completed without a response"),
+            },
         })
     }
 
@@ -743,6 +751,28 @@ impl Client {
             }
         };
         let id = msg.req_id;
+        // A server died (in-process `leave` or transport EOF): every ACK
+        // it still owed us will never arrive, so fail the in-flight ops
+        // instead of parking in `recv` forever. Ops whose remaining ACKs
+        // come from surviving servers fail too — conservative, but a
+        // fragmented read is unfinishable anyway once one holder of its
+        // extents is gone, and the caller can simply retry against the
+        // surviving layout.
+        if let Body::PeerGone(gone) = msg.body {
+            for st in self.ops.values_mut() {
+                if st.error.is_some() {
+                    continue;
+                }
+                let complete = match st.kind {
+                    OpKind::Admin => st.done.is_some(),
+                    _ => st.expected.is_some_and(|e| st.received >= e),
+                };
+                if !complete {
+                    st.error = Some(format!("server rank {} disconnected", gone.0));
+                }
+            }
+            return Ok(());
+        }
         let Body::Resp(resp) = msg.body else { return Ok(()) };
         let Some(st) = self.ops.get_mut(&id) else { return Ok(()) };
         match resp {

@@ -5,7 +5,9 @@
 //! as the L3 coordinator of a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the ViPIOS system itself: message-passing
-//!   substrate ([`msg`]), server processes with fragmenter / directory /
+//!   substrate ([`msg`]) with its wire codec and socket transport for
+//!   real-process deployments ([`wire`], [`transport`]), server processes
+//!   with fragmenter / directory /
 //!   memory / disk-manager layers ([`server`], [`fragmenter`],
 //!   [`directory`], [`memory`], [`disk`]), the two-phase data
 //!   administration ([`layout`], [`hints`]), the client interface
@@ -51,8 +53,10 @@ pub mod pattern;
 pub mod reorg;
 pub mod runtime;
 pub mod server;
+pub mod transport;
 pub mod util;
 pub mod vimpios;
+pub mod wire;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

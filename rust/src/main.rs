@@ -9,7 +9,9 @@
 //!                                      --json also writes BENCH_<exp>.json
 //!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
 //!          buffer | redistribution | overlap | prefetch | collective |
-//!          ablation | all
+//!          ablation | all | deploy
+//!          (deploy spawns real vipios-server/-client OS processes and
+//!          is not part of `all` — build the binaries first)
 //! vipios inspect [artifacts-dir]       load + describe the compute kernels
 //! ```
 
@@ -62,7 +64,8 @@ fn main() {
             eprintln!(
                 "usage: vipios demo | bench <exp> [--quick|--small] [--json] | inspect [dir]\n\
                  exps: dedicated nondedicated vs_unix vs_romio scalability \
-                 buffer redistribution overlap prefetch collective ablation all"
+                 buffer redistribution overlap prefetch collective ablation all \
+                 deploy"
             );
             Ok(())
         }

@@ -20,7 +20,7 @@
 //! dynamic rank registration (= MPI-2 `connect/accept`, the paper's
 //! *independent mode*) preserves the relevant behaviour.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -96,7 +96,7 @@ pub struct Collective {
 
 /// Request bodies (the paper's basic message types of §5.1.1 plus the
 /// administrative ones).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// `Vipios_Connect` — sent to the connection controller (CC).
     Connect,
@@ -390,7 +390,7 @@ impl ServerStats {
 /// human-readable one-liners; [`ProtoDump::is_quiet`] is the deadlock
 /// oracle's "nothing here can make progress on its own" test — a
 /// quiescent world where some dump is *not* quiet is a protocol hang.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ProtoDump {
     pub rank: u32,
     /// Ops parked on disk completions (the continuation park table).
@@ -457,7 +457,7 @@ impl std::fmt::Display for ProtoDump {
 }
 
 /// Response bodies (ACK payloads).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Connected { buddy: Rank },
     Disconnected,
@@ -502,7 +502,7 @@ pub enum Response {
 /// crosses servers — a server is both producer (its disk workers) and
 /// consumer. Carried with [`MsgClass::ACK`] so completions are invisible
 /// to the request/amplification counters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IoEvent {
     /// Which of the server's disks completed the op.
     pub disk_idx: usize,
@@ -516,7 +516,7 @@ pub struct IoEvent {
     pub error: Option<String>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Body {
     Req(Request),
     Resp(Response),
@@ -527,11 +527,18 @@ pub enum Body {
     /// wait expired. Hooked receives consume it (mapped to a timeout
     /// error, never surfaced as a message); unhooked code never sees it.
     Timeout,
+    /// Failure notification: the named rank left the world (in-process
+    /// `leave`/crash injection) or its transport connection dropped
+    /// (socket EOF / write error). Injected into local mailboxes so a VI
+    /// parked in [`crate::client::Client::wait`] fails its in-flight ops
+    /// instead of hanging forever, and so servers can retire per-client
+    /// state. Carried with [`MsgClass::ACK`]; never crosses the wire.
+    PeerGone(Rank),
 }
 
 /// A message: the paper's header (sender, client, request id, class) plus
 /// body. File ids travel inside the bodies.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Msg {
     pub src: Rank,
     /// Originating client (so foe servers can ACK it directly).
@@ -546,12 +553,29 @@ pub enum SendError {
     /// Destination rank unknown (process dead or never registered) —
     /// the failure-injection hook.
     NoSuchRank(Rank),
+    /// The transport link to the rank is down: the peer process crashed,
+    /// closed its socket, or the write failed mid-frame. Same protocol
+    /// meaning as [`SendError::NoSuchRank`], but carries the transport's
+    /// diagnostic.
+    PeerDown(Rank, String),
+}
+
+impl SendError {
+    /// The unreachable destination.
+    pub fn rank(&self) -> Rank {
+        match *self {
+            SendError::NoSuchRank(r) | SendError::PeerDown(r, _) => r,
+        }
+    }
 }
 
 impl std::fmt::Display for SendError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SendError::NoSuchRank(r) => write!(f, "no such rank {:?}", r),
+            SendError::PeerDown(r, detail) => {
+                write!(f, "link to rank {} down: {detail}", r.0)
+            }
         }
     }
 }
@@ -584,12 +608,52 @@ pub trait SchedHook: Send + Sync {
     fn on_wake(&self, rank: Rank);
 }
 
+/// Message-delivery substrate under the mailbox layer (DESIGN.md §4.6).
+///
+/// The default implementation is the in-process mpsc path ([`World`]
+/// implements this trait with its local mailboxes), which is what the
+/// model checker and the whole test suite run against, byte-for-byte
+/// unchanged. A deployment installs a second, *remote* transport on the
+/// `World` ([`World::set_remote`], e.g.
+/// [`crate::transport::SocketTransport`]); [`World::send`] then routes
+/// each message by destination — local mailbox if the rank lives in this
+/// process, the remote transport otherwise.
+pub trait Transport: Send + Sync {
+    /// Deliver `msg` to `dst`. A dead, unknown, or disconnected peer is
+    /// a [`SendError`], never a panic.
+    fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError>;
+    /// All server ranks reachable through this transport.
+    fn server_ranks(&self) -> Vec<Rank>;
+    /// Tear down connections (idempotent; default no-op for in-process).
+    fn shutdown(&self) {}
+}
+
+/// The in-process mpsc mailboxes are the default [`Transport`]: local
+/// sends take exactly the pre-trait path (hook interposition included),
+/// which keeps `check.rs` model schedules and every existing test
+/// unchanged.
+impl Transport for World {
+    fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
+        self.send_local(dst, msg)
+    }
+
+    fn server_ranks(&self) -> Vec<Rank> {
+        self.inner.lock().unwrap().servers.clone()
+    }
+}
+
 struct WorldInner {
     next_rank: u32,
     mailboxes: HashMap<Rank, Sender<Msg>>,
     roles: HashMap<Rank, Role>,
     servers: Vec<Rank>,
+    /// Every rank that ever left (bugfix: rank numbers are never reused,
+    /// so a late in-flight message to a dead rank fails with
+    /// [`SendError`] instead of misrouting to a re-joined peer).
+    departed: HashSet<Rank>,
     hook: Option<Arc<dyn SchedHook>>,
+    /// Off-process delivery for ranks with no local mailbox.
+    remote: Option<Arc<dyn Transport>>,
 }
 
 /// The process universe: rank allocation + mailbox registry. Cheap to
@@ -614,12 +678,16 @@ impl World {
                 mailboxes: HashMap::new(),
                 roles: HashMap::new(),
                 servers: Vec::new(),
+                departed: HashSet::new(),
                 hook: None,
+                remote: None,
             })),
         }
     }
 
-    /// Register a new process; returns its endpoint.
+    /// Register a new process; returns its endpoint. Rank assignment is
+    /// monotonic: numbers of departed processes are never handed out
+    /// again (see [`WorldInner::departed`]).
     pub fn join(&self, role: Role) -> Endpoint {
         let (tx, rx) = channel();
         let mut w = self.inner.lock().unwrap();
@@ -633,16 +701,87 @@ impl World {
         Endpoint { rank, rx, world: self.clone() }
     }
 
-    /// Deregister (process exit / crash injection). Messages to this rank
-    /// now fail with [`SendError::NoSuchRank`].
-    pub fn leave(&self, rank: Rank) {
+    /// Register a process under an *externally assigned* rank — socket
+    /// deployments fix server ranks in the launch config and the
+    /// connection controller leases client ranks over the wire. Fails if
+    /// the rank is live in this process or ever departed (reuse would
+    /// let late in-flight traffic misroute to the new owner).
+    pub fn join_as(&self, rank: Rank, role: Role) -> Result<Endpoint, SendError> {
+        let (tx, rx) = channel();
         let mut w = self.inner.lock().unwrap();
-        w.mailboxes.remove(&rank);
-        w.roles.remove(&rank);
-        w.servers.retain(|&r| r != rank);
+        if w.mailboxes.contains_key(&rank) || w.departed.contains(&rank) {
+            return Err(SendError::NoSuchRank(rank));
+        }
+        w.next_rank = w.next_rank.max(rank.0 + 1);
+        w.mailboxes.insert(rank, tx);
+        w.roles.insert(rank, role);
+        if role == Role::Server {
+            w.servers.push(rank);
+            w.servers.sort();
+        }
+        Ok(Endpoint { rank, rx, world: self.clone() })
     }
 
+    /// Deregister (process exit / crash injection). Messages to this rank
+    /// now fail with [`SendError::NoSuchRank`]; if the departing process
+    /// was a server, every remaining local mailbox is notified with
+    /// [`Body::PeerGone`] so parked clients fail over instead of hanging.
+    pub fn leave(&self, rank: Rank) {
+        let peers = {
+            let mut w = self.inner.lock().unwrap();
+            if w.mailboxes.remove(&rank).is_none() {
+                return; // already gone (kill_server followed by Drop)
+            }
+            w.departed.insert(rank);
+            let was_server = w.roles.remove(&rank) == Some(Role::Server);
+            w.servers.retain(|&r| r != rank);
+            if was_server {
+                w.mailboxes.values().cloned().collect()
+            } else {
+                Vec::new()
+            }
+        };
+        // Direct mailbox pushes, outside the lock and past any hook: the
+        // model checker tears its hook down before leaving ranks, and a
+        // crash notification must not be capturable anyway.
+        for tx in peers {
+            let _ = tx.send(Msg {
+                src: rank,
+                client: rank,
+                req_id: 0,
+                class: MsgClass::ACK,
+                body: Body::PeerGone(rank),
+            });
+        }
+    }
+
+    /// Route a message by destination: local mailbox if the rank lives
+    /// in this process, else the installed remote [`Transport`].
+    /// Departed ranks always fail — never fall through to the remote
+    /// side, where the number may belong to someone else by now.
     pub fn send(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
+        let remote = {
+            let w = self.inner.lock().unwrap();
+            if w.mailboxes.contains_key(&dst) {
+                None // local: full hook-aware path below
+            } else if w.departed.contains(&dst) {
+                return Err(SendError::NoSuchRank(dst));
+            } else {
+                match w.remote.clone() {
+                    Some(t) => Some(t),
+                    None => return Err(SendError::NoSuchRank(dst)),
+                }
+            }
+        };
+        match remote {
+            Some(t) => t.send(dst, msg),
+            None => self.send_local(dst, msg),
+        }
+    }
+
+    /// The in-process delivery path (the default [`Transport`] impl):
+    /// hook interposition, then the mpsc push.
+    fn send_local(&self, dst: Rank, msg: Msg) -> Result<(), SendError> {
         let (tx, hook) = {
             let w = self.inner.lock().unwrap();
             (w.mailboxes.get(&dst).cloned(), w.hook.clone())
@@ -658,6 +797,31 @@ impl World {
             None => msg,
         };
         tx.send(msg).map_err(|_| SendError::NoSuchRank(dst))
+    }
+
+    /// Install the off-process transport (deployment startup, before any
+    /// traffic). Local ranks keep the in-process path untouched.
+    pub fn set_remote(&self, t: Arc<dyn Transport>) {
+        self.inner.lock().unwrap().remote = Some(t);
+    }
+
+    /// A transport-level peer vanished: push [`Body::PeerGone`] into
+    /// every local mailbox (the socket reader calls this on EOF; the
+    /// in-process path goes through [`World::leave`]).
+    pub fn notify_peer_gone(&self, rank: Rank) {
+        let peers: Vec<Sender<Msg>> = {
+            let w = self.inner.lock().unwrap();
+            w.mailboxes.values().cloned().collect()
+        };
+        for tx in peers {
+            let _ = tx.send(Msg {
+                src: rank,
+                client: rank,
+                req_id: 0,
+                class: MsgClass::ACK,
+                body: Body::PeerGone(rank),
+            });
+        }
     }
 
     /// Install a scheduler hook (model checking); every endpoint of this
@@ -690,13 +854,34 @@ impl World {
         }
     }
 
-    /// All server ranks (the `MPI_COMM_SERV` side of the split).
+    /// All server ranks (the `MPI_COMM_SERV` side of the split): the
+    /// local ones plus, in a deployment, everything the remote transport
+    /// reaches. Sorted, so `servers()[0]` is the SC/CC on every process.
     pub fn servers(&self) -> Vec<Rank> {
-        self.inner.lock().unwrap().servers.clone()
+        let (mut out, remote) = {
+            let w = self.inner.lock().unwrap();
+            (w.servers.clone(), w.remote.clone())
+        };
+        if let Some(t) = remote {
+            // outside the lock: the transport has its own state to lock
+            for r in t.server_ranks() {
+                if !out.contains(&r) {
+                    out.push(r);
+                }
+            }
+            out.sort();
+        }
+        out
     }
 
     pub fn role(&self, rank: Rank) -> Option<Role> {
         self.inner.lock().unwrap().roles.get(&rank).copied()
+    }
+
+    /// Has this rank left the world? (numbers are never reused, so once
+    /// true, always true — the model checker's lost-delivery oracle).
+    pub fn is_departed(&self, rank: Rank) -> bool {
+        self.inner.lock().unwrap().departed.contains(&rank)
     }
 
     /// Broadcast to all servers except `except` (BI semantics). Dead
@@ -1002,5 +1187,52 @@ mod tests {
         let text = format!("{d}");
         assert!(text.contains("BLOCKED WORK"));
         assert!(text.contains("parked: req=1"));
+    }
+
+    #[test]
+    fn departed_ranks_are_never_reused() {
+        let w = World::new();
+        let _s = w.join(Role::Server);
+        let c1 = w.join(Role::Client);
+        let dead = c1.rank;
+        drop(c1); // leaves
+        // monotonic assignment: the number stays burned
+        let c2 = w.join(Role::Client);
+        assert!(c2.rank.0 > dead.0, "rank {dead:?} was reused as {:?}", c2.rank);
+        // nor can it be claimed explicitly
+        assert!(w.join_as(dead, Role::Client).is_err());
+        // a late in-flight message to the dead rank errors, it does not
+        // reach the newcomer
+        let late = req_msg(c2.rank, MsgClass::ACK, Request::Stat);
+        assert!(matches!(w.send(dead, late), Err(SendError::NoSuchRank(r)) if r == dead));
+        assert!(c2.try_recv().is_none());
+    }
+
+    #[test]
+    fn join_as_registers_external_ranks() {
+        let w = World::new();
+        let s = w.join_as(Rank(7), Role::Server).unwrap();
+        assert_eq!(s.rank, Rank(7));
+        assert_eq!(w.servers(), vec![Rank(7)]);
+        // duplicate registration is rejected
+        assert!(w.join_as(Rank(7), Role::Client).is_err());
+        // implicit assignment continues past the external number
+        let c = w.join(Role::Client);
+        assert!(c.rank.0 > 7);
+    }
+
+    #[test]
+    fn server_leave_notifies_local_mailboxes() {
+        let w = World::new();
+        let s = w.join(Role::Server);
+        let c = w.join(Role::Client);
+        let dead = s.rank;
+        drop(s);
+        let m = c.try_recv().expect("client must be told the server died");
+        assert_eq!(m.body, Body::PeerGone(dead));
+        // client departures are silent (Disconnect handles those)
+        let c2 = w.join(Role::Client);
+        drop(c2);
+        assert!(c.try_recv().is_none());
     }
 }

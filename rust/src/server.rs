@@ -2083,6 +2083,17 @@ impl Server {
                 self.flush_windows_now();
                 true
             }
+            // a peer (client VI or fellow server) vanished: retire its
+            // speculative per-client state. Parked work addressed to it
+            // is left alone — `ack()` to a dead rank already no-ops, and
+            // collective windows it joined drain at their straggler
+            // deadline.
+            Body::PeerGone(gone) => {
+                self.seq.retain(|&(r, _), _| r != gone);
+                self.pattern.retain(|&(r, _), _| r != gone);
+                self.plans.retain(|&(r, _), _| r != gone);
+                true
+            }
         };
         if self.cfg.model {
             self.self_check();

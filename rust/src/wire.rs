@@ -1,0 +1,1370 @@
+//! Length-prefixed wire codec for the socket transport (DESIGN.md §4.6).
+//!
+//! Hand-rolled and dependency-free (the build is hermetic, §3): every
+//! [`Msg`] — all [`Request`]/[`Response`]/[`Body`] variants, including
+//! `ReadList`/`WriteList` extent lists and [`Collective`] tags — is
+//! serialized onto a flat little-endian byte layout framed as
+//!
+//! ```text
+//! [u32 magic "VIP1"][u32 payload_len][payload]
+//! payload = [u8 frame kind][kind-specific fields]
+//! ```
+//!
+//! Frame kinds (see [`Frame`]): `MSG` carries a destination rank plus an
+//! encoded message (the `Msg` header itself has no destination — routing
+//! is the transport's job); `HELLO`/`RANK_REQ`/`RANK_ACK`/`BYE` are the
+//! connection handshake. Enums are encoded as a `u32` tag in declaration
+//! order followed by the variant's fields; collections as a `u32` count
+//! followed by the elements; strings as UTF-8 bytes.
+//!
+//! Decoding is defensive: every read is bounds-checked against the frame
+//! (no over-read, no panic on garbage), collection counts are validated
+//! against the bytes actually remaining before any allocation, payloads
+//! are capped at [`MAX_FRAME`], and the recursive
+//! [`crate::access::AccessDesc`] nests at most [`MAX_DEPTH`] deep. A
+//! malformed frame is a [`WireError`], never a crash — the property
+//! battery in `tests/prop_wire.rs` fuzzes truncations and bit flips over
+//! every variant.
+
+use std::io::{self, Read, Write};
+
+use crate::access::{AccessDesc, BasicBlock};
+use crate::directory::FileMeta;
+use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
+use crate::layout::Distribution;
+use crate::msg::{
+    Body, Collective, FileId, IoEvent, Msg, MsgClass, OpenMode, ProtoDump, Rank, Request,
+    Response, ServerStats, View,
+};
+
+/// Frame preamble: `"VIP1"` little-endian.
+pub const MAGIC: u32 = 0x3150_4956;
+
+/// Upper bound on one frame's payload (256 MiB): a peer announcing more
+/// is broken or hostile, not large.
+pub const MAX_FRAME: u32 = 256 << 20;
+
+/// Maximum [`AccessDesc`] nesting accepted by the decoder. The paper's
+/// descriptors mirror array nesting (a handful of levels); 64 keeps the
+/// recursive decode comfortably inside any stack.
+pub const MAX_DEPTH: u32 = 64;
+
+/// One unit on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A routed protocol message: deliver `msg` to `dst`.
+    Msg { dst: Rank, msg: Msg },
+    /// First frame on every connection: who is dialing.
+    Hello { rank: Rank },
+    /// Client → connection controller: lease me a rank.
+    RankReq,
+    /// Connection controller → client: your rank (monotonic, never
+    /// reused — the socket-side mirror of `World::join`).
+    RankAck { rank: Rank },
+    /// Clean goodbye (distinguishes orderly close from a crash).
+    Bye,
+    /// Answer to `Hello`: the connection is registered — the dialer may
+    /// now rely on messages routed through this peer reaching it (the
+    /// startup barrier that keeps a buddy's first direct ACK from racing
+    /// the client's registration).
+    HelloAck,
+}
+
+/// Why a buffer failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ends before the announced structure does.
+    Truncated,
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic(u32),
+    /// An enum tag outside the declared variants.
+    BadTag { what: &'static str, tag: u32 },
+    /// Payload length over [`MAX_FRAME`].
+    TooLarge(u32),
+    /// [`AccessDesc`] nesting beyond [`MAX_DEPTH`].
+    TooDeep,
+    /// A string field holds invalid UTF-8.
+    Utf8,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "frame truncated"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::BadTag { what, tag } => write!(f, "bad {what} tag {tag}"),
+            WireError::TooLarge(n) => write!(f, "frame payload {n} over cap {MAX_FRAME}"),
+            WireError::TooDeep => write!(f, "access descriptor nested over {MAX_DEPTH}"),
+            WireError::Utf8 => write!(f, "invalid utf-8 in string field"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+type Result<T> = std::result::Result<T, WireError>;
+
+// --------------------------------------------------------------- encode
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+fn put_len(out: &mut Vec<u8>, n: usize) {
+    debug_assert!(n <= u32::MAX as usize);
+    put_u32(out, n as u32);
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_len(out, b.len());
+    out.extend_from_slice(b);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+fn put_rank(out: &mut Vec<u8>, r: Rank) {
+    put_u32(out, r.0);
+}
+
+fn put_file(out: &mut Vec<u8>, f: FileId) {
+    put_u64(out, f.0);
+}
+
+fn put_class(out: &mut Vec<u8>, c: MsgClass) {
+    put_u8(
+        out,
+        match c {
+            MsgClass::ER => 0,
+            MsgClass::DI => 1,
+            MsgClass::BI => 2,
+            MsgClass::ACK => 3,
+        },
+    );
+}
+
+fn put_mode(out: &mut Vec<u8>, m: OpenMode) {
+    let mut bits = 0u8;
+    if m.read {
+        bits |= 1;
+    }
+    if m.write {
+        bits |= 2;
+    }
+    if m.create {
+        bits |= 4;
+    }
+    if m.exclusive {
+        bits |= 8;
+    }
+    put_u8(out, bits);
+}
+
+fn put_access(out: &mut Vec<u8>, d: &AccessDesc) {
+    put_i64(out, d.skip);
+    put_len(out, d.blocks.len());
+    for b in &d.blocks {
+        put_i64(out, b.offset);
+        put_u32(out, b.repeat);
+        put_u32(out, b.count);
+        put_i64(out, b.stride);
+        match &b.subtype {
+            None => put_u8(out, 0),
+            Some(sub) => {
+                put_u8(out, 1);
+                put_access(out, sub);
+            }
+        }
+    }
+}
+
+fn put_view(out: &mut Vec<u8>, v: &Option<View>) {
+    match v {
+        None => put_u8(out, 0),
+        Some(view) => {
+            put_u8(out, 1);
+            put_u64(out, view.disp);
+            put_access(out, &view.desc);
+        }
+    }
+}
+
+fn put_collective(out: &mut Vec<u8>, c: &Option<Collective>) {
+    match c {
+        None => put_u8(out, 0),
+        Some(t) => {
+            put_u8(out, 1);
+            put_u64(out, t.group);
+            put_u64(out, t.epoch);
+            put_u32(out, t.nprocs);
+        }
+    }
+}
+
+fn put_dist(out: &mut Vec<u8>, d: Distribution) {
+    match d {
+        Distribution::Contiguous { server } => {
+            put_u32(out, 0);
+            put_u32(out, server);
+        }
+        Distribution::Cyclic { chunk } => {
+            put_u32(out, 1);
+            put_u64(out, chunk);
+        }
+        Distribution::Block { part } => {
+            put_u32(out, 2);
+            put_u64(out, part);
+        }
+    }
+}
+
+fn put_meta(out: &mut Vec<u8>, m: &FileMeta) {
+    put_file(out, m.id);
+    put_str(out, &m.name);
+    put_dist(out, m.distribution);
+    put_len(out, m.servers.len());
+    for &s in &m.servers {
+        put_rank(out, s);
+    }
+    put_u64(out, m.size);
+    put_u64(out, m.epoch);
+}
+
+fn put_hint(out: &mut Vec<u8>, h: &Hint) {
+    match h {
+        Hint::FileAdmin(FileAdminHint { name, distribution, nprocs }) => {
+            put_u32(out, 0);
+            put_str(out, name);
+            put_dist(out, *distribution);
+            match nprocs {
+                None => put_u8(out, 0),
+                Some(n) => {
+                    put_u8(out, 1);
+                    put_u32(out, *n);
+                }
+            }
+        }
+        Hint::Prefetch(p) => {
+            put_u32(out, 1);
+            match p {
+                PrefetchHint::AdvanceRead { file, offset, len } => {
+                    put_u32(out, 0);
+                    put_file(out, *file);
+                    put_u64(out, *offset);
+                    put_u64(out, *len);
+                }
+                PrefetchHint::DelayedWrite { file, enable } => {
+                    put_u32(out, 1);
+                    put_file(out, *file);
+                    put_bool(out, *enable);
+                }
+                PrefetchHint::Sequential { file, window } => {
+                    put_u32(out, 2);
+                    put_file(out, *file);
+                    put_u64(out, *window);
+                }
+                PrefetchHint::AccessPlan { file, parts } => {
+                    put_u32(out, 3);
+                    put_file(out, *file);
+                    put_len(out, parts.len());
+                    for &(off, len) in parts {
+                        put_u64(out, off);
+                        put_u64(out, len);
+                    }
+                }
+            }
+        }
+        Hint::System(s) => {
+            put_u32(out, 2);
+            match s {
+                SystemHint::CacheBytes(n) => {
+                    put_u32(out, 0);
+                    put_u64(out, *n);
+                }
+                SystemHint::Prefetch(on) => {
+                    put_u32(out, 1);
+                    put_bool(out, *on);
+                }
+                SystemHint::DropCaches => put_u32(out, 2),
+            }
+        }
+    }
+}
+
+fn put_runs3(out: &mut Vec<u8>, parts: &[(u64, u64, u64)]) {
+    put_len(out, parts.len());
+    for &(a, b, c) in parts {
+        put_u64(out, a);
+        put_u64(out, b);
+        put_u64(out, c);
+    }
+}
+
+fn put_data_parts(out: &mut Vec<u8>, parts: &[(u64, Vec<u8>)]) {
+    put_len(out, parts.len());
+    for (off, data) in parts {
+        put_u64(out, *off);
+        put_bytes(out, data);
+    }
+}
+
+fn put_request(out: &mut Vec<u8>, req: &Request) {
+    match req {
+        Request::Connect => put_u32(out, 0),
+        Request::Disconnect => put_u32(out, 1),
+        Request::Open { name, mode } => {
+            put_u32(out, 2);
+            put_str(out, name);
+            put_mode(out, *mode);
+        }
+        Request::Close { file } => {
+            put_u32(out, 3);
+            put_file(out, *file);
+        }
+        Request::Remove { name } => {
+            put_u32(out, 4);
+            put_str(out, name);
+        }
+        Request::Read { file, offset, len, view, dst_base } => {
+            put_u32(out, 5);
+            put_file(out, *file);
+            put_u64(out, *offset);
+            put_u64(out, *len);
+            put_view(out, view);
+            put_u64(out, *dst_base);
+        }
+        Request::Write { file, offset, data, view } => {
+            put_u32(out, 6);
+            put_file(out, *file);
+            put_u64(out, *offset);
+            put_bytes(out, data);
+            put_view(out, view);
+        }
+        Request::ReadList { file, extents, collective } => {
+            put_u32(out, 7);
+            put_file(out, *file);
+            put_runs3(out, extents);
+            put_collective(out, collective);
+        }
+        Request::WriteList { file, parts, collective } => {
+            put_u32(out, 8);
+            put_file(out, *file);
+            put_data_parts(out, parts);
+            put_collective(out, collective);
+        }
+        Request::SetSize { file, size } => {
+            put_u32(out, 9);
+            put_file(out, *file);
+            put_u64(out, *size);
+        }
+        Request::GetSize { file } => {
+            put_u32(out, 10);
+            put_file(out, *file);
+        }
+        Request::Sync { file } => {
+            put_u32(out, 11);
+            put_file(out, *file);
+        }
+        Request::Hint(h) => {
+            put_u32(out, 12);
+            put_hint(out, h);
+        }
+        Request::Redistribute { file, target } => {
+            put_u32(out, 13);
+            put_file(out, *file);
+            put_dist(out, *target);
+        }
+        Request::Stat => put_u32(out, 14),
+        Request::Dump => put_u32(out, 15),
+        Request::Shutdown => put_u32(out, 16),
+        Request::Lookup { name } => {
+            put_u32(out, 17);
+            put_str(out, name);
+        }
+        Request::OpenMeta { name, mode, requester } => {
+            put_u32(out, 18);
+            put_str(out, name);
+            put_mode(out, *mode);
+            put_rank(out, *requester);
+        }
+        Request::RemoveName { name } => {
+            put_u32(out, 19);
+            put_str(out, name);
+        }
+        Request::FlushInt => put_u32(out, 20),
+        Request::GetMeta { file } => {
+            put_u32(out, 21);
+            put_file(out, *file);
+        }
+        Request::LocalRead { file, meta, parts } => {
+            put_u32(out, 22);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_runs3(out, parts);
+        }
+        Request::LocalWrite { file, meta, parts } => {
+            put_u32(out, 23);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_data_parts(out, parts);
+        }
+        Request::LocalReadScatter { file, meta, out: scatter } => {
+            put_u32(out, 24);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_len(out, scatter.len());
+            for (client, req_id, parts) in scatter {
+                put_rank(out, *client);
+                put_u64(out, *req_id);
+                put_runs3(out, parts);
+            }
+        }
+        Request::LocalPrefetch { file, meta, parts } => {
+            put_u32(out, 25);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_len(out, parts.len());
+            for &(off, len) in parts {
+                put_u64(out, off);
+                put_u64(out, len);
+            }
+        }
+        Request::SizeUpdate { file, size, exact } => {
+            put_u32(out, 26);
+            put_file(out, *file);
+            put_u64(out, *size);
+            put_bool(out, *exact);
+        }
+        Request::TruncFrag { file, meta, size } => {
+            put_u32(out, 27);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_u64(out, *size);
+        }
+        Request::RemoveInt { file } => {
+            put_u32(out, 28);
+            put_file(out, *file);
+        }
+        Request::ReorgFreeze { file, meta, target } => {
+            put_u32(out, 29);
+            put_file(out, *file);
+            put_meta(out, meta);
+            put_dist(out, *target);
+        }
+        Request::ReorgShip { file, size } => {
+            put_u32(out, 30);
+            put_file(out, *file);
+            put_u64(out, *size);
+        }
+        Request::ReorgData { file, parts } => {
+            put_u32(out, 31);
+            put_file(out, *file);
+            put_data_parts(out, parts);
+        }
+        Request::ReorgCommit { file } => {
+            put_u32(out, 32);
+            put_file(out, *file);
+        }
+    }
+}
+
+/// The [`ServerStats`] counters in declaration order — adding a counter
+/// means appending it here and in `stats()` (both sides are in this file
+/// so the pair stays in sync, and the round-trip test fails loudly on a
+/// mismatch).
+fn stats_fields(s: &ServerStats) -> [u64; 30] {
+    [
+        s.ext_requests,
+        s.int_requests,
+        s.broadcasts_rx,
+        s.bytes_read,
+        s.bytes_written,
+        s.cache_hits,
+        s.cache_misses,
+        s.prefetch_issued,
+        s.prefetch_hits,
+        s.prefetch_installed,
+        s.wasted_prefetch,
+        s.predicted_bytes,
+        s.disk_time_us,
+        s.reorg_bytes_shipped,
+        s.reorg_di_msgs,
+        s.io_parked,
+        s.io_resumed,
+        s.io_sched_batches,
+        s.io_sched_coalesced,
+        s.io_promoted,
+        s.io_max_queue_depth,
+        s.io_errors,
+        s.disk_bytes,
+        s.wb_staged_bytes,
+        s.wb_flushed_runs,
+        s.wb_sched_jobs,
+        s.list_requests,
+        s.list_extents,
+        s.coalesced_runs,
+        s.collective_windows,
+    ]
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &ServerStats) {
+    for v in stats_fields(s) {
+        put_u64(out, v);
+    }
+}
+
+fn put_strings(out: &mut Vec<u8>, items: &[String]) {
+    put_len(out, items.len());
+    for s in items {
+        put_str(out, s);
+    }
+}
+
+fn put_dump(out: &mut Vec<u8>, d: &ProtoDump) {
+    put_u32(out, d.rank);
+    put_strings(out, &d.parked);
+    put_strings(out, &d.gates);
+    put_strings(out, &d.windows);
+    put_strings(out, &d.pending);
+    put_strings(out, &d.reorg);
+    put_u64(out, d.wb_inflight as u64);
+    put_u64(out, d.wb_waiters as u64);
+    put_u64(out, d.fills as u64);
+    put_u64(out, d.pending_flushes as u64);
+}
+
+fn put_response(out: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Connected { buddy } => {
+            put_u32(out, 0);
+            put_rank(out, *buddy);
+        }
+        Response::Disconnected => put_u32(out, 1),
+        Response::Opened { file, size } => {
+            put_u32(out, 2);
+            put_file(out, *file);
+            put_u64(out, *size);
+        }
+        Response::Removed => put_u32(out, 3),
+        Response::Closed => put_u32(out, 4),
+        Response::ReadPlanned { total } => {
+            put_u32(out, 5);
+            put_u64(out, *total);
+        }
+        Response::Data { dst_base, data } => {
+            put_u32(out, 6);
+            put_u64(out, *dst_base);
+            put_bytes(out, data);
+        }
+        Response::LookupAck { meta } => {
+            put_u32(out, 7);
+            match meta {
+                None => put_u8(out, 0),
+                Some(m) => {
+                    put_u8(out, 1);
+                    put_meta(out, m);
+                }
+            }
+        }
+        Response::MetaAck { meta } => {
+            put_u32(out, 8);
+            put_meta(out, meta);
+        }
+        Response::Written { bytes } => {
+            put_u32(out, 9);
+            put_u64(out, *bytes);
+        }
+        Response::Size { size } => {
+            put_u32(out, 10);
+            put_u64(out, *size);
+        }
+        Response::Synced => put_u32(out, 11),
+        Response::HintAck => put_u32(out, 12),
+        Response::ReorgFrozen => put_u32(out, 13),
+        Response::ReorgShipped { bytes, msgs } => {
+            put_u32(out, 14);
+            put_u64(out, *bytes);
+            put_u64(out, *msgs);
+        }
+        Response::ReorgDataAck => put_u32(out, 15),
+        Response::ReorgCommitted => put_u32(out, 16),
+        Response::Redistributed { bytes_moved, messages } => {
+            put_u32(out, 17);
+            put_u64(out, *bytes_moved);
+            put_u64(out, *messages);
+        }
+        Response::Stats(s) => {
+            put_u32(out, 18);
+            put_stats(out, s);
+        }
+        Response::DumpAck(d) => {
+            put_u32(out, 19);
+            put_dump(out, d);
+        }
+        Response::Error { msg } => {
+            put_u32(out, 20);
+            put_str(out, msg);
+        }
+    }
+}
+
+fn put_body(out: &mut Vec<u8>, body: &Body) {
+    match body {
+        Body::Req(req) => {
+            put_u8(out, 0);
+            put_request(out, req);
+        }
+        Body::Resp(resp) => {
+            put_u8(out, 1);
+            put_response(out, resp);
+        }
+        Body::Io(ev) => {
+            put_u8(out, 2);
+            put_u64(out, ev.disk_idx as u64);
+            put_u64(out, ev.token);
+            put_u64(out, ev.off);
+            put_bytes(out, &ev.data);
+            match &ev.error {
+                None => put_u8(out, 0),
+                Some(e) => {
+                    put_u8(out, 1);
+                    put_str(out, e);
+                }
+            }
+        }
+        Body::Timeout => put_u8(out, 3),
+        Body::PeerGone(r) => {
+            put_u8(out, 4);
+            put_rank(out, *r);
+        }
+    }
+}
+
+fn put_msg(out: &mut Vec<u8>, msg: &Msg) {
+    put_rank(out, msg.src);
+    put_rank(out, msg.client);
+    put_u64(out, msg.req_id);
+    put_class(out, msg.class);
+    put_body(out, &msg.body);
+}
+
+/// Append one complete frame (magic + length + payload) to `out`.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    put_u32(out, MAGIC);
+    let len_at = out.len();
+    put_u32(out, 0); // patched below
+    match frame {
+        Frame::Msg { dst, msg } => {
+            put_u8(out, 0);
+            put_rank(out, *dst);
+            put_msg(out, msg);
+        }
+        Frame::Hello { rank } => {
+            put_u8(out, 1);
+            put_rank(out, *rank);
+        }
+        Frame::RankReq => put_u8(out, 2),
+        Frame::RankAck { rank } => {
+            put_u8(out, 3);
+            put_rank(out, *rank);
+        }
+        Frame::Bye => put_u8(out, 4),
+        Frame::HelloAck => put_u8(out, 5),
+    }
+    let payload = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&payload.to_le_bytes());
+}
+
+// --------------------------------------------------------------- decode
+
+/// Bounds-checked reader over one frame's payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// A collection count, validated against the bytes left: each
+    /// element needs at least `elem_min` bytes, so a hostile count can
+    /// never drive an allocation past the frame it arrived in.
+    fn len(&mut self, elem_min: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() / elem_min.max(1) {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| WireError::Utf8)
+    }
+
+    fn rank(&mut self) -> Result<Rank> {
+        Ok(Rank(self.u32()?))
+    }
+
+    fn file(&mut self) -> Result<FileId> {
+        Ok(FileId(self.u64()?))
+    }
+
+    fn class(&mut self) -> Result<MsgClass> {
+        match self.u8()? {
+            0 => Ok(MsgClass::ER),
+            1 => Ok(MsgClass::DI),
+            2 => Ok(MsgClass::BI),
+            3 => Ok(MsgClass::ACK),
+            t => Err(WireError::BadTag { what: "MsgClass", tag: t as u32 }),
+        }
+    }
+
+    fn mode(&mut self) -> Result<OpenMode> {
+        let bits = self.u8()?;
+        if bits & !0b1111 != 0 {
+            return Err(WireError::BadTag { what: "OpenMode", tag: bits as u32 });
+        }
+        Ok(OpenMode {
+            read: bits & 1 != 0,
+            write: bits & 2 != 0,
+            create: bits & 4 != 0,
+            exclusive: bits & 8 != 0,
+        })
+    }
+
+    fn access(&mut self, depth: u32) -> Result<AccessDesc> {
+        if depth > MAX_DEPTH {
+            return Err(WireError::TooDeep);
+        }
+        let skip = self.i64()?;
+        let n = self.len(25)?; // i64 + u32 + u32 + i64 + tag byte
+        let mut blocks = Vec::with_capacity(n);
+        for _ in 0..n {
+            let offset = self.i64()?;
+            let repeat = self.u32()?;
+            let count = self.u32()?;
+            let stride = self.i64()?;
+            let subtype = match self.u8()? {
+                0 => None,
+                1 => Some(Box::new(self.access(depth + 1)?)),
+                t => return Err(WireError::BadTag { what: "subtype", tag: t as u32 }),
+            };
+            blocks.push(BasicBlock { offset, repeat, count, stride, subtype });
+        }
+        Ok(AccessDesc { skip, blocks })
+    }
+
+    fn view(&mut self) -> Result<Option<View>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let disp = self.u64()?;
+                let desc = self.access(0)?;
+                Ok(Some(View { disp, desc }))
+            }
+            t => Err(WireError::BadTag { what: "View", tag: t as u32 }),
+        }
+    }
+
+    fn collective(&mut self) -> Result<Option<Collective>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let group = self.u64()?;
+                let epoch = self.u64()?;
+                let nprocs = self.u32()?;
+                Ok(Some(Collective { group, epoch, nprocs }))
+            }
+            t => Err(WireError::BadTag { what: "Collective", tag: t as u32 }),
+        }
+    }
+
+    fn dist(&mut self) -> Result<Distribution> {
+        match self.u32()? {
+            0 => Ok(Distribution::Contiguous { server: self.u32()? }),
+            1 => Ok(Distribution::Cyclic { chunk: self.u64()? }),
+            2 => Ok(Distribution::Block { part: self.u64()? }),
+            t => Err(WireError::BadTag { what: "Distribution", tag: t }),
+        }
+    }
+
+    fn meta(&mut self) -> Result<FileMeta> {
+        let id = self.file()?;
+        let name = self.string()?;
+        let distribution = self.dist()?;
+        let n = self.len(4)?;
+        let mut servers = Vec::with_capacity(n);
+        for _ in 0..n {
+            servers.push(self.rank()?);
+        }
+        let size = self.u64()?;
+        let epoch = self.u64()?;
+        Ok(FileMeta { id, name, distribution, servers, size, epoch })
+    }
+
+    fn hint(&mut self) -> Result<Hint> {
+        match self.u32()? {
+            0 => {
+                let name = self.string()?;
+                let distribution = self.dist()?;
+                let nprocs = match self.u8()? {
+                    0 => None,
+                    1 => Some(self.u32()?),
+                    t => return Err(WireError::BadTag { what: "nprocs", tag: t as u32 }),
+                };
+                Ok(Hint::FileAdmin(FileAdminHint { name, distribution, nprocs }))
+            }
+            1 => {
+                let p = match self.u32()? {
+                    0 => PrefetchHint::AdvanceRead {
+                        file: self.file()?,
+                        offset: self.u64()?,
+                        len: self.u64()?,
+                    },
+                    1 => PrefetchHint::DelayedWrite { file: self.file()?, enable: self.bool()? },
+                    2 => PrefetchHint::Sequential { file: self.file()?, window: self.u64()? },
+                    3 => {
+                        let file = self.file()?;
+                        let n = self.len(16)?;
+                        let mut parts = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            parts.push((self.u64()?, self.u64()?));
+                        }
+                        PrefetchHint::AccessPlan { file, parts }
+                    }
+                    t => return Err(WireError::BadTag { what: "PrefetchHint", tag: t }),
+                };
+                Ok(Hint::Prefetch(p))
+            }
+            2 => match self.u32()? {
+                0 => Ok(Hint::System(SystemHint::CacheBytes(self.u64()?))),
+                1 => Ok(Hint::System(SystemHint::Prefetch(self.bool()?))),
+                2 => Ok(Hint::System(SystemHint::DropCaches)),
+                t => Err(WireError::BadTag { what: "SystemHint", tag: t }),
+            },
+            t => Err(WireError::BadTag { what: "Hint", tag: t }),
+        }
+    }
+
+    fn runs3(&mut self) -> Result<Vec<(u64, u64, u64)>> {
+        let n = self.len(24)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push((self.u64()?, self.u64()?, self.u64()?));
+        }
+        Ok(v)
+    }
+
+    fn data_parts(&mut self) -> Result<Vec<(u64, Vec<u8>)>> {
+        let n = self.len(12)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let off = self.u64()?;
+            v.push((off, self.bytes()?));
+        }
+        Ok(v)
+    }
+
+    fn request(&mut self) -> Result<Request> {
+        let tag = self.u32()?;
+        Ok(match tag {
+            0 => Request::Connect,
+            1 => Request::Disconnect,
+            2 => Request::Open { name: self.string()?, mode: self.mode()? },
+            3 => Request::Close { file: self.file()? },
+            4 => Request::Remove { name: self.string()? },
+            5 => Request::Read {
+                file: self.file()?,
+                offset: self.u64()?,
+                len: self.u64()?,
+                view: self.view()?,
+                dst_base: self.u64()?,
+            },
+            6 => Request::Write {
+                file: self.file()?,
+                offset: self.u64()?,
+                data: self.bytes()?,
+                view: self.view()?,
+            },
+            7 => Request::ReadList {
+                file: self.file()?,
+                extents: self.runs3()?,
+                collective: self.collective()?,
+            },
+            8 => Request::WriteList {
+                file: self.file()?,
+                parts: self.data_parts()?,
+                collective: self.collective()?,
+            },
+            9 => Request::SetSize { file: self.file()?, size: self.u64()? },
+            10 => Request::GetSize { file: self.file()? },
+            11 => Request::Sync { file: self.file()? },
+            12 => Request::Hint(self.hint()?),
+            13 => Request::Redistribute { file: self.file()?, target: self.dist()? },
+            14 => Request::Stat,
+            15 => Request::Dump,
+            16 => Request::Shutdown,
+            17 => Request::Lookup { name: self.string()? },
+            18 => Request::OpenMeta {
+                name: self.string()?,
+                mode: self.mode()?,
+                requester: self.rank()?,
+            },
+            19 => Request::RemoveName { name: self.string()? },
+            20 => Request::FlushInt,
+            21 => Request::GetMeta { file: self.file()? },
+            22 => Request::LocalRead {
+                file: self.file()?,
+                meta: self.meta()?,
+                parts: self.runs3()?,
+            },
+            23 => Request::LocalWrite {
+                file: self.file()?,
+                meta: self.meta()?,
+                parts: self.data_parts()?,
+            },
+            24 => {
+                let file = self.file()?;
+                let meta = self.meta()?;
+                let n = self.len(16)?;
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let client = self.rank()?;
+                    let req_id = self.u64()?;
+                    out.push((client, req_id, self.runs3()?));
+                }
+                Request::LocalReadScatter { file, meta, out }
+            }
+            25 => {
+                let file = self.file()?;
+                let meta = self.meta()?;
+                let n = self.len(16)?;
+                let mut parts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    parts.push((self.u64()?, self.u64()?));
+                }
+                Request::LocalPrefetch { file, meta, parts }
+            }
+            26 => Request::SizeUpdate {
+                file: self.file()?,
+                size: self.u64()?,
+                exact: self.bool()?,
+            },
+            27 => Request::TruncFrag {
+                file: self.file()?,
+                meta: self.meta()?,
+                size: self.u64()?,
+            },
+            28 => Request::RemoveInt { file: self.file()? },
+            29 => Request::ReorgFreeze {
+                file: self.file()?,
+                meta: self.meta()?,
+                target: self.dist()?,
+            },
+            30 => Request::ReorgShip { file: self.file()?, size: self.u64()? },
+            31 => Request::ReorgData { file: self.file()?, parts: self.data_parts()? },
+            32 => Request::ReorgCommit { file: self.file()? },
+            t => return Err(WireError::BadTag { what: "Request", tag: t }),
+        })
+    }
+
+    fn stats(&mut self) -> Result<ServerStats> {
+        let mut s = ServerStats::default();
+        let fields: [&mut u64; 30] = [
+            &mut s.ext_requests,
+            &mut s.int_requests,
+            &mut s.broadcasts_rx,
+            &mut s.bytes_read,
+            &mut s.bytes_written,
+            &mut s.cache_hits,
+            &mut s.cache_misses,
+            &mut s.prefetch_issued,
+            &mut s.prefetch_hits,
+            &mut s.prefetch_installed,
+            &mut s.wasted_prefetch,
+            &mut s.predicted_bytes,
+            &mut s.disk_time_us,
+            &mut s.reorg_bytes_shipped,
+            &mut s.reorg_di_msgs,
+            &mut s.io_parked,
+            &mut s.io_resumed,
+            &mut s.io_sched_batches,
+            &mut s.io_sched_coalesced,
+            &mut s.io_promoted,
+            &mut s.io_max_queue_depth,
+            &mut s.io_errors,
+            &mut s.disk_bytes,
+            &mut s.wb_staged_bytes,
+            &mut s.wb_flushed_runs,
+            &mut s.wb_sched_jobs,
+            &mut s.list_requests,
+            &mut s.list_extents,
+            &mut s.coalesced_runs,
+            &mut s.collective_windows,
+        ];
+        for f in fields {
+            *f = self.u64()?;
+        }
+        Ok(s)
+    }
+
+    fn strings(&mut self) -> Result<Vec<String>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.string()?);
+        }
+        Ok(v)
+    }
+
+    fn dump(&mut self) -> Result<ProtoDump> {
+        Ok(ProtoDump {
+            rank: self.u32()?,
+            parked: self.strings()?,
+            gates: self.strings()?,
+            windows: self.strings()?,
+            pending: self.strings()?,
+            reorg: self.strings()?,
+            wb_inflight: self.u64()? as usize,
+            wb_waiters: self.u64()? as usize,
+            fills: self.u64()? as usize,
+            pending_flushes: self.u64()? as usize,
+        })
+    }
+
+    fn response(&mut self) -> Result<Response> {
+        let tag = self.u32()?;
+        Ok(match tag {
+            0 => Response::Connected { buddy: self.rank()? },
+            1 => Response::Disconnected,
+            2 => Response::Opened { file: self.file()?, size: self.u64()? },
+            3 => Response::Removed,
+            4 => Response::Closed,
+            5 => Response::ReadPlanned { total: self.u64()? },
+            6 => Response::Data { dst_base: self.u64()?, data: self.bytes()? },
+            7 => {
+                let meta = match self.u8()? {
+                    0 => None,
+                    1 => Some(self.meta()?),
+                    t => return Err(WireError::BadTag { what: "LookupAck", tag: t as u32 }),
+                };
+                Response::LookupAck { meta }
+            }
+            8 => Response::MetaAck { meta: self.meta()? },
+            9 => Response::Written { bytes: self.u64()? },
+            10 => Response::Size { size: self.u64()? },
+            11 => Response::Synced,
+            12 => Response::HintAck,
+            13 => Response::ReorgFrozen,
+            14 => Response::ReorgShipped { bytes: self.u64()?, msgs: self.u64()? },
+            15 => Response::ReorgDataAck,
+            16 => Response::ReorgCommitted,
+            17 => Response::Redistributed {
+                bytes_moved: self.u64()?,
+                messages: self.u64()?,
+            },
+            18 => Response::Stats(Box::new(self.stats()?)),
+            19 => Response::DumpAck(Box::new(self.dump()?)),
+            20 => Response::Error { msg: self.string()? },
+            t => return Err(WireError::BadTag { what: "Response", tag: t }),
+        })
+    }
+
+    fn body(&mut self) -> Result<Body> {
+        match self.u8()? {
+            0 => Ok(Body::Req(self.request()?)),
+            1 => Ok(Body::Resp(self.response()?)),
+            2 => {
+                let disk_idx = self.u64()? as usize;
+                let token = self.u64()?;
+                let off = self.u64()?;
+                let data = self.bytes()?;
+                let error = match self.u8()? {
+                    0 => None,
+                    1 => Some(self.string()?),
+                    t => return Err(WireError::BadTag { what: "IoEvent", tag: t as u32 }),
+                };
+                Ok(Body::Io(IoEvent { disk_idx, token, off, data, error }))
+            }
+            3 => Ok(Body::Timeout),
+            4 => Ok(Body::PeerGone(self.rank()?)),
+            t => Err(WireError::BadTag { what: "Body", tag: t as u32 }),
+        }
+    }
+
+    fn msg(&mut self) -> Result<Msg> {
+        let src = self.rank()?;
+        let client = self.rank()?;
+        let req_id = self.u64()?;
+        let class = self.class()?;
+        let body = self.body()?;
+        Ok(Msg { src, client, req_id, class, body })
+    }
+}
+
+/// Try to decode one frame from the front of `buf`.
+///
+/// * `Ok(None)` — `buf` holds a valid prefix of a frame; read more bytes.
+/// * `Ok(Some((frame, consumed)))` — one frame decoded, `consumed` bytes
+///   used (`consumed <= buf.len()`; the rest belongs to later frames).
+/// * `Err` — the bytes can never become a valid frame.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    if buf.len() < 8 {
+        // incomplete header — but reject a hopeless magic early
+        if buf.len() >= 4 {
+            let magic = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+            if magic != MAGIC {
+                return Err(WireError::BadMagic(magic));
+            }
+        }
+        return Ok(None);
+    }
+    let magic = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if len > MAX_FRAME {
+        return Err(WireError::TooLarge(len));
+    }
+    let total = 8 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let mut c = Cur { buf: &buf[8..total], pos: 0 };
+    let frame = match c.u8()? {
+        0 => {
+            let dst = c.rank()?;
+            let msg = c.msg()?;
+            Frame::Msg { dst, msg }
+        }
+        1 => Frame::Hello { rank: c.rank()? },
+        2 => Frame::RankReq,
+        3 => Frame::RankAck { rank: c.rank()? },
+        4 => Frame::Bye,
+        5 => Frame::HelloAck,
+        t => return Err(WireError::BadTag { what: "Frame", tag: t as u32 }),
+    };
+    if c.remaining() != 0 {
+        // trailing garbage inside the framed payload: a framing bug on
+        // the peer, not something to silently skip
+        return Err(WireError::Truncated);
+    }
+    Ok(Some((frame, total)))
+}
+
+/// Write one frame to a stream (the caller owns buffering).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(64);
+    encode_frame(frame, &mut buf);
+    w.write_all(&buf)
+}
+
+/// Read exactly one frame from a blocking stream.
+///
+/// `Ok(None)` means clean EOF *at a frame boundary* (orderly close); EOF
+/// mid-frame or a malformed frame is an `io::Error`.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Frame>> {
+    let mut header = [0u8; 8];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside frame header",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if magic != MAGIC {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            WireError::BadMagic(magic).to_string(),
+        ));
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            WireError::TooLarge(len).to_string(),
+        ));
+    }
+    let mut buf = vec![0u8; 8 + len as usize];
+    buf[..8].copy_from_slice(&header);
+    r.read_exact(&mut buf[8..])?;
+    match decode_frame(&buf) {
+        Ok(Some((frame, consumed))) => {
+            debug_assert_eq!(consumed, buf.len());
+            Ok(Some(frame))
+        }
+        // the buffer holds the full announced length, so a None here
+        // (or any error) is a peer framing bug
+        Ok(None) => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "frame shorter than announced",
+        )),
+        Err(e) => Err(io::Error::new(io::ErrorKind::InvalidData, e.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(frame: Frame) {
+        let mut buf = Vec::new();
+        encode_frame(&frame, &mut buf);
+        let (back, used) = decode_frame(&buf).unwrap().expect("complete frame");
+        assert_eq!(used, buf.len());
+        assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn handshake_frames_roundtrip() {
+        roundtrip(Frame::Hello { rank: Rank(7) });
+        roundtrip(Frame::RankReq);
+        roundtrip(Frame::RankAck { rank: Rank(99) });
+        roundtrip(Frame::Bye);
+        roundtrip(Frame::HelloAck);
+    }
+
+    #[test]
+    fn msg_frame_roundtrips_with_payload() {
+        let msg = Msg {
+            src: Rank(3),
+            client: Rank(3),
+            req_id: 41,
+            class: MsgClass::ER,
+            body: Body::Req(Request::ReadList {
+                file: FileId(9),
+                extents: vec![(0, 4096, 0), (8192, 4096, 4096)],
+                collective: Some(Collective { group: 5, epoch: 2, nprocs: 4 }),
+            }),
+        };
+        roundtrip(Frame::Msg { dst: Rank(1), msg });
+    }
+
+    #[test]
+    fn prefix_is_incomplete_not_error() {
+        let mut buf = Vec::new();
+        let msg = Msg {
+            src: Rank(0),
+            client: Rank(0),
+            req_id: 1,
+            class: MsgClass::ACK,
+            body: Body::Resp(Response::Synced),
+        };
+        encode_frame(&Frame::Msg { dst: Rank(2), msg }, &mut buf);
+        for cut in 0..buf.len() {
+            assert_eq!(decode_frame(&buf[..cut]), Ok(None), "prefix of {cut} bytes");
+        }
+    }
+
+    #[test]
+    fn garbage_magic_is_rejected() {
+        let buf = [0xde, 0xad, 0xbe, 0xef, 0, 0, 0, 0];
+        assert!(matches!(decode_frame(&buf), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, MAGIC);
+        put_u32(&mut buf, MAX_FRAME + 1);
+        assert_eq!(decode_frame(&buf), Err(WireError::TooLarge(MAX_FRAME + 1)));
+    }
+
+    #[test]
+    fn deep_access_descriptor_is_capped() {
+        let mut desc = AccessDesc { skip: 0, blocks: vec![] };
+        for _ in 0..(MAX_DEPTH + 4) {
+            desc = AccessDesc {
+                skip: 1,
+                blocks: vec![BasicBlock {
+                    offset: 0,
+                    repeat: 1,
+                    count: 1,
+                    stride: 0,
+                    subtype: Some(Box::new(desc)),
+                }],
+            };
+        }
+        let msg = Msg {
+            src: Rank(0),
+            client: Rank(0),
+            req_id: 1,
+            class: MsgClass::ER,
+            body: Body::Req(Request::Read {
+                file: FileId(1),
+                offset: 0,
+                len: 1,
+                view: Some(View { disp: 0, desc }),
+                dst_base: 0,
+            }),
+        };
+        let mut buf = Vec::new();
+        encode_frame(&Frame::Msg { dst: Rank(1), msg }, &mut buf);
+        assert_eq!(decode_frame(&buf), Err(WireError::TooDeep));
+    }
+}

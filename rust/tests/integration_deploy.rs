@@ -1,0 +1,209 @@
+//! Real-process deployment tests: spawn the `vipios-server` binary as
+//! actual OS processes, connect over sockets from an in-test client,
+//! and verify bytes end to end — including the crash path, where a
+//! server is SIGKILLed mid-conversation and the client must surface an
+//! error (never panic, never hang).
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use vipios::client::Client;
+use vipios::msg::{Body, Msg, MsgClass, OpenMode, Request, Role, World};
+use vipios::transport::{Addr, SocketTransport};
+
+fn pat(off: u64) -> u8 {
+    let x = off.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    (x ^ (x >> 29) ^ (x >> 53)) as u8
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("vipios-itest-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// UDS addresses for `n` servers under `dir` (unix only — TCP coverage
+/// lives in `tcp_loopback_end_to_end`).
+#[cfg(unix)]
+fn uds_addrs(n: usize, dir: &std::path::Path) -> Vec<Addr> {
+    (0..n).map(|r| Addr::parse(&format!("uds:{}/vs{r}.sock", dir.display())).unwrap()).collect()
+}
+
+fn addr_list(addrs: &[Addr]) -> String {
+    addrs.iter().map(Addr::to_string).collect::<Vec<_>>().join(",")
+}
+
+fn spawn_server(rank: u32, addrs: &str) -> Child {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_vipios-server"))
+        .args(["--rank", &rank.to_string(), "--servers", addrs])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn vipios-server");
+    // startup barrier: the binary prints READY once its loop is up
+    let out = child.stdout.take().unwrap();
+    let mut line = String::new();
+    BufReader::new(out).read_line(&mut line).unwrap();
+    assert!(line.starts_with("READY"), "server {rank} failed before READY: {line:?}");
+    child
+}
+
+fn connect(world: &World, addrs: &[Addr]) -> Client {
+    let (t, my) = SocketTransport::client(addrs, world.clone()).unwrap();
+    world.set_remote(t);
+    let ep = world.join_as(my, Role::Client).unwrap();
+    Client::connect_with(world, ep).unwrap()
+}
+
+fn shutdown_servers(world: &World, servers: Vec<Child>) {
+    let src = vipios::msg::Rank(u32::MAX);
+    for s in world.servers() {
+        let _ = world.send(
+            s,
+            Msg {
+                src,
+                client: src,
+                req_id: 0,
+                class: MsgClass::ER,
+                body: Body::Req(Request::Shutdown),
+            },
+        );
+    }
+    for mut child in servers {
+        let start = Instant::now();
+        loop {
+            if child.try_wait().unwrap().is_some() {
+                break;
+            }
+            if start.elapsed() > Duration::from_secs(30) {
+                let _ = child.kill();
+                let _ = child.wait();
+                panic!("server ignored Shutdown for 30s");
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+    }
+}
+
+/// Run `body` on a watchdog thread: a deployment bug must fail the
+/// test, not wedge the whole suite.
+fn with_watchdog<T: Send + 'static>(what: &str, body: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        let _ = tx.send(body());
+    });
+    match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(v) => {
+            t.join().unwrap();
+            v
+        }
+        Err(_) => panic!("{what}: hung past the 120s watchdog"),
+    }
+}
+
+/// Two real server processes over UDS; bytes written through one
+/// in-test client come back verified.
+#[test]
+#[cfg(unix)]
+fn uds_two_servers_end_to_end() {
+    with_watchdog("uds e2e", || {
+        let dir = scratch("e2e");
+        let addrs = uds_addrs(2, &dir);
+        let list = addr_list(&addrs);
+        let servers: Vec<Child> = (0..2).map(|r| spawn_server(r, &list)).collect();
+
+        let world = World::new();
+        let mut c = connect(&world, &addrs);
+        let h = c.open("deploy-e2e", OpenMode::rdwr_create()).unwrap();
+        let total = 1u64 << 20;
+        let req = 64 * 1024;
+        let mut buf = vec![0u8; req as usize];
+        let mut off = 0u64;
+        while off < total {
+            for (i, b) in buf.iter_mut().enumerate() {
+                *b = pat(off + i as u64);
+            }
+            assert_eq!(c.write_at(h, off, &buf).unwrap(), req);
+            off += req;
+        }
+        c.sync(h).unwrap();
+        off = 0;
+        while off < total {
+            buf.fill(0);
+            assert_eq!(c.read_at(h, off, &mut buf).unwrap(), req as usize);
+            for (i, &b) in buf.iter().enumerate() {
+                assert_eq!(b, pat(off + i as u64), "corrupt byte at {}", off + i as u64);
+            }
+            off += req;
+        }
+        c.close(h).unwrap();
+        c.disconnect().unwrap();
+        shutdown_servers(&world, servers);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+/// TCP flavour: one server process on a loopback port.
+#[test]
+fn tcp_loopback_end_to_end() {
+    with_watchdog("tcp e2e", || {
+        // reserve an ephemeral port, then hand it to the server
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = probe.local_addr().unwrap().port();
+        drop(probe);
+        let addrs = vec![Addr::parse(&format!("tcp:127.0.0.1:{port}")).unwrap()];
+        let servers = vec![spawn_server(0, &addr_list(&addrs))];
+
+        let world = World::new();
+        let mut c = connect(&world, &addrs);
+        let h = c.open("deploy-tcp", OpenMode::rdwr_create()).unwrap();
+        let data: Vec<u8> = (0..65536u64).map(pat).collect();
+        assert_eq!(c.write_at(h, 0, &data).unwrap(), data.len() as u64);
+        let mut back = vec![0u8; data.len()];
+        assert_eq!(c.read_at(h, 0, &mut back).unwrap(), data.len());
+        assert_eq!(back, data);
+        c.close(h).unwrap();
+        c.disconnect().unwrap();
+        shutdown_servers(&world, servers);
+    });
+}
+
+/// The bugfix regression: SIGKILL the only server while the client has
+/// data on it, then read. The client must get an `Err` — either the
+/// send fails (`PeerDown`) or the in-flight op is failed by the
+/// `PeerGone` notification — and must never panic or hang.
+#[test]
+#[cfg(unix)]
+fn sigkilled_server_mid_read_yields_error_not_panic() {
+    with_watchdog("sigkill mid-read", || {
+        let dir = scratch("kill");
+        let addrs = uds_addrs(1, &dir);
+        let list = addr_list(&addrs);
+        let mut server = spawn_server(0, &list);
+
+        let world = World::new();
+        let mut c = connect(&world, &addrs);
+        let h = c.open("deploy-kill", OpenMode::rdwr_create()).unwrap();
+        let data = vec![0xABu8; 256 * 1024];
+        assert_eq!(c.write_at(h, 0, &data).unwrap(), data.len() as u64);
+
+        // the server dies with our data; reads must now fail cleanly
+        server.kill().unwrap();
+        server.wait().unwrap();
+        let mut buf = vec![0u8; data.len()];
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match c.read_at(h, 0, &mut buf) {
+                Err(_) => break, // the required outcome
+                // a read that raced the kill may still be served from
+                // data in flight; the EOF notification is on its way
+                Ok(_) => assert!(Instant::now() < deadline, "reads kept succeeding"),
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}

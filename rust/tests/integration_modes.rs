@@ -349,6 +349,60 @@ fn dead_foe_server_yields_error_not_hang() {
     p.shutdown().unwrap();
 }
 
+/// Deterministic mid-read crash: a scripted buddy answers the connect
+/// and the open, then dies the moment a read request arrives — after
+/// consuming it, before replying. The client's only way out is the
+/// `PeerGone` notification; it must turn into an error on the blocked
+/// `read_at`, never a hang and never a panic.
+#[test]
+fn buddy_dying_mid_read_fails_the_op_not_the_process() {
+    use vipios::msg::{Body, FileId, Msg, MsgClass, Rank, Request, Response, Role, World};
+
+    let world = World::new();
+    let sep = world.join_as(Rank(0), Role::Server).unwrap();
+    let sworld = world.clone();
+    let server = std::thread::spawn(move || {
+        while let Some(m) = sep.recv() {
+            let resp = match &m.body {
+                Body::Req(Request::Connect) => Response::Connected { buddy: sep.rank },
+                Body::Req(Request::Open { .. }) => Response::Opened { file: FileId(7), size: 0 },
+                Body::Req(Request::Read { .. }) => {
+                    // the crash point: request consumed, no reply ever
+                    sworld.leave(sep.rank);
+                    return;
+                }
+                _ => continue,
+            };
+            let _ = sep.send(
+                m.src,
+                Msg {
+                    src: sep.rank,
+                    client: m.client,
+                    req_id: m.req_id,
+                    class: MsgClass::ACK,
+                    body: Body::Resp(resp),
+                },
+            );
+        }
+    });
+
+    let ep = world.join(Role::Client);
+    let mut c = Client::connect_with(&world, ep).unwrap();
+    let h = c.open("ghost", OpenMode::rdwr_create()).unwrap();
+    // run the read on a helper thread so a regression fails the test
+    // via the timeout instead of wedging the suite
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let mut buf = vec![0u8; 4096];
+        let _ = tx.send(c.read_at(h, 0, &mut buf).map(|_| ()));
+    });
+    let res = rx
+        .recv_timeout(std::time::Duration::from_secs(30))
+        .expect("client hung on a read its dead buddy will never answer");
+    assert!(res.is_err(), "read must fail once the buddy is gone");
+    server.join().unwrap();
+}
+
 #[test]
 fn disk_full_surfaces_as_write_error() {
     // a tiny sim-disk capacity forces ENOSPC on the server

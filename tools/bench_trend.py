@@ -112,6 +112,15 @@ def row_label(docs_by_label, key):
 
 
 def render(labels, order, values, docs_by_label):
+    if not order:
+        # Well-formed empty report: a fresh branch whose runs carry no
+        # artifacts yet must still yield valid Markdown (and exit 0),
+        # not a zero-byte file that breaks downstream includes.
+        return (
+            "### bench trend\n\n"
+            f"no `BENCH_*.json` artifacts across {len(labels)} run(s); "
+            "nothing to trend yet.\n"
+        )
     lines = []
     by_table = {}
     for key in order:
@@ -155,6 +164,11 @@ def self_test():
     # a run missing the cell renders a dash
     md2 = render(["r1", "r2", "r3"], order, values, docs_by_label)
     assert "| 10 | 12.5 | — |" in md2, md2
+    # no artifacts at all -> well-formed empty report, not a blank file
+    order0, values0 = collect([("r1", {})])
+    assert (order0, values0) == ([], {}), (order0, values0)
+    md0 = render(["r1"], order0, values0, {"r1": {}})
+    assert md0.strip() and "nothing to trend" in md0, md0
     print("self-test OK")
     return 0
 
