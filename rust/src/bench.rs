@@ -766,18 +766,39 @@ pub struct CollectiveRun {
     pub coalesced_runs: u64,
     /// `ServerStats::collective_windows` delta over the phase.
     pub windows: u64,
+    /// `ServerStats::bytes_copied` delta over the phase (data-plane
+    /// memcpys — CoW unshares plus reorg shipping; see DESIGN.md §4.7).
+    pub bytes_copied: u64,
+    /// `ServerStats::bytes_aliased` delta over the phase (bytes served
+    /// as slices of resident cache pages or the shared zero frame).
+    pub bytes_aliased: u64,
+    /// Bytes the clients demanded during the phase (`total`): the
+    /// denominator of the copied-per-demand-byte gate cell.
+    pub demand: u64,
 }
 
-fn coll_stat_sweep(c: &mut Client, pool: &ServerPool) -> Result<(u64, u64, u64, u64)> {
+impl CollectiveRun {
+    /// Data-plane copies per demanded byte — the zero-copy figure of
+    /// merit. ≤ 1.0 means the read path aliases cache pages instead of
+    /// flattening each response.
+    pub fn copied_per_byte(&self) -> f64 {
+        self.bytes_copied as f64 / self.demand.max(1) as f64
+    }
+}
+
+fn coll_stat_sweep(c: &mut Client, pool: &ServerPool) -> Result<(u64, u64, u64, u64, u64, u64)> {
     let (mut msgs, mut ext, mut runs, mut win) = (0u64, 0u64, 0u64, 0u64);
+    let (mut copied, mut aliased) = (0u64, 0u64);
     for &s in pool.server_ranks() {
         let st = c.stats_of(s)?;
         msgs += st.ext_requests + st.int_requests;
         ext += st.list_extents;
         runs += st.coalesced_runs;
         win += st.collective_windows;
+        copied += st.bytes_copied;
+        aliased += st.bytes_aliased;
     }
-    Ok((msgs, ext, runs, win))
+    Ok((msgs, ext, runs, win, copied, aliased))
 }
 
 /// E11 workload — the E4c interleaved shape: `nprocs` SPMD clients
@@ -874,6 +895,9 @@ pub fn collective_read(
         list_extents: after.1 - before.1,
         coalesced_runs: after.2 - before.2,
         windows: after.3 - before.3,
+        bytes_copied: after.4 - before.4,
+        bytes_aliased: after.5 - before.5,
+        demand: total,
     })
 }
 
@@ -1923,7 +1947,15 @@ pub mod tables {
         );
         print_table(
             "E11 message amplification — read phase (ER+DI over all servers)",
-            &["mode", "msgs", "list extents", "coalesced runs", "windows"],
+            &[
+                "mode",
+                "msgs",
+                "list extents",
+                "coalesced runs",
+                "windows",
+                "copied/demand",
+                "aliased/demand",
+            ],
             &[
                 vec![
                     "independent".into(),
@@ -1931,6 +1963,8 @@ pub mod tables {
                     ind.list_extents.to_string(),
                     ind.coalesced_runs.to_string(),
                     ind.windows.to_string(),
+                    format!("{:.3}", ind.copied_per_byte()),
+                    format!("{:.3}", ind.bytes_aliased as f64 / ind.demand.max(1) as f64),
                 ],
                 vec![
                     "collective".into(),
@@ -1938,16 +1972,19 @@ pub mod tables {
                     coll.list_extents.to_string(),
                     coll.coalesced_runs.to_string(),
                     coll.windows.to_string(),
+                    format!("{:.3}", coll.copied_per_byte()),
+                    format!("{:.3}", coll.bytes_aliased as f64 / coll.demand.max(1) as f64),
                 ],
             ],
         );
         print_table(
             "E11 summary — server-side aggregation vs two-phase baseline",
-            &["two-phase MB/s", "collective MB/s", "speedup"],
+            &["two-phase MB/s", "collective MB/s", "speedup", "copied/demand"],
             &[vec![
                 format!("{tp:.1}"),
                 format!("{:.1}", coll.mbps),
                 format!("{:.2}x", coll.mbps / tp.max(1e-9)),
+                format!("{:.3}", coll.copied_per_byte()),
             ]],
         );
         Ok(())
@@ -2160,6 +2197,18 @@ mod tests {
             coll.coalesced_runs < coll.list_extents,
             "interleaved blocks must merge: {coll:?}"
         );
+        // zero-copy acceptance: the read phase serves demand by aliasing
+        // cache pages, not by flattening responses
+        for r in [&ind, &coll] {
+            assert!(
+                r.copied_per_byte() <= 1.0,
+                "read phase copied more than it served: {r:?}"
+            );
+            assert!(
+                r.bytes_aliased >= r.demand,
+                "demand not covered by aliased slices: {r:?}"
+            );
+        }
     }
 
     /// E11 acceptance shape (nightly: timing-sensitive): server-side

@@ -1,0 +1,443 @@
+//! Shared page-frame buffers — the zero-copy data plane (DESIGN.md §4.7).
+//!
+//! Every bulk payload in the system used to be a `Vec<u8>` cloned at each
+//! hop (disk fill → buffer cache → `Response::Data` body → client buffer).
+//! This module is the hand-rolled replacement: a [`Frame`] is an
+//! `Arc<[u8]>` page of bytes shared by reference, a [`ByteSlice`] is a
+//! cheap `(frame, offset, len)` view into one, and a [`SliceList`] is the
+//! gather vector a noncontiguous read response carries — a sequence of
+//! views that *alias* resident cache pages instead of copying them.
+//!
+//! Mutation goes through [`Frame::make_mut`], which is copy-on-write: a
+//! uniquely held frame is written in place; a shared one (somebody holds a
+//! slice of it — an in-flight response, a victim write-back) is cloned
+//! first, so readers always see the bytes as they were when the slice was
+//! taken. No `unsafe` anywhere; the only copies left on the hot path are
+//! the one-time `Vec → Arc` seal when a frame is born and the CoW clone
+//! when a shared page is dirtied.
+
+use std::sync::Arc;
+
+/// A reference-counted, immutable-while-shared page of bytes.
+///
+/// Cloning a `Frame` clones the `Arc`, not the bytes. Equality compares
+/// byte content; [`Frame::ptr_eq`] compares identity (same allocation).
+#[derive(Clone)]
+pub struct Frame {
+    bytes: Arc<[u8]>,
+}
+
+impl Frame {
+    /// Seal a `Vec` into a frame. This is the one unavoidable copy at a
+    /// frame's birth (`Arc<[u8]>` construction re-allocates), documented
+    /// in DESIGN.md §4.7 and *not* counted as a data-plane copy.
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        Frame { bytes: v.into() }
+    }
+
+    /// An all-zero frame of `len` bytes (hole reads, shared zero pages).
+    pub fn zeros(len: usize) -> Self {
+        Frame::from_vec(vec![0u8; len])
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Is this frame's allocation visible anywhere else? When true, the
+    /// next [`Frame::make_mut`] will pay a copy-on-write clone.
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.bytes) > 1 || Arc::weak_count(&self.bytes) > 0
+    }
+
+    /// Mutable access, copy-on-write: unique frames are written in place,
+    /// shared frames are unshared by cloning their bytes first. Callers
+    /// that account copies check [`Frame::is_shared`] *before* calling.
+    pub fn make_mut(&mut self) -> &mut [u8] {
+        if Arc::get_mut(&mut self.bytes).is_none() {
+            let copy: Arc<[u8]> = self.bytes.as_ref().into();
+            self.bytes = copy;
+        }
+        Arc::get_mut(&mut self.bytes).expect("frame just unshared")
+    }
+
+    /// Same allocation (not just same bytes)?
+    pub fn ptr_eq(a: &Frame, b: &Frame) -> bool {
+        Arc::ptr_eq(&a.bytes, &b.bytes)
+    }
+}
+
+impl From<Vec<u8>> for Frame {
+    fn from(v: Vec<u8>) -> Self {
+        Frame::from_vec(v)
+    }
+}
+
+impl std::ops::Deref for Frame {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+impl AsRef<[u8]> for Frame {
+    fn as_ref(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+impl PartialEq for Frame {
+    fn eq(&self, other: &Self) -> bool {
+        Frame::ptr_eq(self, other) || self.as_bytes() == other.as_bytes()
+    }
+}
+
+impl Eq for Frame {}
+
+impl std::fmt::Debug for Frame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Frame({} B, rc {})", self.len(), Arc::strong_count(&self.bytes))
+    }
+}
+
+/// A `(frame, offset, len)` view: the unit a gather response is made of.
+/// Cloning is an `Arc` bump; the bytes are borrowed via
+/// [`ByteSlice::as_bytes`]. A slice keeps its frame's allocation alive,
+/// so an aliased response survives the page's eviction from the cache.
+#[derive(Clone)]
+pub struct ByteSlice {
+    frame: Frame,
+    off: usize,
+    len: usize,
+}
+
+impl ByteSlice {
+    /// View `[off, off+len)` of `frame`. Panics on out-of-range bounds —
+    /// a slice is constructed from runs the caller already validated.
+    pub fn new(frame: Frame, off: usize, len: usize) -> Self {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= frame.len()),
+            "slice [{off}, {off}+{len}) out of frame of {} bytes",
+            frame.len()
+        );
+        ByteSlice { frame, off, len }
+    }
+
+    /// The whole frame as one slice.
+    pub fn full(frame: Frame) -> Self {
+        let len = frame.len();
+        ByteSlice { frame, off: 0, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.frame.as_bytes()[self.off..self.off + self.len]
+    }
+
+    /// Sub-view `[off, off+len)` *of this slice* (not of the frame).
+    pub fn slice(&self, off: usize, len: usize) -> ByteSlice {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "sub-slice [{off}, {off}+{len}) out of slice of {} bytes",
+            self.len
+        );
+        ByteSlice { frame: self.frame.clone(), off: self.off + off, len }
+    }
+
+    /// The frame this slice aliases.
+    pub fn frame(&self) -> &Frame {
+        &self.frame
+    }
+}
+
+impl PartialEq for ByteSlice {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_bytes() == other.as_bytes()
+    }
+}
+
+impl Eq for ByteSlice {}
+
+impl std::fmt::Debug for ByteSlice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ByteSlice({}+{} of {:?})", self.off, self.len, self.frame)
+    }
+}
+
+/// The gather vector a data response carries: an ordered sequence of
+/// [`ByteSlice`]s whose concatenation is the payload. Local (mpsc)
+/// delivery hands the list over as-is — zero copies; the wire codec
+/// flattens it only when the bytes actually cross a process boundary.
+///
+/// Equality (including against `Vec<u8>`/`[u8]`) compares the byte
+/// *stream*, independent of how it is fragmented into slices.
+#[derive(Clone, Default)]
+pub struct SliceList {
+    parts: Vec<ByteSlice>,
+    total: usize,
+}
+
+impl SliceList {
+    pub fn new() -> Self {
+        SliceList::default()
+    }
+
+    /// Wrap owned bytes as a single-slice list (wire decode, tests).
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        let mut l = SliceList::new();
+        l.push(ByteSlice::full(Frame::from_vec(v)));
+        l
+    }
+
+    /// Append a slice; empty slices are dropped (they carry no bytes and
+    /// would only bloat the gather vector).
+    pub fn push(&mut self, s: ByteSlice) {
+        if s.is_empty() {
+            return;
+        }
+        self.total += s.len();
+        self.parts.push(s);
+    }
+
+    /// Append `len` zero bytes by aliasing a caller-held zero frame
+    /// repeatedly (hole reads: no allocation, no copy).
+    pub fn push_zeros(&mut self, zero: &Frame, mut len: usize) {
+        assert!(!zero.is_empty() || len == 0, "zero frame must not be empty");
+        while len > 0 {
+            let n = len.min(zero.len());
+            self.push(ByteSlice::new(zero.clone(), 0, n));
+            len -= n;
+        }
+    }
+
+    /// Total payload bytes (so `resp.data.len()` keeps meaning what it
+    /// meant when the payload was a `Vec<u8>`).
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// The gather vector itself.
+    pub fn parts(&self) -> &[ByteSlice] {
+        &self.parts
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, ByteSlice> {
+        self.parts.iter()
+    }
+
+    /// Concatenate into an owned `Vec` — the cross-process fallback and
+    /// the naive-concat reference the property tests compare against.
+    pub fn flatten(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total);
+        for p in &self.parts {
+            out.extend_from_slice(p.as_bytes());
+        }
+        out
+    }
+
+    /// Gather-copy into `out` (the client's final placement copy).
+    /// Panics unless `out.len()` equals the list's total length.
+    pub fn copy_to(&self, out: &mut [u8]) {
+        assert_eq!(out.len(), self.total, "copy_to target length mismatch");
+        let mut at = 0usize;
+        for p in &self.parts {
+            out[at..at + p.len()].copy_from_slice(p.as_bytes());
+            at += p.len();
+        }
+    }
+
+    /// Byte-stream equality against a plain slice, fragment-agnostic.
+    fn eq_bytes(&self, mut other: &[u8]) -> bool {
+        if self.total != other.len() {
+            return false;
+        }
+        for p in &self.parts {
+            let (head, tail) = other.split_at(p.len());
+            if head != p.as_bytes() {
+                return false;
+            }
+            other = tail;
+        }
+        true
+    }
+}
+
+impl<'a> IntoIterator for &'a SliceList {
+    type Item = &'a ByteSlice;
+    type IntoIter = std::slice::Iter<'a, ByteSlice>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.parts.iter()
+    }
+}
+
+impl PartialEq for SliceList {
+    fn eq(&self, other: &Self) -> bool {
+        if self.total != other.total {
+            return false;
+        }
+        // fragment-agnostic: walk both gather vectors with byte cursors
+        let (mut i, mut j) = (0usize, 0usize);
+        let (mut io, mut jo) = (0usize, 0usize);
+        while i < self.parts.len() && j < other.parts.len() {
+            let a = &self.parts[i].as_bytes()[io..];
+            let b = &other.parts[j].as_bytes()[jo..];
+            let n = a.len().min(b.len());
+            if a[..n] != b[..n] {
+                return false;
+            }
+            io += n;
+            jo += n;
+            if io == self.parts[i].len() {
+                i += 1;
+                io = 0;
+            }
+            if jo == other.parts[j].len() {
+                j += 1;
+                jo = 0;
+            }
+        }
+        true
+    }
+}
+
+impl Eq for SliceList {}
+
+impl PartialEq<Vec<u8>> for SliceList {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.eq_bytes(other)
+    }
+}
+
+impl PartialEq<&[u8]> for SliceList {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.eq_bytes(other)
+    }
+}
+
+impl PartialEq<SliceList> for Vec<u8> {
+    fn eq(&self, other: &SliceList) -> bool {
+        other.eq_bytes(self)
+    }
+}
+
+impl std::fmt::Debug for SliceList {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SliceList({} B in {} parts)", self.total, self.parts.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_clone_shares_then_cow_isolates() {
+        let mut a = Frame::from_vec(vec![1, 2, 3, 4]);
+        let b = a.clone();
+        assert!(a.is_shared());
+        assert!(Frame::ptr_eq(&a, &b));
+        a.make_mut()[0] = 9;
+        assert!(!Frame::ptr_eq(&a, &b));
+        assert_eq!(a.as_bytes(), &[9, 2, 3, 4]);
+        assert_eq!(b.as_bytes(), &[1, 2, 3, 4]);
+        // unique again: in-place mutation, no further unsharing
+        assert!(!a.is_shared());
+        a.make_mut()[1] = 8;
+        assert_eq!(a.as_bytes(), &[9, 8, 3, 4]);
+    }
+
+    #[test]
+    fn slice_views_and_subslices() {
+        let f = Frame::from_vec((0u8..16).collect());
+        let s = ByteSlice::new(f.clone(), 4, 8);
+        assert_eq!(s.as_bytes(), &[4, 5, 6, 7, 8, 9, 10, 11]);
+        let t = s.slice(2, 3);
+        assert_eq!(t.as_bytes(), &[6, 7, 8]);
+        assert!(Frame::ptr_eq(t.frame(), &f));
+    }
+
+    #[test]
+    fn slice_survives_source_drop() {
+        let s = {
+            let f = Frame::from_vec(vec![7u8; 32]);
+            ByteSlice::new(f, 8, 16)
+        };
+        assert_eq!(s.as_bytes(), &[7u8; 16][..]);
+    }
+
+    #[test]
+    fn slicelist_flatten_matches_naive_concat() {
+        let f = Frame::from_vec((0u8..32).collect());
+        let g = Frame::from_vec(vec![0xAA; 8]);
+        let mut l = SliceList::new();
+        l.push(ByteSlice::new(f.clone(), 0, 4));
+        l.push(ByteSlice::new(g.clone(), 2, 3));
+        l.push(ByteSlice::new(f.clone(), 30, 2));
+        let mut naive = Vec::new();
+        naive.extend_from_slice(&f.as_bytes()[0..4]);
+        naive.extend_from_slice(&g.as_bytes()[2..5]);
+        naive.extend_from_slice(&f.as_bytes()[30..32]);
+        assert_eq!(l.flatten(), naive);
+        assert_eq!(l.len(), naive.len());
+        assert_eq!(l, naive);
+        let mut out = vec![0u8; naive.len()];
+        l.copy_to(&mut out);
+        assert_eq!(out, naive);
+    }
+
+    #[test]
+    fn slicelist_equality_is_fragment_agnostic() {
+        let f = Frame::from_vec((0u8..10).collect());
+        let mut a = SliceList::new();
+        a.push(ByteSlice::new(f.clone(), 0, 10));
+        let mut b = SliceList::new();
+        b.push(ByteSlice::new(f.clone(), 0, 3));
+        b.push(ByteSlice::new(f.clone(), 3, 7));
+        assert_eq!(a, b);
+        let mut c = SliceList::new();
+        c.push(ByteSlice::new(f.clone(), 0, 9));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn push_zeros_aliases_without_alloc() {
+        let zero = Frame::zeros(4);
+        let mut l = SliceList::new();
+        l.push_zeros(&zero, 10);
+        assert_eq!(l.len(), 10);
+        assert_eq!(l, vec![0u8; 10]);
+        // every part aliases the same zero frame
+        for p in &l {
+            assert!(Frame::ptr_eq(p.frame(), &zero));
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_dropped() {
+        let f = Frame::from_vec(vec![1, 2, 3]);
+        let mut l = SliceList::new();
+        l.push(ByteSlice::new(f, 1, 0));
+        assert!(l.is_empty());
+        assert_eq!(l.parts().len(), 0);
+        assert_eq!(l, Vec::new());
+    }
+}

@@ -75,8 +75,10 @@ struct OpState {
     /// `ReadPlanned`).
     expected: Option<u64>,
     received: u64,
-    /// Read data staged as (dst_base, bytes).
-    staged: Vec<(u64, Vec<u8>)>,
+    /// Read data staged as (dst_base, gather list). The slices alias the
+    /// serving server's cache pages until the final placement copy in
+    /// [`Client::wait`] — the only copy a local read pays (DESIGN.md §4.7).
+    staged: Vec<(u64, crate::buf::SliceList)>,
     /// Completed admin response.
     done: Option<Response>,
     error: Option<String>,
@@ -711,7 +713,7 @@ impl Client {
                 let mut data = vec![0u8; total];
                 for (base, part) in st.staged {
                     let b = base as usize;
-                    data[b..b + part.len()].copy_from_slice(&part);
+                    part.copy_to(&mut data[b..b + part.len()]);
                 }
                 OpResult::Read(data)
             }

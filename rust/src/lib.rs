@@ -36,6 +36,7 @@
 pub mod access;
 pub mod baselines;
 pub mod bench;
+pub mod buf;
 pub mod check;
 pub mod client;
 pub mod directory;

@@ -340,6 +340,17 @@ pub struct ServerStats {
     /// Collective aggregation windows flushed (complete, byte-budget
     /// trip or deadline — each flush services the arrivals it held).
     pub collective_windows: u64,
+    /// Data-plane bytes memcpy'd after their frame existed (DESIGN.md
+    /// §4.7): legacy copy-reads (reorg shipping), write-path payload
+    /// splitting/flattening, and — via the `Stat` overlay — the cache's
+    /// copy-on-write clones. The one-time `Vec → Arc` seal of a frame at
+    /// birth is *not* counted.
+    pub bytes_copied: u64,
+    /// Data-plane bytes handed out as [`crate::buf::ByteSlice`] views
+    /// aliasing a live frame (cache pages, the shared zero frame) with
+    /// no copy. Every byte of `bytes_read` is served this way, so
+    /// `bytes_read <= bytes_copied + bytes_aliased` at every instant.
+    pub bytes_aliased: u64,
 }
 
 impl ServerStats {
@@ -365,6 +376,13 @@ impl ServerStats {
             return Err(format!(
                 "continuation balance: io_resumed {} > io_parked {}",
                 self.io_resumed, self.io_parked
+            ));
+        }
+        if self.bytes_read > self.bytes_copied + self.bytes_aliased {
+            return Err(format!(
+                "zero-copy balance: bytes_read {} > copied {} + aliased {} \
+                 (a served byte must be accounted as a copy or an alias)",
+                self.bytes_read, self.bytes_copied, self.bytes_aliased
             ));
         }
         Ok(())
@@ -468,7 +486,10 @@ pub enum Response {
     /// bytes of `Data` ACKs (possibly from several servers) will follow.
     ReadPlanned { total: u64 },
     /// Partial read data: place at `dst_base` in the request buffer.
-    Data { dst_base: u64, data: Vec<u8> },
+    /// The payload is a gather vector of [`crate::buf::ByteSlice`]s that
+    /// alias the serving server's cache pages — local (mpsc) delivery is
+    /// zero-copy; the wire codec flattens only at a process boundary.
+    Data { dst_base: u64, data: crate::buf::SliceList },
     /// BI `Lookup` answer (to the asking server).
     LookupAck { meta: Option<crate::directory::FileMeta> },
     /// `GetMeta` answer (authoritative, from the home server).
@@ -1176,6 +1197,14 @@ mod tests {
         assert!(st.check_invariants().is_err());
         st.coalesced_runs = 2;
         assert!(st.check_invariants().is_ok());
+        // zero-copy balance: every served byte is a copy or an alias
+        let mut st = ServerStats { bytes_read: 10, ..Default::default() };
+        assert!(st.check_invariants().is_err());
+        st.bytes_aliased = 6;
+        st.bytes_copied = 4;
+        assert!(st.check_invariants().is_ok());
+        st.bytes_read = 11;
+        assert!(st.check_invariants().is_err());
     }
 
     #[test]

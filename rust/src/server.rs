@@ -36,6 +36,7 @@ use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::buf::{Frame, SliceList};
 use crate::directory::{Directory, FileMeta, Fragment, EXTENT};
 use crate::disk::{
     Disk, IoJob, IoKind, IoPrio, IoScheduler, MemDisk, SimCost, SimDisk, UnixDisk,
@@ -419,6 +420,9 @@ pub struct Server {
     /// Highest layout epoch observed per file — the model-mode
     /// monotonicity oracle ([`Self::self_check`]).
     epoch_seen: HashMap<FileId, u64>,
+    /// Shared zero frame for hole reads: every zero run in a `Data`
+    /// response aliases this one allocation ([`SliceList::push_zeros`]).
+    zeros: Frame,
     stats: ServerStats,
     /// Shared shutdown flag for pools.
     pub running: Arc<AtomicU64>,
@@ -535,6 +539,7 @@ impl Server {
             next_file: 0,
             next_buddy: 0,
             epoch_seen: HashMap::new(),
+            zeros: Frame::zeros(64 * 1024),
             stats: ServerStats::default(),
             running: Arc::new(AtomicU64::new(1)),
         })
@@ -820,12 +825,8 @@ impl Server {
             None => {
                 // file unknown here: everything reads as zeros (hole)
                 for &(_, len, dst) in parts {
-                    self.ack(
-                        client,
-                        client,
-                        req_id,
-                        Response::Data { dst_base: dst, data: vec![0; len as usize] },
-                    );
+                    let data = self.zero_data(len);
+                    self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
                 }
                 return false;
             }
@@ -1114,7 +1115,9 @@ impl Server {
     }
 
     /// Read `(local, len, dst)` runs of one fragment and ACK each as
-    /// `Data` directly to the client's VI; returns bytes served.
+    /// `Data` directly to the client's VI; returns bytes served. The
+    /// payloads are gather lists aliasing resident cache pages — no copy
+    /// on this path (DESIGN.md §4.7).
     fn read_frag_parts(
         &mut self,
         frag: &Fragment,
@@ -1124,14 +1127,51 @@ impl Server {
     ) -> u64 {
         let mut total = 0u64;
         for &(local, len, dst) in parts {
-            let data = self.read_frag_bytes(frag, local, len);
+            let data = self.read_frag_slices(frag, local, len);
             total += len;
             self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
         }
         total
     }
 
-    /// Read one local run through the cache; holes come back as zeros.
+    /// Read one local run through the cache as [`crate::buf::ByteSlice`]
+    /// views of the resident pages; hole runs alias the shared zero
+    /// frame. Every byte served here counts as `bytes_aliased` — this is
+    /// the zero-copy hot path behind every `Data` response.
+    fn read_frag_slices(&mut self, frag: &Fragment, local: u64, len: u64) -> SliceList {
+        let disk = self.disks[frag.disk_idx].clone();
+        let mut out = SliceList::new();
+        for (d, run) in frag.runs(local, len) {
+            if let Some(doff) = d {
+                // a rare inline fill (page evicted while this op was
+                // parked) must not race a queued write-behind job
+                self.wb_fence_range(frag.disk_idx, doff, run);
+                let before = out.len();
+                let _ = self.cache.read_slices(
+                    frag.disk_idx,
+                    &disk,
+                    doff,
+                    run as usize,
+                    &mut out,
+                );
+                // disk error mid-run: best-effort zeros, like the copy
+                // path's untouched buffer tail
+                let got = out.len() - before;
+                if got < run as usize {
+                    out.push_zeros(&self.zeros, run as usize - got);
+                }
+            } else {
+                out.push_zeros(&self.zeros, run as usize);
+            }
+        }
+        self.stats.bytes_aliased += len;
+        out
+    }
+
+    /// Read one local run through the cache into an owned buffer; holes
+    /// come back as zeros. Kept for the reorg shipper, which mutates /
+    /// re-frames the bytes it moves — every byte read here counts as
+    /// `bytes_copied`.
     fn read_frag_bytes(&mut self, frag: &Fragment, local: u64, len: u64) -> Vec<u8> {
         let disk = self.disks[frag.disk_idx].clone();
         let mut buf = vec![0u8; len as usize];
@@ -1150,7 +1190,18 @@ impl Server {
             }
             at += run as usize;
         }
+        self.stats.bytes_copied += len;
         buf
+    }
+
+    /// A `len`-byte all-zero `Data` payload aliasing the shared zero
+    /// frame (unknown-file and hole reads): no allocation, counted as
+    /// aliased bytes.
+    fn zero_data(&mut self, len: u64) -> SliceList {
+        let mut l = SliceList::new();
+        l.push_zeros(&self.zeros, len as usize);
+        self.stats.bytes_aliased += len;
+        l
     }
 
     /// Per-server local sequential readahead (pipelined parallelism).
@@ -1456,12 +1507,8 @@ impl Server {
                 // file unknown here: hole semantics, zeros for everyone
                 for (client, req_id, parts) in out {
                     for &(_, len, dst) in &parts {
-                        self.ack(
-                            client,
-                            client,
-                            req_id,
-                            Response::Data { dst_base: dst, data: vec![0; len as usize] },
-                        );
+                        let data = self.zero_data(len);
+                        self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
                     }
                 }
                 return false;
@@ -2419,6 +2466,9 @@ impl Server {
                     s.io_max_queue_depth = s.io_max_queue_depth.max(ss.max_queue_depth);
                 }
                 s.disk_bytes = self.disks.iter().map(|d| d.len()).sum();
+                // copy-on-write unshares happen inside the cache; fold
+                // them into the server's data-plane copy counter
+                s.bytes_copied += cs.cow_bytes;
                 self.ack(src, client, req_id, Response::Stats(Box::new(s)));
             }
             Request::Dump => {
@@ -3149,12 +3199,8 @@ impl Server {
         let Some(e) = self.dir.get(file) else {
             for (client, req_id, parts) in reads {
                 for &(_, len, dst) in &parts {
-                    self.ack(
-                        client,
-                        client,
-                        req_id,
-                        Response::Data { dst_base: dst, data: vec![0; len as usize] },
-                    );
+                    let data = self.zero_data(len);
+                    self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
                 }
             }
             return;
@@ -4014,12 +4060,8 @@ impl Server {
             // nothing known here: the bytes read as zeros (hole
             // semantics, same as an unknown file)
             for &(_, len, dst) in parts {
-                self.ack(
-                    client,
-                    client,
-                    req_id,
-                    Response::Data { dst_base: dst, data: vec![0; len as usize] },
-                );
+                let data = self.zero_data(len);
+                self.ack(client, client, req_id, Response::Data { dst_base: dst, data });
             }
             return;
         };
@@ -4522,8 +4564,8 @@ mod tests {
             match c.recv().unwrap().body {
                 Body::Resp(Response::Data { dst_base, data }) => {
                     got += data.len();
-                    buf[dst_base as usize..dst_base as usize + data.len()]
-                        .copy_from_slice(&data);
+                    let at = dst_base as usize;
+                    data.copy_to(&mut buf[at..at + data.len()]);
                 }
                 other => panic!("{other:?}"),
             }

@@ -431,13 +431,19 @@ impl Transport for SocketTransport {
 /// Writer loop body: block for one frame, then opportunistically drain
 /// the queue before paying a single flush. Returns on a clean `Bye` or a
 /// closed queue; errors are the caller's cue to mark the peer down.
+///
+/// The scratch buffer is reused across frames (no per-frame allocation),
+/// and `Data` payloads go out as vectored gather writes straight from
+/// the slices aliasing the server's cache pages
+/// ([`wire::write_frame_buf`]) — the transport never flattens them.
 fn pump_frames(rx: &Receiver<Frame>, w: &mut BufWriter<Conn>) -> io::Result<()> {
+    let mut scratch = Vec::with_capacity(4096);
     while let Ok(frame) = rx.recv() {
-        if write_one(w, &frame)? {
+        if write_one(w, &frame, &mut scratch)? {
             return Ok(());
         }
         while let Ok(f) = rx.try_recv() {
-            if write_one(w, &f)? {
+            if write_one(w, &f, &mut scratch)? {
                 return Ok(());
             }
         }
@@ -447,8 +453,8 @@ fn pump_frames(rx: &Receiver<Frame>, w: &mut BufWriter<Conn>) -> io::Result<()> 
 }
 
 /// Write one frame; returns `true` after flushing a `Bye` (end of link).
-fn write_one(w: &mut BufWriter<Conn>, f: &Frame) -> io::Result<bool> {
-    wire::write_frame(w, f)?;
+fn write_one(w: &mut BufWriter<Conn>, f: &Frame, scratch: &mut Vec<u8>) -> io::Result<bool> {
+    wire::write_frame_buf(w, f, scratch)?;
     if matches!(f, Frame::Bye) {
         w.flush()?;
         return Ok(true);

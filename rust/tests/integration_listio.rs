@@ -34,6 +34,8 @@ struct Sweep {
     extents: u64,
     runs: u64,
     windows: u64,
+    copied: u64,
+    aliased: u64,
 }
 
 fn sweep(c: &mut Client, p: &ServerPool) -> Sweep {
@@ -41,13 +43,16 @@ fn sweep(c: &mut Client, p: &ServerPool) -> Sweep {
     for &s in p.server_ranks() {
         let st = c.stats_of(s).unwrap();
         // centralized balance relations (coalesced_runs <= list_extents
-        // among them) must hold on every snapshot this suite takes
+        // and bytes_read <= bytes_copied + bytes_aliased among them)
+        // must hold on every snapshot this suite takes
         st.check_invariants().unwrap();
         out.msgs += st.ext_requests + st.int_requests;
         out.reqs += st.list_requests;
         out.extents += st.list_extents;
         out.runs += st.coalesced_runs;
         out.windows += st.collective_windows;
+        out.copied += st.bytes_copied;
+        out.aliased += st.bytes_aliased;
     }
     out
 }
@@ -194,6 +199,19 @@ fn collective_read_aggregates_one_window() {
     assert!(
         wire <= (2 * nprocs + nservers) as u64,
         "collective read took {wire} messages"
+    );
+    // zero-copy: the scatter flush serves every demanded byte as slices
+    // aliasing resident cache pages — the data plane pays no memcpy at
+    // all during the read phase, let alone one that scales with nprocs
+    let copied = after.copied - before.copied;
+    let aliased = after.aliased - before.aliased;
+    assert_eq!(
+        copied, 0,
+        "collective-window read phase must not copy (got {copied} B for {nprocs} procs)"
+    );
+    assert!(
+        aliased >= total,
+        "aliased {aliased} B must cover the {total} B demand"
     );
     p.shutdown().unwrap();
 }

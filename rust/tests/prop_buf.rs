@@ -1,0 +1,186 @@
+//! Property tests for the shared-buffer primitives (`vipios::buf`) —
+//! the zero-copy data plane of DESIGN.md §4.7. Deterministic xorshift
+//! PRNG in place of proptest (not in the vendored crate set); no I/O,
+//! no threads, modest iteration counts — this suite also runs under
+//! Miri in CI to check the aliasing story at the language level.
+//!
+//! Properties:
+//!  * slice algebra: nested sub-slicing reads exactly the bytes direct
+//!    indexing of the sealed source would;
+//!  * CoW isolation: a slice taken before a write sees the frame as it
+//!    was, however the writes interleave;
+//!  * gather lists: any fragmentation of a payload flattens, copies and
+//!    compares equal to the naive concatenation — and to any *other*
+//!    fragmentation of the same payload.
+
+use vipios::buf::{ByteSlice, Frame, SliceList};
+use vipios::util::XorShift64;
+
+/// Split `payload` into a gather list at random boundaries, each part
+/// served from its own sealed frame at a random interior offset.
+fn random_split(r: &mut XorShift64, payload: &[u8]) -> SliceList {
+    let mut list = SliceList::new();
+    let mut at = 0usize;
+    while at < payload.len() {
+        let n = r.range(1, (payload.len() - at) as u64) as usize;
+        // embed the run at a random offset inside a larger frame so the
+        // slice arithmetic (not just full-frame views) is exercised
+        let pad = r.below(8) as usize;
+        let tail = r.below(8) as usize;
+        let mut bytes = vec![0xEEu8; pad];
+        bytes.extend_from_slice(&payload[at..at + n]);
+        bytes.resize(bytes.len() + tail, 0xEE);
+        list.push(ByteSlice::new(Frame::from_vec(bytes), pad, n));
+        at += n;
+    }
+    list
+}
+
+#[test]
+fn slice_algebra_round_trips() {
+    let mut r = XorShift64::new(0xB0F_5EED);
+    for _ in 0..64 {
+        let src = r.bytes(r.range(1, 256) as usize);
+        let frame = Frame::from_vec(src.clone());
+        assert_eq!(frame.as_bytes(), &src[..]);
+        // random nested sub-slicing chain, tracked against (off, len)
+        // into the source vec
+        let mut s = ByteSlice::full(frame.clone());
+        let (mut off, mut len) = (0usize, src.len());
+        for _ in 0..r.range(1, 6) {
+            if len == 0 {
+                break;
+            }
+            let o = r.below(len as u64) as usize;
+            let l = r.below((len - o) as u64 + 1) as usize;
+            s = s.slice(o, l);
+            off += o;
+            len = l;
+            assert_eq!(s.len(), len);
+            assert_eq!(s.as_bytes(), &src[off..off + len]);
+            assert!(Frame::ptr_eq(s.frame(), &frame), "sub-slice re-anchored");
+        }
+    }
+}
+
+#[test]
+fn cow_isolates_slices_from_later_writes() {
+    let mut r = XorShift64::new(0xC0_17_50);
+    for _ in 0..64 {
+        let src = r.bytes(r.range(1, 128) as usize);
+        let mut frame = Frame::from_vec(src.clone());
+        // take a few slices at tracked coordinates before any write
+        let slices: Vec<(usize, usize, ByteSlice)> = (0..r.range(1, 4))
+            .map(|_| {
+                let o = r.below(src.len() as u64) as usize;
+                let l = r.range(1, (src.len() - o) as u64) as usize;
+                (o, l, ByteSlice::new(frame.clone(), o, l))
+            })
+            .collect();
+        assert!(frame.is_shared());
+        // scribble over the whole frame in several rounds; the first
+        // make_mut unshares, the rest write in place
+        let rounds = r.range(1, 4);
+        for round in 0..rounds {
+            let fill = round as u8 ^ 0xA5;
+            for b in frame.make_mut() {
+                *b = fill;
+            }
+        }
+        // every pre-write slice still reads the original bytes
+        for (o, l, s) in &slices {
+            assert_eq!(s.as_bytes(), &src[*o..*o + *l], "write leaked into alias");
+        }
+        // and the frame holds the last fill
+        let last = (rounds - 1) as u8 ^ 0xA5;
+        assert!(frame.as_bytes().iter().all(|&b| b == last));
+    }
+}
+
+#[test]
+fn cow_isolation_exact_offsets() {
+    // single-slice variant of the above with a bit-NOT fill, so a
+    // partial CoW (copying only some pages) cannot sneak past
+    let mut r = XorShift64::new(0x0FF_5E7);
+    for _ in 0..64 {
+        let src = r.bytes(r.range(1, 128) as usize);
+        let mut frame = Frame::from_vec(src.clone());
+        let o = r.below(src.len() as u64) as usize;
+        let l = r.range(1, (src.len() - o) as u64) as usize;
+        let s = ByteSlice::new(frame.clone(), o, l);
+        frame.make_mut().iter_mut().for_each(|b| *b = !*b);
+        assert_eq!(s.as_bytes(), &src[o..o + l], "CoW leaked a write into an alias");
+        assert_eq!(frame.as_bytes().len(), src.len());
+        assert!(frame.as_bytes().iter().zip(&src).all(|(a, b)| *a == !*b));
+    }
+}
+
+#[test]
+fn any_fragmentation_flattens_to_naive_concat() {
+    let mut r = XorShift64::new(0xF1A7_7E4);
+    for _ in 0..64 {
+        let payload = r.bytes(r.below(200) as usize);
+        let a = random_split(&mut r, &payload);
+        let b = random_split(&mut r, &payload);
+        assert_eq!(a.len(), payload.len());
+        assert_eq!(a.flatten(), payload, "flatten != naive concat");
+        assert_eq!(a, payload, "Vec equality must be fragment-agnostic");
+        assert_eq!(a, b, "two fragmentations of one payload must compare equal");
+        let mut out = vec![0u8; payload.len()];
+        a.copy_to(&mut out);
+        assert_eq!(out, payload, "copy_to != flatten");
+        if !payload.is_empty() {
+            // flip one byte → no longer equal, however it is fragmented
+            let mut other = payload.clone();
+            let i = r.below(other.len() as u64) as usize;
+            other[i] ^= 0x40;
+            let c = random_split(&mut r, &other);
+            assert_ne!(a, c);
+            assert_ne!(a, other);
+        }
+    }
+}
+
+#[test]
+fn zero_runs_mix_with_data_runs() {
+    let mut r = XorShift64::new(0x2E40);
+    let zero = Frame::zeros(16);
+    for _ in 0..32 {
+        let mut list = SliceList::new();
+        let mut reference = Vec::new();
+        for _ in 0..r.range(1, 6) {
+            if r.chance(1, 2) {
+                let n = r.below(40) as usize;
+                list.push_zeros(&zero, n);
+                reference.resize(reference.len() + n, 0u8);
+            } else {
+                let data = r.bytes(r.range(1, 32) as usize);
+                reference.extend_from_slice(&data);
+                list.push(ByteSlice::full(Frame::from_vec(data)));
+            }
+        }
+        assert_eq!(list.len(), reference.len());
+        assert_eq!(list, reference);
+        // zero runs alias the one shared frame — never a fresh
+        // allocation — and read back as zeros
+        for p in list.iter().filter(|p| Frame::ptr_eq(p.frame(), &zero)) {
+            assert!(p.as_bytes().iter().all(|&b| b == 0));
+            assert!(p.len() <= zero.len());
+        }
+    }
+}
+
+#[test]
+fn frame_equality_is_content_ptr_fastpath() {
+    let mut r = XorShift64::new(0xE9_0051);
+    for _ in 0..32 {
+        let bytes = r.bytes(r.below(64) as usize);
+        let a = Frame::from_vec(bytes.clone());
+        let b = a.clone();
+        let c = Frame::from_vec(bytes.clone());
+        assert!(Frame::ptr_eq(&a, &b));
+        assert!(!Frame::ptr_eq(&a, &c));
+        assert_eq!(a, b);
+        assert_eq!(a, c, "same content, different allocation must be equal");
+    }
+}

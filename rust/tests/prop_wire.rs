@@ -265,7 +265,22 @@ fn rand_response(r: &mut XorShift64, pick: u64) -> Response {
         3 => Response::Removed,
         4 => Response::Closed,
         5 => Response::ReadPlanned { total: r.below(1 << 30) },
-        6 => Response::Data { dst_base: r.below(1 << 20), data: r.bytes(r.below(128) as usize) },
+        6 => Response::Data {
+            dst_base: r.below(1 << 20),
+            // sometimes fragmented: equality is content-based, so a
+            // split gather list must round-trip equal to its flat twin
+            data: if r.chance(1, 2) {
+                let mut list = vipios::buf::SliceList::new();
+                for _ in 0..r.below(4) {
+                    list.push(vipios::buf::ByteSlice::full(
+                        r.bytes(r.below(64) as usize).into(),
+                    ));
+                }
+                list
+            } else {
+                vipios::buf::SliceList::from_vec(r.bytes(r.below(128) as usize))
+            },
+        },
         7 => Response::LookupAck {
             meta: if r.chance(1, 2) { Some(rand_meta(r)) } else { None },
         },

@@ -27,8 +27,12 @@ import os
 import re
 import sys
 
-# Same performance-shaped column heuristic as tools/perf_gate.py.
-TRACKED_HEADER = re.compile(r"MB/s|hit|speedup|uplift|rate|^qd=", re.IGNORECASE)
+# Same column heuristic as tools/perf_gate.py: the performance-shaped
+# floors plus the copies-per-byte ceiling cells (lower is better there,
+# but a drifting value is worth seeing either way).
+TRACKED_HEADER = re.compile(
+    r"MB/s|hit|speedup|uplift|rate|^qd=|copied/demand|copies/byte", re.IGNORECASE
+)
 
 
 def as_number(cell):
@@ -142,25 +146,27 @@ def render(labels, order, values, docs_by_label):
 
 
 def self_test():
-    mk = lambda bw: {
+    mk = lambda bw, cpd: {
         "experiment": "overlap",
         "quick": True,
         "tables": [
             {
                 "title": "t",
-                "headers": ["clients", "MB/s", "note"],
-                "rows": [[8, bw, "x"]],
+                "headers": ["clients", "MB/s", "note", "copied/demand"],
+                "rows": [[8, bw, "x", cpd]],
             }
         ],
     }
-    runs = [("r1", {"overlap": mk(10.0)}), ("r2", {"overlap": mk(12.5)})]
+    runs = [("r1", {"overlap": mk(10.0, 1.0)}), ("r2", {"overlap": mk(12.5, 0.002)})]
     order, values = collect(runs)
-    assert len(order) == 1, order
+    assert len(order) == 2, order
     key = order[0]
     assert values[key] == {"r1": 10.0, "r2": 12.5}, values
+    assert values[order[1]] == {"r1": 1.0, "r2": 0.002}, values
     docs_by_label = {lb: {"overlap": d["overlap"]} for lb, d in runs}
     md = render(["r1", "r2"], order, values, docs_by_label)
     assert "| 8 · MB/s | 10 | 12.5 |" in md, md
+    assert "| 8 · copied/demand | 1 | 0.002 |" in md, md
     # a run missing the cell renders a dash
     md2 = render(["r1", "r2", "r3"], order, values, docs_by_label)
     assert "| 10 | 12.5 | — |" in md2, md2

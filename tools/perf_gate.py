@@ -8,6 +8,12 @@ drops below `baseline * (1 - tol)` — SimDisk timing is deterministic in
 shape, but CI machines vary in absolute speed, so the committed floors
 are conservative and the tolerance band stays tight on top of them.
 
+Copies-per-byte cells (`copied/demand`) are the one exception: they are
+*ceilings* — fewer data-plane copies is better, so a cell fails when it
+rises above `baseline * (1 + tol)`. The committed ceiling for the E11
+read phase is 1.0 copied bytes per demanded byte (the zero-copy
+acceptance bound); the measured value is ~0.
+
 Matching is structural: tables by exact title, rows by index, columns by
 header. A baseline table/row/cell missing from the current output is a
 failure (a silently dropped bench must not pass the gate).
@@ -31,6 +37,10 @@ import sys
 # totals are informational. `qd=` covers the E9 overlap matrix, whose
 # MB/s unit lives in the table title.
 GATED_HEADER = re.compile(r"MB/s|hit|speedup|uplift|rate|^qd=", re.IGNORECASE)
+
+# Ceiling-gated columns: lower is better, fail when the current value
+# exceeds baseline * (1 + tol). Must stay disjoint from GATED_HEADER.
+CEILING_HEADER = re.compile(r"copied/demand|copies/byte", re.IGNORECASE)
 
 
 def as_number(cell):
@@ -58,17 +68,21 @@ def compare(baseline, current, tol):
             failures.append(f"table missing from current output: {title!r}")
             continue
         headers = bt.get("headers", [])
-        gated_cols = [i for i, h in enumerate(headers) if GATED_HEADER.search(h)]
+        gated_cols = [
+            (i, "floor" if GATED_HEADER.search(h) else "ceiling")
+            for i, h in enumerate(headers)
+            if GATED_HEADER.search(h) or CEILING_HEADER.search(h)
+        ]
         for ri, brow in enumerate(bt.get("rows", [])):
             if ri >= len(ct.get("rows", [])):
                 failures.append(f"{title!r}: row {ri} missing from current output")
                 continue
             crow = ct["rows"][ri]
-            for ci in gated_cols:
+            for ci, kind in gated_cols:
                 if ci >= len(brow):
                     continue
-                floor = as_number(brow[ci])
-                if floor is None:
+                bound = as_number(brow[ci])
+                if bound is None:
                     continue  # non-numeric baseline cell: informational
                 raw = crow[ci] if ci < len(crow) else "<missing>"
                 got = as_number(raw)
@@ -78,17 +92,20 @@ def compare(baseline, current, tol):
                         f"non-numeric current cell {raw!r}"
                     )
                     continue
-                limit = floor * (1.0 - tol)
-                if got < limit:
-                    failures.append(
-                        f"{title!r} row {ri} col {headers[ci]!r}: "
-                        f"{got:.3g} < floor {floor:.3g} * (1 - {tol}) = {limit:.3g}"
-                    )
+                if kind == "floor":
+                    limit = bound * (1.0 - tol)
+                    bad = got < limit
+                    rel, word = ("<", "floor") if bad else (">=", "floor")
+                    detail = f"{got:.3g} {rel} {word} {bound:.3g} * (1 - {tol}) = {limit:.3g}"
                 else:
-                    print(
-                        f"  ok: {title!r} row {ri} {headers[ci]!r}: "
-                        f"{got:.3g} >= {limit:.3g}"
-                    )
+                    limit = bound * (1.0 + tol)
+                    bad = got > limit
+                    rel, word = (">", "ceiling") if bad else ("<=", "ceiling")
+                    detail = f"{got:.3g} {rel} {word} {bound:.3g} * (1 + {tol}) = {limit:.3g}"
+                if bad:
+                    failures.append(f"{title!r} row {ri} col {headers[ci]!r}: {detail}")
+                else:
+                    print(f"  ok: {title!r} row {ri} {headers[ci]!r}: {detail}")
     return failures
 
 
@@ -97,8 +114,8 @@ def self_test():
         "tables": [
             {
                 "title": "t",
-                "headers": ["mode", "MB/s", "hit rate", "msgs"],
-                "rows": [["a", 100, "80.0%", 7], ["b", 50, "10.0%", 9]],
+                "headers": ["mode", "MB/s", "hit rate", "msgs", "copied/demand"],
+                "rows": [["a", 100, "80.0%", 7, 1.0], ["b", 50, "10.0%", 9, 1.0]],
             }
         ]
     }
@@ -106,9 +123,10 @@ def self_test():
         "tables": [
             {
                 "title": "t",
-                "headers": ["mode", "MB/s", "hit rate", "msgs"],
-                # faster + msgs column regressed (not gated) -> pass
-                "rows": [["a", 120, "85.0%", 900], ["b", 45, "9.5%", 1]],
+                "headers": ["mode", "MB/s", "hit rate", "msgs", "copied/demand"],
+                # faster + msgs column regressed (not gated) + fewer
+                # copies (under the ceiling) -> pass
+                "rows": [["a", 120, "85.0%", 900, 0.002], ["b", 45, "9.5%", 1, 1.1]],
             }
         ]
     }
@@ -117,6 +135,12 @@ def self_test():
     bad["tables"][0]["rows"][0][1] = 10  # MB/s collapsed
     fails = compare(base, bad, 0.2)
     assert len(fails) == 1 and "MB/s" in fails[0], f"regression not caught: {fails}"
+    copious = json.loads(json.dumps(ok))
+    copious["tables"][0]["rows"][0][4] = 3.0  # copies above the ceiling
+    fails = compare(base, copious, 0.2)
+    assert len(fails) == 1 and "copied/demand" in fails[0] and "ceiling" in fails[0], (
+        f"copy regression not caught: {fails}"
+    )
     missing = {"tables": []}
     assert compare(base, missing, 0.2), "missing table must fail"
     nonnum = json.loads(json.dumps(ok))
