@@ -1392,6 +1392,393 @@ pub mod deploy {
     }
 }
 
+// --------------------------------------------- E13 multi-tenant benchmark
+
+/// E13 — server-global scheduling under multi-tenant contention
+/// (DESIGN.md §4.8): mixed sequential / strided / collective client
+/// classes share a 2-server pool, once with arbitration disabled
+/// (unlimited prefetch budget, best-effort admission) and once with the
+/// fair-share budget plus QoS rate limits on the sequential aggressors.
+/// The headline is the strided class's p99 latency: with arbitration on
+/// it must drop to <= 0.7x the unarbitrated run (the CI gate treats the
+/// ratio column as a ceiling).
+pub mod tenants {
+    use super::*;
+    use crate::hints::SystemHint;
+
+    const HIST_BUCKETS: usize = 32;
+    const PAGE: u64 = 64 * 1024;
+
+    /// Per-seq-client QoS class when arbitration is on: 2 MB/s with one
+    /// page of burst. Aggressive enough that the class still makes
+    /// progress, tight enough that the victims' tail visibly recovers.
+    const QOS_RATE: u64 = 2 * MB;
+    const QOS_BURST: u64 = 2 * PAGE;
+
+    const MB: u64 = 1 << 20;
+
+    fn bucket(us: u64) -> usize {
+        let b = 63 - us.max(1).leading_zeros() as usize;
+        b.min(HIST_BUCKETS - 1)
+    }
+
+    /// Same log2-midpoint estimator as the E12 deploy histograms.
+    fn percentile(hist: &[u64], q: f64) -> u64 {
+        let total: u64 = hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in hist.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return (1u64 << i) * 3 / 2;
+            }
+        }
+        (1u64 << (hist.len() - 1)) * 3 / 2
+    }
+
+    /// One thread's share of a class run: op-latency histogram, bytes
+    /// moved, and its own wall time (class wall = max over members).
+    struct MemberOut {
+        hist: Vec<u64>,
+        bytes: u64,
+        us: u64,
+    }
+
+    /// Aggregated per-class outcome.
+    pub struct ClassOut {
+        pub clients: usize,
+        pub mbps: f64,
+        pub p50_us: u64,
+        pub p95_us: u64,
+        pub p99_us: u64,
+    }
+
+    /// One full mixed-tenant run (all three classes concurrently).
+    pub struct TenantRun {
+        pub seq: ClassOut,
+        pub strided: ClassOut,
+        pub collective: ClassOut,
+        pub admitted: u64,
+        pub deferred: u64,
+        pub shed: u64,
+    }
+
+    fn merge(outs: Vec<MemberOut>) -> ClassOut {
+        let clients = outs.len();
+        let mut hist = vec![0u64; HIST_BUCKETS];
+        let mut bytes = 0u64;
+        let mut wall_us = 0u64;
+        for o in outs {
+            for (i, n) in o.hist.into_iter().enumerate() {
+                hist[i] += n;
+            }
+            bytes += o.bytes;
+            wall_us = wall_us.max(o.us);
+        }
+        ClassOut {
+            clients,
+            mbps: mbps(bytes, std::time::Duration::from_micros(wall_us.max(1))),
+            p50_us: percentile(&hist, 0.50),
+            p95_us: percentile(&hist, 0.95),
+            p99_us: percentile(&hist, 0.99),
+        }
+    }
+
+    fn tenant_server_config(arb: bool, coll_bytes: u64) -> ServerConfig {
+        ServerConfig {
+            disks: 1,
+            // paper_1998 scaled once more (1 ms -> 0.2 ms seek) so the
+            // full run stays CI-sized while queueing still dominates
+            kind: DiskKind::Sim(SimCost {
+                seek_ns: 200_000,
+                bytes_per_s: 100_000_000,
+                op_ns: 20_000,
+            }),
+            cache: CacheConfig { page: PAGE, capacity: 2 * MB, write_back: true },
+            prefetch: true,
+            readahead: 256 * 1024,
+            queue_depth: 8,
+            // the arbitration switch: one page-run of global prefetch
+            // budget vs effectively unlimited
+            prefetch_budget: if arb { 4 * PAGE } else { u64::MAX },
+            collective_bytes: coll_bytes.max(8 * MB),
+            collective_wait: std::time::Duration::from_secs(2),
+            ..ServerConfig::default()
+        }
+    }
+
+    /// Write + admin-register one benchmark file, then drop caches.
+    fn prime_file(pool: &ServerPool, name: &str, total: u64, nprocs: u32) -> Result<()> {
+        let ns = pool.server_ranks().len() as u32;
+        let mut c = pool.client()?;
+        c.hint(Hint::FileAdmin(FileAdminHint {
+            name: name.into(),
+            distribution: Distribution::block_for(total, ns),
+            nprocs: Some(nprocs),
+        }))?;
+        let h = c.open(name, OpenMode::rdwr_create())?;
+        let chunk = vec![0x13u8; (1 << 20).min(total as usize)];
+        let mut off = 0u64;
+        while off < total {
+            let n = (chunk.len() as u64).min(total - off);
+            c.write_at(h, off, &chunk[..n as usize])?;
+            off += n;
+        }
+        c.sync(h)?;
+        c.close(h)?;
+        for &s in pool.server_ranks() {
+            c.hint_to(s, Hint::System(SystemHint::DropCaches))?;
+        }
+        c.disconnect()?;
+        Ok(())
+    }
+
+    /// Run the three classes concurrently against one pool and collect
+    /// per-class latency histograms plus the admission counters.
+    fn run_mixed(arb: bool, quick: bool) -> Result<TenantRun> {
+        let ns = 2;
+        let ncls = if quick { 4 } else { 8 };
+        let seq_per = if quick { 2 * MB } else { 4 * MB };
+        let seq_file = seq_per * ncls as u64;
+        let str_file = if quick { 4 * MB } else { 8 * MB };
+        let str_blk = 8 * 1024u64;
+        let str_stride = 64 * 1024u64;
+        let coll_file = if quick { 2 * MB } else { 4 * MB };
+        let coll_chunk = 32 * 1024u64;
+
+        let pool = ServerPool::start(ns, tenant_server_config(arb, coll_file))?;
+        prime_file(&pool, "t_seq", seq_file, ncls as u32)?;
+        prime_file(&pool, "t_str", str_file, ncls as u32)?;
+        prime_file(&pool, "t_coll", coll_file, ncls as u32)?;
+
+        let total_threads = 3 * ncls;
+        let start = Arc::new(Barrier::new(total_threads + 1));
+        let group = ClientGroup::new(ncls);
+
+        // --- sequential aggressors: big back-to-back reads; with
+        // arbitration on they self-declare a QoS class at every server
+        let mut seq_handles = Vec::new();
+        for cidx in 0..ncls {
+            let world = pool.world().clone();
+            let servers: Vec<_> = pool.server_ranks().to_vec();
+            let start = start.clone();
+            seq_handles.push(std::thread::spawn(move || -> Result<MemberOut> {
+                let mut c = Client::connect(&world)?;
+                if arb {
+                    for &s in &servers {
+                        c.hint_to(
+                            s,
+                            Hint::System(SystemHint::Qos { rate: QOS_RATE, burst: QOS_BURST }),
+                        )?;
+                    }
+                }
+                let h = c.open("t_seq", OpenMode::rdonly())?;
+                let base = cidx as u64 * seq_per;
+                let mut buf = vec![0u8; PAGE as usize];
+                let mut hist = vec![0u64; HIST_BUCKETS];
+                start.wait();
+                let t0 = Instant::now();
+                let mut off = base;
+                while off < base + seq_per {
+                    let t = Instant::now();
+                    c.read_at(h, off, &mut buf)?;
+                    hist[bucket(t.elapsed().as_micros() as u64)] += 1;
+                    off += PAGE;
+                }
+                let us = t0.elapsed().as_micros() as u64;
+                c.close(h)?;
+                c.disconnect()?;
+                Ok(MemberOut { hist, bytes: seq_per, us })
+            }));
+        }
+
+        // --- strided victims: small block every `str_stride` bytes, a
+        // regular pattern the detector turns into strided prefetch
+        let mut str_handles = Vec::new();
+        for cidx in 0..ncls {
+            let world = pool.world().clone();
+            let start = start.clone();
+            str_handles.push(std::thread::spawn(move || -> Result<MemberOut> {
+                let mut c = Client::connect(&world)?;
+                let h = c.open("t_str", OpenMode::rdonly())?;
+                let lane = cidx as u64 * str_blk;
+                let mut buf = vec![0u8; str_blk as usize];
+                let mut hist = vec![0u64; HIST_BUCKETS];
+                let mut bytes = 0u64;
+                start.wait();
+                let t0 = Instant::now();
+                let mut off = lane;
+                while off + str_blk <= str_file {
+                    let t = Instant::now();
+                    c.read_at(h, off, &mut buf)?;
+                    hist[bucket(t.elapsed().as_micros() as u64)] += 1;
+                    bytes += str_blk;
+                    off += str_stride;
+                }
+                let us = t0.elapsed().as_micros() as u64;
+                c.close(h)?;
+                c.disconnect()?;
+                Ok(MemberOut { hist, bytes, us })
+            }));
+        }
+
+        // --- collective class: lockstep read_at_all rounds (ViMPIOS
+        // layer), per-round latency includes the group synchronisation
+        let mut coll_handles = Vec::new();
+        let rounds = coll_file / (coll_chunk * ncls as u64);
+        for p in 0..ncls {
+            let world = pool.world().clone();
+            let member = group.member(p);
+            let start = start.clone();
+            coll_handles.push(std::thread::spawn(move || -> Result<MemberOut> {
+                let byte = Datatype::Basic(Basic::Byte);
+                let mut c = Client::connect(&world)?;
+                let mut f = MpiFile::open(&mut c, "t_coll", Amode::rdonly())?;
+                let mut buf = vec![0u8; coll_chunk as usize];
+                let mut hist = vec![0u64; HIST_BUCKETS];
+                let mut bytes = 0u64;
+                start.wait();
+                let t0 = Instant::now();
+                for r in 0..rounds {
+                    let off = r * coll_chunk * ncls as u64 + p as u64 * coll_chunk;
+                    let t = Instant::now();
+                    member.read_at_all(&mut f, &mut c, off, &mut buf, coll_chunk, &byte)?;
+                    hist[bucket(t.elapsed().as_micros() as u64)] += 1;
+                    bytes += coll_chunk;
+                }
+                let us = t0.elapsed().as_micros() as u64;
+                c.disconnect()?;
+                Ok(MemberOut { hist, bytes, us })
+            }));
+        }
+
+        start.wait();
+        let seq: Vec<MemberOut> =
+            seq_handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<_>>()?;
+        let strided: Vec<MemberOut> =
+            str_handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<_>>()?;
+        let coll: Vec<MemberOut> =
+            coll_handles.into_iter().map(|h| h.join().unwrap()).collect::<Result<_>>()?;
+
+        let mut admitted = 0u64;
+        let mut deferred = 0u64;
+        let mut shed = 0u64;
+        {
+            let mut admin = pool.client()?;
+            for &s in pool.server_ranks() {
+                let st = admin.stats_of(s)?;
+                admitted += st.admitted;
+                deferred += st.deferred;
+                shed += st.shed;
+            }
+            admin.disconnect()?;
+        }
+        pool.shutdown()?;
+        Ok(TenantRun {
+            seq: merge(seq),
+            strided: merge(strided),
+            collective: merge(coll),
+            admitted,
+            deferred,
+            shed,
+        })
+    }
+
+    /// Overload scenario: one client declares a starvation-rate QoS
+    /// class, then floods a single server with async reads far past the
+    /// deferral depth. The tail of the flood must be shed with error
+    /// acks (not dropped, not deadlocked); releasing the class (rate 0)
+    /// replays the survivors.
+    fn overload() -> Result<(u64, u64, u64)> {
+        let pool = ServerPool::start(1, tenant_server_config(true, 8 * MB))?;
+        prime_file(&pool, "t_over", MB, 1)?;
+        let server = pool.server_ranks()[0];
+        let mut c = pool.client()?;
+        // rate 1 B/s: nothing deferred can drain during the flood
+        c.hint_to(server, Hint::System(SystemHint::Qos { rate: 1, burst: 4096 }))?;
+        let h = c.open("t_over", OpenMode::rdonly())?;
+        let flood = 40usize;
+        let mut ops = Vec::new();
+        for _ in 0..flood {
+            ops.push(c.iread_at(h, 0, 4096)?);
+        }
+        // release the class: deferred survivors replay, floor the rest
+        c.hint_to(server, Hint::System(SystemHint::Qos { rate: 0, burst: 0 }))?;
+        let mut ok = 0usize;
+        let mut errs = 0usize;
+        for op in ops {
+            match c.wait(op) {
+                Ok(_) => ok += 1,
+                Err(_) => errs += 1,
+            }
+        }
+        anyhow::ensure!(ok + errs == flood, "overload flood lost acks: {ok}+{errs}");
+        anyhow::ensure!(errs > 0, "overload flood was never shed");
+        let st = c.stats_of(server)?;
+        c.close(h)?;
+        c.disconnect()?;
+        pool.shutdown()?;
+        anyhow::ensure!(st.shed > 0, "server counted no shed admissions");
+        anyhow::ensure!(st.shed <= st.deferred, "shed exceeds deferred");
+        Ok((st.admitted, st.deferred, st.shed))
+    }
+
+    fn class_row(name: &str, arb: bool, c: &ClassOut, shed: u64) -> Vec<String> {
+        vec![
+            name.to_string(),
+            if arb { "on" } else { "off" }.to_string(),
+            c.clients.to_string(),
+            format!("{:.1}", c.mbps),
+            c.p50_us.to_string(),
+            c.p95_us.to_string(),
+            c.p99_us.to_string(),
+            shed.to_string(),
+        ]
+    }
+
+    /// E13 driver: off run, on run, headline ratio, overload scenario.
+    pub fn table(quick: bool) -> Result<()> {
+        let off = run_mixed(false, quick)?;
+        let on = run_mixed(true, quick)?;
+        // blocking clients keep <= 1 op in flight per server, so the
+        // bounded deferral queue can never trip its depth here
+        anyhow::ensure!(off.shed == 0, "shed {} != 0 in unarbitrated run", off.shed);
+        anyhow::ensure!(on.shed == 0, "shed {} != 0 in arbitrated run", on.shed);
+        let mut rows = Vec::new();
+        for (run, arb) in [(&off, false), (&on, true)] {
+            rows.push(class_row("seq", arb, &run.seq, run.shed));
+            rows.push(class_row("strided", arb, &run.strided, run.shed));
+            rows.push(class_row("collective", arb, &run.collective, run.shed));
+        }
+        print_table(
+            "E13 (§4.8) multi-tenant arbitration — 3 classes x 2 servers",
+            &["class", "arb", "clients", "MB/s", "p50(us)", "p95(us)", "p99(us)", "shed"],
+            &rows,
+        );
+        let ratio = on.strided.p99_us as f64 / off.strided.p99_us.max(1) as f64;
+        print_table(
+            "E13 headline — strided-class tail latency, arbitration on vs off",
+            &["metric", "off(us)", "on(us)", "p99 on/off"],
+            &[vec![
+                "strided p99".into(),
+                off.strided.p99_us.to_string(),
+                on.strided.p99_us.to_string(),
+                format!("{ratio:.3}"),
+            ]],
+        );
+        let (adm, def, shed) = overload()?;
+        print_table(
+            "E13 overload — QoS depth trip sheds with error acks",
+            &["scenario", "admitted", "deferred", "shed"],
+            &[vec!["flood x40 @ rate 1B/s".into(), adm.to_string(), def.to_string(), shed.to_string()]],
+        );
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------- table runners
 
 /// Full Chapter-8 table regeneration, shared by `cargo bench`,
@@ -2006,6 +2393,9 @@ pub mod tables {
             "ablation" => ablation(quick),
             // needs the deployment binaries built, so not part of "all"
             "deploy" => super::deploy::table(quick),
+            // multi-minute wall clock even at --small, so not part of
+            // "all" either — CI runs it as its own smoke job
+            "tenants" => super::tenants::table(quick),
             "all" => {
                 dedicated(quick)?;
                 nondedicated(quick)?;

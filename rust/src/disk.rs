@@ -568,6 +568,15 @@ impl IoScheduler {
         &self.inner.disk
     }
 
+    /// Prefetch-class ops still queued (not yet dispatched) — the
+    /// phase-pair co-scheduler's *slack* signal (DESIGN.md §4.8): an
+    /// empty prefetch queue means the src stream's readahead is ahead of
+    /// its consumer, so dst write-behind can drain without stealing
+    /// elevator time from it.
+    pub fn queued_prefetch(&self) -> usize {
+        self.inner.q.lock().unwrap().prefetch.len()
+    }
+
     /// Scheduler-side counters (`sched_*`, `queue_depth`); the wrapped
     /// disk's own transfer counters stay on [`Disk::stats`].
     pub fn sched_stats(&self) -> DiskStatsSnapshot {

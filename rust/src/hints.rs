@@ -66,6 +66,12 @@ pub enum SystemHint {
     /// benchmark harness between phases, as the paper's read tests
     /// start with nothing resident).
     DropCaches,
+    /// Per-client QoS class for admission control (DESIGN.md §4.8):
+    /// token-bucket `rate` bytes/second with `burst` bytes of capacity,
+    /// enforced at request admission on the receiving server. `rate = 0`
+    /// removes the bucket (back to best-effort, the default) and
+    /// releases anything deferred under it.
+    Qos { rate: u64, burst: u64 },
 }
 
 /// A hint message (see [`crate::msg::Request::Hint`]).

@@ -53,6 +53,7 @@ pub mod ooc;
 pub mod pattern;
 pub mod reorg;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod transport;
 pub mod util;

@@ -9,9 +9,10 @@
 //!                                      --json also writes BENCH_<exp>.json
 //!     exp: dedicated | nondedicated | vs_unix | vs_romio | scalability |
 //!          buffer | redistribution | overlap | prefetch | collective |
-//!          ablation | all | deploy
+//!          ablation | all | deploy | tenants
 //!          (deploy spawns real vipios-server/-client OS processes and
-//!          is not part of `all` — build the binaries first)
+//!          is not part of `all` — build the binaries first; tenants is
+//!          the E13 multi-tenant arbitration bench, also outside `all`)
 //! vipios inspect [artifacts-dir]       load + describe the compute kernels
 //! ```
 
@@ -65,7 +66,7 @@ fn main() {
                 "usage: vipios demo | bench <exp> [--quick|--small] [--json] | inspect [dir]\n\
                  exps: dedicated nondedicated vs_unix vs_romio scalability \
                  buffer redistribution overlap prefetch collective ablation all \
-                 deploy"
+                 deploy tenants"
             );
             Ok(())
         }

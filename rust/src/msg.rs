@@ -351,6 +351,23 @@ pub struct ServerStats {
     /// no copy. Every byte of `bytes_read` is served this way, so
     /// `bytes_read <= bytes_copied + bytes_aliased` at every instant.
     pub bytes_aliased: u64,
+    /// Data-plane messages that cleared QoS admission (immediately or
+    /// after deferral). Every such message is admitted or shed exactly
+    /// once: `admitted + shed <= ext_requests + int_requests`
+    /// (DESIGN.md §4.8).
+    pub admitted: u64,
+    /// Times a message failed admission and was parked in its client's
+    /// bounded deferral queue (a message deferred then admitted counts
+    /// in both `deferred` and `admitted`).
+    pub deferred: u64,
+    /// Deferred admissions dropped by the overload shed path: depth
+    /// trip, shutdown drain, or kill-switch release. Demand sheds are
+    /// error-acked, never silently dropped; `shed <= deferred`.
+    pub shed: u64,
+    /// Bytes of prefetch-budget charge reclaimed from dead or broken
+    /// streams (pattern break, disconnect, file removal, kill-switch)
+    /// by the global arbiter.
+    pub budget_reclaims: u64,
 }
 
 impl ServerStats {
@@ -383,6 +400,20 @@ impl ServerStats {
                 "zero-copy balance: bytes_read {} > copied {} + aliased {} \
                  (a served byte must be accounted as a copy or an alias)",
                 self.bytes_read, self.bytes_copied, self.bytes_aliased
+            ));
+        }
+        if self.shed > self.deferred {
+            return Err(format!(
+                "qos balance: shed {} > deferred {} \
+                 (only a deferred admission can be shed)",
+                self.shed, self.deferred
+            ));
+        }
+        if self.admitted + self.shed > self.ext_requests + self.int_requests {
+            return Err(format!(
+                "qos balance: admitted {} + shed {} > ext {} + int {} \
+                 (each message admits or sheds at most once)",
+                self.admitted, self.shed, self.ext_requests, self.int_requests
             ));
         }
         Ok(())
@@ -430,6 +461,9 @@ pub struct ProtoDump {
     pub fills: usize,
     /// Cross-server flushes deferred on busy clients.
     pub pending_flushes: usize,
+    /// Data-plane requests parked in QoS deferral queues awaiting
+    /// token refill (DESIGN.md §4.8).
+    pub qos_deferred: usize,
 }
 
 impl ProtoDump {
@@ -444,6 +478,7 @@ impl ProtoDump {
             && self.wb_waiters == 0
             && self.fills == 0
             && self.pending_flushes == 0
+            && self.qos_deferred == 0
     }
 }
 
@@ -468,8 +503,12 @@ impl std::fmt::Display for ProtoDump {
         }
         writeln!(
             f,
-            "  wb_inflight={} wb_waiters={} fills={} pending_flushes={}",
-            self.wb_inflight, self.wb_waiters, self.fills, self.pending_flushes
+            "  wb_inflight={} wb_waiters={} fills={} pending_flushes={} qos_deferred={}",
+            self.wb_inflight,
+            self.wb_waiters,
+            self.fills,
+            self.pending_flushes,
+            self.qos_deferred
         )
     }
 }

@@ -26,9 +26,26 @@
 
 use std::collections::VecDeque;
 
+use crate::msg::FileId;
+
 /// Observations kept per stream — enough to cover one full row of a
 /// blocked-2D walk at typical tile counts.
 pub const HISTORY: usize = 8;
+
+/// What one [`Detector::observe`] call saw — the global prefetch-budget
+/// arbiter (DESIGN.md §4.8) uses this to settle the stream's charge:
+/// a match releases the window as useful, a break reclaims it as wasted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Observed {
+    /// The access continued the locked pattern (consumed one
+    /// predicted-ahead step, if any were outstanding).
+    Matched,
+    /// A locked pattern (or outstanding predictions) broke: the
+    /// prediction cursor was reset.
+    Broke,
+    /// No pattern was locked yet — warm-up or an irregular stream.
+    New,
+}
 
 /// What the detector currently believes about a stream.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -170,8 +187,9 @@ impl Detector {
 
     /// Record one request. An access that matches the locked pattern's
     /// continuation consumes one predicted-ahead step; anything else is a
-    /// pattern break and resets the prediction cursor.
-    pub fn observe(&mut self, off: u64, len: u64) {
+    /// pattern break and resets the prediction cursor. The returned
+    /// [`Observed`] tells the caller which of the two happened.
+    pub fn observe(&mut self, off: u64, len: u64) -> Observed {
         let p = self.pattern();
         let matched = match self.recent.back().copied() {
             Some((po, pl)) => {
@@ -180,15 +198,20 @@ impl Detector {
             }
             None => false,
         };
-        if matched {
+        let seen = if matched {
             self.predicted_ahead = self.predicted_ahead.saturating_sub(1);
-        } else {
+            Observed::Matched
+        } else if self.predicted_ahead > 0 || p != Pattern::Unknown {
             self.predicted_ahead = 0;
-        }
+            Observed::Broke
+        } else {
+            Observed::New
+        };
         self.recent.push_back((off, len));
         while self.recent.len() > HISTORY {
             self.recent.pop_front();
         }
+        seen
     }
 
     /// Emit the next prediction window: up to `window` bytes of future
@@ -234,6 +257,65 @@ impl Detector {
             }
         }
         out
+    }
+}
+
+/// Events the inter-file phase detector keeps per client.
+pub const PHASE_HISTORY: usize = 8;
+
+/// Inter-file phase detection (DESIGN.md §4.8). OOC double-buffering
+/// shows up at a server as one client strictly alternating read(src) /
+/// write(dst) over two distinct files; this detector correlates those
+/// streams into a *phase pair* so the server can co-schedule the dst
+/// write-behind drain under the src prefetch slack instead of letting
+/// the staged writes pile up until the budget overflows mid-read.
+#[derive(Debug, Default)]
+pub struct PhaseDetector {
+    /// Recent `(file, is_write)` data-plane events, oldest first.
+    recent: VecDeque<(FileId, bool)>,
+}
+
+impl PhaseDetector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one data-plane access and return the active phase pair,
+    /// if the trailing history sustains one.
+    pub fn observe(&mut self, file: FileId, is_write: bool) -> Option<(FileId, FileId)> {
+        self.recent.push_back((file, is_write));
+        while self.recent.len() > PHASE_HISTORY {
+            self.recent.pop_front();
+        }
+        self.pair()
+    }
+
+    /// The active `(src, dst)` phase pair: the trailing events are a
+    /// strict read/write alternation, every read on one file and every
+    /// write on another (`src != dst`), sustained for at least three
+    /// full alternations (6 events). Anything looser returns `None` —
+    /// a false positive would steal elevator time from demand.
+    pub fn pair(&self) -> Option<(FileId, FileId)> {
+        let (mut src, mut dst) = (None, None);
+        let mut run = 0usize;
+        let mut want_write = self.recent.back()?.1;
+        for &(f, w) in self.recent.iter().rev() {
+            if w != want_write {
+                break;
+            }
+            let slot = if w { &mut dst } else { &mut src };
+            match slot {
+                None => *slot = Some(f),
+                Some(x) if *x == f => {}
+                _ => break,
+            }
+            run += 1;
+            want_write = !want_write;
+        }
+        match (src, dst) {
+            (Some(s), Some(d)) if s != d && run >= 6 => Some((s, d)),
+            _ => None,
+        }
     }
 }
 
@@ -367,5 +449,50 @@ mod tests {
         feed(&mut d, &[(0, 64), (256, 64), (512, 64), (768, 32)]);
         // the suffix with the new length is too short to lock
         assert_eq!(d.pattern(), Pattern::Unknown);
+    }
+
+    #[test]
+    fn observe_reports_match_break_new() {
+        let mut d = Detector::new();
+        assert_eq!(d.observe(0, 64), Observed::New);
+        assert_eq!(d.observe(256, 64), Observed::New);
+        assert_eq!(d.observe(512, 64), Observed::New);
+        // locked strided: the continuation matches
+        assert_eq!(d.observe(768, 64), Observed::Matched);
+        // a wild offset breaks the locked pattern
+        assert_eq!(d.observe(5, 64), Observed::Broke);
+    }
+
+    #[test]
+    fn phase_pair_locks_on_strict_alternation() {
+        let (src, dst) = (FileId(1), FileId(2));
+        let mut p = PhaseDetector::new();
+        for i in 0..3 {
+            assert_eq!(p.observe(src, false), None, "round {i}: read");
+            let got = p.observe(dst, true);
+            if i < 2 {
+                assert_eq!(got, None, "round {i}: too few alternations");
+            } else {
+                assert_eq!(got, Some((src, dst)), "round {i}");
+            }
+        }
+        // an out-of-phase event (read of dst) drops the pair
+        assert_eq!(p.observe(dst, false), None);
+    }
+
+    #[test]
+    fn phase_pair_rejects_single_file_and_mixed() {
+        let f = FileId(7);
+        let mut p = PhaseDetector::new();
+        for _ in 0..4 {
+            p.observe(f, false);
+            assert_eq!(p.observe(f, true), None, "src == dst never pairs");
+        }
+        // three files interleaved: reads split across two sources
+        let mut p = PhaseDetector::new();
+        for i in 0..4 {
+            p.observe(FileId(i % 2), false);
+            assert_eq!(p.observe(FileId(9), true), None);
+        }
     }
 }

@@ -1,0 +1,621 @@
+//! Server-global arbitration (DESIGN.md §4.8): the fair-share prefetch
+//! budget and the per-client QoS admission control.
+//!
+//! The §4.3 pattern engine and prefetch windows are per-(client,file);
+//! nothing above them stops one hot sequential reader from monopolizing
+//! the cache and the elevator while strided tenants starve. This module
+//! holds the two server-global mechanisms the kernel threads through its
+//! request path:
+//!
+//! * [`Arbiter`] — one per-server byte budget
+//!   (`ServerConfig::prefetch_budget`) apportioned across active
+//!   prefetch streams by deficit round-robin ([`drr_apportion`]),
+//!   weighted by each stream's recent demand-hit usefulness
+//!   (`prefetch_used`/`wasted`): a stream that wastes its window shrinks,
+//!   so hot streams cannot evict each other's readahead.
+//! * [`QosState`] — a per-client token bucket (rate + burst from
+//!   [`crate::hints::SystemHint::Qos`], default best-effort) enforced at
+//!   request admission, with bounded-depth deferral instead of unbounded
+//!   queueing. Demand is always admitted before prefetch; when a client's
+//!   deferral depth trips, the overflow is *shed* — error-acked, never
+//!   silently dropped.
+//!
+//! Both are pure data structures (no clocks, no I/O): the server feeds
+//! wall time (or, under the model checker, the virtual-timeout sentinel)
+//! into [`TokenBucket::refill_us`] / [`TokenBucket::refill_full`], which
+//! keeps every path here deterministic and property-testable
+//! (`tests/prop_sched.rs`).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::msg::{FileId, Rank};
+
+/// Maximum deferred admissions per client per class. Past this depth the
+/// shed path takes over: demand is error-acked, prefetch is dropped (it
+/// is advisory fire-and-forget) — both counted in `ServerStats::shed`.
+pub const QOS_DEPTH: usize = 16;
+
+/// Admission class of a data-plane request. Demand (client reads/writes)
+/// always drains ahead of prefetch (advisory readahead shipped between
+/// servers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitClass {
+    Demand,
+    Prefetch,
+}
+
+/// Deficit-round-robin apportionment of `budget` bytes across streams,
+/// each described as `(weight, demand)`. Returns the per-stream grants.
+///
+/// Guarantees (property-tested in `tests/prop_sched.rs`):
+/// * `grants[i] <= demand_i` — never over-grants a stream;
+/// * `sum(grants) <= budget` — the budget is never exceeded;
+/// * work-conserving — `sum(grants) == min(budget, sum(demands))`:
+///   budget left on the table only when no stream wants it;
+/// * deterministic — a pure function of its inputs.
+///
+/// Each round hands every unsatisfied stream a weight-proportional
+/// quantum of the remainder; once the remainder drops below the weight
+/// sum the quantum clamps to one byte, so the tail drains round-robin
+/// and the loop always terminates.
+pub fn drr_apportion(budget: u64, streams: &[(u64, u64)]) -> Vec<u64> {
+    let mut grants = vec![0u64; streams.len()];
+    if budget == 0 || streams.is_empty() {
+        return grants;
+    }
+    let mut left = budget;
+    loop {
+        let mut wsum: u128 = 0;
+        for (i, &(w, d)) in streams.iter().enumerate() {
+            if grants[i] < d {
+                wsum += u128::from(w.max(1));
+            }
+        }
+        if wsum == 0 || left == 0 {
+            return grants;
+        }
+        let quantum = u128::from(left) / wsum;
+        for (i, &(w, d)) in streams.iter().enumerate() {
+            if left == 0 {
+                break;
+            }
+            let want = d - grants[i];
+            if want == 0 {
+                continue;
+            }
+            let share = (u128::from(w.max(1)) * quantum).max(1);
+            let take = share.min(u128::from(want)).min(u128::from(left)) as u64;
+            grants[i] += take;
+            left -= take;
+        }
+    }
+}
+
+/// One prefetch stream's slice of the global budget.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamShare {
+    /// Bytes granted to this stream and not yet released (its share of
+    /// `Arbiter::outstanding`). Window-level accounting: the server
+    /// releases a whole window when the stream advances (useful) or
+    /// breaks (wasted), not per page.
+    pub charged: u64,
+    /// Grant allowance remaining from the last rebalance.
+    pub quota: u64,
+    /// Released-as-useful bytes (the stream kept its pattern / the plan
+    /// entry or prediction was consumed).
+    pub used: u64,
+    /// Released-as-wasted bytes (pattern broke, plan abandoned, stream
+    /// torn down with the window unconsumed).
+    pub wasted: u64,
+}
+
+impl StreamShare {
+    /// DRR weight from recent usefulness: fresh streams start mid-range
+    /// (4); a perfectly useful stream climbs to 8, a pure waster decays
+    /// to 1. Never zero — even a waster keeps trickle service (no
+    /// starvation).
+    pub fn weight(&self) -> u64 {
+        let done = self.used + self.wasted;
+        if done == 0 {
+            4
+        } else {
+            (1 + 7 * self.used / done).clamp(1, 8)
+        }
+    }
+}
+
+/// The server-global prefetch-budget arbiter. `budget == u64::MAX` is
+/// the unlimited fast path (the default): every grant succeeds in full
+/// and no per-stream state is kept, so pre-existing single-tenant
+/// behavior and its perf are untouched.
+#[derive(Debug)]
+pub struct Arbiter {
+    budget: u64,
+    streams: HashMap<(Rank, FileId), StreamShare>,
+    outstanding: u64,
+}
+
+impl Arbiter {
+    pub fn new(budget: u64) -> Self {
+        Self {
+            budget,
+            streams: HashMap::new(),
+            outstanding: 0,
+        }
+    }
+
+    pub fn unlimited(&self) -> bool {
+        self.budget == u64::MAX
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn outstanding(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// Swap the budget (kill-switch sets 0, re-enable restores the
+    /// configured value). Outstanding charges are left to drain through
+    /// their normal release points.
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+        if budget == u64::MAX {
+            self.streams.clear();
+            self.outstanding = 0;
+        }
+    }
+
+    /// Ask for `want` prefetch bytes on behalf of `key`; returns the
+    /// granted byte count (possibly 0). Grants consume the stream's DRR
+    /// quota; an empty quota triggers a rebalance of the *free* budget
+    /// across all live streams before clamping.
+    pub fn grant(&mut self, key: (Rank, FileId), want: u64) -> u64 {
+        if self.unlimited() || want == 0 {
+            return want;
+        }
+        let quota = self.streams.entry(key).or_default().quota;
+        if quota < want {
+            self.rebalance();
+        }
+        let free = self.budget.saturating_sub(self.outstanding);
+        let s = self.streams.entry(key).or_default();
+        let granted = want.min(s.quota).min(free);
+        s.quota -= granted;
+        s.charged += granted;
+        self.outstanding += granted;
+        granted
+    }
+
+    /// Weighted-fair reapportionment of the uncharged budget: every live
+    /// stream's quota is recomputed by [`drr_apportion`] over the current
+    /// usefulness weights.
+    fn rebalance(&mut self) {
+        let free = self.budget.saturating_sub(self.outstanding);
+        let keys: Vec<(Rank, FileId)> = self.streams.keys().copied().collect();
+        let req: Vec<(u64, u64)> = keys
+            .iter()
+            .map(|k| (self.streams[k].weight(), free))
+            .collect();
+        let grants = drr_apportion(free, &req);
+        for (k, g) in keys.iter().zip(grants) {
+            self.streams.get_mut(k).unwrap().quota = g;
+        }
+    }
+
+    /// Return bytes the caller was granted but never actually issued
+    /// (e.g. a partial page grant): uncharged and put back on the
+    /// stream's quota, without touching its usefulness history.
+    pub fn ungrant(&mut self, key: (Rank, FileId), bytes: u64) {
+        if self.unlimited() {
+            return;
+        }
+        if let Some(s) = self.streams.get_mut(&key) {
+            let freed = bytes.min(s.charged);
+            s.charged -= freed;
+            s.quota += freed;
+            self.outstanding -= freed;
+        }
+    }
+
+    /// Return `bytes` of `key`'s charge to the free pool, crediting the
+    /// stream's usefulness history. Clamped to what is actually charged.
+    pub fn release(&mut self, key: (Rank, FileId), bytes: u64, useful: bool) {
+        if self.unlimited() {
+            return;
+        }
+        if let Some(s) = self.streams.get_mut(&key) {
+            let freed = bytes.min(s.charged);
+            s.charged -= freed;
+            if useful {
+                s.used += freed;
+            } else {
+                s.wasted += freed;
+            }
+            self.outstanding -= freed;
+        }
+    }
+
+    /// Release everything `key` has charged; returns the freed bytes.
+    pub fn release_all(&mut self, key: (Rank, FileId), useful: bool) -> u64 {
+        if self.unlimited() {
+            return 0;
+        }
+        let charged = self.streams.get(&key).map_or(0, |s| s.charged);
+        self.release(key, charged, useful);
+        charged
+    }
+
+    /// Tear the stream down (disconnect, file removal, kill-switch):
+    /// its charge is reclaimed as wasted and the share forgotten.
+    /// Returns the reclaimed bytes (the `budget_reclaims` delta).
+    pub fn reclaim(&mut self, key: (Rank, FileId)) -> u64 {
+        let freed = self.release_all(key, false);
+        self.streams.remove(&key);
+        freed
+    }
+
+    /// Reclaim every stream (the `Prefetch(false)` kill-switch path).
+    pub fn reclaim_all(&mut self) -> u64 {
+        let keys: Vec<(Rank, FileId)> = self.streams.keys().copied().collect();
+        let mut freed = 0;
+        for k in keys {
+            freed += self.reclaim(k);
+        }
+        freed
+    }
+
+    /// Drop every stream owned by `client` (peer teardown). Returns the
+    /// reclaimed bytes.
+    pub fn reclaim_client(&mut self, client: Rank) -> u64 {
+        let keys: Vec<(Rank, FileId)> = self
+            .streams
+            .keys()
+            .filter(|(c, _)| *c == client)
+            .copied()
+            .collect();
+        let mut freed = 0;
+        for k in keys {
+            freed += self.reclaim(k);
+        }
+        freed
+    }
+
+    /// Drop every stream over `file` (removal / reorg teardown).
+    pub fn reclaim_file(&mut self, file: FileId) -> u64 {
+        let keys: Vec<(Rank, FileId)> = self
+            .streams
+            .keys()
+            .filter(|(_, f)| *f == file)
+            .copied()
+            .collect();
+        let mut freed = 0;
+        for k in keys {
+            freed += self.reclaim(k);
+        }
+        freed
+    }
+
+    /// Internal consistency, asserted by the server's `self_check`:
+    /// `outstanding` is exactly the sum of per-stream charges and never
+    /// exceeds a finite budget.
+    pub fn check(&self) -> Result<(), String> {
+        let sum: u64 = self.streams.values().map(|s| s.charged).sum();
+        if sum != self.outstanding {
+            return Err(format!(
+                "arbiter: outstanding {} != sum of stream charges {}",
+                self.outstanding, sum
+            ));
+        }
+        if !self.unlimited() && self.outstanding > self.budget {
+            return Err(format!(
+                "arbiter: outstanding {} > budget {}",
+                self.outstanding, self.budget
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A token bucket in byte units. `rate` is bytes/second, `burst` the
+/// bucket capacity; a fresh bucket starts full. Costs are clamped to
+/// `burst` on take, so any single request — however large — is
+/// admissible from a full bucket and can never wedge a deferral queue.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    pub rate: u64,
+    pub burst: u64,
+    tokens: u64,
+    /// Sub-token remainder in `rate × µs` units, so integer refill loses
+    /// nothing to rounding across calls.
+    acc: u128,
+}
+
+impl TokenBucket {
+    pub fn new(rate: u64, burst: u64) -> Self {
+        let burst = burst.max(1);
+        Self {
+            rate,
+            burst,
+            tokens: burst,
+            acc: 0,
+        }
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Take `cost` (clamped to `burst`) if available.
+    pub fn try_take(&mut self, cost: u64) -> bool {
+        let cost = cost.min(self.burst);
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Wall-clock refill: credit `rate × dt` bytes, capped at `burst`.
+    pub fn refill_us(&mut self, dt_us: u64) {
+        self.acc += u128::from(self.rate) * u128::from(dt_us);
+        let add = self.acc / 1_000_000;
+        self.acc %= 1_000_000;
+        let add = u64::try_from(add).unwrap_or(u64::MAX);
+        self.tokens = self.tokens.saturating_add(add).min(self.burst);
+    }
+
+    /// Model-checker refill: the virtual-timeout sentinel stands in for
+    /// "enough wall time passed", so refill to full — together with the
+    /// cost clamp this makes the head of any deferral queue admissible,
+    /// which is the progress guarantee the deadlock oracle relies on.
+    pub fn refill_full(&mut self) {
+        self.tokens = self.burst;
+        self.acc = 0;
+    }
+}
+
+/// Per-client QoS admission state: the token bucket plus the two
+/// bounded deferral queues (demand ahead of prefetch). `T` is the
+/// parked admission — the server parks the full request message; the
+/// property tests park integers.
+#[derive(Debug)]
+pub struct QosState<T> {
+    pub bucket: TokenBucket,
+    demand: VecDeque<(u64, T)>,
+    prefetch: VecDeque<(u64, T)>,
+}
+
+impl<T> QosState<T> {
+    pub fn new(rate: u64, burst: u64) -> Self {
+        Self {
+            bucket: TokenBucket::new(rate, burst),
+            demand: VecDeque::new(),
+            prefetch: VecDeque::new(),
+        }
+    }
+
+    pub fn deferred(&self) -> usize {
+        self.demand.len() + self.prefetch.len()
+    }
+
+    /// Replace the bucket (a fresh `SystemHint::Qos` re-classing the
+    /// client). Deferred admissions stay queued and drain under the new
+    /// rate.
+    pub fn set_class(&mut self, rate: u64, burst: u64) {
+        self.bucket = TokenBucket::new(rate, burst);
+    }
+
+    /// Can a request of `cost` bytes be admitted *now*? Takes the tokens
+    /// when it can. FIFO fairness: a class with a non-empty queue never
+    /// admits a newcomer past the parked head (and prefetch never passes
+    /// parked demand).
+    pub fn try_admit(&mut self, class: AdmitClass, cost: u64) -> bool {
+        let blocked = match class {
+            AdmitClass::Demand => !self.demand.is_empty(),
+            AdmitClass::Prefetch => !self.prefetch.is_empty() || !self.demand.is_empty(),
+        };
+        !blocked && self.bucket.try_take(cost)
+    }
+
+    /// Park one admission that `try_admit` turned down. `Err(item)` when
+    /// the class queue is at [`QOS_DEPTH`] — the caller sheds it.
+    pub fn defer(&mut self, class: AdmitClass, cost: u64, item: T) -> Result<(), T> {
+        let q = match class {
+            AdmitClass::Demand => &mut self.demand,
+            AdmitClass::Prefetch => &mut self.prefetch,
+        };
+        if q.len() >= QOS_DEPTH {
+            return Err(item);
+        }
+        q.push_back((cost, item));
+        Ok(())
+    }
+
+    /// Admit or defer one request of `cost` bytes ([`Self::try_admit`]
+    /// then [`Self::defer`]). Returns:
+    /// * `Ok(true)` — admitted now (tokens taken);
+    /// * `Ok(false)` — deferred (parked in class order);
+    /// * `Err(item)` — deferral depth tripped: shed it.
+    pub fn admit(&mut self, class: AdmitClass, cost: u64, item: T) -> Result<bool, T> {
+        if self.try_admit(class, cost) {
+            return Ok(true);
+        }
+        self.defer(class, cost, item)?;
+        Ok(false)
+    }
+
+    /// Pop the next deferred admission whose cost the bucket can cover,
+    /// demand strictly first (prefetch drains only once no demand is
+    /// parked). `None` when nothing is affordable.
+    pub fn pop_ready(&mut self) -> Option<T> {
+        if let Some(&(cost, _)) = self.demand.front() {
+            if self.bucket.try_take(cost) {
+                return self.demand.pop_front().map(|(_, t)| t);
+            }
+            return None;
+        }
+        if let Some(&(cost, _)) = self.prefetch.front() {
+            if self.bucket.try_take(cost) {
+                return self.prefetch.pop_front().map(|(_, t)| t);
+            }
+        }
+        None
+    }
+
+    /// Drain every deferred admission unconditionally (shutdown, QoS
+    /// removal, kill-switch release): the caller decides whether each
+    /// item is replayed or error-acked.
+    pub fn drain_all(&mut self) -> Vec<(AdmitClass, T)> {
+        let mut out: Vec<(AdmitClass, T)> = self
+            .demand
+            .drain(..)
+            .map(|(_, t)| (AdmitClass::Demand, t))
+            .collect();
+        out.extend(
+            self.prefetch
+                .drain(..)
+                .map(|(_, t)| (AdmitClass::Prefetch, t)),
+        );
+        out
+    }
+
+    /// Drop only the deferred *prefetch* admissions (the
+    /// `Prefetch(false)` kill-switch releases advisory work but leaves
+    /// demand queued). Returns the dropped items.
+    pub fn drain_prefetch(&mut self) -> Vec<T> {
+        self.prefetch.drain(..).map(|(_, t)| t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(c: u32, f: u64) -> (Rank, FileId) {
+        (Rank(c), FileId(f))
+    }
+
+    #[test]
+    fn drr_work_conserving_and_bounded() {
+        let streams = [(1, 100), (8, 100), (4, 0)];
+        let g = drr_apportion(120, &streams);
+        assert_eq!(g.iter().sum::<u64>(), 120);
+        for (gi, (_, d)) in g.iter().zip(streams.iter()) {
+            assert!(gi <= d);
+        }
+        // weight 8 stream gets more than weight 1 at equal demand
+        assert!(g[1] > g[0], "{g:?}");
+        // ample budget: everyone fully satisfied
+        let g = drr_apportion(1000, &streams);
+        assert_eq!(g, vec![100, 100, 0]);
+        // zero budget / empty streams
+        assert_eq!(drr_apportion(0, &streams), vec![0, 0, 0]);
+        assert!(drr_apportion(7, &[]).is_empty());
+    }
+
+    #[test]
+    fn drr_tiny_remainders_terminate() {
+        // budget far below the weight sum: byte-at-a-time round robin
+        let streams = [(8, 10), (8, 10), (8, 10)];
+        let g = drr_apportion(2, &streams);
+        assert_eq!(g.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn arbiter_unlimited_fast_path() {
+        let mut a = Arbiter::new(u64::MAX);
+        assert_eq!(a.grant(key(1, 1), 1 << 40), 1 << 40);
+        assert_eq!(a.outstanding(), 0);
+        assert_eq!(a.release_all(key(1, 1), true), 0);
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn arbiter_budget_respected_and_reclaimed() {
+        let mut a = Arbiter::new(1000);
+        let g1 = a.grant(key(1, 1), 800);
+        assert!(g1 > 0 && g1 <= 800);
+        let g2 = a.grant(key(2, 1), 800);
+        assert!(g1 + g2 <= 1000, "{g1} + {g2}");
+        a.check().unwrap();
+        // useful release improves the stream's weight
+        a.release(key(1, 1), g1, true);
+        assert_eq!(a.outstanding(), g2);
+        let freed = a.reclaim_all();
+        assert_eq!(freed, g2);
+        assert_eq!(a.outstanding(), 0);
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn arbiter_waster_shrinks() {
+        let mut a = Arbiter::new(1_000);
+        // stream 1 wastes every window, stream 2 uses every window
+        for _ in 0..8 {
+            let g = a.grant(key(1, 1), 200);
+            a.release(key(1, 1), g, false);
+            let g = a.grant(key(2, 2), 200);
+            a.release(key(2, 2), g, true);
+        }
+        let w1 = a.streams[&key(1, 1)].weight();
+        let w2 = a.streams[&key(2, 2)].weight();
+        assert!(w1 < w2, "waster {w1} >= user {w2}");
+        assert_eq!(w1, 1);
+        assert_eq!(w2, 8);
+    }
+
+    #[test]
+    fn bucket_refill_and_clamp() {
+        let mut b = TokenBucket::new(1_000_000, 100);
+        assert!(b.try_take(100));
+        assert!(!b.try_take(1));
+        b.refill_us(50); // 1 MB/s × 50 µs = 50 bytes
+        assert_eq!(b.tokens(), 50);
+        b.refill_us(1_000_000);
+        assert_eq!(b.tokens(), 100); // capped at burst
+        // cost clamp: a giant request costs at most burst
+        assert!(b.try_take(u64::MAX));
+        assert_eq!(b.tokens(), 0);
+        // remainder accumulation: 3 × 333 µs at 1000 B/s ≈ 0.999 B
+        let mut b = TokenBucket::new(1_000, 100);
+        assert!(b.try_take(100));
+        for _ in 0..3 {
+            b.refill_us(333);
+        }
+        assert_eq!(b.tokens(), 0);
+        b.refill_us(1);
+        assert_eq!(b.tokens(), 1);
+    }
+
+    #[test]
+    fn qos_demand_before_prefetch_and_shed() {
+        let mut q: QosState<u32> = QosState::new(0, 10);
+        assert_eq!(q.admit(AdmitClass::Demand, 10, 1), Ok(true));
+        // bucket empty: everything defers now
+        assert_eq!(q.admit(AdmitClass::Prefetch, 5, 2), Ok(false));
+        assert_eq!(q.admit(AdmitClass::Demand, 5, 3), Ok(false));
+        assert_eq!(q.deferred(), 2);
+        // nothing affordable yet
+        assert!(q.pop_ready().is_none());
+        q.bucket.refill_full();
+        // demand drains first even though prefetch parked earlier
+        assert_eq!(q.pop_ready(), Some(3));
+        assert_eq!(q.pop_ready(), Some(2));
+        assert!(q.pop_ready().is_none());
+        // depth trip sheds
+        for i in 0..QOS_DEPTH as u32 {
+            assert_eq!(q.admit(AdmitClass::Demand, 100, i), Ok(false));
+        }
+        assert_eq!(q.admit(AdmitClass::Demand, 100, 99), Err(99));
+        // queue-order fairness: an affordable newcomer still defers
+        // behind the parked head
+        q.bucket.refill_full();
+        assert_eq!(q.admit(AdmitClass::Demand, 1, 100), Ok(false));
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), QOS_DEPTH + 1);
+        assert_eq!(q.deferred(), 0);
+    }
+}

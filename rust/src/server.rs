@@ -45,8 +45,9 @@ use crate::fragmenter::{choose_distribution, fragment, fragment_list};
 use crate::hints::{FileAdminHint, Hint, PrefetchHint, SystemHint};
 use crate::layout::Distribution;
 use crate::memory::{BufferCache, CacheConfig, Prefetcher, WriteBehind};
-use crate::pattern::Detector;
+use crate::pattern::{Detector, Observed, PhaseDetector};
 use crate::reorg::{ship_plan, SHIP_BATCH, SHIP_WINDOW};
+use crate::sched::{AdmitClass, Arbiter, QosState};
 use crate::msg::{
     Body, Collective, Endpoint, FileId, IoEvent, Msg, MsgClass, OpenMode,
     ProtoDump, Rank, Request, Response, ServerStats, View,
@@ -73,6 +74,12 @@ pub struct ServerConfig {
     pub prefetch: bool,
     /// Readahead window (bytes of local fragment space).
     pub readahead: u64,
+    /// Server-global prefetch byte budget (DESIGN.md §4.8): total bytes
+    /// of speculative readahead/prediction/plan prefetch the server may
+    /// have charged at once across *all* streams, apportioned by
+    /// usefulness-weighted deficit round-robin ([`crate::sched::Arbiter`]).
+    /// `u64::MAX` (the default) disables arbitration entirely.
+    pub prefetch_budget: u64,
     /// Fixed CPU cost charged per data request — models a *non-dedicated*
     /// I/O node whose CPU is shared with an application process (E2).
     pub request_overhead: Duration,
@@ -116,6 +123,7 @@ impl Default for ServerConfig {
             cache: CacheConfig::default(),
             prefetch: true,
             readahead: 256 * 1024,
+            prefetch_budget: u64::MAX,
             request_overhead: Duration::ZERO,
             queue_depth: 8,
             write_behind: 2 * 1024 * 1024,
@@ -125,6 +133,17 @@ impl Default for ServerConfig {
             fault_drop_wb_resume: false,
         }
     }
+}
+
+/// A data-plane request parked by QoS admission control (DESIGN.md
+/// §4.8): everything needed to replay it through the admitted path when
+/// the client's token bucket refills — or to error-ack it on shed.
+struct Admission {
+    src: Rank,
+    client: Rank,
+    req_id: u64,
+    class: MsgClass,
+    req: Request,
 }
 
 /// Continuations for requests that needed another server's answer.
@@ -389,6 +408,22 @@ pub struct Server {
     pattern: HashMap<(Rank, FileId), Detector>,
     /// Installed access plans per (client, file) stream.
     plans: HashMap<(Rank, FileId), PlanState>,
+    /// Server-global prefetch-budget arbiter (DESIGN.md §4.8): every
+    /// speculative page submitted by readahead, the pattern engine or a
+    /// plan charges its stream's fair share of
+    /// [`ServerConfig::prefetch_budget`].
+    arb: Arbiter,
+    /// Per-client QoS admission state (`SystemHint::Qos`): token bucket
+    /// plus bounded deferral queues. No entry = best-effort (ungated).
+    qos: HashMap<Rank, QosState<Admission>>,
+    /// Wall-clock stamp of the last QoS bucket refill (non-model mode).
+    qos_refilled: Instant,
+    /// Per-client inter-file phase detectors (DESIGN.md §4.8): spot a
+    /// client alternating read(src)/write(dst) across two files.
+    phase: HashMap<Rank, PhaseDetector>,
+    /// Locked-in (src, dst) phase pair per client, for write-behind
+    /// co-scheduling under the src stream's prefetch slack.
+    phase_pairs: HashMap<Rank, (FileId, FileId)>,
     /// Files with write-behind enabled (`PrefetchHint::DelayedWrite`).
     wb_files: HashSet<FileId>,
     /// Bounded write-behind staging buffer (shared across files).
@@ -502,6 +537,9 @@ impl Server {
         let free_extents = vec![Vec::new(); disks.len()];
         let prefetch_on = cfg.prefetch;
         let wb = WriteBehind::new(cfg.write_behind);
+        // the kill-switch config (`prefetch: false`) starts the arbiter
+        // zeroed too, so a later `Prefetch(true)` restores the budget
+        let arb = Arbiter::new(if cfg.prefetch { cfg.prefetch_budget } else { 0 });
         Ok(Self {
             ep,
             cfg,
@@ -525,6 +563,11 @@ impl Server {
             seq_hint: HashMap::new(),
             pattern: HashMap::new(),
             plans: HashMap::new(),
+            arb,
+            qos: HashMap::new(),
+            qos_refilled: Instant::now(),
+            phase: HashMap::new(),
+            phase_pairs: HashMap::new(),
             wb_files: HashSet::new(),
             wb,
             wb_inflight: HashMap::new(),
@@ -551,26 +594,36 @@ impl Server {
     /// forever (DESIGN.md §4.4).
     pub fn run(mut self) {
         loop {
+            // pending QoS deferrals drain as wall time refills their
+            // buckets (model mode never reads the clock: its refills ride
+            // the virtual-time sentinel below)
+            if !self.cfg.model && self.qos_deferred_total() > 0 {
+                self.qos_tick(false);
+            }
             let msg = if self.cfg.model {
                 // Model mode: never consult the wall clock — schedules
                 // must replay identically regardless of host speed. With
-                // windows pending we arm a timeout-capable receive; the
-                // checker completes it with a virtual-time sentinel only
-                // at quiescence, which stands in for "the straggler
-                // deadline passed" and force-flushes whatever arrived.
-                match self.next_window_deadline() {
-                    None => self.ep.recv(),
-                    Some(_) => match self.ep.recv_timeout(Duration::from_millis(1)) {
+                // windows pending — or QoS deferrals awaiting a token
+                // refill — we arm a timeout-capable receive; the checker
+                // completes it with a virtual-time sentinel only at
+                // quiescence, which stands in for "the straggler deadline
+                // passed": force-flush the windows and refill the
+                // buckets, so a deferred request can never deadlock.
+                if self.next_window_deadline().is_none() && self.qos_deferred_total() == 0 {
+                    self.ep.recv()
+                } else {
+                    match self.ep.recv_timeout(Duration::from_millis(1)) {
                         Ok(m) => Some(m),
                         Err(RecvTimeoutError::Timeout) => {
                             self.flush_windows_now();
+                            self.qos_tick(true);
                             continue;
                         }
                         Err(RecvTimeoutError::Disconnected) => None,
-                    },
+                    }
                 }
             } else {
-                match self.next_window_deadline() {
+                match self.next_deadline() {
                     None => self.ep.recv(),
                     Some(at) => {
                         let now = Instant::now();
@@ -820,6 +873,7 @@ impl Server {
         file: FileId,
         parts: &[(u64, u64, u64)],
     ) -> bool {
+        self.note_phase(client, file, false);
         let entry = match self.dir.get(file) {
             Some(e) => e,
             None => {
@@ -1218,6 +1272,11 @@ impl Server {
         if !sequential {
             return;
         }
+        // fair-share accounting (DESIGN.md §4.8): a sequential stream
+        // consumed this many bytes of the window it previously charged —
+        // credit them back as useful so its DRR weight reflects reality
+        let consumed: u64 = parts.iter().map(|p| p.1).sum();
+        self.arb.release(key, consumed, true);
         let window = self
             .seq_hint
             .get(&file)
@@ -1239,16 +1298,36 @@ impl Server {
             }
         }
         for (disk_idx, doff, run) in runs {
-            self.submit_prefetch(disk_idx, doff, run);
+            self.submit_prefetch(Some(key), disk_idx, doff, run);
         }
     }
 
     /// Route one prefetch run to the right backend: the per-disk queue
     /// at low priority (async kernel — demand ops always overtake it),
     /// or the legacy prefetch worker (blocking baseline).
-    fn submit_prefetch(&mut self, disk_idx: usize, doff: u64, run: u64) {
+    ///
+    /// This is the single charge point of the fair-share budget
+    /// (DESIGN.md §4.8): every byte of speculative I/O actually issued
+    /// on behalf of `key` is granted from the [`Arbiter`] first, and the
+    /// run is cut short the moment the stream's share runs dry. Under
+    /// the default unlimited budget every grant succeeds in full and
+    /// this is pass-through.
+    fn submit_prefetch(
+        &mut self,
+        key: Option<(Rank, FileId)>,
+        disk_idx: usize,
+        doff: u64,
+        run: u64,
+    ) {
         if self.io.is_empty() {
             if let Some(pf) = &self.prefetcher {
+                let run = match key {
+                    Some(k) => self.arb.grant(k, run),
+                    None => run,
+                };
+                if run == 0 {
+                    return;
+                }
                 pf.submit(disk_idx, self.disks[disk_idx].clone(), doff, run);
                 self.stats.prefetch_issued += 1;
             }
@@ -1257,12 +1336,24 @@ impl Server {
         // counted per run (like the legacy worker), even when every page
         // turns out resident — "issued" means the hint/readahead fired
         self.stats.prefetch_issued += 1;
+        let ps = self.cache.config().page as u64;
         let (first, last) = self.cache.page_span(doff, run);
         for no in first..=last {
             if self.cache.is_resident(disk_idx, no)
                 || self.fill_by_page.contains_key(&(disk_idx, no))
             {
                 continue;
+            }
+            if let Some(k) = key {
+                if !self.arb.unlimited() {
+                    let g = self.arb.grant(k, ps);
+                    if g < ps {
+                        // budget exhausted: hand the sliver back without
+                        // biasing the stream's usefulness history
+                        self.arb.ungrant(k, g);
+                        return;
+                    }
+                }
             }
             self.want_page(disk_idx, no, None, IoPrio::Prefetch);
         }
@@ -1306,6 +1397,7 @@ impl Server {
         file: FileId,
         parts: Vec<(u64, Vec<u8>)>,
     ) -> bool {
+        self.note_phase(client, file, true);
         let Some(entry) = self.dir.get_mut(file) else {
             self.ack(
                 client,
@@ -1354,6 +1446,13 @@ impl Server {
                 // budget overflow drains through the per-disk elevator
                 // below demand priority — the flush overlaps request
                 // handling instead of blocking the loop (DESIGN.md §4.4)
+                self.wb_drain_async();
+            } else if self.phase_drain_due(client, file) {
+                // phase-pair co-scheduling (DESIGN.md §4.8): this client
+                // alternates read(src)/write(dst) and the src disk has
+                // no prefetch queued right now — drain the staged dst
+                // bytes under that slack instead of waiting for the
+                // budget trip to dump them mid-read-burst
                 self.wb_drain_async();
             }
             self.ack(client, client, req_id, Response::Written { bytes });
@@ -1569,7 +1668,7 @@ impl Server {
         }
     }
 
-    fn serve_local_prefetch(&mut self, file: FileId, parts: &[(u64, u64)]) {
+    fn serve_local_prefetch(&mut self, client: Rank, file: FileId, parts: &[(u64, u64)]) {
         if !self.prefetch_on {
             return;
         }
@@ -1582,7 +1681,7 @@ impl Server {
             let len = len.min(frag.local_len.saturating_sub(local));
             for (d, run) in frag.runs(local, len) {
                 if let Some(doff) = d {
-                    self.submit_prefetch(frag.disk_idx, doff, run);
+                    self.submit_prefetch(Some((client, file)), frag.disk_idx, doff, run);
                 }
             }
         }
@@ -1628,7 +1727,7 @@ impl Server {
             let parts: Vec<(u64, u64)> =
                 sub.parts.iter().map(|&(l, ln, _)| (l, ln)).collect();
             if sub.server == self.ep.rank {
-                self.serve_local_prefetch(file, &parts);
+                self.serve_local_prefetch(client, file, &parts);
             } else {
                 self.di(
                     sub.server,
@@ -1663,13 +1762,18 @@ impl Server {
                 None => offset + len,
                 Some(v) => v.desc.physical_span(v.disp, offset + len),
             };
+            let mut consumed = 0u64;
             if let Some(ps) = self.plans.get_mut(&key) {
                 while ps.next_consume < ps.next_prefetch
                     && ps.entries[ps.next_consume].0 < consumed_to
                 {
+                    consumed += ps.entries[ps.next_consume].1;
                     ps.next_consume += 1;
                 }
             }
+            // consumed plan entries release their budget charge as
+            // useful — the plan delivered exactly what it promised
+            self.arb.release(key, consumed, true);
             self.plan_topup(key);
             // a fully consumed plan retires so the online detector takes
             // over — a plan truncated at MAX_PLAN_ENTRIES must not leave
@@ -1680,6 +1784,7 @@ impl Server {
                 .is_some_and(|ps| ps.next_consume >= ps.entries.len())
             {
                 self.plans.remove(&key);
+                self.arb.release_all(key, true);
             }
             return;
         }
@@ -1690,11 +1795,21 @@ impl Server {
         }
         let eof = self.dir.get(file).map_or(0, |e| e.meta.size);
         let window = self.prefetch_window();
-        let preds = {
+        let (seen, preds) = {
             let det = self.pattern.entry(key).or_default();
-            det.observe(offset, len);
-            det.predict(window, eof)
+            let seen = det.observe(offset, len);
+            (seen, det.predict(window, eof))
         };
+        // budget accounting on the stream's own evidence: a read that
+        // matched a prediction releases its bytes as useful; a broken
+        // pattern abandons the whole charged window (reclaimed, counted)
+        match seen {
+            Observed::Matched => self.arb.release(key, len, true),
+            Observed::Broke => {
+                self.stats.budget_reclaims += self.arb.release_all(key, false);
+            }
+            Observed::New => {}
+        }
         for (o, l) in preds {
             let n = self.advance_prefetch(client, file, o, l);
             self.stats.predicted_bytes += n;
@@ -2022,6 +2137,7 @@ impl Server {
         d.wb_waiters = self.wb_waiters.len();
         d.fills = self.fills.len();
         d.pending_flushes = self.pending_flushes.len();
+        d.qos_deferred = self.qos_deferred_total();
         d
     }
 
@@ -2089,6 +2205,11 @@ impl Server {
                 panic!("server {me}: sched queue-depth gauge wrapped");
             }
         }
+        // arbiter ledger: outstanding must equal the sum of per-stream
+        // charges and respect a finite budget
+        if let Err(e) = self.arb.check() {
+            panic!("server {me}: {e}");
+        }
         // directory epochs only ever move forward
         for (&id, e) in self.dir.iter() {
             let seen = self.epoch_seen.entry(id).or_insert(0);
@@ -2099,6 +2220,208 @@ impl Server {
                 );
             }
             *seen = e.meta.epoch;
+        }
+    }
+
+    // ------------------------------------- QoS admission / arbitration
+
+    /// Event-loop receive deadline (non-model): the earliest collective
+    /// straggler deadline, tightened to ~1ms while QoS deferrals await a
+    /// token refill so parked admissions drain promptly.
+    fn next_deadline(&self) -> Option<Instant> {
+        let w = self.next_window_deadline();
+        if self.qos_deferred_total() == 0 {
+            return w;
+        }
+        let q = Instant::now() + Duration::from_millis(1);
+        Some(w.map_or(q, |w| w.min(q)))
+    }
+
+    fn qos_deferred_total(&self) -> usize {
+        self.qos.values().map(|q| q.deferred()).sum()
+    }
+
+    /// Refill every client's token bucket and replay deferred admissions
+    /// that became affordable. `full` is the model checker's virtual-time
+    /// sentinel standing in for elapsed wall time: it refills to burst
+    /// before *every* pop, which (with the bucket's cost clamp) drains
+    /// the queues completely — a sentinel must never leave a deferral
+    /// parked, or the deadlock oracle would flag a false hang (the
+    /// progress property `tests/model_qos.rs` sweeps for).
+    fn qos_tick(&mut self, full: bool) {
+        if self.qos.is_empty() {
+            return;
+        }
+        if !full {
+            let now = Instant::now();
+            let dt = now.duration_since(self.qos_refilled).as_micros();
+            self.qos_refilled = now;
+            if dt > 0 {
+                let dt = u64::try_from(dt).unwrap_or(u64::MAX);
+                for q in self.qos.values_mut() {
+                    q.bucket.refill_us(dt);
+                }
+            }
+        }
+        // drain in rank order: HashMap iteration order must not decide
+        // replay order (model-mode schedules replay by seed)
+        let mut clients: Vec<Rank> = self.qos.keys().copied().collect();
+        clients.sort_unstable();
+        for c in clients {
+            loop {
+                let adm = self.qos.get_mut(&c).and_then(|q| {
+                    if full {
+                        q.bucket.refill_full();
+                    }
+                    q.pop_ready()
+                });
+                let Some(adm) = adm else { break };
+                self.stats.admitted += 1;
+                self.replay_admission(adm);
+            }
+        }
+    }
+
+    /// Admission class and payload cost of a data-plane request; `None`
+    /// for metadata/coordination traffic (always admitted, not counted).
+    /// Only the client's entry points are charged — internal shards
+    /// (`LocalRead`/`LocalWrite`) were admitted at the buddy, and
+    /// charging them again would double-bill one logical request.
+    fn qos_cost(class: MsgClass, req: &Request) -> Option<(AdmitClass, u64)> {
+        match (class, req) {
+            (MsgClass::ER, Request::Read { len, .. }) => Some((AdmitClass::Demand, *len)),
+            (MsgClass::ER, Request::Write { data, .. }) => {
+                Some((AdmitClass::Demand, data.len() as u64))
+            }
+            (MsgClass::ER, Request::ReadList { extents, .. }) => {
+                Some((AdmitClass::Demand, extents.iter().map(|e| e.1).sum()))
+            }
+            (MsgClass::ER, Request::WriteList { parts, .. }) => Some((
+                AdmitClass::Demand,
+                parts.iter().map(|p| p.1.len() as u64).sum(),
+            )),
+            (MsgClass::DI, Request::LocalPrefetch { parts, .. }) => {
+                Some((AdmitClass::Prefetch, parts.iter().map(|p| p.1).sum()))
+            }
+            _ => None,
+        }
+    }
+
+    /// QoS admission gate (DESIGN.md §4.8). Data-plane requests from a
+    /// client with an installed QoS class pay their payload cost against
+    /// its token bucket; unaffordable ones park in a bounded deferral
+    /// queue (demand ahead of prefetch), and a depth trip sheds — demand
+    /// is error-acked, advisory prefetch dropped, both counted, never
+    /// silently lost. Returns the request when admitted now.
+    fn qos_admit(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        class: MsgClass,
+        req: Request,
+    ) -> Option<Request> {
+        let Some((aclass, cost)) = Self::qos_cost(class, &req) else {
+            return Some(req);
+        };
+        let Some(q) = self.qos.get_mut(&client) else {
+            self.stats.admitted += 1;
+            return Some(req);
+        };
+        if q.try_admit(aclass, cost) {
+            self.stats.admitted += 1;
+            return Some(req);
+        }
+        self.stats.deferred += 1;
+        let adm = Admission { src, client, req_id, class, req };
+        match q.defer(aclass, cost, adm) {
+            Ok(()) => None,
+            Err(adm) => {
+                self.stats.shed += 1;
+                self.shed_admission(adm);
+                None
+            }
+        }
+    }
+
+    /// Overload shed: a demand request gets an error-ack back to its
+    /// requester (the client sees a failed op, not a hang); advisory
+    /// prefetch is fire-and-forget — nobody waits on it — so it just
+    /// drops (already counted by the caller).
+    fn shed_admission(&mut self, adm: Admission) {
+        let Admission { src, client, req_id, req, .. } = adm;
+        if !matches!(req, Request::LocalPrefetch { .. }) {
+            self.ack(
+                src,
+                client,
+                req_id,
+                Response::Error {
+                    msg: format!("qos overload: client {} deferral depth exceeded", client.0),
+                },
+            );
+        }
+    }
+
+    /// Run one previously-admitted (or force-released) admission through
+    /// the normal dispatch path. Deferred data-plane requests are never
+    /// `Shutdown`, so the continue/stop result is moot here.
+    fn replay_admission(&mut self, adm: Admission) {
+        let Admission { src, client, req_id, class, req } = adm;
+        self.handle_req_admitted(src, client, req_id, class, req);
+    }
+
+    /// Error-ack every deferred admission of every client (shutdown and
+    /// teardown paths): parked continuations must not leak.
+    fn qos_shed_all(&mut self) {
+        let mut clients: Vec<Rank> = self.qos.keys().copied().collect();
+        clients.sort_unstable();
+        for c in clients {
+            let drained = self
+                .qos
+                .get_mut(&c)
+                .map(|q| q.drain_all())
+                .unwrap_or_default();
+            for (_, adm) in drained {
+                self.stats.shed += 1;
+                self.shed_admission(adm);
+            }
+        }
+    }
+
+    /// Feed the per-client inter-file phase detector (DESIGN.md §4.8)
+    /// and track the locked pair.
+    fn note_phase(&mut self, client: Rank, file: FileId, is_write: bool) {
+        if !self.prefetch_on {
+            return;
+        }
+        match self.phase.entry(client).or_default().observe(file, is_write) {
+            Some(pair) => {
+                self.phase_pairs.insert(client, pair);
+            }
+            None => {
+                self.phase_pairs.remove(&client);
+            }
+        }
+    }
+
+    /// Phase-pair co-scheduling trigger: `client` is in a locked
+    /// read(src)/write(dst) phase, `file` is its dst, at least one cache
+    /// page is staged for it, and the src fragment's disk has no queued
+    /// prefetch — the slack moment to drain write-behind, instead of
+    /// letting the budget trip dump it mid-read-burst.
+    fn phase_drain_due(&mut self, client: Rank, file: FileId) -> bool {
+        if self.io.is_empty() {
+            return false;
+        }
+        let Some(&(src_file, dst_file)) = self.phase_pairs.get(&client) else {
+            return false;
+        };
+        if dst_file != file || self.wb.file_bytes(file) < self.cache.config().page as u64 {
+            return false;
+        }
+        match self.dir.get(src_file).and_then(|e| e.frag.as_ref()) {
+            Some(f) => self.io[f.disk_idx].queued_prefetch() == 0,
+            None => false,
         }
     }
 
@@ -2125,20 +2448,33 @@ impl Server {
             }
             // virtual-time sentinel: the event loop's receive paths
             // normally consume these; one reaching handle() (a harness
-            // driving it directly) means "straggler deadline passed"
+            // driving it directly) means "straggler deadline passed" —
+            // and "enough time for the QoS buckets to refill"
             Body::Timeout => {
                 self.flush_windows_now();
+                self.qos_tick(true);
                 true
             }
             // a peer (client VI or fellow server) vanished: retire its
             // speculative per-client state. Parked work addressed to it
             // is left alone — `ack()` to a dead rank already no-ops, and
             // collective windows it joined drain at their straggler
-            // deadline.
+            // deadline. Its prefetch-budget charge is reclaimed and its
+            // QoS deferrals shed (the error-acks no-op at the dead rank,
+            // but the counters must balance).
             Body::PeerGone(gone) => {
                 self.seq.retain(|&(r, _), _| r != gone);
                 self.pattern.retain(|&(r, _), _| r != gone);
                 self.plans.retain(|&(r, _), _| r != gone);
+                self.phase.remove(&gone);
+                self.phase_pairs.remove(&gone);
+                self.stats.budget_reclaims += self.arb.reclaim_client(gone);
+                if let Some(mut q) = self.qos.remove(&gone) {
+                    for (_, adm) in q.drain_all() {
+                        self.stats.shed += 1;
+                        self.shed_admission(adm);
+                    }
+                }
                 true
             }
         };
@@ -2148,7 +2484,24 @@ impl Server {
         cont
     }
 
+    /// Request entry: the QoS admission gate runs first, then the
+    /// admitted path. A deferred request returns `true` (keep serving) —
+    /// it replays through [`Self::replay_admission`] when tokens refill.
     fn handle_req(
+        &mut self,
+        src: Rank,
+        client: Rank,
+        req_id: u64,
+        class: MsgClass,
+        req: Request,
+    ) -> bool {
+        match self.qos_admit(src, client, req_id, class, req) {
+            Some(req) => self.handle_req_admitted(src, client, req_id, class, req),
+            None => true,
+        }
+    }
+
+    fn handle_req_admitted(
         &mut self,
         src: Rank,
         client: Rank,
@@ -2192,6 +2545,17 @@ impl Server {
                 self.seq.retain(|(c, _), _| *c != client);
                 self.pattern.retain(|(c, _), _| *c != client);
                 self.plans.retain(|(c, _), _| *c != client);
+                self.phase.remove(&client);
+                self.phase_pairs.remove(&client);
+                self.stats.budget_reclaims += self.arb.reclaim_client(client);
+                // anything still deferred belongs to ops the client
+                // abandoned (it is leaving): error-ack, never leak
+                if let Some(mut q) = self.qos.remove(&client) {
+                    for (_, adm) in q.drain_all() {
+                        self.stats.shed += 1;
+                        self.shed_admission(adm);
+                    }
+                }
                 self.ack(src, client, req_id, Response::Disconnected);
             }
             Request::Open { name, mode } => self.open(src, client, req_id, name, mode),
@@ -2226,6 +2590,8 @@ impl Server {
                 self.wb_files.remove(&file);
                 self.pattern.retain(|(_, f), _| *f != file);
                 self.plans.retain(|(_, f), _| *f != file);
+                self.stats.budget_reclaims += self.arb.reclaim_file(file);
+                self.phase_pairs.retain(|_, &mut (s, d)| s != file && d != file);
                 // pending collective participants must not hang
                 self.abort_windows(file, &format!("{file:?} removed"));
                 let removed = self.dir.remove(file);
@@ -2345,7 +2711,7 @@ impl Server {
             }
             Request::LocalPrefetch { file, meta, parts } => {
                 self.ensure_entry(&meta);
-                self.serve_local_prefetch(file, &parts);
+                self.serve_local_prefetch(client, file, &parts);
             }
             Request::SizeUpdate { file, size, exact } => {
                 if let Some(e) = self.dir.get_mut(file) {
@@ -2476,6 +2842,10 @@ impl Server {
                 self.ack(src, client, req_id, Response::DumpAck(Box::new(dump)));
             }
             Request::Shutdown => {
+                // the deferral queues must drain with error-acks before
+                // the loop exits — a parked admission leaked here would
+                // leave its client waiting on an ack that never comes
+                self.qos_shed_all();
                 self.ack(src, client, req_id, Response::Synced);
                 return false;
             }
@@ -3608,8 +3978,54 @@ impl Server {
                     // not keep issuing predictions
                     self.plans.clear();
                     self.pattern.clear();
-                } else if self.prefetcher.is_none() && self.io.is_empty() {
-                    self.prefetcher = Some(Prefetcher::start(self.cache.clone()));
+                    self.phase.clear();
+                    self.phase_pairs.clear();
+                    // ... and the arbitration layer: outstanding stream
+                    // charges are reclaimed, the global budget zeroed,
+                    // and deferred *prefetch* admissions released (they
+                    // would otherwise sit parked waiting for tokens only
+                    // to be dropped by serve_local_prefetch anyway)
+                    self.stats.budget_reclaims += self.arb.reclaim_all();
+                    self.arb.set_budget(0);
+                    let mut clients: Vec<Rank> = self.qos.keys().copied().collect();
+                    clients.sort_unstable();
+                    for c in clients {
+                        let dropped = self
+                            .qos
+                            .get_mut(&c)
+                            .map(|q| q.drain_prefetch())
+                            .unwrap_or_default();
+                        for adm in dropped {
+                            self.stats.shed += 1;
+                            self.shed_admission(adm);
+                        }
+                    }
+                } else {
+                    self.arb.set_budget(self.cfg.prefetch_budget);
+                    if self.prefetcher.is_none() && self.io.is_empty() {
+                        self.prefetcher = Some(Prefetcher::start(self.cache.clone()));
+                    }
+                }
+            }
+            Hint::System(SystemHint::Qos { rate, burst }) => {
+                // per-client QoS class (DESIGN.md §4.8). Addressed
+                // per-server (`hint_to`), like DropCaches.
+                if rate == 0 {
+                    // back to best-effort: replay everything the old
+                    // class deferred — nothing lost, nothing parked
+                    if let Some(mut q) = self.qos.remove(&client) {
+                        for (_, adm) in q.drain_all() {
+                            self.stats.admitted += 1;
+                            self.replay_admission(adm);
+                        }
+                    }
+                } else {
+                    match self.qos.get_mut(&client) {
+                        Some(q) => q.set_class(rate, burst),
+                        None => {
+                            self.qos.insert(client, QosState::new(rate, burst));
+                        }
+                    }
                 }
             }
             Hint::System(SystemHint::CacheBytes(_)) => {
@@ -4004,7 +4420,10 @@ impl Server {
         self.seq.retain(|(_, f), _| *f != file);
         self.ack(src, client, req_id, Response::ReorgCommitted);
         for (dsrc, dclient, did, dreq) in st.deferred {
-            self.handle_req(dsrc, dclient, did, MsgClass::ER, dreq);
+            // admitted path: these paid the QoS gate when they arrived —
+            // re-admitting a replay would double-count (and could shed
+            // an op the client was already promised an answer for)
+            self.handle_req_admitted(dsrc, dclient, did, MsgClass::ER, dreq);
         }
         // a collective window flush this reorg parked can run now
         self.flush_unblocked_windows(file);

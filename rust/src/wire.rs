@@ -303,6 +303,11 @@ fn put_hint(out: &mut Vec<u8>, h: &Hint) {
                     put_bool(out, *on);
                 }
                 SystemHint::DropCaches => put_u32(out, 2),
+                SystemHint::Qos { rate, burst } => {
+                    put_u32(out, 3);
+                    put_u64(out, *rate);
+                    put_u64(out, *burst);
+                }
             }
         }
     }
@@ -489,7 +494,7 @@ fn put_request(out: &mut Vec<u8>, req: &Request) {
 /// means appending it here and in `stats()` (both sides are in this file
 /// so the pair stays in sync, and the round-trip test fails loudly on a
 /// mismatch).
-fn stats_fields(s: &ServerStats) -> [u64; 32] {
+fn stats_fields(s: &ServerStats) -> [u64; 36] {
     [
         s.ext_requests,
         s.int_requests,
@@ -523,6 +528,10 @@ fn stats_fields(s: &ServerStats) -> [u64; 32] {
         s.collective_windows,
         s.bytes_copied,
         s.bytes_aliased,
+        s.admitted,
+        s.deferred,
+        s.shed,
+        s.budget_reclaims,
     ]
 }
 
@@ -550,6 +559,7 @@ fn put_dump(out: &mut Vec<u8>, d: &ProtoDump) {
     put_u64(out, d.wb_waiters as u64);
     put_u64(out, d.fills as u64);
     put_u64(out, d.pending_flushes as u64);
+    put_u64(out, d.qos_deferred as u64);
 }
 
 fn put_response(out: &mut Vec<u8>, resp: &Response) {
@@ -940,6 +950,10 @@ impl<'a> Cur<'a> {
                 0 => Ok(Hint::System(SystemHint::CacheBytes(self.u64()?))),
                 1 => Ok(Hint::System(SystemHint::Prefetch(self.bool()?))),
                 2 => Ok(Hint::System(SystemHint::DropCaches)),
+                3 => Ok(Hint::System(SystemHint::Qos {
+                    rate: self.u64()?,
+                    burst: self.u64()?,
+                })),
                 t => Err(WireError::BadTag { what: "SystemHint", tag: t }),
             },
             t => Err(WireError::BadTag { what: "Hint", tag: t }),
@@ -1070,7 +1084,7 @@ impl<'a> Cur<'a> {
 
     fn stats(&mut self) -> Result<ServerStats> {
         let mut s = ServerStats::default();
-        let fields: [&mut u64; 32] = [
+        let fields: [&mut u64; 36] = [
             &mut s.ext_requests,
             &mut s.int_requests,
             &mut s.broadcasts_rx,
@@ -1103,6 +1117,10 @@ impl<'a> Cur<'a> {
             &mut s.collective_windows,
             &mut s.bytes_copied,
             &mut s.bytes_aliased,
+            &mut s.admitted,
+            &mut s.deferred,
+            &mut s.shed,
+            &mut s.budget_reclaims,
         ];
         for f in fields {
             *f = self.u64()?;
@@ -1131,6 +1149,7 @@ impl<'a> Cur<'a> {
             wb_waiters: self.u64()? as usize,
             fills: self.u64()? as usize,
             pending_flushes: self.u64()? as usize,
+            qos_deferred: self.u64()? as usize,
         })
     }
 

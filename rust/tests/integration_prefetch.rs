@@ -29,6 +29,10 @@ fn sum_stats(c: &mut Client, ranks: &[Rank]) -> ServerStats {
         total.wb_staged_bytes += st.wb_staged_bytes;
         total.wb_flushed_runs += st.wb_flushed_runs;
         total.io_errors += st.io_errors;
+        total.budget_reclaims += st.budget_reclaims;
+        total.admitted += st.admitted;
+        total.deferred += st.deferred;
+        total.shed += st.shed;
     }
     total
 }
@@ -165,7 +169,11 @@ fn write_behind_survives_concurrent_reorg_freeze() {
 /// installed access plans — and re-enabling brings the detector back.
 #[test]
 fn prefetch_kill_switch_silences_pattern_and_plan() {
-    let p = ServerPool::start(1, ServerConfig::default()).unwrap();
+    // finite global budget: the kill switch must also zero it and
+    // re-enable must restore it (DESIGN.md §4.8) — u64::MAX would
+    // bypass the arbiter and hide a broken restore path
+    let cfg = ServerConfig { prefetch_budget: 256 * 1024, ..ServerConfig::default() };
+    let p = ServerPool::start(1, cfg).unwrap();
     let mut c = p.client().unwrap();
     let h = c.open("ks", OpenMode::rdwr_create()).unwrap();
     let chunk = vec![3u8; 1 << 20];
@@ -193,6 +201,55 @@ fn prefetch_kill_switch_silences_pattern_and_plan() {
     }
     let st = sum_stats(&mut c, p.server_ranks());
     assert!(st.predicted_bytes > 0, "detector never came back after re-enable");
+    // predictions must turn into issued prefetch again — i.e. the
+    // re-enable restored the finite budget, not just the detector
+    assert!(st.prefetch_issued > 0, "budget stayed zeroed after re-enable");
+    p.shutdown().unwrap();
+}
+
+/// Kill-switch interaction with the global prefetch budget: flipping
+/// `Prefetch(false)` mid-stream must reclaim every outstanding byte the
+/// arbiter has charged (counted in `budget_reclaims`), freeze issue at
+/// zero budget, and hand the full budget back on re-enable.
+#[test]
+fn kill_switch_zeroes_budget_and_reclaims_charges() {
+    let cfg = ServerConfig { prefetch_budget: 256 * 1024, ..ServerConfig::default() };
+    let p = ServerPool::start(1, cfg).unwrap();
+    let server = p.server_ranks()[0];
+    let mut c = p.client().unwrap();
+    let h = c.open("ksb", OpenMode::rdwr_create()).unwrap();
+    let chunk = vec![7u8; 1 << 20];
+    for off in [0u64, 1 << 20, 2 << 20, 3 << 20] {
+        c.write_at(h, off, &chunk).unwrap();
+    }
+    c.sync(h).unwrap();
+    drop_caches(&mut c, &p);
+    // strided stream under the finite budget: the detector locks and
+    // keeps a charged prediction window ahead of the reads
+    let mut buf = vec![0u8; 65536];
+    for i in 0..12u64 {
+        c.read_at(h, i * 262144, &mut buf).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.prefetch_issued > 0, "finite budget blocked all prefetch");
+    c.hint_to(server, Hint::System(SystemHint::Prefetch(false))).unwrap();
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.budget_reclaims > 0, "kill switch reclaimed no outstanding charges");
+    let issued_at_kill = st.prefetch_issued;
+    // the stream continues, but with the budget zeroed nothing new may
+    // be granted or issued
+    for i in 12..18u64 {
+        c.read_at(h, i * 262144, &mut buf).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert_eq!(st.prefetch_issued, issued_at_kill, "issue continued on a zero budget");
+    // re-enable restores the configured budget and prefetch resumes
+    c.hint_to(server, Hint::System(SystemHint::Prefetch(true))).unwrap();
+    for i in 18..30u64 {
+        c.read_at(h, i * 262144, &mut buf).unwrap();
+    }
+    let st = sum_stats(&mut c, p.server_ranks());
+    assert!(st.prefetch_issued > issued_at_kill, "budget never came back");
     p.shutdown().unwrap();
 }
 

@@ -1,0 +1,159 @@
+//! Property tests for the server-global scheduling primitives
+//! (DESIGN.md §4.8): the usefulness-weighted deficit-round-robin
+//! apportioner and the per-client QoS admission state. Deterministic
+//! xorshift PRNG in place of proptest (not in the vendored crate set);
+//! seeds are part of the assertion messages.
+
+use vipios::sched::{drr_apportion, AdmitClass, QosState, QOS_DEPTH};
+use vipios::util::XorShift64;
+
+fn rand_streams(r: &mut XorShift64) -> Vec<(u64, u64)> {
+    let n = r.below(12) as usize;
+    (0..n)
+        .map(|_| {
+            let w = r.below(9); // 0 tolerated: apportioner clamps to 1
+            let d = if r.below(4) == 0 { 0 } else { r.below(1 << 20) };
+            (w, d)
+        })
+        .collect()
+}
+
+/// Never over-grants: `sum(grants) <= budget` and `grants[i] <=
+/// demand[i]`, for any weights, demands and budget.
+#[test]
+fn apportion_respects_budget_and_demand() {
+    let mut r = XorShift64::new(0xD22);
+    for case in 0..3_000 {
+        let streams = rand_streams(&mut r);
+        let budget = r.below(1 << 21);
+        let grants = drr_apportion(budget, &streams);
+        assert_eq!(grants.len(), streams.len(), "case {case}");
+        let sum: u64 = grants.iter().sum();
+        assert!(sum <= budget, "case {case}: granted {sum} > budget {budget}");
+        for (i, (&g, &(w, d))) in grants.iter().zip(&streams).enumerate() {
+            assert!(g <= d, "case {case} stream {i} (w={w}): granted {g} > demand {d}");
+        }
+    }
+}
+
+/// Work-conserving: when demand exists it is satisfied up to the
+/// budget — `sum(grants) == min(budget, sum(demand))`. No bytes are
+/// stranded by the rounding of weighted shares.
+#[test]
+fn apportion_is_work_conserving() {
+    let mut r = XorShift64::new(0xD23);
+    for case in 0..3_000 {
+        let streams = rand_streams(&mut r);
+        let budget = r.below(1 << 21);
+        let want: u64 = streams.iter().map(|&(_, d)| d).sum::<u64>().min(budget);
+        let got: u64 = drr_apportion(budget, &streams).iter().sum();
+        assert_eq!(got, want, "case {case}: streams={streams:?} budget={budget}");
+    }
+}
+
+/// Pure function of its inputs — replays (and the model checker's
+/// schedule replay above it) depend on this.
+#[test]
+fn apportion_is_deterministic() {
+    let mut r = XorShift64::new(0xD24);
+    for _ in 0..500 {
+        let streams = rand_streams(&mut r);
+        let budget = r.below(1 << 21);
+        assert_eq!(drr_apportion(budget, &streams), drr_apportion(budget, &streams));
+    }
+}
+
+/// Under contention (budget below total demand), a stream with the
+/// higher usefulness weight never receives less than an equal-demand
+/// stream with a lower weight.
+#[test]
+fn apportion_weight_monotone() {
+    let mut r = XorShift64::new(0xD25);
+    for case in 0..2_000 {
+        let d = r.range(2, 1 << 18);
+        let lo = r.range(1, 7);
+        let hi = lo + r.range(1, 4);
+        let budget = r.range(1, 2 * d - 1); // strictly contended
+        let grants = drr_apportion(budget, &[(hi, d), (lo, d)]);
+        assert!(
+            grants[0] >= grants[1],
+            "case {case}: hi-weight {} got {} < lo-weight {} got {} (d={d} b={budget})",
+            hi,
+            grants[0],
+            lo,
+            grants[1],
+        );
+    }
+}
+
+/// QosState conservation + ordering: every deferred item comes back out
+/// exactly once, demand strictly ahead of prefetch, FIFO within a
+/// class, and neither queue ever exceeds [`QOS_DEPTH`].
+#[test]
+fn qos_state_conserves_and_orders() {
+    let mut r = XorShift64::new(0xD26);
+    for case in 0..800 {
+        let mut q: QosState<u64> = QosState::new(r.range(1, 512), r.range(1, 4096));
+        let nops = r.range(1, 60);
+        let mut parked_demand = Vec::new();
+        let mut parked_prefetch = Vec::new();
+        let mut live = Vec::new(); // admitted immediately
+        let mut shed = Vec::new();
+        for tag in 0..nops {
+            let class = if r.below(3) == 0 { AdmitClass::Prefetch } else { AdmitClass::Demand };
+            let cost = r.range(1, 8192);
+            match q.admit(class, cost, tag) {
+                Ok(true) => live.push(tag),
+                Ok(false) => match class {
+                    AdmitClass::Demand => parked_demand.push(tag),
+                    AdmitClass::Prefetch => parked_prefetch.push(tag),
+                },
+                Err(t) => shed.push(t),
+            }
+            assert!(q.deferred() <= 2 * QOS_DEPTH, "case {case}: queues overfull");
+        }
+        assert_eq!(
+            live.len() + parked_demand.len() + parked_prefetch.len() + shed.len(),
+            nops as usize,
+            "case {case}: ops lost at admission"
+        );
+        // full-bucket drain must replay every parked item, demand first,
+        // FIFO within each class
+        let mut drained = Vec::new();
+        loop {
+            q.bucket.refill_full();
+            match q.pop_ready() {
+                Some(t) => drained.push(t),
+                None => break,
+            }
+        }
+        let expect: Vec<u64> =
+            parked_demand.iter().chain(parked_prefetch.iter()).copied().collect();
+        assert_eq!(drained, expect, "case {case}: drain order broke FIFO/class priority");
+        assert_eq!(q.deferred(), 0, "case {case}: items stranded after drain");
+    }
+}
+
+/// The shed bound is exact: with a bucket that can never pay, the
+/// (QOS_DEPTH+1)-th deferral of a class is the first one rejected.
+#[test]
+fn qos_depth_trips_exactly_at_bound() {
+    let mut q: QosState<usize> = QosState::new(1, 1);
+    assert!(matches!(q.admit(AdmitClass::Demand, 1, 0), Ok(true)));
+    for i in 1..=QOS_DEPTH {
+        assert!(
+            matches!(q.admit(AdmitClass::Demand, 1, i), Ok(false)),
+            "deferral {i} should park"
+        );
+    }
+    assert!(
+        matches!(q.admit(AdmitClass::Demand, 1, QOS_DEPTH + 1), Err(_)),
+        "depth {} should shed",
+        QOS_DEPTH + 1
+    );
+    // prefetch has its own independent depth
+    for i in 0..QOS_DEPTH {
+        assert!(matches!(q.admit(AdmitClass::Prefetch, 1, 100 + i), Ok(false)));
+    }
+    assert!(matches!(q.admit(AdmitClass::Prefetch, 1, 999), Err(_)));
+}

@@ -136,9 +136,10 @@ fn rand_hint(r: &mut XorShift64) -> Hint {
                 parts: (0..r.below(5)).map(|_| (r.below(1 << 20), r.range(1, 4096))).collect(),
             },
         }),
-        _ => Hint::System(match r.below(3) {
+        _ => Hint::System(match r.below(4) {
             0 => SystemHint::CacheBytes(r.below(1 << 30)),
             1 => SystemHint::Prefetch(r.chance(1, 2)),
+            2 => SystemHint::Qos { rate: r.next_u64(), burst: r.next_u64() },
             _ => SystemHint::DropCaches,
         }),
     }
@@ -152,6 +153,10 @@ fn rand_stats(r: &mut XorShift64) -> ServerStats {
         prefetch_hits: r.next_u64(),
         io_parked: r.next_u64(),
         wb_staged_bytes: r.next_u64(),
+        admitted: r.next_u64(),
+        deferred: r.next_u64(),
+        shed: r.next_u64(),
+        budget_reclaims: r.next_u64(),
         ..ServerStats::default()
     }
 }
@@ -168,6 +173,7 @@ fn rand_dump(r: &mut XorShift64) -> ProtoDump {
         wb_waiters: r.below(8) as usize,
         fills: r.below(8) as usize,
         pending_flushes: r.below(8) as usize,
+        qos_deferred: r.below(8) as usize,
     }
 }
 

@@ -28,11 +28,17 @@ import re
 import sys
 
 # Same column heuristic as tools/perf_gate.py: the performance-shaped
-# floors plus the copies-per-byte ceiling cells (lower is better there,
-# but a drifting value is worth seeing either way).
+# floors plus the ceiling cells — copies-per-byte and the E12/E13
+# latency percentiles (lower is better there, but a drifting value is
+# worth seeing either way).
 TRACKED_HEADER = re.compile(
-    r"MB/s|hit|speedup|uplift|rate|^qd=|copied/demand|copies/byte", re.IGNORECASE
+    r"MB/s|hit|speedup|uplift|rate|^qd=|copied/demand|copies/byte|p95|p99",
+    re.IGNORECASE,
 )
+
+# Ceiling-shaped subset of TRACKED_HEADER: rendered with a "(↓ better)"
+# marker so a falling trend line reads as the improvement it is.
+CEILING_HEADER = re.compile(r"copied/demand|copies/byte|p95|p99", re.IGNORECASE)
 
 
 def as_number(cell):
@@ -136,6 +142,8 @@ def render(labels, order, values, docs_by_label):
         for key in keys:
             rl = row_label(docs_by_label, key)
             name = f"{rl} · {key[2]}"
+            if CEILING_HEADER.search(key[2]):
+                name += " (↓ better)"
             cells = []
             for lb in labels:
                 v = values[key].get(lb)
@@ -166,7 +174,30 @@ def self_test():
     docs_by_label = {lb: {"overlap": d["overlap"]} for lb, d in runs}
     md = render(["r1", "r2"], order, values, docs_by_label)
     assert "| 8 · MB/s | 10 | 12.5 |" in md, md
-    assert "| 8 · copied/demand | 1 | 0.002 |" in md, md
+    # ceiling-shaped cells carry the direction marker, floors do not
+    assert "| 8 · copied/demand (↓ better) | 1 | 0.002 |" in md, md
+    assert "MB/s (↓ better)" not in md, md
+    # mixed floor/ceiling table (the E13 shape): floors and percentile
+    # ceilings from the same row each render with their own direction
+    mixed = lambda bw, p99: {
+        "experiment": "tenants",
+        "quick": True,
+        "tables": [
+            {
+                "title": "e13",
+                "headers": ["class", "MB/s", "p50(us)", "p99(us)"],
+                "rows": [["strided", bw, 900, p99]],
+            }
+        ],
+    }
+    runs_m = [("a", {"tenants": mixed(5.0, 12000)}), ("b", {"tenants": mixed(6.0, 3000)})]
+    order_m, values_m = collect(runs_m)
+    headers_m = [k[2] for k in order_m]
+    assert headers_m == ["MB/s", "p99(us)"], headers_m  # p50 stays untracked
+    docs_m = {lb: d for lb, d in runs_m}
+    md_m = render(["a", "b"], order_m, values_m, docs_m)
+    assert "| strided · MB/s | 5 | 6 |" in md_m, md_m
+    assert "| strided · p99(us) (↓ better) | 12000 | 3000 |" in md_m, md_m
     # a run missing the cell renders a dash
     md2 = render(["r1", "r2", "r3"], order, values, docs_by_label)
     assert "| 10 | 12.5 | — |" in md2, md2

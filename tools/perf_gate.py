@@ -8,11 +8,14 @@ drops below `baseline * (1 - tol)` — SimDisk timing is deterministic in
 shape, but CI machines vary in absolute speed, so the committed floors
 are conservative and the tolerance band stays tight on top of them.
 
-Copies-per-byte cells (`copied/demand`) are the one exception: they are
-*ceilings* — fewer data-plane copies is better, so a cell fails when it
-rises above `baseline * (1 + tol)`. The committed ceiling for the E11
-read phase is 1.0 copied bytes per demanded byte (the zero-copy
-acceptance bound); the measured value is ~0.
+Copies-per-byte cells (`copied/demand`) and latency-percentile cells
+(`p95`/`p99`, including the E13 `p99 on/off` headline ratio) are the
+exception: they are *ceilings* — fewer copies / lower tail latency is
+better, so a cell fails when it rises above `baseline * (1 + tol)`. The
+committed ceiling for the E11 read phase is 1.0 copied bytes per
+demanded byte (the zero-copy acceptance bound); the E13 strided-class
+headline ceiling is 0.7 (arbitration must cut the p99 tail by >= 2x
+minus the tolerance band).
 
 Matching is structural: tables by exact title, rows by index, columns by
 header. A baseline table/row/cell missing from the current output is a
@@ -39,8 +42,10 @@ import sys
 GATED_HEADER = re.compile(r"MB/s|hit|speedup|uplift|rate|^qd=", re.IGNORECASE)
 
 # Ceiling-gated columns: lower is better, fail when the current value
-# exceeds baseline * (1 + tol). Must stay disjoint from GATED_HEADER.
-CEILING_HEADER = re.compile(r"copied/demand|copies/byte", re.IGNORECASE)
+# exceeds baseline * (1 + tol). Latency percentiles auto-classify by
+# header name (`p95(us)`, `p99(us)`, `p99 on/off`, ...). Must stay
+# disjoint from GATED_HEADER.
+CEILING_HEADER = re.compile(r"copied/demand|copies/byte|p95|p99", re.IGNORECASE)
 
 
 def as_number(cell):
@@ -116,7 +121,14 @@ def self_test():
                 "title": "t",
                 "headers": ["mode", "MB/s", "hit rate", "msgs", "copied/demand"],
                 "rows": [["a", 100, "80.0%", 7, 1.0], ["b", 50, "10.0%", 9, 1.0]],
-            }
+            },
+            {
+                "title": "lat",
+                "headers": ["class", "MB/s", "p50(us)", "p95(us)", "p99(us)"],
+                # p50 is informational (non-numeric baseline); p95/p99
+                # are ceilings, MB/s stays a floor in the same row
+                "rows": [["strided", 20, "-", 4000, 12000]],
+            },
         ]
     }
     ok = {
@@ -127,7 +139,13 @@ def self_test():
                 # faster + msgs column regressed (not gated) + fewer
                 # copies (under the ceiling) -> pass
                 "rows": [["a", 120, "85.0%", 900, 0.002], ["b", 45, "9.5%", 1, 1.1]],
-            }
+            },
+            {
+                "title": "lat",
+                "headers": ["class", "MB/s", "p50(us)", "p95(us)", "p99(us)"],
+                # higher throughput AND lower tail -> both directions pass
+                "rows": [["strided", 25, 999999, 1500, 3000]],
+            },
         ]
     }
     assert compare(base, ok, 0.2) == [], "clean run must pass"
@@ -141,6 +159,21 @@ def self_test():
     assert len(fails) == 1 and "copied/demand" in fails[0] and "ceiling" in fails[0], (
         f"copy regression not caught: {fails}"
     )
+    # latency ceiling direction: a p99 above baseline*(1+tol) fails even
+    # while the floor columns of the same row improve
+    tail = json.loads(json.dumps(ok))
+    tail["tables"][1]["rows"][0][4] = 20000
+    fails = compare(base, tail, 0.2)
+    assert len(fails) == 1 and "p99" in fails[0] and "ceiling" in fails[0], (
+        f"tail-latency regression not caught: {fails}"
+    )
+    # and a p95 exactly at the bound passes while one above fails
+    edge = json.loads(json.dumps(ok))
+    edge["tables"][1]["rows"][0][3] = 4000 * 1.2
+    assert compare(base, edge, 0.2) == [], "p95 at the ceiling must pass"
+    edge["tables"][1]["rows"][0][3] = 4000 * 1.2 + 1
+    fails = compare(base, edge, 0.2)
+    assert len(fails) == 1 and "p95" in fails[0], f"p95 ceiling not enforced: {fails}"
     missing = {"tables": []}
     assert compare(base, missing, 0.2), "missing table must fail"
     nonnum = json.loads(json.dumps(ok))
