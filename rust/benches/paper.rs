@@ -9,6 +9,9 @@
 //! `dedicated | nondedicated | vs_unix | vs_romio | scalability | buffer |
 //! redistribution | ablation | all` (default `all`).
 
+// Bench harness: measuring wall-clock time is the entire job.
+#![allow(clippy::disallowed_methods)]
+
 fn main() -> anyhow::Result<()> {
     // Explicit positional parsing. Cargo appends its own flags (notably
     // `--bench`) to `harness = false` targets, so flags we don't know are

@@ -7,6 +7,9 @@
 //! numbers come from the [`SimCost`] disk model — 1998 disks scaled
 //! 10x — so *shapes* (who wins, scaling, crossovers) are the result.
 
+// Bench harness: measuring wall-clock time is the entire job.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 

@@ -16,6 +16,9 @@
 //! The deployment rig merges those lines into the `BENCH_deploy.json`
 //! percentiles. `--shutdown` asks every server to exit afterwards.
 
+// Deployment binary: real sockets, real time; never model-checked.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 use vipios::client::Client;

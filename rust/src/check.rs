@@ -192,6 +192,9 @@ impl ModelHook {
     /// Block until every tracked thread is parked or finished. `false`
     /// if the wall-clock safety net trips first.
     fn wait_stable(&self) -> bool {
+        // the checker's only clock use: a safety net against a hung
+        // server thread, never part of an explored schedule
+        #[allow(clippy::disallowed_methods)]
         let deadline = Instant::now() + STABLE_WAIT;
         let mut st = self.st.lock().unwrap();
         loop {
@@ -202,6 +205,8 @@ impl ModelHook {
             {
                 return true;
             }
+            // safety-net progress probe (protolint: allow-wallclock)
+            #[allow(clippy::disallowed_methods)]
             let now = Instant::now();
             if now >= deadline {
                 return false;

@@ -662,6 +662,18 @@ impl Client {
         }
     }
 
+    /// Directory lookup by name (§5.1.1): the buddy answers from its
+    /// directory view without opening the file. `None` means the name
+    /// is unknown there — existence probes and metadata reads cost one
+    /// round trip and never create state.
+    pub fn lookup(&mut self, name: &str) -> Result<Option<crate::directory::FileMeta>> {
+        let op = self.send_admin(self.buddy, Request::Lookup { name: name.to_string() })?;
+        match self.wait(op)? {
+            OpResult::Admin(Response::LookupAck { meta }) => Ok(meta),
+            other => bail!("lookup failed: {other:?}"),
+        }
+    }
+
     /// The underlying server-side file id (used by vimpios + hints).
     pub fn file_id(&self, h: Vfh) -> Result<FileId> {
         Ok(self.state(h)?.file)

@@ -209,6 +209,8 @@ impl UnixDisk {
 
 impl Disk for UnixDisk {
     fn read_at(&self, off: u64, buf: &mut [u8]) -> Result<usize> {
+        // busy_us measures real device latency; never reached in model mode
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         let mut done = 0;
         // pread may return short counts; loop like ViPIOS' Unix module.
@@ -228,6 +230,8 @@ impl Disk for UnixDisk {
     }
 
     fn write_at(&self, off: u64, data: &[u8]) -> Result<()> {
+        // busy_us measures real device latency; never reached in model mode
+        #[allow(clippy::disallowed_methods)]
         let t0 = Instant::now();
         self.file.write_all_at(data, off)?;
         self.len.fetch_max(off + data.len() as u64, Ordering::Relaxed);
@@ -308,6 +312,9 @@ impl SimCost {
 /// (sleep granularity on Linux is ~50 us). Sleeping — not spinning — is
 /// essential: simulated disks must yield the CPU so that concurrent
 /// servers overlap in wall-clock even on a single-core host.
+// Simulated device time must pass in real time so concurrent servers
+// overlap; the model checker swaps in a zero-cost disk instead.
+#[allow(clippy::disallowed_methods)]
 pub fn precise_wait(d: Duration) {
     if d.is_zero() {
         return;
@@ -748,6 +755,8 @@ impl SchedInner {
 }
 
 #[cfg(test)]
+// Tests drive real worker threads, so wall-clock waits are the point.
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
 

@@ -368,9 +368,22 @@ pub struct ServerStats {
     /// streams (pattern break, disconnect, file removal, kill-switch)
     /// by the global arbiter.
     pub budget_reclaims: u64,
+    /// Cache pages evicted under memory pressure (the buffer-cache
+    /// replacement path; mirrors `CacheStats::evictions` in the Stat
+    /// reply).
+    pub cache_evictions: u64,
+    /// Dirty pages written back to disk — on eviction or an explicit
+    /// flush (mirrors `CacheStats::writebacks` in the Stat reply).
+    pub cache_writebacks: u64,
 }
 
 impl ServerStats {
+    /// Number of `u64` counters on the wire. `wire.rs` sizes both the
+    /// encode array (`stats_fields`) and the decode array from this one
+    /// const, and `tools/protolint.py` statically checks it against the
+    /// field declarations above — bump it when adding a field.
+    pub const FIELD_COUNT: usize = 38;
+
     /// Counter-balance invariants that hold at every instant, not just
     /// at rest — the model checker asserts them after every delivery
     /// and the integration tests after every scenario. Returns the

@@ -565,6 +565,9 @@ impl Server {
             plans: HashMap::new(),
             arb,
             qos: HashMap::new(),
+            // refill epoch init only: model mode never reads it back
+            // (protolint: allow-wallclock)
+            #[allow(clippy::disallowed_methods)]
             qos_refilled: Instant::now(),
             phase: HashMap::new(),
             phase_pairs: HashMap::new(),
@@ -626,6 +629,9 @@ impl Server {
                 match self.next_deadline() {
                     None => self.ep.recv(),
                     Some(at) => {
+                        // non-model receive path: model runs use virtual
+                        // Timeout sentinels, never the wall clock
+                        #[allow(clippy::disallowed_methods)]
                         let now = Instant::now();
                         if at <= now {
                             self.flush_due_windows();
@@ -2233,6 +2239,8 @@ impl Server {
         if self.qos_deferred_total() == 0 {
             return w;
         }
+        // non-model only: model mode never arms a receive deadline
+        #[allow(clippy::disallowed_methods)]
         let q = Instant::now() + Duration::from_millis(1);
         Some(w.map_or(q, |w| w.min(q)))
     }
@@ -2253,6 +2261,9 @@ impl Server {
             return;
         }
         if !full {
+            // `full` is the model checker's virtual-time sentinel; only
+            // the non-sentinel path measures real elapsed time
+            #[allow(clippy::disallowed_methods)]
             let now = Instant::now();
             let dt = now.duration_since(self.qos_refilled).as_micros();
             self.qos_refilled = now;
@@ -2824,6 +2835,8 @@ impl Server {
                 s.prefetch_hits = cs.prefetch_used;
                 s.prefetch_installed = cs.prefetch_installed;
                 s.wasted_prefetch = cs.prefetch_wasted;
+                s.cache_evictions = cs.evictions;
+                s.cache_writebacks = cs.writebacks;
                 for sched in &self.io {
                     let ss = sched.sched_stats();
                     s.io_sched_batches += ss.sched_batches;
@@ -3394,12 +3407,16 @@ impl Server {
     }
 
     /// The aggregation window for `key`, opened with a fresh straggler
-    /// deadline on first arrival.
+    /// deadline on first arrival. The deadline is wall-clock, but model
+    /// runs flush windows via the virtual `Timeout` sentinel and never
+    /// sleep on it.
+    #[allow(clippy::disallowed_methods)]
     fn coll_window(&mut self, key: (FileId, u64, u64), nprocs: u32) -> &mut CollWindow {
         let wait = self.cfg.collective_wait;
         self.coll.entry(key).or_insert_with(|| CollWindow {
             nprocs: nprocs.max(1),
             served: 0,
+            // protolint: allow-wallclock (straggler deadline)
             deadline: Instant::now() + wait,
             reads: Vec::new(),
             writes: Vec::new(),
@@ -3433,6 +3450,9 @@ impl Server {
     /// that went quiet. Public so harnesses driving [`Server::handle`]
     /// directly (library mode, tests) can pump the clock.
     pub fn flush_due_windows(&mut self) {
+        // due-ness is measured once per pump, never slept on; the model
+        // checker pumps via Timeout sentinels instead
+        #[allow(clippy::disallowed_methods)]
         let now = Instant::now();
         let mut due: Vec<(FileId, u64, u64)> = self
             .coll
@@ -3512,7 +3532,9 @@ impl Server {
         }
         if w.served < w.nprocs {
             // budget trip split the window: the remainder gets a fresh
-            // straggler deadline
+            // straggler deadline (wall-clock; model runs flush via the
+            // Timeout sentinel, never by sleeping on it)
+            #[allow(clippy::disallowed_methods)]
             w.deadline = Instant::now() + self.cfg.collective_wait;
             self.coll.insert(key, w);
         }
@@ -3520,6 +3542,8 @@ impl Server {
 
     /// Retry window flushes that a now-finished reorg had parked.
     fn flush_unblocked_windows(&mut self, file: FileId) {
+        // same due-ness probe as flush_due_windows: read, never slept on
+        #[allow(clippy::disallowed_methods)]
         let now = Instant::now();
         let mut keys: Vec<(FileId, u64, u64)> = self
             .coll

@@ -186,6 +186,8 @@ fn dial_once(addr: &Addr) -> io::Result<Conn> {
 }
 
 /// Dial with retry: the peer may not have bound its listener yet.
+// Real sockets, real time: the socket transport is never model-checked.
+#[allow(clippy::disallowed_methods)]
 fn dial_retry(addr: &Addr) -> crate::Result<Conn> {
     let start = Instant::now();
     loop {
@@ -463,6 +465,8 @@ fn write_one(w: &mut BufWriter<Conn>, f: &Frame, scratch: &mut Vec<u8>) -> io::R
 }
 
 #[cfg(test)]
+// Tests exercise real sockets and threads; wall-clock waits are the point.
+#[allow(clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::msg::{Body, MsgClass, Request, Response, Role};

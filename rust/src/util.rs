@@ -139,6 +139,8 @@ pub fn mbps(bytes: u64, elapsed: Duration) -> f64 {
 }
 
 /// Time a closure, returning (result, elapsed).
+// Measurement is this helper's whole purpose; bench-only callers.
+#[allow(clippy::disallowed_methods)]
 pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     let t0 = Instant::now();
     let r = f();

@@ -494,7 +494,7 @@ fn put_request(out: &mut Vec<u8>, req: &Request) {
 /// means appending it here and in `stats()` (both sides are in this file
 /// so the pair stays in sync, and the round-trip test fails loudly on a
 /// mismatch).
-fn stats_fields(s: &ServerStats) -> [u64; 36] {
+fn stats_fields(s: &ServerStats) -> [u64; ServerStats::FIELD_COUNT] {
     [
         s.ext_requests,
         s.int_requests,
@@ -532,6 +532,8 @@ fn stats_fields(s: &ServerStats) -> [u64; 36] {
         s.deferred,
         s.shed,
         s.budget_reclaims,
+        s.cache_evictions,
+        s.cache_writebacks,
     ]
 }
 
@@ -1084,7 +1086,7 @@ impl<'a> Cur<'a> {
 
     fn stats(&mut self) -> Result<ServerStats> {
         let mut s = ServerStats::default();
-        let fields: [&mut u64; 36] = [
+        let fields: [&mut u64; ServerStats::FIELD_COUNT] = [
             &mut s.ext_requests,
             &mut s.int_requests,
             &mut s.broadcasts_rx,
@@ -1121,6 +1123,8 @@ impl<'a> Cur<'a> {
             &mut s.deferred,
             &mut s.shed,
             &mut s.budget_reclaims,
+            &mut s.cache_evictions,
+            &mut s.cache_writebacks,
         ];
         for f in fields {
             *f = self.u64()?;
@@ -1413,6 +1417,44 @@ mod tests {
         roundtrip(Frame::RankAck { rank: Rank(99) });
         roundtrip(Frame::Bye);
         roundtrip(Frame::HelloAck);
+    }
+
+    #[test]
+    fn stats_field_count_is_single_source_of_truth() {
+        // encoder array length == the shared const == decoder array
+        // length (the decoder is typed against the same const); the
+        // declaration-order pairing itself is protolint's stats check
+        assert_eq!(stats_fields(&ServerStats::default()).len(), ServerStats::FIELD_COUNT);
+    }
+
+    #[test]
+    fn fully_populated_stats_roundtrip() {
+        // build a stats block with every counter distinct and non-zero
+        // by decoding a synthetic wire image (the decoder fills all
+        // FIELD_COUNT counters in declaration order), then re-encode:
+        // a dropped, duplicated or reordered field on either side
+        // breaks byte equality
+        let mut img = Vec::new();
+        for i in 0..ServerStats::FIELD_COUNT {
+            put_u64(&mut img, 1 + (i as u64) * 0x0101);
+        }
+        let mut c = Cur { buf: &img, pos: 0 };
+        let s = c.stats().unwrap();
+        assert_eq!(c.remaining(), 0);
+        assert_ne!(s, ServerStats::default());
+        assert_eq!(s.ext_requests, 1);
+        let mut out = Vec::new();
+        put_stats(&mut out, &s);
+        assert_eq!(out, img);
+        // and through the full frame codec inside a Response::Stats
+        let msg = Msg {
+            src: Rank(1),
+            client: Rank(2),
+            req_id: 7,
+            class: MsgClass::ACK,
+            body: Body::Resp(Response::Stats(Box::new(s))),
+        };
+        roundtrip(Frame::Msg { dst: Rank(2), msg });
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //! server is SIGKILLed mid-conversation and the client must surface an
 //! error (never panic, never hang).
 
+// Integration tests drive real processes; wall-clock waits are the point.
+#![allow(clippy::disallowed_methods)]
+
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc;

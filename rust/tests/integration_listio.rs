@@ -10,6 +10,9 @@
 //!   the straggler deadline;
 //! * a mid-collective `Redistribute` (the reorg interlock).
 
+// Integration tests drive real threads; wall-clock waits are the point.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 

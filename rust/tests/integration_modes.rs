@@ -2,6 +2,9 @@
 //! modes, concurrency, consistency, redistribution, message-protocol
 //! properties and failure injection.
 
+// Integration tests drive real threads; wall-clock waits are the point.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::{Arc, Barrier};
 
 use vipios::client::Client;

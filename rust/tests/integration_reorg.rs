@@ -4,6 +4,9 @@
 //! concurrency stress battery (readers/writers racing an in-flight
 //! reorg). Protocol in DESIGN.md §4.1; planner in `vipios::reorg`.
 
+// Integration tests drive real threads; wall-clock waits are the point.
+#![allow(clippy::disallowed_methods)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};

@@ -145,19 +145,49 @@ fn rand_hint(r: &mut XorShift64) -> Hint {
     }
 }
 
+// Every field randomized, no `..Default::default()` — a counter the
+// codec drops or reorders must flip a round-trip bit (protolint's
+// fuzz-coverage check keys on each field name appearing here).
 fn rand_stats(r: &mut XorShift64) -> ServerStats {
     ServerStats {
         ext_requests: r.next_u64(),
+        int_requests: r.next_u64(),
+        broadcasts_rx: r.next_u64(),
         bytes_read: r.next_u64(),
+        bytes_written: r.next_u64(),
         cache_hits: r.next_u64(),
+        cache_misses: r.next_u64(),
+        prefetch_issued: r.next_u64(),
         prefetch_hits: r.next_u64(),
+        prefetch_installed: r.next_u64(),
+        wasted_prefetch: r.next_u64(),
+        predicted_bytes: r.next_u64(),
+        disk_time_us: r.next_u64(),
+        reorg_bytes_shipped: r.next_u64(),
+        reorg_di_msgs: r.next_u64(),
         io_parked: r.next_u64(),
+        io_resumed: r.next_u64(),
+        io_sched_batches: r.next_u64(),
+        io_sched_coalesced: r.next_u64(),
+        io_promoted: r.next_u64(),
+        io_max_queue_depth: r.next_u64(),
+        io_errors: r.next_u64(),
+        disk_bytes: r.next_u64(),
         wb_staged_bytes: r.next_u64(),
+        wb_flushed_runs: r.next_u64(),
+        wb_sched_jobs: r.next_u64(),
+        list_requests: r.next_u64(),
+        list_extents: r.next_u64(),
+        coalesced_runs: r.next_u64(),
+        collective_windows: r.next_u64(),
+        bytes_copied: r.next_u64(),
+        bytes_aliased: r.next_u64(),
         admitted: r.next_u64(),
         deferred: r.next_u64(),
         shed: r.next_u64(),
         budget_reclaims: r.next_u64(),
-        ..ServerStats::default()
+        cache_evictions: r.next_u64(),
+        cache_writebacks: r.next_u64(),
     }
 }
 

@@ -180,6 +180,7 @@ def self_test():
     nonnum["tables"][0]["rows"][0][1] = "n/a"
     assert compare(base, nonnum, 0.2), "non-numeric current cell must fail"
     print("self-test ok")
+    return 0
 
 
 def main():
@@ -190,8 +191,7 @@ def main():
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
     if args.self_test:
-        self_test()
-        return
+        return self_test()
     if not args.baseline or not args.current:
         ap.error("--baseline and --current are required (or --self-test)")
     with open(args.baseline) as f:
@@ -204,9 +204,10 @@ def main():
         print(f"\nPERF GATE FAILED ({len(failures)} cell(s)):", file=sys.stderr)
         for f_ in failures:
             print(f"  FAIL: {f_}", file=sys.stderr)
-        sys.exit(1)
+        return 1
     print("perf gate passed")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

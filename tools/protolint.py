@@ -1,0 +1,872 @@
+#!/usr/bin/env python3
+"""protolint — static drift detection over the ViPIOS wire protocol.
+
+The message interface is maintained by hand in four places: the enum
+declarations (`msg.rs`/`hints.rs`/`layout.rs`/`wire.rs`), the
+declaration-order codec (`wire.rs`), the server dispatcher
+(`server.rs`), and the fuzzer generators (`tests/prop_wire.rs`). The
+prop_wire fuzzer and the model checker catch drift between them only
+*dynamically*, for inputs they happen to generate; this tool proves the
+representations agree on every variant, statically, before CI ever
+compiles (the authoring environment has no Rust toolchain, so a
+Python-checkable oracle is the first gate).
+
+Check classes (each backed by a fixture under `tools/testdata/protolint/`
+that injects the drift and asserts the lint fires — see `--self-test`):
+
+  codec         every wire enum variant has exactly one encode arm and
+                one decode tag, and the tag equals the declaration index
+  stats         `stats_fields` / the stats decoder list every
+                `ServerStats` field in declaration order, `FIELD_COUNT`
+                matches, and every `CacheStats` field is folded into the
+                `Request::Stat` reply (the `cs.<field>` convention)
+  fuzz          every wire-visible variant appears in the prop_wire
+                generators, and a generator's `pick % N` modulus can
+                reach every variant
+  flow          every `Request` has a server handler arm and a
+                constructor somewhere; every `Response` is produced by
+                the server and consumed (pattern-matched) somewhere;
+                the committed PROTOCOL.md equals the regenerated graph
+  determinism   no `Instant::now` / `SystemTime::now` / `thread::sleep`
+                in model-checked modules outside the explicit allowlist
+                (`#[allow(clippy::disallowed_methods)]` or a
+                `protolint: allow-wallclock` marker on/just above the
+                call line)
+
+Parsing is a deliberately small Rust-lite extraction: comments and
+string/char literals are blanked (newlines preserved), `#[cfg(test)]
+mod … { … }` regions are stripped, and enums / struct fields / fn
+bodies / match arms are recovered by brace matching. It is not a Rust
+parser; conventions it relies on (tag literal is the first
+`put_u8`/`put_u32` in an encode arm, the Stat fold-in binding is named
+`cs`, generators live in `fn rand_*`) are documented in DESIGN.md §4.9.
+
+Exit codes (shared convention with bench_trend.py / perf_gate.py):
+  0  clean (or self-test passed)
+  1  lint findings (or self-test failure)
+  2  usage error (argparse)
+
+Usage:
+    protolint.py [--root DIR]          lint the tree (default: repo root)
+    protolint.py --write-protocol      regenerate PROTOCOL.md in place
+    protolint.py --self-test           run the fixture battery
+"""
+
+import argparse
+import os
+import re
+import sys
+
+TOOLS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TOOLS_DIR)
+
+# role -> path relative to the tree root. Roles marked optional are
+# skipped when the file is missing (the self-test fixture trees carry
+# only the files a check class needs).
+FILES = {
+    "msg": "rust/src/msg.rs",
+    "wire": "rust/src/wire.rs",
+    "hints": "rust/src/hints.rs",
+    "layout": "rust/src/layout.rs",
+    "memory": "rust/src/memory.rs",
+    "server": "rust/src/server.rs",
+    "client": "rust/src/client.rs",
+    "vimpios": "rust/src/vimpios.rs",
+    "check": "rust/src/check.rs",
+    "sched": "rust/src/sched.rs",
+    "modes": "rust/src/modes.rs",
+    "bench": "rust/src/bench.rs",
+    "bin_server": "rust/src/bin/vipios_server.rs",
+    "bin_client": "rust/src/bin/vipios_client.rs",
+    "prop_wire": "rust/tests/prop_wire.rs",
+    "protocol_md": "PROTOCOL.md",
+}
+REQUIRED = {"msg", "wire", "hints", "layout", "memory", "server", "client", "prop_wire"}
+
+# (enum name, declaring role, encode fn, decode fn) — all codec fns live
+# in wire.rs. To teach protolint a new wire enum, add a row here, a
+# generator row to GENERATORS, and extend the self-test fixture tree.
+ENUMS = [
+    ("Request", "msg", "put_request", "request"),
+    ("Response", "msg", "put_response", "response"),
+    ("Body", "msg", "put_body", "body"),
+    ("MsgClass", "msg", "put_class", "class"),
+    ("Hint", "hints", "put_hint", "hint"),
+    ("PrefetchHint", "hints", "put_hint", "hint"),
+    ("SystemHint", "hints", "put_hint", "hint"),
+    ("Distribution", "layout", "put_dist", "dist"),
+    ("Frame", "wire", "encode_frame", "decode_frame"),
+]
+
+# enum -> prop_wire generator fn that must name every variant.
+GENERATORS = [
+    ("Request", "rand_request"),
+    ("Response", "rand_response"),
+    ("Body", "rand_body"),
+    ("MsgClass", "rand_class"),
+    ("Hint", "rand_hint"),
+    ("PrefetchHint", "rand_hint"),
+    ("SystemHint", "rand_hint"),
+    ("Distribution", "rand_distribution"),
+    ("Frame", "rand_frame"),
+]
+
+# message-flow scan set (roles; tests stripped before scanning)
+FLOW_ROLES = [
+    "client",
+    "vimpios",
+    "server",
+    "check",
+    "modes",
+    "bench",
+    "bin_server",
+    "bin_client",
+]
+
+# determinism lint scan set: the model-checked modules (PR-6 virtual-time
+# discipline — `cfg.model` runs must never consult the wall clock).
+DETERMINISM_ROLES = ["server", "check", "sched", "memory"]
+WALLCLOCK = re.compile(r"\b(Instant::now|SystemTime::now|thread::sleep)\s*\(")
+ALLOW_TOKENS = ("allow(clippy::disallowed_methods)", "protolint: allow-wallclock")
+ALLOW_WINDOW = 3  # marker may sit on the line or up to 3 lines above
+
+PROTOCOL_HEADER = (
+    "# ViPIOS wire protocol — message-flow graph\n"
+    "\n"
+    "Generated by `tools/protolint.py --write-protocol`; do not edit by\n"
+    "hand. CI regenerates this table and fails (`flow: PROTOCOL.md is\n"
+    "stale`) when the committed copy drifts from the source. Tags are\n"
+    "declaration indices (the codec is declaration-ordered); file lists\n"
+    "come from the static message-flow scan over non-test code.\n"
+)
+
+
+# --------------------------------------------------------------- parsing
+
+
+def sanitize(src):
+    """Blank comments and string/char literals (newlines preserved) so
+    brace matching and regex extraction never see quoted text."""
+    out = list(src)
+    i, n = 0, len(src)
+
+    def blank(a, b):
+        for k in range(a, min(b, n)):
+            if src[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c == "r" and (i == 0 or not (src[i - 1].isalnum() or src[i - 1] == "_")):
+            m = re.match(r'r(#*)"', src[i:])
+            if m:
+                closer = '"' + m.group(1)
+                j = src.find(closer, i + m.end())
+                j = n if j < 0 else j + len(closer)
+                blank(i + m.end(), j - len(closer))
+                i = j
+            else:
+                i += 1
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    break
+                else:
+                    j += 1
+            blank(i + 1, j)
+            i = j + 1
+        elif c == "'":
+            if nxt == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                blank(i + 1, j)
+                i = j + 1
+            elif i + 2 < n and src[i + 2] == "'" and nxt not in ("'", ""):
+                out[i + 1] = " "  # 'x' char literal
+                i += 3
+            else:
+                i += 1  # lifetime
+        else:
+            i += 1
+    return "".join(out)
+
+
+def match_brace(s, i):
+    """`s[i]` is '{'; return index of its matching '}' (or len(s))."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "{":
+            depth += 1
+        elif s[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(s)
+
+
+def strip_tests(san):
+    """Blank `#[cfg(test)] mod … { … }` regions (newlines preserved)."""
+    out = san
+    # Other attributes (e.g. a mod-level clippy allow) may sit between
+    # the cfg gate and the mod keyword; comments are already blanked.
+    for m in re.finditer(
+        r"#\[cfg\(test\)\]\s*(?:#\[[^\]]*\]\s*)*(?:pub\s+)?mod\s+\w+\s*\{", san
+    ):
+        lo = san.index("{", m.start())
+        hi = match_brace(san, lo)
+        body = out[m.start() : hi + 1]
+        out = out[: m.start()] + re.sub(r"[^\n]", " ", body) + out[hi + 1 :]
+    return out
+
+
+def enum_variants(san, name):
+    """Variant names of `enum <name>` in declaration order, or None."""
+    m = re.search(r"\benum\s+" + name + r"\b[^{;]*\{", san)
+    if not m:
+        return None
+    lo = san.index("{", m.start())
+    hi = match_brace(san, lo)
+    body = san[lo + 1 : hi]
+    variants = []
+    for entry in split_depth0(body, ","):
+        vm = re.match(r"\s*(?:#\[[^\]]*\]\s*)*(?:pub\s+)?([A-Za-z_]\w*)", entry)
+        if vm:
+            variants.append(vm.group(1))
+    return variants
+
+
+def struct_fields(san, name):
+    """Field names of `struct <name>` in declaration order, or None."""
+    m = re.search(r"\bstruct\s+" + name + r"\b[^{;]*\{", san)
+    if not m:
+        return None
+    lo = san.index("{", m.start())
+    hi = match_brace(san, lo)
+    fields = []
+    for entry in split_depth0(san[lo + 1 : hi], ","):
+        fm = re.match(
+            r"\s*(?:#\[[^\]]*\]\s*)*(?:pub(?:\([^)]*\))?\s+)?([A-Za-z_]\w*)\s*:",
+            entry,
+        )
+        if fm:
+            fields.append(fm.group(1))
+    return fields
+
+
+def split_depth0(s, sep):
+    """Split on `sep` at bracket depth 0 (over (), [], {})."""
+    parts, depth, start = [], 0, 0
+    for j, c in enumerate(s):
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        elif c == sep and depth == 0:
+            parts.append(s[start:j])
+            start = j + 1
+    parts.append(s[start:])
+    return parts
+
+
+def fn_body(san, name):
+    """Body text of `fn <name>` (between its braces), or None."""
+    m = re.search(r"\bfn\s+" + name + r"\b", san)
+    if not m:
+        return None
+    i = san.index("(", m.end())
+    depth = 0
+    for j in range(i, len(san)):
+        if san[j] == "(":
+            depth += 1
+        elif san[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    lo = san.index("{", j)
+    hi = match_brace(san, lo)
+    return san[lo + 1 : hi]
+
+
+def match_regions(body):
+    """(start, end) of every `match … { … }` arm region in `body`."""
+    regions = []
+    for m in re.finditer(r"\bmatch\b", body):
+        lo = body.find("{", m.end())
+        if lo < 0:
+            continue
+        regions.append((lo + 1, match_brace(body, lo)))
+    return regions
+
+
+def split_arms(s, base=0):
+    """Split a match-arm region into (pat_lo, pat_hi, body_lo, body_hi)
+    spans (offsets shifted by `base` so they index the enclosing text)."""
+    arms = []
+    i, n = 0, len(s)
+    while i < n:
+        while i < n and (s[i].isspace() or s[i] == ","):
+            i += 1
+        if i >= n:
+            break
+        depth, j = 0, i
+        while j < n:
+            c = s[j]
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+            elif c == "=" and depth == 0 and j + 1 < n and s[j + 1] == ">":
+                break
+            j += 1
+        if j >= n:
+            break
+        k = j + 2
+        while k < n and s[k].isspace():
+            k += 1
+        if k < n and s[k] == "{":
+            e = match_brace(s, k)
+            arms.append((base + i, base + j, base + k, base + e + 1))
+            i = e + 1
+        else:
+            depth, e = 0, k
+            while e < n:
+                c = s[e]
+                if c in "([{":
+                    depth += 1
+                elif c in ")]}":
+                    depth -= 1
+                    if depth < 0:
+                        break
+                elif c == "," and depth == 0:
+                    break
+                e += 1
+            arms.append((base + i, base + j, base + k, base + e))
+            i = e + 1
+    return arms
+
+
+def variant_re(enum):
+    # word-boundary lookbehind: `Hint::` must not match inside
+    # `PrefetchHint::` / `SystemHint::` / `FileAdminHint`
+    return re.compile(r"(?<![A-Za-z0-9_])" + enum + r"::([A-Za-z_]\w*)")
+
+
+PUT_TAG = re.compile(r"\bput_u(?:8|32)\s*\(\s*\w+\s*,\s*(\d+)\b")
+
+
+def encode_tags(body, enum):
+    """variant -> tag from encode arms: the arm pattern names the
+    variant; the tag is the first literal `put_u8`/`put_u32` in the arm
+    body (or a bare-integer arm body, the `put_class` shape)."""
+    tags, errs = {}, []
+    vre = variant_re(enum)
+    for lo, hi in match_regions(body):
+        for plo, phi, blo, bhi in split_arms(body[lo:hi], lo):
+            vm = vre.search(body[plo:phi])
+            if not vm:
+                continue
+            variant = vm.group(1)
+            abody = body[blo:bhi]
+            pm = PUT_TAG.search(abody)
+            if pm:
+                tag = int(pm.group(1))
+            else:
+                bare = abody.strip().lstrip("{").rstrip("}").strip()
+                if re.fullmatch(r"\d+", bare):
+                    tag = int(bare)
+                else:
+                    errs.append(f"{enum}::{variant} encode arm has no literal tag")
+                    continue
+            if variant in tags and tags[variant] != tag:
+                errs.append(
+                    f"{enum}::{variant} encoded with conflicting tags "
+                    f"{tags[variant]} and {tag}"
+                )
+            tags[variant] = tag
+    return tags, errs
+
+
+def decode_tags(body, enum):
+    """tag -> variant from decode arms. Decoders nest (`fn hint` holds
+    the Hint, PrefetchHint and SystemHint matches), so per enum we keep
+    the match expression constructing the most distinct variants from
+    integer-pattern arms."""
+    vre = variant_re(enum)
+    best = {}
+    for lo, hi in match_regions(body):
+        cand = {}
+        for plo, phi, blo, bhi in split_arms(body[lo:hi], lo):
+            pat = body[plo:phi].strip()
+            if not re.fullmatch(r"\d+", pat):
+                continue
+            names = vre.findall(body[blo:bhi])
+            if names:
+                cand[int(pat)] = names[-1]  # block arms build the variant last
+        if len(set(cand.values())) > len(set(best.values())):
+            best = cand
+    return best
+
+
+def pattern_spans(san):
+    """Spans of `san` that are pattern (not expression) position: match
+    arm patterns, `let` / `if let` / `while let` left-hand sides, and
+    `matches!` second arguments."""
+    spans = []
+    for lo, hi in match_regions(san):
+        spans.extend((plo, phi) for plo, phi, _b, _e in split_arms(san[lo:hi], lo))
+    for m in re.finditer(r"\blet\b", san):
+        depth, j = 0, m.end()
+        while j < len(san):
+            c = san[j]
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+                if depth < 0:
+                    break
+            elif c == "=" and depth == 0:
+                if san[j + 1 : j + 2] not in (">", "=") and san[j - 1 : j] != "!":
+                    break
+            elif c == ";" and depth == 0:
+                break
+            j += 1
+        spans.append((m.end(), j))
+    for m in re.finditer(r"\bmatches!\s*[(\[]", san):
+        lo = m.end() - 1
+        close = {"(": ")", "[": "]"}[san[lo]]
+        depth, comma = 0, None
+        for j in range(lo, len(san)):
+            c = san[j]
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+                if depth == 0:
+                    if comma is not None:
+                        spans.append((comma + 1, j))
+                    break
+            elif c == "," and depth == 1 and comma is None:
+                comma = j
+    return spans
+
+
+def classify_uses(san, enum):
+    """(constructed, matched) variant-name sets for `enum` in `san`."""
+    spans = pattern_spans(san)
+    constructed, matched = set(), set()
+    for m in variant_re(enum).finditer(san):
+        in_pattern = any(lo <= m.start() < hi for lo, hi in spans)
+        (matched if in_pattern else constructed).add(m.group(1))
+    return constructed, matched
+
+
+# ---------------------------------------------------------------- checks
+
+
+class Tree:
+    """Lazy loader: original text, sanitized text, and sanitized text
+    with `#[cfg(test)]` modules stripped, per role. `overlay` (a second
+    root whose files win) lets the self-test inject one drifted file
+    over the clean fixture tree."""
+
+    def __init__(self, root, overlay=None):
+        self.root = root
+        self.overlay = overlay
+        self._raw, self._san, self._notest = {}, {}, {}
+
+    def path(self, role):
+        rel = FILES[role]
+        if self.overlay:
+            p = os.path.join(self.overlay, rel)
+            if os.path.exists(p):
+                return p
+        return os.path.join(self.root, rel)
+
+    def raw(self, role):
+        if role not in self._raw:
+            p = self.path(role)
+            self._raw[role] = (
+                open(p, encoding="utf-8").read() if os.path.exists(p) else None
+            )
+        return self._raw[role]
+
+    def san(self, role):
+        if role not in self._san:
+            raw = self.raw(role)
+            self._san[role] = None if raw is None else sanitize(raw)
+        return self._san[role]
+
+    def notest(self, role):
+        if role not in self._notest:
+            san = self.san(role)
+            self._notest[role] = None if san is None else strip_tests(san)
+        return self._notest[role]
+
+
+def check_codec(tree):
+    errs = []
+    wire = tree.san("wire")
+    for enum, role, efn, dfn in ENUMS:
+        decl = enum_variants(tree.san(role), enum)
+        if decl is None:
+            errs.append(f"codec: enum {enum} not found in {FILES[role]}")
+            continue
+        ebody = fn_body(wire, efn)
+        dbody = fn_body(wire, dfn)
+        if ebody is None or dbody is None:
+            errs.append(f"codec: fn {efn} / {dfn} not found in wire.rs")
+            continue
+        enc, eerrs = encode_tags(ebody, enum)
+        errs.extend(f"codec: {e}" for e in eerrs)
+        dec = decode_tags(dbody, enum)
+        for idx, v in enumerate(decl):
+            if v not in enc:
+                errs.append(f"codec: {enum}::{v} has no encode arm in {efn}")
+            elif enc[v] != idx:
+                errs.append(
+                    f"codec: {enum}::{v} encodes tag {enc[v]}, "
+                    f"declaration index is {idx}"
+                )
+            if idx not in dec:
+                errs.append(f"codec: {enum}::{v} (tag {idx}) has no decode arm in {dfn}")
+            elif dec[idx] != v:
+                errs.append(
+                    f"codec: {dfn} decodes tag {idx} as {enum}::{dec[idx]}, "
+                    f"declaration says {v}"
+                )
+        for v in sorted(set(enc) - set(decl)):
+            errs.append(f"codec: {efn} encodes unknown variant {enum}::{v}")
+        for t in sorted(set(dec) - set(range(len(decl)))):
+            errs.append(f"codec: {dfn} decodes spurious tag {t} as {enum}::{dec[t]}")
+    return errs
+
+
+def check_stats(tree):
+    errs = []
+    fields = struct_fields(tree.san("msg"), "ServerStats")
+    if fields is None:
+        return ["stats: struct ServerStats not found in msg.rs"]
+    wire = tree.san("wire")
+
+    fc = re.search(r"\bconst\s+FIELD_COUNT\s*:\s*usize\s*=\s*(\d+)", tree.san("msg"))
+    if not fc:
+        errs.append("stats: ServerStats::FIELD_COUNT const not found in msg.rs")
+    elif int(fc.group(1)) != len(fields):
+        errs.append(
+            f"stats: ServerStats::FIELD_COUNT = {fc.group(1)} but the struct "
+            f"declares {len(fields)} fields"
+        )
+
+    for fname, pat in (("stats_fields", r"\bs\.(\w+)"), ("stats", r"&\s*mut\s+s\.(\w+)")):
+        body = fn_body(wire, fname)
+        if body is None:
+            errs.append(f"stats: fn {fname} not found in wire.rs")
+            continue
+        order = re.findall(pat, body)
+        if order != fields:
+            errs.append(
+                f"stats: {fname} field order diverges from the ServerStats "
+                f"declaration: {diff_order(fields, order)}"
+            )
+        # array lengths must come from the shared const (or equal it)
+        for alen in re.findall(
+            r"\[\s*(?:&\s*mut\s+)?u64\s*;\s*([^\]]+)\]", body_sig(wire, fname)
+        ):
+            expr = alen.strip()
+            if expr.isdigit() and int(expr) != len(fields):
+                errs.append(
+                    f"stats: {fname} array length {expr} != {len(fields)} fields "
+                    "(use ServerStats::FIELD_COUNT)"
+                )
+
+    cfields = struct_fields(tree.san("memory"), "CacheStats")
+    if cfields is None:
+        errs.append("stats: struct CacheStats not found in memory.rs")
+    else:
+        folded = set(re.findall(r"\bcs\.(\w+)", tree.notest("server")))
+        for f in cfields:
+            if f not in folded:
+                errs.append(
+                    f"stats: CacheStats.{f} is never folded into the Stat reply "
+                    f"(no `cs.{f}` read in server.rs)"
+                )
+    return errs
+
+
+def body_sig(wire, fname):
+    """fn signature + body text (array-length annotations live in both)."""
+    m = re.search(r"\bfn\s+" + fname + r"\b", wire)
+    if not m:
+        return ""
+    lo = wire.index("{", m.end())
+    return wire[m.start() : match_brace(wire, lo)]
+
+
+def diff_order(want, got):
+    missing = [f for f in want if f not in got]
+    extra = [f for f in got if f not in want]
+    if missing or extra:
+        return f"missing {missing or '[]'}, unknown {extra or '[]'}"
+    for i, (w, g) in enumerate(zip(want, got)):
+        if w != g:
+            return f"position {i} is {g}, declaration says {w}"
+    return f"{len(got)} fields vs {len(want)} declared"
+
+
+def check_fuzz(tree):
+    errs = []
+    prop = tree.san("prop_wire")
+    for enum, gen in GENERATORS:
+        role = next(r for e, r, _ef, _df in ENUMS if e == enum)
+        decl = enum_variants(tree.san(role), enum)
+        if decl is None:
+            continue  # codec check already reported the missing enum
+        body = fn_body(prop, gen)
+        if body is None:
+            errs.append(f"fuzz: generator fn {gen} not found in prop_wire.rs")
+            continue
+        vre = variant_re(enum)
+        present = set(vre.findall(body))
+        for v in decl:
+            if v not in present:
+                errs.append(f"fuzz: {gen} never generates {enum}::{v}")
+        for mod_ in re.findall(r"\bpick\s*%\s*(\d+)", body):
+            if int(mod_) < len(decl):
+                errs.append(
+                    f"fuzz: {gen} selects with `pick % {mod_}` but {enum} has "
+                    f"{len(decl)} variants — new variants are unreachable"
+                )
+    sfields = struct_fields(tree.san("msg"), "ServerStats")
+    body = fn_body(prop, "rand_stats")
+    if body is None:
+        errs.append("fuzz: generator fn rand_stats not found in prop_wire.rs")
+    elif sfields:
+        for f in sfields:
+            if not re.search(r"\b" + f + r"\s*:", body):
+                errs.append(f"fuzz: rand_stats never populates ServerStats.{f}")
+    return errs
+
+
+def flow_scan(tree):
+    """{enum: {variant: (constructed-in, matched-in file lists)}} over
+    the non-test flow scan set."""
+    uses = {"Request": {}, "Response": {}}
+    for role in FLOW_ROLES:
+        san = tree.notest(role)
+        if san is None:
+            continue
+        short = os.path.basename(FILES[role])
+        for enum in uses:
+            constructed, matched = classify_uses(san, enum)
+            for v in constructed:
+                uses[enum].setdefault(v, (set(), set()))[0].add(short)
+            for v in matched:
+                uses[enum].setdefault(v, (set(), set()))[1].add(short)
+    return uses
+
+
+def check_flow(tree, protocol_out=None):
+    errs = []
+    uses = flow_scan(tree)
+    requests = enum_variants(tree.san("msg"), "Request") or []
+    responses = enum_variants(tree.san("msg"), "Response") or []
+    for v in requests:
+        constructed, matched = uses["Request"].get(v, (set(), set()))
+        if "server.rs" not in matched:
+            errs.append(f"flow: Request::{v} has no handler arm in server.rs")
+        if not constructed:
+            errs.append(f"flow: Request::{v} is never constructed (dead variant?)")
+    for v in responses:
+        constructed, matched = uses["Response"].get(v, (set(), set()))
+        if "server.rs" not in constructed:
+            errs.append(f"flow: Response::{v} is never produced by server.rs")
+        if not matched:
+            errs.append(f"flow: Response::{v} is never consumed (no wait arm)")
+
+    generated = render_protocol(tree, uses, requests, responses)
+    if protocol_out is not None:
+        protocol_out.append(generated)
+    committed = tree.raw("protocol_md")
+    if committed is None:
+        errs.append("flow: PROTOCOL.md is missing — run protolint.py --write-protocol")
+    elif committed != generated:
+        errs.append(
+            "flow: PROTOCOL.md is stale — run `python3 tools/protolint.py "
+            "--write-protocol` and commit the result"
+        )
+    return errs
+
+
+def render_protocol(tree, uses, requests, responses):
+    def filelist(s):
+        return ", ".join(sorted(s)) if s else "—"
+
+    lines = [PROTOCOL_HEADER]
+    lines.append("## Requests\n")
+    lines.append("| tag | `Request::` | constructed in | handled in |")
+    lines.append("|---:|---|---|---|")
+    for i, v in enumerate(requests):
+        c, m = uses["Request"].get(v, (set(), set()))
+        lines.append(f"| {i} | {v} | {filelist(c)} | {filelist(m)} |")
+    lines.append("\n## Responses\n")
+    lines.append("| tag | `Response::` | produced in | consumed in |")
+    lines.append("|---:|---|---|---|")
+    for i, v in enumerate(responses):
+        c, m = uses["Response"].get(v, (set(), set()))
+        lines.append(f"| {i} | {v} | {filelist(c)} | {filelist(m)} |")
+    lines.append("\n## Auxiliary wire enums (tag = declaration index)\n")
+    lines.append("| enum | variants (in tag order) |")
+    lines.append("|---|---|")
+    for enum, role, _ef, _df in ENUMS:
+        if enum in ("Request", "Response"):
+            continue
+        decl = enum_variants(tree.san(role), enum) or []
+        lines.append(f"| `{enum}` | {', '.join(decl)} |")
+    return "\n".join(lines) + "\n"
+
+
+def check_determinism(tree):
+    errs = []
+    for role in DETERMINISM_ROLES:
+        san = tree.notest(role)
+        if san is None:
+            continue
+        raw_lines = tree.raw(role).splitlines()
+        for ln, line in enumerate(san.splitlines()):
+            m = WALLCLOCK.search(line)
+            if not m:
+                continue
+            window = raw_lines[max(0, ln - ALLOW_WINDOW) : ln + 1]
+            if any(tok in w for w in window for tok in ALLOW_TOKENS):
+                continue
+            errs.append(
+                f"determinism: {FILES[role]}:{ln + 1}: {m.group(1)} in a "
+                f"model-checked module outside the allowlist: "
+                f"`{raw_lines[ln].strip()}`"
+            )
+    return errs
+
+
+def run_checks(root, overlay=None, protocol_out=None):
+    tree = Tree(root, overlay)
+    missing = [FILES[r] for r in sorted(REQUIRED) if tree.raw(r) is None]
+    if missing:
+        return [f"usage: required file missing under {root}: {p}" for p in missing]
+    errs = []
+    errs += check_codec(tree)
+    errs += check_stats(tree)
+    errs += check_fuzz(tree)
+    errs += check_flow(tree, protocol_out)
+    errs += check_determinism(tree)
+    return errs
+
+
+def write_protocol(root):
+    tree = Tree(root)
+    uses = flow_scan(tree)
+    requests = enum_variants(tree.san("msg"), "Request") or []
+    responses = enum_variants(tree.san("msg"), "Response") or []
+    text = render_protocol(tree, uses, requests, responses)
+    path = os.path.join(root, FILES["protocol_md"])
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(text)
+    print(f"wrote {path}")
+    return 0
+
+
+# ------------------------------------------------------------- self-test
+
+# (overlay dir, check class that must fire, substring the finding must
+# carry). Other classes may fire too — drift is rarely isolated — but
+# the named class must report the named symptom.
+DRIFT_CASES = [
+    ("drift_codec", "codec:", "Shutdown"),
+    ("drift_stats", "stats:", "stats_fields"),
+    ("drift_fuzz", "fuzz:", "rand_request"),
+    ("drift_flow", "flow:", "handler arm"),
+    ("drift_protocol", "flow:", "stale"),
+    ("drift_determinism", "determinism:", "Instant::now"),
+]
+
+
+def self_test():
+    base = os.path.join(TOOLS_DIR, "testdata", "protolint")
+    clean = os.path.join(base, "clean")
+    errs = run_checks(clean)
+    if errs:
+        print("self-test FAILED: clean fixture tree must lint clean:", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    failed = False
+    for overlay, cls, needle in DRIFT_CASES:
+        errs = run_checks(clean, overlay=os.path.join(base, overlay))
+        hits = [e for e in errs if e.startswith(cls) and needle in e]
+        if not hits:
+            failed = True
+            print(
+                f"self-test FAILED: {overlay} did not raise a {cls!r} finding "
+                f"containing {needle!r}; got: {errs}",
+                file=sys.stderr,
+            )
+        else:
+            print(f"  {overlay}: fired {hits[0]}")
+    if failed:
+        return 1
+    print(f"protolint self-test OK ({len(DRIFT_CASES)} drift fixtures, 5 check classes)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--root", default=REPO_ROOT, help="tree root (default: repo root)")
+    ap.add_argument(
+        "--write-protocol",
+        action="store_true",
+        help="regenerate <root>/PROTOCOL.md from the flow scan and exit",
+    )
+    ap.add_argument("--self-test", action="store_true", help="run the fixture battery")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if args.write_protocol:
+        return write_protocol(args.root)
+    errs = run_checks(args.root)
+    if errs:
+        print(f"protolint: {len(errs)} finding(s):", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n_enums = len(ENUMS)
+    print(f"protolint OK ({n_enums} wire enums, 5 check classes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

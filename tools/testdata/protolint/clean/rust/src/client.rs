@@ -1,0 +1,26 @@
+//! Fixture client: constructs every external request and waits on
+//! every response — match arms, `if let` and `matches!` all count as
+//! pattern position for the flow scan.
+
+use crate::hints::{Hint, SystemHint};
+use crate::msg::{Request, Response};
+
+pub fn run(mut send: impl FnMut(Request), mut recv: impl FnMut() -> Response) {
+    send(Request::Ping);
+    send(Request::Read { off: 0, len: 4096 });
+    send(Request::Hint(Hint::System(SystemHint::DropCaches)));
+    loop {
+        match recv() {
+            Response::Pong => break,
+            Response::Data(d) => drop(d),
+            Response::Error(e) => panic!("{e}"),
+        }
+    }
+    if let Response::Data(d) = recv() {
+        assert!(!d.is_empty());
+    }
+    while matches!(recv(), Response::Pong) {
+        // drain trailing acks
+    }
+    send(Request::Shutdown);
+}

@@ -1,0 +1,21 @@
+//! Fixture hints: a nested enum family (outer tag + inner tag), the
+//! shape that forces protolint's decode extraction to disambiguate
+//! nested match expressions.
+
+#[derive(Debug, Clone)]
+pub enum Hint {
+    Prefetch(PrefetchHint),
+    System(SystemHint),
+}
+
+#[derive(Debug, Clone)]
+pub enum PrefetchHint {
+    Sequential { window: u64 },
+    DelayedWrite { enable: bool },
+}
+
+#[derive(Debug, Clone)]
+pub enum SystemHint {
+    DropCaches,
+    Prefetch(bool),
+}

@@ -1,0 +1,7 @@
+//! Fixture layout: the wire-visible distribution enum.
+
+#[derive(Debug, Clone, Copy)]
+pub enum Distribution {
+    Contiguous,
+    Cyclic { chunk: u64 },
+}

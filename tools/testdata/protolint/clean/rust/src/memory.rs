@@ -1,0 +1,8 @@
+//! Fixture cache stats: every field here must be folded into the Stat
+//! reply by server.rs (the `cs.<field>` convention).
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}

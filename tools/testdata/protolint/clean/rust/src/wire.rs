@@ -1,0 +1,212 @@
+//! Fixture codec: the real `wire.rs` shapes in miniature — declaration-
+//! order tags, nested hint matches, a bare-integer `put_class` arm
+//! body, a block decode arm, and `FIELD_COUNT`-sized stats arrays.
+
+use crate::hints::{Hint, PrefetchHint, SystemHint};
+use crate::layout::Distribution;
+use crate::msg::{Body, MsgClass, Request, Response, ServerStats};
+
+/// One unit on the wire.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    Msg { msg: Vec<u8> },
+    Bye,
+}
+
+fn put_request(out: &mut Vec<u8>, req: &Request) {
+    match req {
+        Request::Ping => put_u32(out, 0),
+        Request::Read { off, len } => {
+            put_u32(out, 1);
+            put_u64(out, *off);
+            put_u64(out, *len);
+        }
+        Request::Hint(h) => {
+            put_u32(out, 2);
+            put_hint(out, h);
+        }
+        Request::Shutdown => put_u32(out, 3),
+    }
+}
+
+fn put_response(out: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Pong => put_u32(out, 0),
+        Response::Data(d) => {
+            put_u32(out, 1);
+            put_bytes(out, d);
+        }
+        Response::Error(msg) => {
+            put_u32(out, 2);
+            put_str(out, msg);
+        }
+    }
+}
+
+fn put_body(out: &mut Vec<u8>, body: &Body) {
+    match body {
+        Body::Req(r) => {
+            put_u8(out, 0);
+            put_request(out, r);
+        }
+        Body::Resp(r) => {
+            put_u8(out, 1);
+            put_response(out, r);
+        }
+        Body::Timeout => put_u8(out, 2),
+    }
+}
+
+fn put_class(out: &mut Vec<u8>, c: MsgClass) {
+    put_u8(
+        out,
+        match c {
+            MsgClass::ER => 0,
+            MsgClass::ACK => 1,
+        },
+    );
+}
+
+fn put_hint(out: &mut Vec<u8>, h: &Hint) {
+    match h {
+        Hint::Prefetch(p) => {
+            put_u32(out, 0);
+            match p {
+                PrefetchHint::Sequential { window } => {
+                    put_u32(out, 0);
+                    put_u64(out, *window);
+                }
+                PrefetchHint::DelayedWrite { enable } => {
+                    put_u32(out, 1);
+                    put_u8(out, u8::from(*enable));
+                }
+            }
+        }
+        Hint::System(s) => {
+            put_u32(out, 1);
+            match s {
+                SystemHint::DropCaches => put_u32(out, 0),
+                SystemHint::Prefetch(on) => {
+                    put_u32(out, 1);
+                    put_u8(out, u8::from(*on));
+                }
+            }
+        }
+    }
+}
+
+fn put_dist(out: &mut Vec<u8>, d: Distribution) {
+    match d {
+        Distribution::Contiguous => put_u32(out, 0),
+        Distribution::Cyclic { chunk } => {
+            put_u32(out, 1);
+            put_u64(out, chunk);
+        }
+    }
+}
+
+/// The [`ServerStats`] counters in declaration order.
+fn stats_fields(s: &ServerStats) -> [u64; ServerStats::FIELD_COUNT] {
+    [s.requests, s.bytes_read, s.cache_hits, s.cache_misses]
+}
+
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) {
+    match frame {
+        Frame::Msg { msg } => {
+            put_u8(out, 0);
+            put_bytes(out, msg);
+        }
+        Frame::Bye => put_u8(out, 1),
+    }
+}
+
+impl Cur<'_> {
+    fn request(&mut self) -> Result<Request> {
+        Ok(match self.u32()? {
+            0 => Request::Ping,
+            1 => Request::Read { off: self.u64()?, len: self.u64()? },
+            2 => Request::Hint(self.hint()?),
+            3 => {
+                // block arm: the variant is built last, like the real
+                // tree's LocalReadScatter arm
+                self.drain();
+                Request::Shutdown
+            }
+            t => return Err(bad("Request", t)),
+        })
+    }
+
+    fn response(&mut self) -> Result<Response> {
+        Ok(match self.u32()? {
+            0 => Response::Pong,
+            1 => Response::Data(self.bytes()?),
+            2 => Response::Error(self.string()?),
+            t => return Err(bad("Response", t)),
+        })
+    }
+
+    fn body(&mut self) -> Result<Body> {
+        match self.u8()? {
+            0 => Ok(Body::Req(self.request()?)),
+            1 => Ok(Body::Resp(self.response()?)),
+            2 => Ok(Body::Timeout),
+            t => Err(bad("Body", t)),
+        }
+    }
+
+    fn class(&mut self) -> Result<MsgClass> {
+        match self.u8()? {
+            0 => Ok(MsgClass::ER),
+            1 => Ok(MsgClass::ACK),
+            t => Err(bad("MsgClass", t)),
+        }
+    }
+
+    fn hint(&mut self) -> Result<Hint> {
+        Ok(match self.u32()? {
+            0 => Hint::Prefetch(match self.u32()? {
+                0 => PrefetchHint::Sequential { window: self.u64()? },
+                1 => PrefetchHint::DelayedWrite { enable: self.u8()? != 0 },
+                t => return Err(bad("PrefetchHint", t)),
+            }),
+            1 => Hint::System(match self.u32()? {
+                0 => SystemHint::DropCaches,
+                1 => SystemHint::Prefetch(self.u8()? != 0),
+                t => return Err(bad("SystemHint", t)),
+            }),
+            t => return Err(bad("Hint", t)),
+        })
+    }
+
+    fn dist(&mut self) -> Result<Distribution> {
+        Ok(match self.u32()? {
+            0 => Distribution::Contiguous,
+            1 => Distribution::Cyclic { chunk: self.u64()? },
+            t => return Err(bad("Distribution", t)),
+        })
+    }
+
+    fn stats(&mut self) -> Result<ServerStats> {
+        let mut s = ServerStats::default();
+        let fields: [&mut u64; ServerStats::FIELD_COUNT] = [
+            &mut s.requests,
+            &mut s.bytes_read,
+            &mut s.cache_hits,
+            &mut s.cache_misses,
+        ];
+        for f in fields {
+            *f = self.u64()?;
+        }
+        Ok(s)
+    }
+}
+
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(Frame, usize)>> {
+    let mut c = Cur { buf, pos: 0 };
+    let frame = match c.u8()? {
+        0 => Frame::Msg { msg: c.bytes()? },
+        1 => Frame::Bye,
+        t => return Err(bad("Frame", t)),
+    };
+    Ok(Some((frame, c.pos)))
+}

@@ -1,0 +1,36 @@
+//! Fixture server: one handler arm per request, every response
+//! produced, the `cs.<field>` Stat fold-in convention, and an
+//! allow-listed wall-clock read (the determinism lint's clean shape).
+
+use crate::memory::CacheStats;
+use crate::msg::{Request, Response, ServerStats};
+
+pub fn handle(req: Request, stats: &mut ServerStats, cache: &Cache) -> Response {
+    stats.requests += 1;
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Read { off, len } => {
+            stats.bytes_read += len;
+            Response::Data(read_at(off, len))
+        }
+        Request::Hint(h) => {
+            drop(h);
+            Response::Pong
+        }
+        Request::Shutdown => {
+            let cs: CacheStats = cache.stats();
+            let mut s = stats.clone();
+            s.cache_hits = cs.hits;
+            s.cache_misses = cs.misses;
+            if s.requests == 0 {
+                return Response::Error(String::from("no traffic"));
+            }
+            Response::Pong
+        }
+    }
+}
+
+pub fn deadline() -> std::time::Instant {
+    let now = std::time::Instant::now();
+    now
+}

@@ -1,0 +1,71 @@
+//! Fixture generators mirroring the real `tests/prop_wire.rs`: one
+//! `rand_*` fn per wire enum, `pick % N` selection, every variant
+//! reachable, every `ServerStats` field populated.
+
+fn rand_request(r: &mut Rng, pick: u64) -> Request {
+    match pick % 4 {
+        0 => Request::Ping,
+        1 => Request::Read { off: r.next(), len: r.next() },
+        _ => Request::Shutdown,
+    }
+}
+
+fn rand_response(r: &mut Rng, pick: u64) -> Response {
+    match pick % 3 {
+        0 => Response::Pong,
+        1 => Response::Data(vec![r.next() as u8]),
+        _ => Response::Error(String::from("e")),
+    }
+}
+
+fn rand_body(r: &mut Rng, pick: u64) -> Body {
+    match pick % 3 {
+        0 => Body::Req(rand_request(r, r.next())),
+        1 => Body::Resp(rand_response(r, r.next())),
+        _ => Body::Timeout,
+    }
+}
+
+fn rand_class(r: &mut Rng) -> MsgClass {
+    if r.next() & 1 == 0 {
+        MsgClass::ER
+    } else {
+        MsgClass::ACK
+    }
+}
+
+fn rand_hint(r: &mut Rng) -> Hint {
+    match r.next() % 3 {
+        0 => Hint::Prefetch(PrefetchHint::Sequential { window: r.next() }),
+        1 => Hint::Prefetch(PrefetchHint::DelayedWrite { enable: true }),
+        _ => Hint::System(if r.next() & 1 == 0 {
+            SystemHint::DropCaches
+        } else {
+            SystemHint::Prefetch(true)
+        }),
+    }
+}
+
+fn rand_distribution(r: &mut Rng) -> Distribution {
+    if r.next() & 1 == 0 {
+        Distribution::Contiguous
+    } else {
+        Distribution::Cyclic { chunk: 64 }
+    }
+}
+
+fn rand_frame(r: &mut Rng, pick: u64) -> Frame {
+    match pick % 2 {
+        0 => Frame::Msg { msg: vec![r.next() as u8] },
+        _ => Frame::Bye,
+    }
+}
+
+fn rand_stats(r: &mut Rng) -> ServerStats {
+    ServerStats {
+        requests: r.next(),
+        bytes_read: r.next(),
+        cache_hits: r.next(),
+        cache_misses: r.next(),
+    }
+}
